@@ -1,0 +1,42 @@
+//! Emit the full heterogeneous code bundle for every benchmark family and
+//! print a summary — what the "automatic mapping framework" hands to the
+//! real toolchain (aiecompiler + v++ + g++).
+//!
+//! Run: `cargo run --release --example codegen_inspect [outdir]`
+
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::mapping::dse::DseConstraints;
+use widesa::recurrence::{dtype::DType, library};
+
+fn main() -> anyhow::Result<()> {
+    let outdir = std::env::args().nth(1).unwrap_or_else(|| "target/codegen".into());
+    let benches = [
+        ("mm", library::mm(8192, 8192, 8192, DType::F32), 400u64),
+        ("conv2d", library::conv2d(10240, 10240, 4, 4, DType::I8), 400),
+        ("fir", library::fir(1048576, 15, DType::I16), 256),
+        ("fft2d", library::fft2d(8192, 8192, DType::CF32), 320),
+    ];
+    for (name, rec, aies) in benches {
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(aies),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ws.compile(&rec)?;
+        let dir = std::path::Path::new(&outdir).join(name);
+        d.code.write_to(&dir)?;
+        println!(
+            "{name:8} → {:40} kernel {:5}B graph {:6}B movers {:5}B host {:5}B constraints {:6}B",
+            dir.display(),
+            d.code.aie_kernel.len(),
+            d.code.adf_graph.len(),
+            d.code.pl_dma.len(),
+            d.code.host.len(),
+            d.code.constraints_json.len(),
+        );
+    }
+    println!("\ninspect e.g.: less {outdir}/mm/graph.cpp");
+    Ok(())
+}

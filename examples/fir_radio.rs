@@ -1,0 +1,94 @@
+//! Domain example: software-radio channel filtering (the FIR benchmark's
+//! natural habitat). Designs a 15-tap low-pass filter, maps the FIR
+//! recurrence, replays a two-tone signal through the AOT kernel and
+//! checks the stop-band tone is attenuated.
+//!
+//! Run: `make artifacts && cargo run --release --example fir_radio`
+
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::coordinator::{exec, verify};
+use widesa::mapping::dse::DseConstraints;
+use widesa::recurrence::{dtype::DType, library};
+use widesa::runtime::client::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // --- map the paper-scale FIR ----------------------------------------
+    let ws = WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(256),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let design = ws.compile(&library::fir(1048576, 15, DType::F32))?;
+    println!("[map] FIR 1048576×15 f32:\n{}", design.report());
+
+    // --- design a 15-tap windowed-sinc low-pass (cutoff 0.15 × fs) ------
+    const TAPS: usize = 15;
+    let fc = 0.15f64;
+    let mut h = [0f32; TAPS];
+    let mut sum = 0f64;
+    for (i, tap) in h.iter_mut().enumerate() {
+        let x = i as f64 - (TAPS - 1) as f64 / 2.0;
+        let sinc = if x == 0.0 {
+            2.0 * fc
+        } else {
+            (2.0 * std::f64::consts::PI * fc * x).sin() / (std::f64::consts::PI * x)
+        };
+        // Hamming window
+        let w = 0.54 - 0.46 * (2.0 * std::f64::consts::PI * i as f64 / (TAPS - 1) as f64).cos();
+        *tap = (sinc * w) as f32;
+        sum += *tap as f64;
+    }
+    for tap in h.iter_mut() {
+        *tap /= sum as f32; // unity DC gain
+    }
+
+    // --- two-tone input: 0.05 fs (pass) + 0.4 fs (stop) ------------------
+    let n = 65536usize;
+    let mut x = vec![0f32; n + TAPS - 1];
+    for (i, v) in x.iter_mut().enumerate() {
+        let t = i as f64;
+        *v = ((2.0 * std::f64::consts::PI * 0.05 * t).sin()
+            + (2.0 * std::f64::consts::PI * 0.40 * t).sin()) as f32;
+    }
+
+    let mut rt = Runtime::new()?;
+    let (y, stats) = exec::run_fir(&mut rt, &x, &h, n)?;
+    println!(
+        "[replay] {} rounds in {:.3}s ({:.1} Msamples/s functional)",
+        stats.rounds,
+        stats.seconds,
+        n as f64 / stats.seconds / 1e6
+    );
+
+    // --- verify + check filtering actually happened ----------------------
+    let want = verify::fir_ref(&x, &h, n);
+    let err = verify::max_abs_diff(&y, &want);
+    println!("[verify] max|Δ| vs oracle = {err:.3e}");
+    anyhow::ensure!(err < 1e-3, "verification failed");
+
+    // crude tone-power probe via Goertzel-style correlation
+    let power = |freq: f64, sig: &[f32]| -> f64 {
+        let (mut re, mut im) = (0f64, 0f64);
+        for (i, &v) in sig.iter().enumerate() {
+            let ang = 2.0 * std::f64::consts::PI * freq * i as f64;
+            re += v as f64 * ang.cos();
+            im += v as f64 * ang.sin();
+        }
+        (re * re + im * im).sqrt() / sig.len() as f64
+    };
+    let pass_in = power(0.05, &x[..n]);
+    let pass_out = power(0.05, &y);
+    let stop_in = power(0.40, &x[..n]);
+    let stop_out = power(0.40, &y);
+    println!(
+        "[filter] pass-band gain {:.2} dB, stop-band gain {:.2} dB",
+        20.0 * (pass_out / pass_in).log10(),
+        20.0 * (stop_out / stop_in).log10()
+    );
+    anyhow::ensure!(pass_out / pass_in > 0.7, "pass band attenuated too much");
+    anyhow::ensure!(stop_out / stop_in < 0.2, "stop band not attenuated");
+    println!("OK: low-pass behaviour confirmed through the mapped kernel.");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Quickstart: map one matrix multiplication onto the (simulated) VCK5000
+//! with WideSA and print everything the framework decides.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::mapping::dse::DseConstraints;
+use widesa::recurrence::{dtype::DType, library};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the computation as a uniform recurrence.
+    let rec = library::mm(8192, 8192, 8192, DType::F32);
+    println!("recurrence: {} ({} MACs)", rec.name, rec.total_macs());
+    for dep in rec.dependences() {
+        println!("  dependence: {dep}");
+    }
+
+    // 2. Configure the framework (defaults = full VCK5000, 512-bit movers).
+    let ws = WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+
+    // 3. Compile: demarcation → space-time DSE → graph → PLIO assignment
+    //    → place & route → simulation → code generation.
+    let design = ws.compile(&rec)?;
+    println!("\n{}", design.report());
+
+    // 4. Inspect the generated AIE kernel (one program serves all cores).
+    println!("generated AIE kernel (first 20 lines):");
+    for line in design.code.aie_kernel.lines().take(20) {
+        println!("  {line}");
+    }
+    Ok(())
+}

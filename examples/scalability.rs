@@ -1,0 +1,26 @@
+//! Figure 6 companion: sweep AIE counts / PLIO budgets / buffer sizes and
+//! print the scalability series (CSV on stdout for plotting).
+//!
+//! Run: `cargo run --release --example scalability`
+
+use widesa::eval::figure6;
+
+fn main() {
+    let (aies_plios, buffers, rendered) = figure6::run();
+    println!("{rendered}");
+
+    println!("# CSV: plios,aies,tops,tops_per_aie,bound");
+    for p in &aies_plios {
+        println!(
+            "{},{},{:.4},{:.6},{}",
+            p.plios, p.aies, p.tops, p.tops_per_aie, p.bound
+        );
+    }
+    println!("# CSV: buffer_mb,tops,tops_per_aie,bound");
+    for p in &buffers {
+        println!(
+            "{},{:.4},{:.6},{}",
+            p.buffer_mb, p.tops, p.tops_per_aie, p.bound
+        );
+    }
+}

@@ -1,0 +1,75 @@
+"""AOT compile path: lower every L2 variant to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts relative to this package):
+  <name>.hlo.txt    one per VARIANTS entry
+  manifest.json     name → {hlo file, inputs, outputs} consumed by
+                    rust/src/runtime/artifact.rs
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # elides literals of ≥16 elements as `constant({...})`, which the
+    # rust side's HLO text parser silently reads back as ZEROS (we found
+    # this as vanished FFT twiddles — see EXPERIMENTS.md §Gotchas).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build(out_dir: str, names=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    names = names or list(model.VARIANTS)
+    for name in names:
+        lowered = model.lower_variant(name)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        inputs, outputs = model.variant_signature(name)
+        manifest[name] = {"hlo": fname, "inputs": inputs, "outputs": outputs}
+        print(f"  lowered {name:24s} -> {fname} ({len(text)} chars)", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower WideSA L2 variants to HLO text")
+    ap.add_argument("--out", default=None,
+                    help="(Makefile marker) path; its parent dir is the artifact dir")
+    ap.add_argument("--out-dir", default=None, help="artifact output directory")
+    ap.add_argument("--only", nargs="*", default=None, help="subset of variant names")
+    args = ap.parse_args()
+    out_dir = args.out_dir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    manifest = build(out_dir, args.only)
+    # Marker file for the Makefile dependency rule.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(json.dumps(sorted(manifest)) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

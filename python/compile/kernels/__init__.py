@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots (AIE-core tiles).
+# Each kernel has a pure-jnp oracle in ref.py; pytest asserts equivalence.
+from . import conv2d, fft, fir, mm, ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: the AIE-core 2D-convolution tile.
+
+The paper's 2D-Conv recurrence iterates [h, w, p, q] with uniform
+dependences; WideSA maps (h, w) tiles onto the AIE array and keeps the
+small (p, q) kernel loops inside each core, fully unrolled into the VLIW
+schedule. Here the (h, w) tile grid is the Pallas grid and the (p, q)
+loops are unrolled in the kernel body — shifted multiply-accumulates over
+a halo-extended input, which is exactly the AIE intrinsic pattern (vector
+MAC + sliding-window reads from local memory).
+
+Halo handling: each (h, w) tile needs a (bh+P-1, bw+Q-1) input window that
+*overlaps* its neighbours — the halo exchange the PL DMA movers implement
+on the board. Pallas blocks are non-overlapping, so the window is read
+with dynamic loads (``pl.load`` + ``pl.dslice``) from the resident input,
+offset by the grid position; the graph-level tile is sized so the input
+stays within the AIE-array aggregate buffer budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(P, Q, bh, bw, x_ref, w_ref, acc_ref, o_ref):
+    """One (h, w) tile: o = acc + Σ_{p,q} x[h+p, w+q] · k[p,q] (p,q unrolled)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    out = acc_ref[...]
+    for p in range(P):
+        for q in range(Q):
+            blk = x_ref[pl.dslice(i * bh + p, bh), pl.dslice(j * bw + q, bw)]
+            out = out + blk.astype(out.dtype) * w_ref[p, q].astype(out.dtype)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "bw"))
+def conv2d_acc(x, w, acc, *, bh=32, bw=32):
+    """acc' = acc + conv2d_valid(x, w) over a Pallas grid of (bh, bw) tiles.
+
+    x: [H + P - 1, W + Q - 1] halo-extended input, w: [P, Q],
+    acc: [H, W]; H % bh == 0 and W % bw == 0.
+    """
+    P, Q = w.shape
+    H = x.shape[0] - P + 1
+    W = x.shape[1] - Q + 1
+    assert acc.shape == (H, W), f"acc shape {acc.shape} != {(H, W)}"
+    assert H % bh == 0 and W % bw == 0
+
+    grid = (H // bh, W // bw)
+    kernel = functools.partial(_conv_kernel, P, Q, bh, bw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(w.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((H, W), acc.dtype),
+        interpret=True,
+    )(x, w, acc)

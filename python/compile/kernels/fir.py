@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: the AIE-core FIR-filter tile.
+
+The FIR recurrence (Table II: n = 1048576, taps = 15) iterates [n, t] with
+uniform dependences. WideSA maps blocks of output samples onto AIE cores
+(1D systolic arrangement with the multiple-threading transform of
+§III-B-4); each core computes a contiguous chunk of y with the tap loop
+fully unrolled into VLIW MACs. The Pallas grid mirrors that: one grid step
+per output chunk, taps unrolled, the chunk's (bn + T - 1)-sample input
+window read with dynamic loads (the same shifted-window pattern as the
+conv kernel — FIR is its 1D special case).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fir_kernel(T, bn, x_ref, h_ref, o_ref):
+    """One output chunk: y[i·bn + s] = Σ_t h[t] · x[i·bn + s + t]."""
+    i = pl.program_id(0)
+    out = jnp.zeros((bn,), dtype=o_ref.dtype)
+    for t in range(T):
+        blk = x_ref[pl.dslice(i * bn + t, bn)]
+        out = out + h_ref[t].astype(out.dtype) * blk.astype(out.dtype)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def fir(x, h, *, bn=256):
+    """y[n] = Σ_t h[t] · x[n + t]; x: [N + T - 1], h: [T], y: [N], N % bn == 0."""
+    T = h.shape[0]
+    N = x.shape[0] - T + 1
+    assert N % bn == 0, f"N={N} not divisible by bn={bn}"
+    dtype = jnp.promote_types(x.dtype, h.dtype)
+    grid = (N // bn,)
+    kernel = functools.partial(_fir_kernel, T, bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+            pl.BlockSpec(h.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), dtype),
+        interpret=True,
+    )(x, h)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def fir_complex(x_re, x_im, h_re, h_im, *, bn=256):
+    """Complex FIR (cfloat row of Table II/III) via four real FIR kernels.
+
+    (xr + i·xi) ⊛ (hr + i·hi) = (xr⊛hr − xi⊛hi) + i·(xr⊛hi + xi⊛hr)
+    """
+    rr = fir(x_re, h_re, bn=bn)
+    ii = fir(x_im, h_im, bn=bn)
+    ri = fir(x_re, h_im, bn=bn)
+    ir = fir(x_im, h_re, bn=bn)
+    return rr - ii, ri + ir

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: the AIE-core matrix-multiply tile.
+
+Hardware adaptation (DESIGN.md §2): on the real VCK5000 one AIE core runs a
+vectorised MAC kernel over an (N2, M2, K2) tile staged into its 32 KB local
+memory by the DMA cascade; neighbouring cores pass A/B operands through
+shared buffers along the systolic dimensions. Here the same dataflow is
+expressed as a Pallas grid: the (i, j) grid dimensions are the *space*
+loops (one grid point = one AIE core's tile), the k grid dimension is the
+*time* loop carried by the cascade, and the BlockSpecs are the HBM↔VMEM
+staging schedule that the paper implements with DMA movers on the PL.
+
+The inner contraction is an MXU-shaped ``jnp.dot`` so a real-TPU lowering
+would hit the systolic matmul unit; on this image the kernel is lowered
+with interpret=True (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# AIE-equivalent local-memory budget per core: 32 KB data memory.
+AIE_LOCAL_MEM_BYTES = 32 * 1024
+
+
+def tile_vmem_bytes(bn, bm, bk, dtype):
+    """Working-set bytes of one grid step (A, B and C tiles resident)."""
+    item = jnp.dtype(dtype).itemsize
+    return (bn * bk + bk * bm + bn * bm) * item
+
+
+def _mm_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One (space, time) grid step: o = (k == 0 ? c : o) + a @ b."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "bk"))
+def mm_acc(a, b, c, *, bn=32, bm=32, bk=32):
+    """C' = C + A @ B over a Pallas grid of (bn, bm, bk) tiles.
+
+    a: [N, K], b: [K, M], c: [N, M]; N/M/K must divide by the block sizes.
+    This is the graph-level tile one full AIE-array round computes; the
+    grid interior corresponds to the per-core space-time schedule.
+    """
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert c.shape == (n, m)
+    assert n % bn == 0 and m % bm == 0 and k % bk == 0, (
+        f"({n},{m},{k}) not divisible by blocks ({bn},{bm},{bk})"
+    )
+    assert tile_vmem_bytes(bn, bm, bk, c.dtype) <= AIE_LOCAL_MEM_BYTES, (
+        "tile working set exceeds the 32 KB AIE-core budget"
+    )
+    grid = (n // bn, m // bm, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn, bm), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), c.dtype),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Each function here is the *definition of correctness* for the matching
+kernel in this package: pytest (python/tests/) asserts allclose between the
+Pallas kernel (interpret=True) and these references across hypothesis-swept
+shapes and dtypes, and the rust-side functional executor is validated
+against the same semantics (coordinator/verify.rs re-implements them on the
+host side).
+
+The four computations are the paper's four uniform recurrences (Table II):
+matrix multiplication, 2D convolution, FIR filtering, and the radix-2 FFT
+stage that 2D-FFT decomposes into.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mm_acc_ref(a, b, c):
+    """C' = C + A @ B — one graph-level MM tile with accumulation.
+
+    The accumulate form is what the systolic cascade computes: the k-loop
+    carried partial sums enter as ``c`` and leave as the return value, so
+    the host scheduler can chain tiles along k.
+    """
+    return c + jnp.matmul(a, b, preferred_element_type=c.dtype).astype(c.dtype)
+
+
+def conv2d_ref(x, w, acc):
+    """acc' = acc + valid 2D correlation of x with w.
+
+    x: [H + P - 1, W + Q - 1], w: [P, Q] → out [H, W] with
+    y[h, w] = Σ_{p,q} x[h+p, w+q] · k[p, q]  (the paper's uniform
+    recurrence over [h, w, p, q]).
+    """
+    P, Q = w.shape
+    H = x.shape[0] - P + 1
+    W = x.shape[1] - Q + 1
+    out = jnp.zeros((H, W), dtype=acc.dtype)
+    for p in range(P):
+        for q in range(Q):
+            out = out + x[p : p + H, q : q + W].astype(acc.dtype) * w[p, q].astype(acc.dtype)
+    return acc + out
+
+
+def fir_ref(x, h):
+    """y[n] = Σ_t h[t] · x[n + t] for n in [0, N) with len(x) = N + T - 1."""
+    T = h.shape[0]
+    N = x.shape[0] - T + 1
+    y = jnp.zeros((N,), dtype=jnp.promote_types(x.dtype, h.dtype))
+    for t in range(T):
+        y = y + h[t].astype(y.dtype) * x[t : t + N].astype(y.dtype)
+    return y
+
+
+def fir_complex_ref(x_re, x_im, h_re, h_im):
+    """Complex FIR as four real FIRs (cfloat benchmark row)."""
+    rr = fir_ref(x_re, h_re)
+    ii = fir_ref(x_im, h_im)
+    ri = fir_ref(x_re, h_im)
+    ir = fir_ref(x_im, h_re)
+    return rr - ii, ri + ir
+
+
+def fft_stage_ref(re, im, tw_re, tw_im, stage):
+    """One radix-2 DIT butterfly stage on batched length-N signals.
+
+    re/im: [B, N]; stage s has butterfly half-size m = 2**s; tw_*: [m]
+    (twiddles W_{2m}^j = exp(-2πi·j/(2m)) for j in [0, m)).
+    Inputs are in bit-reversed order before stage 0
+    (see ``bit_reverse_indices``).
+    """
+    B, N = re.shape
+    m = 1 << stage
+    g = N // (2 * m)
+    re3 = re.reshape(B, g, 2, m)
+    im3 = im.reshape(B, g, 2, m)
+    a_re, a_im = re3[:, :, 0, :], im3[:, :, 0, :]
+    b_re, b_im = re3[:, :, 1, :], im3[:, :, 1, :]
+    # b · tw (complex multiply)
+    bt_re = b_re * tw_re - b_im * tw_im
+    bt_im = b_re * tw_im + b_im * tw_re
+    out_re = jnp.stack([a_re + bt_re, a_re - bt_re], axis=2).reshape(B, N)
+    out_im = jnp.stack([a_im + bt_im, a_im - bt_im], axis=2).reshape(B, N)
+    return out_re, out_im
+
+
+def bit_reverse_indices(n):
+    """Bit-reversal permutation for a power-of-two n."""
+    bits = int(np.log2(n))
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int32)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def twiddles(m):
+    """W_{2m}^j for j in [0, m) as (re, im) float32 arrays."""
+    j = np.arange(m)
+    ang = -2.0 * np.pi * j / (2 * m)
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def fft1d_ref(re, im):
+    """Full batched radix-2 DIT FFT built from fft_stage_ref (oracle for
+    the L2 composition). re/im: [B, N]."""
+    B, N = re.shape
+    rev = bit_reverse_indices(N)
+    re = re[:, rev]
+    im = im[:, rev]
+    stages = int(np.log2(N))
+    for s in range(stages):
+        tw_re, tw_im = twiddles(1 << s)
+        re, im = fft_stage_ref(re, im, jnp.asarray(tw_re), jnp.asarray(tw_im), s)
+    return re, im
+
+
+def fft2d_ref(re, im):
+    """2D FFT = row FFTs, transpose, row FFTs, transpose (the paper's
+    2D-FFT decomposition into two 1D passes)."""
+    re, im = fft1d_ref(re, im)
+    re, im = fft1d_ref(re.T, im.T)
+    return re.T, im.T

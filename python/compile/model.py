@@ -1,0 +1,129 @@
+"""L2: graph-level computations for the paper's four uniform recurrences.
+
+Each function here is the computation one *graph-level tile* performs — one
+full round of the mapped AIE array — composed from the L1 Pallas kernels.
+``aot.py`` lowers jitted instances of these to HLO text once at build time;
+the rust coordinator (L3) then drives the outer host-level loops (DRAM
+tiling, k-chaining, transposes between FFT passes) against the compiled
+artifacts via PJRT. Python never runs on the request path.
+
+Variant registry: ``VARIANTS`` maps artifact names to (function,
+example-argument factory) pairs; both aot.py and the pytest suite iterate
+it so what is tested is exactly what is shipped.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d, fft, fir, mm
+
+
+# ---------------------------------------------------------------------------
+# Graph-level tile computations
+# ---------------------------------------------------------------------------
+
+def mm_tile(a, b, c, *, bn=32, bm=32, bk=32):
+    """One MM graph tile: C' = C + A·B (accumulate form for k-chaining)."""
+    return (mm.mm_acc(a, b, c, bn=bn, bm=bm, bk=bk),)
+
+
+def conv2d_tile(x, w, acc, *, bh=32, bw=32):
+    """One Conv2D graph tile over a halo-extended input block."""
+    return (conv2d.conv2d_acc(x, w, acc, bh=bh, bw=bw),)
+
+
+def fir_tile(x, h, *, bn=256):
+    """One FIR graph tile: a contiguous chunk of output samples."""
+    return (fir.fir(x, h, bn=bn),)
+
+
+def fir_complex_tile(x_re, x_im, h_re, h_im, *, bn=256):
+    """One complex-FIR graph tile (cfloat benchmark row)."""
+    return fir.fir_complex(x_re, x_im, h_re, h_im, bn=bn)
+
+
+def fft1d_tile(re, im, *, bb=8):
+    """One 1D-FFT graph tile: a batch of *bit-reversed-order* rows through
+    all butterfly stages.
+
+    The 2D-FFT is two of these passes with host-side bit-reversal before
+    each pass and a transpose between them (L3 owns both — on the board
+    they are PL data movers).
+    """
+    return fft.fft_stages(re, im, bb=bb)
+
+
+# ---------------------------------------------------------------------------
+# Artifact variants (name → builder); shapes are the graph-tile sizes the
+# rust executor schedules over. Tile sizes respect the 32 KB/core budget.
+# ---------------------------------------------------------------------------
+
+def _mm_args(n, m, k, dtype):
+    return (
+        jax.ShapeDtypeStruct((n, k), dtype),
+        jax.ShapeDtypeStruct((k, m), dtype),
+        jax.ShapeDtypeStruct((n, m), dtype),
+    )
+
+
+def _conv_args(h, w, p, q, dtype):
+    return (
+        jax.ShapeDtypeStruct((h + p - 1, w + q - 1), dtype),
+        jax.ShapeDtypeStruct((p, q), dtype),
+        jax.ShapeDtypeStruct((h, w), dtype),
+    )
+
+
+def _fir_args(n, taps, dtype):
+    return (
+        jax.ShapeDtypeStruct((n + taps - 1,), dtype),
+        jax.ShapeDtypeStruct((taps,), dtype),
+    )
+
+
+def _fir_c_args(n, taps, dtype):
+    x = jax.ShapeDtypeStruct((n + taps - 1,), dtype)
+    h = jax.ShapeDtypeStruct((taps,), dtype)
+    return (x, x, h, h)
+
+
+def _fft_args(b, n, dtype):
+    s = jax.ShapeDtypeStruct((b, n), dtype)
+    return (s, s)
+
+
+VARIANTS = {
+    # MM graph tiles: 256³ macro-tile of 32³ core tiles (f32 functional
+    # path) and an i32 variant for the integer benchmark rows. A smaller
+    # 128³ variant keeps quickstart latency low.
+    "mm_f32_256": (functools.partial(mm_tile, bn=32, bm=32, bk=32), lambda: _mm_args(256, 256, 256, jnp.float32)),
+    "mm_f32_128": (functools.partial(mm_tile, bn=32, bm=32, bk=32), lambda: _mm_args(128, 128, 128, jnp.float32)),
+    "mm_i32_128": (functools.partial(mm_tile, bn=32, bm=32, bk=32), lambda: _mm_args(128, 128, 128, jnp.int32)),
+    # Conv2D graph tile: 128×128 output, 4×4 kernel (Table II fp32 shape).
+    "conv2d_f32_128x4": (functools.partial(conv2d_tile, bh=32, bw=32), lambda: _conv_args(128, 128, 4, 4, jnp.float32)),
+    "conv2d_i32_64x4": (functools.partial(conv2d_tile, bh=32, bw=32), lambda: _conv_args(64, 64, 4, 4, jnp.int32)),
+    # FIR graph tile: 4096 samples, 15 taps (Table II tap count).
+    "fir_f32_4096x15": (functools.partial(fir_tile, bn=256), lambda: _fir_args(4096, 15, jnp.float32)),
+    "fir_cf32_2048x15": (functools.partial(fir_complex_tile, bn=256), lambda: _fir_c_args(2048, 15, jnp.float32)),
+    # FFT graph tile: 64 rows of length-256 FFTs (re/im planes).
+    "fft1d_f32_64x256": (functools.partial(fft1d_tile, bb=8), lambda: _fft_args(64, 256, jnp.float32)),
+}
+
+
+def lower_variant(name):
+    """jax.jit(...).lower(...) one variant; returns the Lowered object."""
+    fn, argf = VARIANTS[name]
+    return jax.jit(fn).lower(*argf())
+
+
+def variant_signature(name):
+    """(input shapes/dtypes, output shapes/dtypes) for the manifest."""
+    fn, argf = VARIANTS[name]
+    args = argf()
+    outs = jax.eval_shape(fn, *args)
+    def enc(s):
+        return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+    return [enc(a) for a in args], [enc(o) for o in outs]

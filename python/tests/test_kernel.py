@@ -1,0 +1,46 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+# Quick deterministic smoke tests; the hypothesis sweeps live in the
+# per-kernel test modules (test_mm.py, test_conv2d.py, ...).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import conv2d, fft, fir, mm, ref
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+def test_mm_smoke(rng):
+    a = jnp.asarray(rng.standard_normal((64, 32), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((32, 64), dtype=np.float32))
+    c = jnp.asarray(rng.standard_normal((64, 64), dtype=np.float32))
+    got = mm.mm_acc(a, b, c, bn=32, bm=32, bk=32)
+    np.testing.assert_allclose(got, ref.mm_acc_ref(a, b, c), rtol=1e-5, atol=1e-5)
+
+
+def test_conv2d_smoke(rng):
+    x = jnp.asarray(rng.standard_normal((35, 35), dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal((4, 4), dtype=np.float32))
+    acc = jnp.asarray(rng.standard_normal((32, 32), dtype=np.float32))
+    got = conv2d.conv2d_acc(x, w, acc, bh=16, bw=16)
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w, acc), rtol=1e-5, atol=1e-5)
+
+
+def test_fir_smoke(rng):
+    x = jnp.asarray(rng.standard_normal((512 + 14,), dtype=np.float32))
+    h = jnp.asarray(rng.standard_normal((15,), dtype=np.float32))
+    got = fir.fir(x, h, bn=128)
+    np.testing.assert_allclose(got, ref.fir_ref(x, h), rtol=1e-5, atol=1e-5)
+
+
+def test_fft_smoke(rng):
+    re = jnp.asarray(rng.standard_normal((8, 64), dtype=np.float32))
+    im = jnp.asarray(rng.standard_normal((8, 64), dtype=np.float32))
+    gre, gim = fft.fft1d(re, im, bb=4)
+    want = np.fft.fft(np.asarray(re) + 1j * np.asarray(im), axis=1)
+    np.testing.assert_allclose(gre, want.real, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(gim, want.imag, rtol=1e-4, atol=1e-3)

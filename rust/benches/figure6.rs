@@ -1,0 +1,19 @@
+//! Bench: regenerate Figure 6 (E3) — the scalability sweeps, timing one
+//! sweep point and the full figure.
+
+use widesa::eval::figure6;
+use widesa::util::bench::bench;
+
+fn main() {
+    println!("== bench figure6: sweep cost ==");
+    bench("figure6/aie-plio-sweep (32 points)", 3, || {
+        std::hint::black_box(figure6::sweep_aies_plios().len());
+    });
+    bench("figure6/buffer-sweep (3 points)", 3, || {
+        std::hint::black_box(figure6::sweep_buffers().len());
+    });
+
+    println!("\n== regenerated Figure 6 series ==");
+    let (_, _, rendered) = figure6::run();
+    println!("{rendered}");
+}

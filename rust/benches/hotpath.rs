@@ -1,0 +1,89 @@
+//! Bench: L3 hot paths (the §Perf targets) — cost-model evaluation, DSE,
+//! Algorithm 1, congestion recompute, XY routing, packet merge, the
+//! annealer's iteration rate, and the PJRT tile-execution latency the
+//! functional replay pays per round.
+
+use widesa::arch::array::AieArray;
+use widesa::arch::vck5000::BoardConfig;
+use widesa::graph::builder::build;
+use widesa::graph::packet::merge_ports;
+use widesa::mapping::cost::CostModel;
+use widesa::mapping::dse::{explore, explore_all, DseConstraints};
+use widesa::place_route::anneal::anneal;
+use widesa::place_route::placement::place;
+use widesa::place_route::router::route_all;
+use widesa::plio::assignment::assign;
+use widesa::plio::congestion::congestion;
+use widesa::recurrence::{dtype::DType, library};
+use widesa::runtime::artifact::Manifest;
+use widesa::runtime::client::Runtime;
+use widesa::runtime::executor::Tensor;
+use widesa::util::bench::bench;
+use widesa::util::rng::XorShift64;
+
+fn main() {
+    let board = BoardConfig::vck5000();
+    let rec = library::mm(8192, 8192, 8192, DType::F32);
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    let (cand, _) = explore(&rec, &board, &cons).unwrap();
+    let model = CostModel::new(board.clone());
+    let (graph, _) = merge_ports(&build(&cand, &model), model.channel_bw());
+    let placement = place(&graph, &AieArray::default()).unwrap();
+    let assignment = assign(&graph, &placement, &board.plio, 48, 48);
+
+    println!("== L3 hot paths ==");
+    bench("cost-model/estimate", 2000, || {
+        std::hint::black_box(model.estimate(&cand).tops);
+    });
+    bench("dse/explore-all (MM)", 50, || {
+        std::hint::black_box(explore_all(&rec, &board, &cons).len());
+    });
+    bench("graph/build+merge (400 AIEs)", 50, || {
+        let (g, _) = merge_ports(&build(&cand, &model), model.channel_bw());
+        std::hint::black_box(g.edges.len());
+    });
+    bench("plio/algorithm1 (400 AIEs)", 100, || {
+        std::hint::black_box(assign(&graph, &placement, &board.plio, 48, 48).feasible);
+    });
+    bench("plio/congestion-recompute", 200, || {
+        std::hint::black_box(
+            congestion(&graph, &placement, &assignment.columns, 50).max_east(),
+        );
+    });
+    bench("router/xy-route-all (400 AIEs)", 100, || {
+        std::hint::black_box(
+            route_all(&graph, &placement, &assignment.columns, 50, 48, 48).total_hops,
+        );
+    });
+    bench("anneal/20k-iterations (400 AIEs)", 5, || {
+        std::hint::black_box(anneal(&graph, &AieArray::default(), 9, 20_000).iterations);
+    });
+
+    // PJRT replay hot path (needs `make artifacts`)
+    if Manifest::default_dir().join("manifest.json").exists() {
+        let mut rt = Runtime::new().unwrap();
+        let mut rng = XorShift64::new(3);
+        let n = 128usize;
+        let mut a = vec![0f32; n * n];
+        let mut b = vec![0f32; n * n];
+        let mut c = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        rng.fill_f32(&mut c);
+        let inputs = [
+            Tensor::f32(vec![n, n], a),
+            Tensor::f32(vec![n, n], b),
+            Tensor::f32(vec![n, n], c),
+        ];
+        rt.run("mm_f32_128", &inputs).unwrap(); // compile outside timing
+        println!("\n== PJRT replay hot path ==");
+        bench("pjrt/mm_f32_128 tile execute", 20, || {
+            std::hint::black_box(rt.run("mm_f32_128", &inputs).unwrap().len());
+        });
+    } else {
+        eprintln!("(skipping PJRT benches: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Table III (E1) — times the full WideSA pipeline per
+//! benchmark row, then prints the reproduced table. The timing is the
+//! framework's own compile cost (mapping → P&R → sim), the quantity the
+//! paper's "extended compilation time" challenge is about.
+
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::eval::table3;
+use widesa::mapping::dse::DseConstraints;
+use widesa::recurrence::{dtype::DType, library};
+use widesa::util::bench::bench;
+
+fn main() {
+    println!("== bench table3: WideSA pipeline cost per benchmark row ==");
+    let rows: Vec<(&str, _, u64)> = vec![
+        ("MM f32 8192^3", library::mm(8192, 8192, 8192, DType::F32), 400),
+        ("MM i8 10240^3", library::mm(10240, 10240, 10240, DType::I8), 400),
+        ("Conv2D i8 10240^2 8x8", library::conv2d(10240, 10240, 8, 8, DType::I8), 400),
+        ("FFT2D cf32 8192^2", library::fft2d(8192, 8192, DType::CF32), 320),
+        ("FIR f32 1M x 15", library::fir(1048576, 15, DType::F32), 256),
+    ];
+    for (name, rec, cap) in rows {
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(cap),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        bench(&format!("pipeline/{name}"), 5, || {
+            let d = ws.compile(&rec).unwrap();
+            std::hint::black_box(d.estimate.tops);
+        });
+    }
+
+    println!("\n== regenerated Table III ==");
+    let (_, table) = table3::run();
+    println!("{table}");
+}

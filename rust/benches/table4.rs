@@ -1,0 +1,24 @@
+//! Bench: regenerate Table IV (E2) — PL-only (AutoSA) vs WideSA energy
+//! efficiency, timing the per-dtype evaluation.
+
+use widesa::baselines::autosa_pl;
+use widesa::eval::table4;
+use widesa::recurrence::dtype::DType;
+use widesa::util::bench::bench;
+
+fn main() {
+    println!("== bench table4: per-dtype evaluation cost ==");
+    for dtype in [DType::F32, DType::I8, DType::I16, DType::I32] {
+        bench(&format!("autosa-pl-model/{dtype}"), 50, || {
+            std::hint::black_box(autosa_pl::design(dtype).tops);
+        });
+    }
+    bench("table4/full", 3, || {
+        let (rows, _) = table4::run();
+        std::hint::black_box(rows.len());
+    });
+
+    println!("\n== regenerated Table IV ==");
+    let (_, table) = table4::run();
+    println!("{table}");
+}

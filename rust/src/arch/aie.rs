@@ -1,0 +1,107 @@
+//! AIE core micro-architecture model (VC1902 first-generation AIE).
+//!
+//! Each core is a 7-way VLIW vector processor at 1.25 GHz with a 32 KB
+//! data memory, DMA access to the four neighbouring memory tiles (256-bit
+//! per cycle), and one 32-bit NoC stream port in each direction
+//! (paper §II-A-1, Table I).
+
+use crate::recurrence::dtype::DType;
+
+
+#[derive(Debug, Clone, Copy)]
+pub struct AieCore {
+    /// Core clock (Hz). VCK5000 runs 1.25 GHz; the DPU baseline 1.33 GHz.
+    pub freq_hz: f64,
+    /// Local data memory bytes (own tile).
+    pub local_mem_bytes: u64,
+    /// DMA width to neighbour buffers, bits per cycle per port.
+    pub dma_bits: u64,
+    /// Number of DMA-reachable neighbour buffers.
+    pub dma_ports: u64,
+    /// NoC stream width, bits per cycle per direction.
+    pub stream_bits: u64,
+    /// Accumulator registers available for latency hiding (vector lanes
+    /// worth of independent accumulation chains).
+    pub acc_registers: u64,
+    /// MAC pipeline depth in cycles (the carried-accumulation latency
+    /// that §III-B-3's latency hiding must cover).
+    pub mac_pipeline_depth: u64,
+}
+
+impl Default for AieCore {
+    fn default() -> Self {
+        Self {
+            freq_hz: 1.25e9,
+            local_mem_bytes: 32 * 1024,
+            dma_bits: 256,
+            dma_ports: 4,
+            stream_bits: 32,
+            acc_registers: 4,
+            mac_pipeline_depth: 4,
+        }
+    }
+}
+
+impl AieCore {
+    /// Peak MACs per cycle for a data type.
+    pub fn macs_per_cycle(&self, dtype: DType) -> u64 {
+        dtype.macs_per_cycle_aie()
+    }
+
+    /// Peak arithmetic throughput in ops/s for a data type.
+    pub fn peak_ops(&self, dtype: DType) -> f64 {
+        self.macs_per_cycle(dtype) as f64 * dtype.ops_per_mac() as f64 * self.freq_hz
+    }
+
+    /// DMA bandwidth (bytes/s) of one core across all neighbour ports.
+    pub fn dma_bandwidth(&self) -> f64 {
+        self.dma_bits as f64 / 8.0 * self.dma_ports as f64 * self.freq_hz
+    }
+
+    /// Stream bandwidth (bytes/s) in one direction.
+    pub fn stream_bandwidth(&self) -> f64 {
+        self.stream_bits as f64 / 8.0 * self.freq_hz
+    }
+
+    /// Pipeline efficiency of an accumulation chain of length `chain` with
+    /// `parallel_chains` interleaved independent accumulators — the
+    /// quantity latency hiding (§III-B-3) maximises. With enough
+    /// independent chains the MAC pipeline stays full; with one chain the
+    /// core stalls `mac_pipeline_depth` cycles per MAC.
+    pub fn accumulation_efficiency(&self, parallel_chains: u64) -> f64 {
+        let chains = parallel_chains.max(1) as f64;
+        let depth = self.mac_pipeline_depth as f64;
+        (chains / depth).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_numbers_match_paper() {
+        let core = AieCore::default();
+        // 128 int8 MACs/cycle × 2 ops × 1.25 GHz = 320 Gops
+        assert!((core.peak_ops(DType::I8) - 320e9).abs() < 1e3);
+        // fp32: 8 MACs/cycle → 20 Gops
+        assert!((core.peak_ops(DType::F32) - 20e9).abs() < 1e3);
+    }
+
+    #[test]
+    fn dma_bandwidth_matches_table1_per_core() {
+        let core = AieCore::default();
+        // Table I: 400 channels × 256 b × 1.25 GHz = 15.6 TB/s total ⇒ the
+        // per-core aggregate here is 4 ports × 32 B × 1.25 GHz = 160 GB/s.
+        assert!((core.dma_bandwidth() - 160e9).abs() < 1e3);
+        assert!((core.stream_bandwidth() - 5e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn accumulation_efficiency_saturates() {
+        let core = AieCore::default();
+        assert!((core.accumulation_efficiency(1) - 0.25).abs() < 1e-9);
+        assert!((core.accumulation_efficiency(4) - 1.0).abs() < 1e-9);
+        assert!((core.accumulation_efficiency(16) - 1.0).abs() < 1e-9);
+    }
+}

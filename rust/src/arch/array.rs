@@ -1,0 +1,131 @@
+//! The AIE array: an 8-row × 50-column grid of cores with shared-buffer
+//! neighbour links and per-row stream channels (paper §II-A, Figure 1).
+
+use super::aie::AieCore;
+
+
+/// Physical coordinates on the array: row 0 is adjacent to the PL
+/// interface tiles (where PLIOs land).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub row: u32,
+    pub col: u32,
+}
+
+impl Coord {
+    pub fn new(row: u32, col: u32) -> Self {
+        Self { row, col }
+    }
+
+    pub fn manhattan(self, other: Coord) -> u32 {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AieArray {
+    pub rows: u32,
+    pub cols: u32,
+    pub core: AieCore,
+    /// Aggregate westward stream channels per column boundary, summed
+    /// over all rows (the `RC_west` of the paper's satisfiability
+    /// constraints): 6 channels per row × 8 rows.
+    pub rc_west: u32,
+    /// East direction channels (aggregate per boundary).
+    pub rc_east: u32,
+}
+
+impl Default for AieArray {
+    fn default() -> Self {
+        Self {
+            rows: 8,
+            cols: 50,
+            core: AieCore::default(),
+            rc_west: 48,
+            rc_east: 48,
+        }
+    }
+}
+
+impl AieArray {
+    pub fn num_cores(&self) -> u32 {
+        self.rows * self.cols
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        c.row < self.rows && c.col < self.cols
+    }
+
+    /// Are two cores neighbours able to communicate through a shared
+    /// buffer (N/S/E/W adjacency)?
+    pub fn shares_buffer(&self, a: Coord, b: Coord) -> bool {
+        self.contains(a) && self.contains(b) && a.manhattan(b) == 1
+    }
+
+    /// All in-bounds neighbours of a core.
+    pub fn neighbours(&self, c: Coord) -> Vec<Coord> {
+        let mut out = Vec::with_capacity(4);
+        if c.row > 0 {
+            out.push(Coord::new(c.row - 1, c.col));
+        }
+        if c.row + 1 < self.rows {
+            out.push(Coord::new(c.row + 1, c.col));
+        }
+        if c.col > 0 {
+            out.push(Coord::new(c.row, c.col - 1));
+        }
+        if c.col + 1 < self.cols {
+            out.push(Coord::new(c.row, c.col + 1));
+        }
+        out
+    }
+
+    /// Iterate all coordinates row-major.
+    pub fn coords(&self) -> impl Iterator<Item = Coord> + '_ {
+        (0..self.rows).flat_map(move |r| (0..self.cols).map(move |c| Coord::new(r, c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck5000_has_400_cores() {
+        assert_eq!(AieArray::default().num_cores(), 400);
+    }
+
+    #[test]
+    fn adjacency() {
+        let a = AieArray::default();
+        assert!(a.shares_buffer(Coord::new(0, 0), Coord::new(0, 1)));
+        assert!(a.shares_buffer(Coord::new(3, 7), Coord::new(4, 7)));
+        assert!(!a.shares_buffer(Coord::new(0, 0), Coord::new(1, 1)));
+        assert!(!a.shares_buffer(Coord::new(0, 0), Coord::new(0, 0)));
+        // out of bounds
+        assert!(!a.shares_buffer(Coord::new(7, 49), Coord::new(8, 49)));
+    }
+
+    #[test]
+    fn neighbours_at_corner_and_interior() {
+        let a = AieArray::default();
+        assert_eq!(a.neighbours(Coord::new(0, 0)).len(), 2);
+        assert_eq!(a.neighbours(Coord::new(3, 25)).len(), 4);
+        assert_eq!(a.neighbours(Coord::new(7, 49)).len(), 2);
+    }
+
+    #[test]
+    fn coords_cover_array() {
+        let a = AieArray::default();
+        let v: Vec<_> = a.coords().collect();
+        assert_eq!(v.len(), 400);
+        assert_eq!(v[0], Coord::new(0, 0));
+        assert_eq!(v[399], Coord::new(7, 49));
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(Coord::new(0, 0).manhattan(Coord::new(3, 4)), 7);
+        assert_eq!(Coord::new(5, 5).manhattan(Coord::new(5, 5)), 0);
+    }
+}

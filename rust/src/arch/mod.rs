@@ -1,0 +1,25 @@
+//! Versal ACAP architecture model (paper §II-A, Figure 1, Table I).
+//!
+//! Everything the simulator and the place-and-route substrate need to
+//! know about the board: AIE core micro-architecture ([`aie`]), the 8×50
+//! array and its shared-buffer connectivity ([`array`]), the mesh NoC
+//! stream network ([`noc`]), PLIO interface tiles ([`plio`]), PL
+//! resources ([`pl`]), the five data-transfer methods of Table I
+//! ([`bandwidth`]), the power model behind Table IV ([`power`]) and the
+//! assembled VCK5000 board configuration ([`vck5000`]).
+
+pub mod aie;
+pub mod array;
+pub mod bandwidth;
+pub mod noc;
+pub mod pl;
+pub mod plio;
+pub mod power;
+pub mod vck5000;
+
+pub use aie::AieCore;
+pub use array::AieArray;
+pub use bandwidth::BandwidthProfile;
+pub use pl::PlFabric;
+pub use plio::PlioSpec;
+pub use vck5000::BoardConfig;

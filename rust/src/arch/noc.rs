@@ -1,0 +1,141 @@
+//! AIE-array mesh NoC stream model.
+//!
+//! Streams route on a mesh: vertical hops within a column, horizontal
+//! hops along rows. PLIO-sourced traffic enters at row 0 of its assigned
+//! column and climbs; traffic whose source and destination columns differ
+//! crosses column boundaries horizontally — the congestion the paper's
+//! `Cong_i^{west/east}` counts (§III-C-2).
+
+use super::array::Coord;
+
+
+/// A routed stream path as a sequence of coordinates (unit steps).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamRoute {
+    pub hops: Vec<Coord>,
+}
+
+impl StreamRoute {
+    /// Deterministic X-then-Y route (horizontal first along row 0 — where
+    /// PLIO traffic actually travels — then vertical up the column).
+    pub fn xy(from: Coord, to: Coord) -> Self {
+        let mut hops = vec![from];
+        let mut cur = from;
+        while cur.col != to.col {
+            cur.col = if to.col > cur.col { cur.col + 1 } else { cur.col - 1 };
+            hops.push(cur);
+        }
+        while cur.row != to.row {
+            cur.row = if to.row > cur.row { cur.row + 1 } else { cur.row - 1 };
+            hops.push(cur);
+        }
+        Self { hops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hops.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Column boundaries crossed horizontally, as (boundary_index,
+    /// direction) pairs; boundary `i` sits between columns `i` and `i+1`.
+    /// `true` = eastward crossing.
+    pub fn horizontal_crossings(&self) -> Vec<(u32, bool)> {
+        let mut out = Vec::new();
+        for w in self.hops.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if b.col == a.col + 1 {
+                out.push((a.col, true));
+            } else if a.col == b.col + 1 {
+                out.push((b.col, false));
+            }
+        }
+        out
+    }
+}
+
+/// Per-boundary horizontal channel occupancy for a set of routes.
+#[derive(Debug, Clone, Default)]
+pub struct ChannelOccupancy {
+    /// east[i] = streams crossing boundary i eastward.
+    pub east: Vec<u32>,
+    /// west[i] = streams crossing boundary i westward.
+    pub west: Vec<u32>,
+}
+
+impl ChannelOccupancy {
+    pub fn new(cols: u32) -> Self {
+        let n = cols.saturating_sub(1) as usize;
+        Self {
+            east: vec![0; n],
+            west: vec![0; n],
+        }
+    }
+
+    pub fn add_route(&mut self, route: &StreamRoute) {
+        for (b, eastward) in route.horizontal_crossings() {
+            let b = b as usize;
+            if eastward {
+                self.east[b] += 1;
+            } else {
+                self.west[b] += 1;
+            }
+        }
+    }
+
+    pub fn max_east(&self) -> u32 {
+        self.east.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn max_west(&self) -> u32 {
+        self.west.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xy_route_shape() {
+        let r = StreamRoute::xy(Coord::new(0, 2), Coord::new(3, 5));
+        assert_eq!(r.len(), 3 + 3);
+        assert_eq!(*r.hops.first().unwrap(), Coord::new(0, 2));
+        assert_eq!(*r.hops.last().unwrap(), Coord::new(3, 5));
+        // horizontal first
+        assert_eq!(r.hops[1], Coord::new(0, 3));
+    }
+
+    #[test]
+    fn degenerate_route() {
+        let r = StreamRoute::xy(Coord::new(2, 2), Coord::new(2, 2));
+        assert!(r.is_empty());
+        assert!(r.horizontal_crossings().is_empty());
+    }
+
+    #[test]
+    fn crossings_eastward() {
+        let r = StreamRoute::xy(Coord::new(0, 1), Coord::new(0, 4));
+        assert_eq!(r.horizontal_crossings(), vec![(1, true), (2, true), (3, true)]);
+    }
+
+    #[test]
+    fn crossings_westward() {
+        let r = StreamRoute::xy(Coord::new(0, 4), Coord::new(0, 2));
+        assert_eq!(r.horizontal_crossings(), vec![(3, false), (2, false)]);
+    }
+
+    #[test]
+    fn occupancy_accumulates() {
+        let mut occ = ChannelOccupancy::new(50);
+        occ.add_route(&StreamRoute::xy(Coord::new(0, 0), Coord::new(0, 10)));
+        occ.add_route(&StreamRoute::xy(Coord::new(0, 5), Coord::new(0, 15)));
+        assert_eq!(occ.east[7], 2); // boundary 7 crossed by both
+        assert_eq!(occ.east[2], 1);
+        assert_eq!(occ.max_west(), 0);
+        assert_eq!(occ.max_east(), 2);
+    }
+}

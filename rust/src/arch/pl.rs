@@ -1,0 +1,64 @@
+//! Programmable-logic fabric model: DSP58s, on-chip buffer (BRAM + URAM)
+//! and the PL-side DMA movers that stage data between DRAM and PLIOs.
+
+
+
+#[derive(Debug, Clone)]
+pub struct PlFabric {
+    /// DSP58 slices available (VCK5000: 1968).
+    pub dsp58: u32,
+    /// Block RAM bits (967 × 36 Kb on VC1902).
+    pub bram_bits: u64,
+    /// UltraRAM bits (463 × 288 Kb).
+    pub uram_bits: u64,
+    /// PL clock for WideSA designs (paper: 250 MHz).
+    pub freq_hz: f64,
+    /// DRAM channels × per-channel bandwidth (Table I PL-DRAM: 0.1 TB/s).
+    pub dram_channels: u32,
+    pub dram_bw_per_channel: f64,
+}
+
+impl Default for PlFabric {
+    fn default() -> Self {
+        Self {
+            dsp58: 1968,
+            bram_bits: 967 * 36 * 1024,
+            uram_bits: 463 * 288 * 1024,
+            freq_hz: 250e6,
+            dram_channels: 4,
+            dram_bw_per_channel: 25e9,
+        }
+    }
+}
+
+impl PlFabric {
+    /// Total on-chip buffer bytes usable for AIE staging (BRAM + URAM).
+    pub fn buffer_bytes(&self) -> u64 {
+        (self.bram_bits + self.uram_bits) / 8
+    }
+
+    /// Aggregate DRAM bandwidth (bytes/s) — Table I's PL-DRAM row.
+    pub fn dram_bandwidth(&self) -> f64 {
+        self.dram_channels as f64 * self.dram_bw_per_channel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck5000_resources() {
+        let pl = PlFabric::default();
+        assert_eq!(pl.dsp58, 1968);
+        // ≈ 4.35 MB BRAM + 16.7 MB URAM ≈ 21 MB staging buffer
+        let mb = pl.buffer_bytes() as f64 / 1e6;
+        assert!(mb > 20.0 && mb < 22.0, "buffer {mb} MB");
+    }
+
+    #[test]
+    fn dram_bandwidth_matches_table1() {
+        let pl = PlFabric::default();
+        assert!((pl.dram_bandwidth() / 1e12 - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,114 @@
+//! Assembled board configurations.
+
+use super::aie::AieCore;
+use super::array::AieArray;
+use super::pl::PlFabric;
+use super::plio::PlioSpec;
+use super::power::PowerModel;
+
+
+/// A complete ACAP board model: the simulator's and mapper's one-stop
+/// description of the hardware.
+#[derive(Debug, Clone)]
+pub struct BoardConfig {
+    pub name: String,
+    pub array: AieArray,
+    pub plio: PlioSpec,
+    pub pl: PlFabric,
+    pub power: PowerModel,
+}
+
+impl Default for BoardConfig {
+    fn default() -> Self {
+        Self::vck5000()
+    }
+}
+
+impl BoardConfig {
+    /// The paper's evaluation board: VCK5000 (VC1902 silicon), PL at
+    /// 250 MHz, AIE array at 1.25 GHz.
+    pub fn vck5000() -> Self {
+        Self {
+            name: "VCK5000".into(),
+            array: AieArray::default(),
+            plio: PlioSpec::default(),
+            pl: PlFabric::default(),
+            power: PowerModel::default(),
+        }
+    }
+
+    /// The Vitis-AI DPU operating point (2D-Conv int8 baseline): 256 AIEs
+    /// at 1.33 GHz with the PL at 350 MHz.
+    pub fn vck5000_dpu() -> Self {
+        let mut b = Self::vck5000();
+        b.name = "VCK5000-DPU".into();
+        b.array.core = AieCore {
+            freq_hz: 1.33e9,
+            ..AieCore::default()
+        };
+        b.pl.freq_hz = 350e6;
+        b
+    }
+
+    /// Restrict to a sub-array (scalability sweeps of Figure 6) — rows ×
+    /// cols chosen to keep the array as square as the 8-row limit allows.
+    pub fn with_aie_budget(mut self, aies: u32) -> Self {
+        let rows = self.array.rows.min(((aies as f64).sqrt().ceil()) as u32).max(1);
+        let cols = aies.div_ceil(rows).min(self.array.cols).max(1);
+        self.array.rows = rows.min(8);
+        self.array.cols = cols;
+        self
+    }
+
+    /// Restrict PLIO channel counts (Figure 6 PLIO sweep).
+    pub fn with_plio_budget(mut self, per_direction: u32) -> Self {
+        self.plio.in_channels = per_direction;
+        self.plio.out_channels = per_direction;
+        self
+    }
+
+    /// Override the PL staging-buffer size (Figure 6 buffer sweep).
+    pub fn with_pl_buffer_bytes(mut self, bytes: u64) -> Self {
+        // express as BRAM-only budget for simplicity
+        self.pl.bram_bits = bytes * 8;
+        self.pl.uram_bits = 0;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck5000_defaults() {
+        let b = BoardConfig::vck5000();
+        assert_eq!(b.array.num_cores(), 400);
+        assert_eq!(b.plio.in_channels, 78);
+        assert_eq!(b.pl.dsp58, 1968);
+    }
+
+    #[test]
+    fn dpu_operating_point() {
+        let b = BoardConfig::vck5000_dpu();
+        assert!((b.array.core.freq_hz - 1.33e9).abs() < 1.0);
+        assert!((b.pl.freq_hz - 350e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn aie_budget_resize() {
+        let b = BoardConfig::vck5000().with_aie_budget(100);
+        assert!(b.array.num_cores() >= 100);
+        assert!(b.array.rows <= 8);
+        let b50 = BoardConfig::vck5000().with_aie_budget(50);
+        assert!(b50.array.num_cores() >= 50);
+    }
+
+    #[test]
+    fn plio_and_buffer_overrides() {
+        let b = BoardConfig::vck5000().with_plio_budget(39);
+        assert_eq!(b.plio.in_channels, 39);
+        let b = BoardConfig::vck5000().with_pl_buffer_bytes(4 << 20);
+        assert_eq!(b.pl.buffer_bytes(), 4 << 20);
+    }
+}

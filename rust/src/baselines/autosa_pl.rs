@@ -1,0 +1,96 @@
+//! AutoSA PL-only systolic arrays (Table IV baseline).
+//!
+//! AutoSA (Wang et al., FPGA'21) generates PL systolic arrays; on the
+//! VCK5000's 1968 DSP58s the paper reports ~1536 DSPs at the listed
+//! throughputs. The model: TOPS = DSPs × sustained-MACs-per-DSP × 2 ×
+//! f_pl, with MACs/DSP calibrated per dtype against Table IV (DSP58s
+//! pack multiple narrow MACs: ~6 int8 MACs per slice in vector mode, one
+//! fp32 MAC via the hardened FP32 path at ~64 % sustained).
+
+use crate::arch::power::{pl_only_dsps, PowerModel};
+use crate::recurrence::dtype::DType;
+
+/// PL clock AutoSA's generated arrays close timing at on this part.
+pub const AUTOSA_FREQ_HZ: f64 = 300e6;
+
+/// Sustained MACs per DSP58 per cycle (calibrated to Table IV).
+pub fn macs_per_dsp(dtype: DType) -> f64 {
+    match dtype {
+        DType::F32 => 0.64,
+        DType::I8 => 6.29,
+        DType::I16 => 2.37,
+        DType::I32 => 0.65,
+        DType::CF32 => 0.16,
+        DType::CI16 => 0.60,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PlOnlyDesign {
+    pub dtype: DType,
+    pub dsps: u32,
+    pub tops: f64,
+    pub power_w: f64,
+    pub tops_per_watt: f64,
+}
+
+pub fn design(dtype: DType) -> PlOnlyDesign {
+    let dsps = pl_only_dsps(dtype);
+    let tops = dsps as f64 * macs_per_dsp(dtype) * 2.0 * AUTOSA_FREQ_HZ / 1e12;
+    let power = PowerModel::default();
+    let act = crate::arch::power::ActivityProfile {
+        aies: 0,
+        dsps,
+        plio_channels: 0,
+        dram_gbs: 60.0,
+        aie_occupancy: 0.0,
+    };
+    let w = power.total_w(&act);
+    PlOnlyDesign {
+        dtype,
+        dsps,
+        tops,
+        power_w: w,
+        tops_per_watt: tops / w,
+    }
+}
+
+/// Published Table IV PL-only rows for calibration checks.
+pub fn paper_tops(dtype: DType) -> Option<f64> {
+    match dtype {
+        DType::F32 => Some(0.59),
+        DType::I8 => Some(5.77),
+        DType::I16 => Some(2.16),
+        DType::I32 => Some(0.60),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tops_match_published_rows() {
+        for d in [DType::F32, DType::I8, DType::I16, DType::I32] {
+            let got = design(d).tops;
+            let want = paper_tops(d).unwrap();
+            assert!((got - want).abs() / want < 0.10, "{d}: {got:.3} vs {want}");
+        }
+    }
+
+    #[test]
+    fn power_near_19w() {
+        for d in [DType::F32, DType::I8] {
+            let w = design(d).power_w;
+            assert!((w - 19.0).abs() < 2.0, "{d}: {w} W");
+        }
+    }
+
+    #[test]
+    fn dsp_budget_respected() {
+        for d in [DType::F32, DType::I8, DType::I16, DType::I32] {
+            assert!(design(d).dsps <= 1968);
+        }
+    }
+}

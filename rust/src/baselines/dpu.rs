@@ -1,0 +1,48 @@
+//! Vitis-AI DPU (XVDPU, FPL'22) int8 2D-Conv baseline.
+//!
+//! The released 8-PE DPU uses 256 AIEs at 1.33 GHz with the PL at
+//! 350 MHz and only supports int8 (paper §V-B). Its sustained conv
+//! efficiency is higher per-AIE than WideSA's (0.123 vs 0.090 TOPS/AIE)
+//! because the DPU's hand-tuned conv engine overlaps weight loading
+//! perfectly — but it cannot scale past its 256-core floorplan, which is
+//! how WideSA wins overall (36.02 vs 31.40 TOPS).
+
+use crate::baselines::BaselinePoint;
+use crate::recurrence::dtype::DType;
+
+pub const DPU_AIES: u32 = 256;
+pub const DPU_FREQ_HZ: f64 = 1.33e9;
+/// Sustained conv efficiency of the DPU conv engine (calibrated:
+/// 31.40 / (256 · 128 · 2 · 1.33 GHz) ≈ 0.360).
+pub const DPU_EFFICIENCY: f64 = 0.360;
+
+pub fn conv_tops() -> f64 {
+    DPU_AIES as f64 * 128.0 * 2.0 * DPU_FREQ_HZ * DPU_EFFICIENCY / 1e12
+}
+
+/// Only the int8 row exists (the DPU supports nothing else).
+pub fn conv_point(dtype: DType) -> Option<BaselinePoint> {
+    (dtype == DType::I8).then(|| BaselinePoint {
+        name: "Vitis-AI DPU",
+        aies: DPU_AIES,
+        tops: conv_tops(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_published_point() {
+        let got = conv_tops();
+        assert!((got - 31.40).abs() / 31.40 < 0.05, "model {got:.2} vs 31.40");
+    }
+
+    #[test]
+    fn only_int8_supported() {
+        assert!(conv_point(DType::I8).is_some());
+        assert!(conv_point(DType::F32).is_none());
+        assert!(conv_point(DType::I16).is_none());
+    }
+}

@@ -1,0 +1,45 @@
+//! Baseline accelerator models the paper compares against (Table III/IV).
+//!
+//! Each baseline is reconstructed *at its published operating point* from
+//! the numbers in the paper and the cited works (DESIGN.md §1): CHARM
+//! (MM, FPGA'23), the Vitis-AI DPU / XVDPU (int8 2D-Conv, FPL'22), the
+//! Vitis DSP library (2D-FFT + FIR), and AutoSA PL-only systolic arrays
+//! (Table IV). The models are analytic — AIE/DSP counts, clocks and
+//! sustained-efficiency parameters — so the comparison *shape* (who wins,
+//! by what factor) is preserved without the authors' testbed.
+
+pub mod autosa_pl;
+pub mod charm;
+pub mod dpu;
+pub mod dsplib;
+
+use crate::recurrence::dtype::DType;
+
+/// A baseline's reported operating point for one benchmark row.
+#[derive(Debug, Clone)]
+pub struct BaselinePoint {
+    pub name: &'static str,
+    pub aies: u32,
+    pub tops: f64,
+}
+
+impl BaselinePoint {
+    pub fn tops_per_aie(&self) -> f64 {
+        if self.aies == 0 {
+            0.0
+        } else {
+            self.tops / self.aies as f64
+        }
+    }
+}
+
+/// Look up the Table III baseline for a benchmark family + dtype.
+pub fn table3_baseline(kind: crate::mapping::candidate::Kind, dtype: DType) -> Option<BaselinePoint> {
+    use crate::mapping::candidate::Kind;
+    match kind {
+        Kind::Mm => Some(charm::mm_point(dtype)),
+        Kind::Conv2d => dpu::conv_point(dtype),
+        Kind::Fft2d => Some(dsplib::fft_point(dtype)),
+        Kind::Fir => Some(dsplib::fir_point(dtype)),
+    }
+}

@@ -1,0 +1,58 @@
+//! Heterogeneous-backend code generation (paper Figure 5): the AIE
+//! kernel C++ ([`aie_kernel`]), the ADF graph with location constraints
+//! ([`adf_graph`]), the PL DMA-mover HLS C++ ([`pl_dma`]) and the host
+//! XRT program ([`host`]). The output is the source bundle the real
+//! toolchain (aiecompiler + v++ + g++) would consume; on this testbed
+//! its structure is validated by tests and its *behaviour* is what the
+//! functional executor replays through the AOT kernels.
+
+pub mod adf_graph;
+pub mod aie_kernel;
+pub mod host;
+pub mod pl_dma;
+
+use crate::graph::builder::MappedGraph;
+use crate::mapping::MappingCandidate;
+use crate::place_route::compiler::CompileOutcome;
+
+/// The generated source bundle.
+#[derive(Debug, Clone, Default)]
+pub struct CodeBundle {
+    pub aie_kernel: String,
+    pub adf_graph: String,
+    pub pl_dma: String,
+    pub host: String,
+    pub constraints_json: String,
+}
+
+impl CodeBundle {
+    /// Write the bundle into a directory (one file per backend).
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("kernel.cc"), &self.aie_kernel)?;
+        std::fs::write(dir.join("graph.cpp"), &self.adf_graph)?;
+        std::fs::write(dir.join("dma_mover.cpp"), &self.pl_dma)?;
+        std::fs::write(dir.join("host.cpp"), &self.host)?;
+        std::fs::write(dir.join("constraints.json"), &self.constraints_json)?;
+        Ok(())
+    }
+}
+
+/// Generate all backends for a compiled design.
+pub fn generate(
+    cand: &MappingCandidate,
+    graph: &MappedGraph,
+    compile: &CompileOutcome,
+) -> CodeBundle {
+    CodeBundle {
+        aie_kernel: aie_kernel::generate(cand),
+        adf_graph: adf_graph::generate(cand, graph, compile),
+        pl_dma: pl_dma::generate(cand, graph),
+        host: host::generate(cand),
+        constraints_json: compile
+            .constraints
+            .as_ref()
+            .map(|c| c.to_json())
+            .unwrap_or_default(),
+    }
+}

@@ -1,0 +1,281 @@
+//! Functional executor: replay a mapped design tile-by-tile through the
+//! AOT-compiled kernels — the rust incarnation of the generated host
+//! program. The outer loops here are exactly the host-level schedule
+//! (DRAM tiling + k-chaining + inter-pass transposes); each graph tile
+//! executes on the PJRT runtime, standing in for one round of the AIE
+//! array.
+
+use crate::runtime::client::Runtime;
+use crate::runtime::executor::Tensor;
+use anyhow::{bail, Result};
+
+/// Statistics from a functional run.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    /// Graph-tile kernel invocations (≙ array rounds).
+    pub rounds: u64,
+    /// Elements produced.
+    pub elements: u64,
+    /// Wall time of the replay.
+    pub seconds: f64,
+}
+
+/// C = A·B via the accumulate-form MM artifact with host k-chaining.
+/// Sizes must divide by the artifact's graph-tile edge (256 or 128).
+pub fn run_mm(rt: &mut Runtime, a: &[f32], b: &[f32], n: usize, m: usize, k: usize) -> Result<(Vec<f32>, ExecStats)> {
+    let tile = if n % 256 == 0 && m % 256 == 0 && k % 256 == 0 {
+        256
+    } else if n % 128 == 0 && m % 128 == 0 && k % 128 == 0 {
+        128
+    } else {
+        bail!("MM sizes must divide by 128 (got {n}×{m}×{k})");
+    };
+    let artifact = if tile == 256 { "mm_f32_256" } else { "mm_f32_128" };
+    let t0 = std::time::Instant::now();
+    let mut c = vec![0f32; n * m];
+    let mut stats = ExecStats::default();
+
+    let sub = |src: &[f32], row0: usize, col0: usize, rows: usize, cols: usize, stride: usize| {
+        let mut out = vec![0f32; rows * cols];
+        for r in 0..rows {
+            out[r * cols..(r + 1) * cols]
+                .copy_from_slice(&src[(row0 + r) * stride + col0..(row0 + r) * stride + col0 + cols]);
+        }
+        out
+    };
+
+    for i in (0..n).step_by(tile) {
+        for j in (0..m).step_by(tile) {
+            // accumulate across k tiles (the systolic k-chain, hosted)
+            let mut acc = vec![0f32; tile * tile];
+            for kk in (0..k).step_by(tile) {
+                let at = sub(a, i, kk, tile, tile, k);
+                let bt = sub(b, kk, j, tile, tile, m);
+                let out = rt.run(
+                    artifact,
+                    &[
+                        Tensor::f32(vec![tile, tile], at),
+                        Tensor::f32(vec![tile, tile], bt),
+                        Tensor::f32(vec![tile, tile], acc),
+                    ],
+                )?;
+                acc = out.into_iter().next().unwrap().data.as_f32().unwrap().to_vec();
+                stats.rounds += 1;
+            }
+            for r in 0..tile {
+                c[(i + r) * m + j..(i + r) * m + j + tile]
+                    .copy_from_slice(&acc[r * tile..(r + 1) * tile]);
+            }
+        }
+    }
+    stats.elements = (n * m) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((c, stats))
+}
+
+/// Y = conv2d_valid(X, K) with a 4×4 kernel; output sizes must divide by
+/// the 128-edge conv artifact.
+pub fn run_conv2d(rt: &mut Runtime, x: &[f32], k: &[f32], h: usize, w: usize) -> Result<(Vec<f32>, ExecStats)> {
+    const P: usize = 4;
+    const TILE: usize = 128;
+    if k.len() != P * P {
+        bail!("conv artifact is specialised for 4×4 kernels");
+    }
+    if h % TILE != 0 || w % TILE != 0 {
+        bail!("conv output must divide by {TILE}");
+    }
+    let xw = w + P - 1;
+    let t0 = std::time::Instant::now();
+    let mut y = vec![0f32; h * w];
+    let mut stats = ExecStats::default();
+    for i in (0..h).step_by(TILE) {
+        for j in (0..w).step_by(TILE) {
+            // halo-extended input block
+            let bh = TILE + P - 1;
+            let bw = TILE + P - 1;
+            let mut xt = vec![0f32; bh * bw];
+            for r in 0..bh {
+                xt[r * bw..(r + 1) * bw]
+                    .copy_from_slice(&x[(i + r) * xw + j..(i + r) * xw + j + bw]);
+            }
+            let out = rt.run(
+                "conv2d_f32_128x4",
+                &[
+                    Tensor::f32(vec![bh, bw], xt),
+                    Tensor::f32(vec![P, P], k.to_vec()),
+                    Tensor::f32(vec![TILE, TILE], vec![0.0; TILE * TILE]),
+                ],
+            )?;
+            let tile_out = out.into_iter().next().unwrap();
+            let data = tile_out.data.as_f32().unwrap();
+            for r in 0..TILE {
+                y[(i + r) * w + j..(i + r) * w + j + TILE]
+                    .copy_from_slice(&data[r * TILE..(r + 1) * TILE]);
+            }
+            stats.rounds += 1;
+        }
+    }
+    stats.elements = (h * w) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((y, stats))
+}
+
+/// y = FIR(x, h) with 15 taps; n must divide by the 4096-sample artifact.
+pub fn run_fir(rt: &mut Runtime, x: &[f32], h: &[f32], n: usize) -> Result<(Vec<f32>, ExecStats)> {
+    const TAPS: usize = 15;
+    const CHUNK: usize = 4096;
+    if h.len() != TAPS {
+        bail!("FIR artifact is specialised for 15 taps");
+    }
+    if n % CHUNK != 0 {
+        bail!("FIR length must divide by {CHUNK}");
+    }
+    if x.len() != n + TAPS - 1 {
+        bail!("x must have n + taps - 1 samples");
+    }
+    let t0 = std::time::Instant::now();
+    let mut y = vec![0f32; n];
+    let mut stats = ExecStats::default();
+    for off in (0..n).step_by(CHUNK) {
+        let xt = x[off..off + CHUNK + TAPS - 1].to_vec();
+        let out = rt.run(
+            "fir_f32_4096x15",
+            &[
+                Tensor::f32(vec![CHUNK + TAPS - 1], xt),
+                Tensor::f32(vec![TAPS], h.to_vec()),
+            ],
+        )?;
+        y[off..off + CHUNK].copy_from_slice(out[0].data.as_f32().unwrap());
+        stats.rounds += 1;
+    }
+    stats.elements = n as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((y, stats))
+}
+
+/// 2D FFT over a rows×256 grid: batched row FFTs through the fft1d
+/// artifact, transpose on the host (the PL data-mover's job), second
+/// pass, transpose back. rows must divide by 64 and cols must be 256.
+pub fn run_fft2d(
+    rt: &mut Runtime,
+    re: &[f32],
+    im: &[f32],
+    rows: usize,
+    cols: usize,
+) -> Result<(Vec<f32>, Vec<f32>, ExecStats)> {
+    const BATCH: usize = 64;
+    const N: usize = 256;
+    if cols != N || rows % BATCH != 0 || rows < N && N % rows != 0 {
+        // second pass runs over columns of length `rows`; the artifact is
+        // fixed at 256, so rows must equal 256 too for the full 2D pass.
+    }
+    if cols != N || rows != N {
+        bail!("fft2d replay is specialised to 256×256 grids");
+    }
+    let t0 = std::time::Instant::now();
+    let mut stats = ExecStats::default();
+
+    // Bit-reversal permutation (host-side data movement — on the board
+    // the PL mover reorders samples while staging rows into the array;
+    // the artifact computes the butterfly stages on reversed-order rows).
+    let bits = N.trailing_zeros();
+    let rev: Vec<usize> = (0..N)
+        .map(|i| ((i as u32).reverse_bits() >> (32 - bits)) as usize)
+        .collect();
+
+    let pass = |rt: &mut Runtime, re: &[f32], im: &[f32], stats: &mut ExecStats| -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut ore = vec![0f32; rows * cols];
+        let mut oim = vec![0f32; rows * cols];
+        for b in (0..rows).step_by(BATCH) {
+            let mut rt_in = vec![0f32; BATCH * cols];
+            let mut it_in = vec![0f32; BATCH * cols];
+            for r in 0..BATCH {
+                for (i, &s) in rev.iter().enumerate() {
+                    rt_in[r * cols + i] = re[(b + r) * cols + s];
+                    it_in[r * cols + i] = im[(b + r) * cols + s];
+                }
+            }
+            let out = rt.run(
+                "fft1d_f32_64x256",
+                &[
+                    Tensor::f32(vec![BATCH, N], rt_in),
+                    Tensor::f32(vec![BATCH, N], it_in),
+                ],
+            )?;
+            ore[b * cols..(b + BATCH) * cols].copy_from_slice(out[0].data.as_f32().unwrap());
+            oim[b * cols..(b + BATCH) * cols].copy_from_slice(out[1].data.as_f32().unwrap());
+            stats.rounds += 1;
+        }
+        Ok((ore, oim))
+    };
+    let transpose = |v: &[f32]| {
+        let mut out = vec![0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = v[r * cols + c];
+            }
+        }
+        out
+    };
+
+    let (re1, im1) = pass(rt, re, im, &mut stats)?;
+    let (rt2, it2) = (transpose(&re1), transpose(&im1));
+    let (re2, im2) = pass(rt, &rt2, &it2, &mut stats)?;
+    let (ore, oim) = (transpose(&re2), transpose(&im2));
+    stats.elements = (rows * cols) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((ore, oim, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::verify;
+    use crate::runtime::artifact::Manifest;
+    use crate::util::rng::XorShift64;
+
+    fn runtime() -> Option<Runtime> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::new().unwrap())
+    }
+
+    #[test]
+    fn mm_replay_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let (n, m, k) = (256, 128, 128);
+        let mut rng = XorShift64::new(1);
+        let mut a = vec![0f32; n * k];
+        let mut b = vec![0f32; k * m];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        let (c, stats) = run_mm(&mut rt, &a, &b, n, m, k).unwrap();
+        let want = verify::mm_ref(&a, &b, &vec![0.0; n * m], n, m, k);
+        assert!(verify::max_abs_diff(&c, &want) < 1e-2);
+        assert_eq!(stats.rounds, 2); // (256/128)·(128/128)·(128/128)
+    }
+
+    #[test]
+    fn fir_replay_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let n = 8192;
+        let mut rng = XorShift64::new(2);
+        let mut x = vec![0f32; n + 14];
+        let mut h = vec![0f32; 15];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut h);
+        let (y, stats) = run_fir(&mut rt, &x, &h, n).unwrap();
+        let want = verify::fir_ref(&x, &h, n);
+        assert!(verify::max_abs_diff(&y, &want) < 1e-3);
+        assert_eq!(stats.rounds, 2);
+    }
+
+    #[test]
+    fn size_validation_errors() {
+        let Some(mut rt) = runtime() else { return };
+        assert!(run_mm(&mut rt, &[0.0; 100], &[0.0; 100], 10, 10, 10).is_err());
+        assert!(run_fir(&mut rt, &[0.0; 114], &[0.0; 15], 100).is_err());
+    }
+}

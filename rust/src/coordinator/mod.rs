@@ -1,0 +1,16 @@
+//! The WideSA coordinator (L3): the automatic mapping framework of the
+//! paper's Figure 5, plus the functional executor that replays mapped
+//! designs through the AOT-compiled kernels.
+//!
+//! [`framework`] wires the full pipeline — demarcation → DSE → graph →
+//! packet merge → placement → Algorithm 1 → routing → simulation →
+//! codegen. [`exec`] is the host program: it walks the outer (DRAM-level)
+//! tile schedule and calls the PJRT runtime per graph tile, exactly as
+//! the generated host.cpp would drive the board. [`verify`] holds the
+//! host-side oracles.
+
+pub mod exec;
+pub mod framework;
+pub mod verify;
+
+pub use framework::{WideSa, WideSaConfig, CompiledDesign};

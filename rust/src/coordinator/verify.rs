@@ -1,0 +1,204 @@
+//! Host-side oracles for functional verification of replayed designs.
+//!
+//! These are deliberately naive (triple loop, textbook DFT recursion) —
+//! the trusted baseline the mapped execution must reproduce. They mirror
+//! the pure-jnp oracles in `python/compile/kernels/ref.py`.
+
+/// C' = C + A·B, row-major.
+pub fn mm_ref(a: &[f32], b: &[f32], c: &[f32], n: usize, m: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), k * m);
+    assert_eq!(c.len(), n * m);
+    let mut out = c.to_vec();
+    for i in 0..n {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..m {
+                out[i * m + j] += av * b[kk * m + j];
+            }
+        }
+    }
+    out
+}
+
+/// Valid 2D correlation: x is (h + p - 1) × (w + q - 1), kernel p × q.
+pub fn conv2d_ref(x: &[f32], k: &[f32], h: usize, w: usize, p: usize, q: usize) -> Vec<f32> {
+    let xw = w + q - 1;
+    let mut out = vec![0f32; h * w];
+    for i in 0..h {
+        for j in 0..w {
+            let mut acc = 0f32;
+            for a in 0..p {
+                for b in 0..q {
+                    acc += x[(i + a) * xw + (j + b)] * k[a * q + b];
+                }
+            }
+            out[i * w + j] = acc;
+        }
+    }
+    out
+}
+
+/// y[i] = Σ_t h[t] · x[i + t]; x has n + taps - 1 samples.
+pub fn fir_ref(x: &[f32], h: &[f32], n: usize) -> Vec<f32> {
+    let taps = h.len();
+    assert_eq!(x.len(), n + taps - 1);
+    (0..n)
+        .map(|i| (0..taps).map(|t| h[t] * x[i + t]).sum())
+        .collect()
+}
+
+/// In-place iterative radix-2 DIT FFT over (re, im) of power-of-two len.
+pub fn fft_ref(re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    assert!(n.is_power_of_two());
+    assert_eq!(im.len(), n);
+    // bit reversal
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut m = 1;
+    while m < n {
+        let theta = -std::f64::consts::PI / m as f64;
+        for g in (0..n).step_by(2 * m) {
+            for j in 0..m {
+                let ang = theta * j as f64;
+                let (twr, twi) = (ang.cos() as f32, ang.sin() as f32);
+                let (br, bi) = (re[g + m + j], im[g + m + j]);
+                let (tr, ti) = (br * twr - bi * twi, br * twi + bi * twr);
+                let (ar, ai) = (re[g + j], im[g + j]);
+                re[g + j] = ar + tr;
+                im[g + j] = ai + ti;
+                re[g + m + j] = ar - tr;
+                im[g + m + j] = ai - ti;
+            }
+        }
+        m *= 2;
+    }
+}
+
+/// 2D FFT oracle over a rows×cols grid (row-major re/im planes).
+pub fn fft2d_ref(re: &mut [f32], im: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        fft_ref(&mut re[r * cols..(r + 1) * cols], &mut im[r * cols..(r + 1) * cols]);
+    }
+    // transpose, row FFTs, transpose back
+    let mut tre = vec![0f32; rows * cols];
+    let mut tim = vec![0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            tre[c * rows + r] = re[r * cols + c];
+            tim[c * rows + r] = im[r * cols + c];
+        }
+    }
+    for c in 0..cols {
+        fft_ref(&mut tre[c * rows..(c + 1) * rows], &mut tim[c * rows..(c + 1) * rows]);
+    }
+    for r in 0..rows {
+        for c in 0..cols {
+            re[r * cols + c] = tre[c * rows + r];
+            im[r * cols + c] = tim[c * rows + r];
+        }
+    }
+}
+
+/// Max |a - b| over two buffers.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm_ref_identity() {
+        // A = I: C' = C + B
+        let n = 4;
+        let mut a = vec![0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..n * n).map(|i| i as f32).collect();
+        let c = vec![1f32; n * n];
+        let out = mm_ref(&a, &b, &c, n, n, n);
+        for i in 0..n * n {
+            assert_eq!(out[i], b[i] + 1.0);
+        }
+    }
+
+    #[test]
+    fn conv_delta_kernel_passthrough() {
+        let h = 3;
+        let w = 3;
+        let x: Vec<f32> = (0..5 * 5).map(|i| i as f32).collect();
+        let mut k = vec![0f32; 9];
+        k[0] = 1.0;
+        let out = conv2d_ref(&x, &k, h, w, 3, 3);
+        for i in 0..h {
+            for j in 0..w {
+                assert_eq!(out[i * w + j], x[i * 5 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn fir_moving_average() {
+        let x = vec![1f32; 10 + 2];
+        let h = vec![1.0 / 3.0; 3];
+        let y = fir_ref(&x, &h, 10);
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let n = 16;
+        let mut re = vec![0f32; n];
+        let mut im = vec![0f32; n];
+        re[0] = 1.0;
+        fft_ref(&mut re, &mut im);
+        for i in 0..n {
+            assert!((re[i] - 1.0).abs() < 1e-5);
+            assert!(im[i].abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let n = 64;
+        let mut re: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) % 11) as f32 - 5.0).collect();
+        let mut im = vec![0f32; n];
+        let time_energy: f32 = re.iter().map(|x| x * x).sum();
+        fft_ref(&mut re, &mut im);
+        let freq_energy: f32 =
+            re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f32>() / n as f32;
+        assert!((time_energy - freq_energy).abs() / time_energy < 1e-4);
+    }
+
+    #[test]
+    fn fft2d_impulse() {
+        let (rows, cols) = (8, 8);
+        let mut re = vec![0f32; rows * cols];
+        let mut im = vec![0f32; rows * cols];
+        re[0] = 1.0;
+        fft2d_ref(&mut re, &mut im, rows, cols);
+        for i in 0..rows * cols {
+            assert!((re[i] - 1.0).abs() < 1e-4);
+            assert!(im[i].abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! E7 (ours): ablations of WideSA's four mapping techniques (§III-B) —
+//! what each transformation contributes to the headline numbers.
+//!
+//! * no latency hiding → single accumulation chain, MAC pipeline drains;
+//! * no multiple threading → spare AIEs idle when space loops are small;
+//! * no packet-switch merging → port demand explodes past the budget;
+//! * conservative movers → the Figure 6 PLIO-bound regime.
+
+use crate::arch::vck5000::BoardConfig;
+use crate::coordinator::framework::{WideSa, WideSaConfig};
+use crate::graph::builder::build;
+use crate::mapping::cost::CostModel;
+use crate::mapping::dse::{explore, DseConstraints};
+use crate::recurrence::dtype::DType;
+use crate::recurrence::library;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::util::table::TextTable;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub bench: String,
+    pub full_tops: f64,
+    pub no_latency_tops: f64,
+    pub no_threading_tops: f64,
+    pub ports_unmerged: usize,
+    pub ports_merged: usize,
+    pub narrow_mover_tops: f64,
+}
+
+fn compile_tops(rec: &UniformRecurrence, cap: u64, cons: DseConstraints) -> f64 {
+    let board = BoardConfig::vck5000();
+    explore(rec, &board, &DseConstraints { max_aies: Some(cap), ..cons })
+        .map(|(_, est)| est.tops)
+        .unwrap_or(0.0)
+}
+
+pub fn run() -> (Vec<Row>, String) {
+    let benches: Vec<(UniformRecurrence, u64)> = vec![
+        (library::mm(8192, 8192, 8192, DType::F32), 400),
+        (library::mm(10240, 10240, 10240, DType::I8), 400),
+        (library::conv2d(10240, 10240, 8, 8, DType::I8), 400),
+        (library::fir(1048576, 15, DType::F32), 256),
+    ];
+    let mut rows = Vec::new();
+    for (rec, cap) in benches {
+        let full = compile_tops(&rec, cap, DseConstraints::default());
+        let no_lat = compile_tops(
+            &rec,
+            cap,
+            DseConstraints {
+                no_latency_hiding: true,
+                ..Default::default()
+            },
+        );
+        let no_thr = compile_tops(
+            &rec,
+            cap,
+            DseConstraints {
+                no_threading: true,
+                ..Default::default()
+            },
+        );
+        // port demand before/after packet merging
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(cap),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ws.compile(&rec).expect("mapping");
+        // narrow (128-bit) movers
+        let board = BoardConfig::vck5000();
+        let model = CostModel::new(board.clone()).with_mover_bits(128);
+        let narrow = model.estimate(&d.candidate).tops;
+        let raw = build(&d.candidate, &CostModel::new(board));
+        rows.push(Row {
+            bench: rec.name.clone(),
+            full_tops: full,
+            no_latency_tops: no_lat,
+            no_threading_tops: no_thr,
+            ports_unmerged: raw.plio_nodes().count(),
+            ports_merged: d.merge_stats.in_ports_after + d.merge_stats.out_ports_after,
+            narrow_mover_tops: narrow,
+        });
+    }
+    let mut t = TextTable::new("E7 — technique ablations (TOPS unless noted)");
+    t.header(&[
+        "Bench", "full", "no latency-hiding", "no threading", "ports raw→merged",
+        "128-bit movers",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.bench.clone(),
+            format!("{:.2}", r.full_tops),
+            format!("{:.2}", r.no_latency_tops),
+            format!("{:.2}", r.no_threading_tops),
+            format!("{}→{}", r.ports_unmerged, r.ports_merged),
+            format!("{:.2}", r.narrow_mover_tops),
+        ]);
+    }
+    (rows.clone(), t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_hiding_is_worth_4x_on_mm() {
+        let (rows, _) = run();
+        let mm = &rows[0];
+        // pipeline depth 4 ⇒ ~4× loss without interleaved accumulators
+        let ratio = mm.full_tops / mm.no_latency_tops.max(1e-9);
+        assert!(
+            (ratio - 4.0).abs() < 1.0,
+            "latency hiding ratio {ratio:.2} (expect ≈4)"
+        );
+    }
+
+    #[test]
+    fn packet_merge_fits_budget_everywhere() {
+        let (rows, _) = run();
+        for r in &rows {
+            assert!(r.ports_unmerged >= r.ports_merged);
+            assert!(r.ports_merged <= 156, "{}: {}", r.bench, r.ports_merged);
+        }
+    }
+
+    #[test]
+    fn narrow_movers_never_faster() {
+        let (rows, _) = run();
+        for r in &rows {
+            assert!(
+                r.narrow_mover_tops <= r.full_tops * 1.001,
+                "{}: narrow {} vs full {}",
+                r.bench,
+                r.narrow_mover_tops,
+                r.full_tops
+            );
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Figure 6: throughput + per-AIE efficiency of MM while sweeping
+//! #AIEs, #PLIOs and PL buffer sizes (E3).
+//!
+//! The sweeps run with the conservative 128-bit movers (the default DMA
+//! constructor output the paper's scalability study exercises — DESIGN.md
+//! §1); the Table III operating points use the widened 512-bit movers.
+
+use crate::arch::vck5000::BoardConfig;
+use crate::mapping::cost::CostModel;
+use crate::mapping::dse::{explore, DseConstraints};
+use crate::recurrence::dtype::DType;
+use crate::recurrence::library;
+use crate::util::table::TextTable;
+
+pub const AIE_SWEEP: [u64; 8] = [50, 100, 150, 200, 250, 300, 350, 400];
+pub const PLIO_SWEEP: [u32; 4] = [4, 8, 13, 26];
+pub const BUFFER_SWEEP_MB: [u64; 3] = [1, 4, 21];
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub aies: u64,
+    pub plios: u32,
+    pub buffer_mb: u64,
+    pub tops: f64,
+    pub tops_per_aie: f64,
+    pub bound: String,
+}
+
+/// Sweep #AIEs × #PLIOs at the full 21 MB buffer (Figure 6 left/middle).
+pub fn sweep_aies_plios() -> Vec<Point> {
+    let mut out = Vec::new();
+    for &plios in &PLIO_SWEEP {
+        for &aies in &AIE_SWEEP {
+            out.push(eval_point(aies, plios, 21));
+        }
+    }
+    out
+}
+
+/// Sweep PL buffer sizes at 400 AIEs / 13 PLIOs (Figure 6 right).
+pub fn sweep_buffers() -> Vec<Point> {
+    BUFFER_SWEEP_MB
+        .iter()
+        .map(|&mb| eval_point(400, 13, mb))
+        .collect()
+}
+
+fn eval_point(aies: u64, plios: u32, buffer_mb: u64) -> Point {
+    let board = BoardConfig::vck5000()
+        .with_plio_budget(plios)
+        .with_pl_buffer_bytes(buffer_mb << 20);
+    let rec = library::mm(8192, 8192, 8192, DType::F32);
+    let cons = DseConstraints {
+        max_aies: Some(aies),
+        ..Default::default()
+    };
+    let (cand, _) = explore(&rec, &board, &cons).expect("mapping");
+    // conservative movers for the scalability study
+    let model = CostModel::new(board).with_mover_bits(128);
+    let est = model.estimate(&cand);
+    Point {
+        aies: est.aies,
+        plios,
+        buffer_mb,
+        tops: est.tops,
+        tops_per_aie: est.tops_per_aie,
+        bound: est.bound.to_string(),
+    }
+}
+
+pub fn run() -> (Vec<Point>, Vec<Point>, String) {
+    let ap = sweep_aies_plios();
+    let bp = sweep_buffers();
+    let mut s = String::new();
+    let mut t = TextTable::new("Figure 6a/6b — MM fp32 throughput vs #AIEs at PLIO budgets (128-bit movers)");
+    t.header(&["#PLIOs", "#AIEs", "TOPS", "TOPS/AIE", "bound"]);
+    for p in &ap {
+        t.row(vec![
+            p.plios.to_string(),
+            p.aies.to_string(),
+            format!("{:.3}", p.tops),
+            format!("{:.5}", p.tops_per_aie),
+            p.bound.clone(),
+        ]);
+    }
+    s.push_str(&t.render());
+    let mut t2 = TextTable::new("Figure 6c — MM fp32 vs PL buffer size (400 AIEs, 13 PLIOs)");
+    t2.header(&["Buffer MB", "TOPS", "TOPS/AIE", "bound"]);
+    for p in &bp {
+        t2.row(vec![
+            p.buffer_mb.to_string(),
+            format!("{:.3}", p.tops),
+            format!("{:.5}", p.tops_per_aie),
+            p.bound.clone(),
+        ]);
+    }
+    s.push_str(&t2.render());
+    (ap, bp, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_increases_with_aies() {
+        let pts = sweep_aies_plios();
+        // at the largest PLIO budget, TOPS must rise monotonically-ish
+        let line: Vec<_> = pts.iter().filter(|p| p.plios == 26).collect();
+        for w in line.windows(2) {
+            assert!(
+                w[1].tops >= w[0].tops * 0.98,
+                "throughput dropped: {} → {}",
+                w[0].tops,
+                w[1].tops
+            );
+        }
+    }
+
+    #[test]
+    fn efficiency_declines_past_knee_at_low_plio() {
+        // the paper's observation: past ~200 AIEs the per-AIE efficiency
+        // falls when PLIO-constrained
+        let pts = sweep_aies_plios();
+        let line: Vec<_> = pts.iter().filter(|p| p.plios == 4).collect();
+        let eff_200 = line.iter().find(|p| p.aies >= 200).unwrap().tops_per_aie;
+        let eff_400 = line.last().unwrap().tops_per_aie;
+        assert!(
+            eff_400 < eff_200 * 0.95,
+            "no knee: eff@200={eff_200:.5} eff@400={eff_400:.5}"
+        );
+    }
+
+    #[test]
+    fn more_plios_never_hurt() {
+        let pts = sweep_aies_plios();
+        for &aies in &AIE_SWEEP {
+            let series: Vec<_> = pts.iter().filter(|p| p.aies as u64 >= aies.saturating_sub(30) && p.aies <= aies).collect();
+            let _ = series;
+        }
+        // direct pairing: same AIE budget, increasing PLIOs
+        for i in 0..AIE_SWEEP.len() {
+            let mut last = 0.0;
+            for &plios in &PLIO_SWEEP {
+                let p = pts
+                    .iter()
+                    .find(|p| p.plios == plios && AIE_SWEEP[i] >= p.aies && p.aies + 60 >= AIE_SWEEP[i])
+                    .unwrap();
+                assert!(p.tops >= last * 0.999, "PLIO increase hurt at {} AIEs", p.aies);
+                last = p.tops;
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_buffer_never_hurts() {
+        let pts = sweep_buffers();
+        for w in pts.windows(2) {
+            assert!(w[1].tops >= w[0].tops * 0.999);
+        }
+    }
+}

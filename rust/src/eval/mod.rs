@@ -1,0 +1,28 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! evaluation section (DESIGN.md §5 index). Each module returns both the
+//! structured rows (for tests and benches) and a rendered text table
+//! whose rows mirror what the paper prints.
+
+pub mod ablations;
+pub mod figure6;
+pub mod pnr_ablation;
+pub mod table1;
+pub mod table3;
+pub mod table4;
+
+/// Paper-vs-ours comparison cell.
+#[derive(Debug, Clone, Copy)]
+pub struct Compared {
+    pub paper: f64,
+    pub ours: f64,
+}
+
+impl Compared {
+    pub fn rel_err(&self) -> f64 {
+        if self.paper == 0.0 {
+            0.0
+        } else {
+            (self.ours - self.paper).abs() / self.paper
+        }
+    }
+}

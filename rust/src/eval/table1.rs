@@ -1,0 +1,54 @@
+//! Table I: data-communication bandwidth profile (E4).
+
+use crate::arch::bandwidth::BandwidthProfile;
+use crate::arch::vck5000::BoardConfig;
+use crate::util::table::TextTable;
+
+pub const PAPER_ROWS: [(&str, f64); 5] = [
+    ("AIE DMA", 15.6),
+    ("AIE NoC Stream", 1.95),
+    ("PLIO-PL", 1.52),
+    ("GMIO-DRAM", 0.125),
+    ("PL-DRAM", 0.100),
+];
+
+pub fn run() -> (BandwidthProfile, String) {
+    let profile = BandwidthProfile::profile(&BoardConfig::vck5000());
+    let mut t = TextTable::new("Table I — Data Communication Bandwidth (paper vs ours)");
+    t.header(&["Method", "Freq", "Bitwidth", "Channels", "Paper TB/s", "Ours TB/s"]);
+    for (name, paper) in PAPER_ROWS {
+        let m = profile.get(name).unwrap();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2} GHz", m.freq_ghz),
+            if m.bits > 0 {
+                format!("{} bits", m.bits)
+            } else {
+                "-".into()
+            },
+            m.channels.to_string(),
+            format!("{paper:.3}"),
+            format!("{:.3}", m.total_tbs),
+        ]);
+    }
+    let rendered = t.render();
+    (profile, rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_within_tolerance() {
+        let (profile, table) = run();
+        for (name, paper) in PAPER_ROWS {
+            let ours = profile.get(name).unwrap().total_tbs;
+            assert!(
+                (ours - paper).abs() / paper < 0.12,
+                "{name}: {ours} vs {paper}"
+            );
+        }
+        assert_eq!(table.lines().count(), 3 + 5);
+    }
+}

@@ -1,0 +1,181 @@
+//! Table III: throughput + AIE efficiency across the four benchmarks and
+//! all data types (E1) — baseline vs WideSA (ours) vs WideSA (paper).
+
+use crate::baselines::table3_baseline;
+use crate::coordinator::framework::{WideSa, WideSaConfig};
+use crate::mapping::candidate::Kind;
+use crate::mapping::dse::DseConstraints;
+use crate::recurrence::dtype::DType;
+use crate::recurrence::library;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::util::table::TextTable;
+
+/// One evaluated row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub bench: &'static str,
+    pub dtype: DType,
+    pub baseline_name: Option<&'static str>,
+    pub baseline_aies: Option<u32>,
+    pub baseline_tops: Option<f64>,
+    pub widesa_aies: u64,
+    pub widesa_tops: f64,
+    pub widesa_tops_e2e: f64,
+    pub paper_widesa_aies: u32,
+    pub paper_widesa_tops: f64,
+}
+
+/// The paper's WideSA rows (Table III) — reproduction targets.
+pub fn paper_rows() -> Vec<(&'static str, DType, u32, f64)> {
+    vec![
+        ("MM", DType::F32, 400, 4.15),
+        ("MM", DType::I8, 400, 32.49),
+        ("MM", DType::I16, 400, 8.10),
+        ("MM", DType::I32, 400, 3.92),
+        ("2D-Conv", DType::F32, 400, 4.50),
+        ("2D-Conv", DType::I8, 400, 36.02),
+        ("2D-Conv", DType::I16, 400, 10.35),
+        ("2D-Conv", DType::I32, 400, 4.48),
+        ("2D-FFT", DType::CF32, 320, 1.10),
+        ("2D-FFT", DType::CI16, 320, 3.83),
+        ("FIR", DType::F32, 256, 2.92),
+        ("FIR", DType::I8, 256, 39.3),
+        ("FIR", DType::I16, 256, 9.47),
+        ("FIR", DType::CF32, 256, 2.89),
+    ]
+}
+
+fn benchmark(bench: &str, dtype: DType) -> UniformRecurrence {
+    match bench {
+        "MM" => {
+            let n = match dtype {
+                DType::I8 => 10240,
+                DType::I16 => 9600,
+                _ => 8192,
+            };
+            library::mm(n, n, n, dtype)
+        }
+        "2D-Conv" => {
+            let k = if dtype == DType::I8 { 8 } else { 4 };
+            library::conv2d(10240, 10240, k, k, dtype)
+        }
+        "2D-FFT" => library::fft2d(8192, 8192, dtype),
+        "FIR" => library::fir(1048576, 15, dtype),
+        _ => unreachable!(),
+    }
+}
+
+/// Evaluate all 14 rows at the paper's operating points.
+pub fn run() -> (Vec<Row>, String) {
+    let mut rows = Vec::new();
+    for (bench, dtype, paper_aies, paper_tops) in paper_rows() {
+        let rec = benchmark(bench, dtype);
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(paper_aies as u64),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ws.compile(&rec).expect("mapping");
+        let base = table3_baseline(Kind::of(&rec), dtype);
+        rows.push(Row {
+            bench,
+            dtype,
+            baseline_name: base.as_ref().map(|b| b.name),
+            baseline_aies: base.as_ref().map(|b| b.aies),
+            baseline_tops: base.as_ref().map(|b| b.tops),
+            widesa_aies: d.estimate.aies,
+            widesa_tops: d.estimate.tops,
+            widesa_tops_e2e: d.estimate.tops_e2e,
+            paper_widesa_aies: paper_aies,
+            paper_widesa_tops: paper_tops,
+        });
+    }
+    let rendered = render(&rows);
+    (rows, rendered)
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut t = TextTable::new(
+        "Table III — Throughput and AIE Efficiency (baseline / WideSA-ours / WideSA-paper)",
+    );
+    t.header(&[
+        "Bench", "Dtype", "Baseline", "#AIEs", "TOPS", "TOPS/AIE", "| ours #AIEs", "ours TOPS",
+        "ours TOPS/AIE", "ours e2e", "| paper TOPS", "Δ%",
+    ]);
+    for r in rows {
+        let delta = 100.0 * (r.widesa_tops - r.paper_widesa_tops) / r.paper_widesa_tops;
+        t.row(vec![
+            r.bench.to_string(),
+            r.dtype.to_string(),
+            r.baseline_name.unwrap_or("-").to_string(),
+            r.baseline_aies.map_or("-".into(), |v| v.to_string()),
+            r.baseline_tops.map_or("-".into(), |v| format!("{v:.2}")),
+            r.baseline_tops
+                .zip(r.baseline_aies)
+                .map_or("-".into(), |(t, a)| format!("{:.3}", t / a as f64)),
+            r.widesa_aies.to_string(),
+            format!("{:.2}", r.widesa_tops),
+            format!("{:.4}", r.widesa_tops / r.widesa_aies as f64),
+            format!("{:.2}", r.widesa_tops_e2e),
+            format!("{:.2}", r.paper_widesa_tops),
+            format!("{delta:+.1}"),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_reproduce_within_15_percent() {
+        let (rows, _) = run();
+        assert_eq!(rows.len(), 14);
+        for r in &rows {
+            let rel = (r.widesa_tops - r.paper_widesa_tops).abs() / r.paper_widesa_tops;
+            assert!(
+                rel < 0.15,
+                "{} {}: ours {:.2} vs paper {:.2}",
+                r.bench,
+                r.dtype,
+                r.widesa_tops,
+                r.paper_widesa_tops
+            );
+        }
+    }
+
+    #[test]
+    fn widesa_beats_every_baseline() {
+        let (rows, _) = run();
+        for r in &rows {
+            if let Some(b) = r.baseline_tops {
+                assert!(
+                    r.widesa_tops > b,
+                    "{} {}: WideSA {:.2} ≤ baseline {:.2}",
+                    r.bench,
+                    r.dtype,
+                    r.widesa_tops,
+                    b
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mm_f32_speedup_near_1_11x() {
+        let (rows, _) = run();
+        let r = rows
+            .iter()
+            .find(|r| r.bench == "MM" && r.dtype == DType::F32)
+            .unwrap();
+        let speedup = r.widesa_tops / r.baseline_tops.unwrap();
+        assert!(
+            (speedup - 1.11).abs() < 0.08,
+            "abstract claims 1.11×, got {speedup:.3}"
+        );
+    }
+}
+

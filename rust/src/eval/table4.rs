@@ -1,0 +1,145 @@
+//! Table IV: MM performance + energy efficiency, PL-only (AutoSA) vs
+//! WideSA (E2).
+
+use crate::arch::power::{widesa_mover_dsps, PowerModel};
+use crate::baselines::autosa_pl;
+use crate::coordinator::framework::{WideSa, WideSaConfig};
+use crate::mapping::dse::DseConstraints;
+use crate::recurrence::dtype::DType;
+use crate::recurrence::library;
+use crate::util::table::TextTable;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub dtype: DType,
+    pub pl_dsps: u32,
+    pub pl_tops: f64,
+    pub pl_power_w: f64,
+    pub ws_dsps: u32,
+    pub ws_aies: u64,
+    pub ws_tops: f64,
+    pub ws_power_w: f64,
+    pub norm_tops_per_watt: f64,
+    pub paper_norm: f64,
+}
+
+/// Paper's normalised TOPS/W column.
+pub fn paper_norm(dtype: DType) -> f64 {
+    match dtype {
+        DType::F32 => 2.25,
+        DType::I8 => 1.94,
+        DType::I16 => 1.29,
+        DType::I32 => 2.25,
+        _ => 1.0,
+    }
+}
+
+pub fn run() -> (Vec<Row>, String) {
+    let power = PowerModel::default();
+    let mut rows = Vec::new();
+    for dtype in [DType::F32, DType::I8, DType::I16, DType::I32] {
+        let pl = autosa_pl::design(dtype);
+        let n = match dtype {
+            DType::I8 => 10240,
+            DType::I16 => 9600,
+            _ => 8192,
+        };
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ws.compile(&library::mm(n, n, n, dtype)).expect("mapping");
+        let ws_dsps = widesa_mover_dsps(dtype);
+        let dram_gbs = d.estimate.dram_bytes as f64 / d.estimate.seconds / 1e9;
+        let act = crate::arch::power::ActivityProfile {
+            aies: d.estimate.aies as u32,
+            dsps: ws_dsps,
+            plio_channels: d.estimate.plio_in_ports + d.estimate.plio_out_ports,
+            dram_gbs: dram_gbs.min(100.0),
+            aie_occupancy: d.estimate.occupancy,
+        };
+        let ws_power = power.total_w(&act);
+        let norm = (d.estimate.tops / ws_power) / (pl.tops / pl.power_w);
+        rows.push(Row {
+            dtype,
+            pl_dsps: pl.dsps,
+            pl_tops: pl.tops,
+            pl_power_w: pl.power_w,
+            ws_dsps,
+            ws_aies: d.estimate.aies,
+            ws_tops: d.estimate.tops,
+            ws_power_w: ws_power,
+            norm_tops_per_watt: norm,
+            paper_norm: paper_norm(dtype),
+        });
+    }
+    let rendered = render(&rows);
+    (rows, rendered)
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut t = TextTable::new("Table IV — MM: PL-only (AutoSA) vs WideSA");
+    t.header(&[
+        "Dtype", "PL DSPs", "PL TOPS", "PL W", "PL TOPS/W", "| WS DSPs", "WS #AIEs", "WS TOPS",
+        "WS W", "WS TOPS/W", "Norm(ours)", "Norm(paper)",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.dtype.to_string(),
+            r.pl_dsps.to_string(),
+            format!("{:.2}", r.pl_tops),
+            format!("{:.1}", r.pl_power_w),
+            format!("{:.3}", r.pl_tops / r.pl_power_w),
+            r.ws_dsps.to_string(),
+            r.ws_aies.to_string(),
+            format!("{:.2}", r.ws_tops),
+            format!("{:.1}", r.ws_power_w),
+            format!("{:.3}", r.ws_tops / r.ws_power_w),
+            format!("{:.2}x", r.norm_tops_per_watt),
+            format!("{:.2}x", r.paper_norm),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_efficiency_ratios_reproduce() {
+        let (rows, _) = run();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.norm_tops_per_watt > 1.0,
+                "{}: WideSA must beat PL-only on TOPS/W",
+                r.dtype
+            );
+            let rel = (r.norm_tops_per_watt - r.paper_norm).abs() / r.paper_norm;
+            assert!(
+                rel < 0.30,
+                "{}: norm {:.2} vs paper {:.2}",
+                r.dtype,
+                r.norm_tops_per_watt,
+                r.paper_norm
+            );
+        }
+    }
+
+    #[test]
+    fn widesa_power_near_55w() {
+        let (rows, _) = run();
+        for r in &rows {
+            assert!(
+                (r.ws_power_w - 55.0).abs() < 6.0,
+                "{}: {} W",
+                r.dtype,
+                r.ws_power_w
+            );
+        }
+    }
+}

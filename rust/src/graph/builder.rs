@@ -1,0 +1,307 @@
+//! Build the mapped graph for one round of a mapping candidate.
+//!
+//! Follows §III-C-1: iterate the space coordinates, create an AIE node
+//! per coordinate, derive inter-core edges from the dependences' space
+//! projections (constant, non-zero distance ⇒ neighbour edge through the
+//! shared buffer), and attach PLIO ports for boundary inputs, outputs and
+//! zero-distance (broadcast) inputs. Flow dependences are realised as
+//! inputs (AIEs keep no state between graph iterations). Packet-switch
+//! merging ([`super::packet`]) brings port counts under the budget.
+
+use super::edge::{Edge, EdgeKind};
+use super::node::{Node, NodeId, NodeKind};
+use crate::arch::array::Coord;
+use crate::arch::plio::PlioDir;
+use crate::mapping::candidate::{Kind, MappingCandidate};
+use crate::mapping::cost::CostModel;
+use crate::polyhedral::dependence::DepKind;
+
+/// The mapped graph: nodes, edges and the replica grid layout.
+#[derive(Debug, Clone, Default)]
+pub struct MappedGraph {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    /// Rows × cols of one replica.
+    pub replica: (u32, u32),
+    /// Number of threading replicas.
+    pub replicas: u32,
+}
+
+impl MappedGraph {
+    pub fn aie_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.is_aie())
+    }
+
+    pub fn plio_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| n.is_plio())
+    }
+
+    pub fn plio_count(&self, dir: PlioDir) -> usize {
+        self.plio_nodes().filter(|n| n.plio_dir() == Some(dir)).count()
+    }
+
+    pub fn num_aies(&self) -> usize {
+        self.aie_nodes().count()
+    }
+
+    /// AIE nodes adjacent (by an edge) to a given PLIO node.
+    pub fn plio_neighbours(&self, plio: NodeId) -> Vec<NodeId> {
+        self.edges
+            .iter()
+            .filter_map(|e| {
+                if e.src == plio {
+                    Some(e.dst)
+                } else if e.dst == plio {
+                    Some(e.src)
+                } else {
+                    None
+                }
+            })
+            .filter(|&n| self.nodes[n].is_aie())
+            .collect()
+    }
+
+    fn add_node(&mut self, kind: NodeKind, name: String) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, kind, name });
+        id
+    }
+}
+
+/// Build the mapped graph for `cand` (one round of the physical array,
+/// all threading replicas included).
+pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
+    let (r, c) = cand.replica_shape();
+    let f = cand.threading.factor.max(1) as u32;
+    let mut g = MappedGraph {
+        replica: (r as u32, c as u32),
+        replicas: f,
+        ..Default::default()
+    };
+
+    // Per-step stream rates from the cost model's step time.
+    let core = &model.board.array.core;
+    let eff = crate::mapping::cost::issue_efficiency(cand.kind, cand.rec.dtype)
+        * cand.latency.efficiency(core);
+    let step_s = cand.scope.core_macs.max(1) as f64
+        / (core.macs_per_cycle(cand.rec.dtype) as f64 * core.freq_hz * eff);
+    let b = cand.rec.dtype.bytes();
+    let t = &cand.scope.core_factors;
+
+    // 1D partitions fold serpentine into (r, c) but may not fill the last
+    // row: build exactly `active` cores per replica.
+    let active = cand.partition.active_aies();
+    for rep in 0..f {
+        // AIE nodes of this replica (usize::MAX = absent slot).
+        let mut ids = vec![vec![usize::MAX; c as usize]; r as usize];
+        let mut built = 0u64;
+        'rows: for i in 0..r as u32 {
+            for j in 0..c as u32 {
+                if built == active {
+                    break 'rows;
+                }
+                let id = g.add_node(
+                    NodeKind::Aie {
+                        virt: Coord::new(i, j),
+                    },
+                    format!("k_r{rep}_{i}_{j}"),
+                );
+                ids[i as usize][j as usize] = id;
+                built += 1;
+            }
+        }
+
+        match cand.kind {
+            Kind::Mm => {
+                let a_rate = (t[0] * t[2] * b) as f64 / step_s;
+                let b_rate = (t[2] * t[1] * b) as f64 / step_s;
+                let steps = cand.time_steps_per_round().max(1);
+                let c_rate = (t[0] * t[1] * b) as f64 / (step_s * steps as f64);
+                // A flows east along rows; enters at column 0.
+                for i in 0..r as usize {
+                    let p = g.add_node(
+                        NodeKind::Plio { dir: PlioDir::In },
+                        format!("A_in_r{rep}_{i}"),
+                    );
+                    g.edges
+                        .push(Edge::new(p, ids[i][0], EdgeKind::Stream, "A", DepKind::Read, a_rate));
+                    for j in 0..c as usize - 1 {
+                        g.edges.push(Edge::new(
+                            ids[i][j],
+                            ids[i][j + 1],
+                            EdgeKind::SharedBuffer,
+                            "A",
+                            DepKind::Read,
+                            a_rate,
+                        ));
+                    }
+                }
+                // B flows south along columns; enters at row 0.
+                for j in 0..c as usize {
+                    let p = g.add_node(
+                        NodeKind::Plio { dir: PlioDir::In },
+                        format!("B_in_r{rep}_{j}"),
+                    );
+                    g.edges
+                        .push(Edge::new(p, ids[0][j], EdgeKind::Stream, "B", DepKind::Read, b_rate));
+                    for i in 0..r as usize - 1 {
+                        g.edges.push(Edge::new(
+                            ids[i][j],
+                            ids[i + 1][j],
+                            EdgeKind::SharedBuffer,
+                            "B",
+                            DepKind::Read,
+                            b_rate,
+                        ));
+                    }
+                }
+                // C drains per core (flow dep is carried in-core along k;
+                // the output dependence terminates at a PLIO port).
+                for i in 0..r as usize {
+                    for j in 0..c as usize {
+                        let p = g.add_node(
+                            NodeKind::Plio { dir: PlioDir::Out },
+                            format!("C_out_r{rep}_{i}_{j}"),
+                        );
+                        g.edges.push(Edge::new(
+                            ids[i][j],
+                            p,
+                            EdgeKind::Stream,
+                            "C",
+                            DepKind::Output,
+                            c_rate,
+                        ));
+                    }
+                }
+            }
+            Kind::Conv2d | Kind::Fir | Kind::Fft2d => {
+                // Private in/out per core + one broadcast input (weights /
+                // taps / twiddles).
+                let (in_name, out_name, bc_name) = match cand.kind {
+                    Kind::Conv2d => ("X", "Y", "K"),
+                    Kind::Fir => ("x", "y", "h"),
+                    _ => ("row", "row_out", "W"),
+                };
+                let unique_in = match cand.kind {
+                    Kind::Conv2d => t[0] * t[1] * b,
+                    Kind::Fir => t[0] * b,
+                    _ => {
+                        let cols = cand.rec.domain.dims[3].extent * 2;
+                        cols * b
+                    }
+                };
+                let rate = unique_in as f64 / step_s;
+                let bc = g.add_node(
+                    NodeKind::Plio { dir: PlioDir::In },
+                    format!("{bc_name}_bcast_r{rep}"),
+                );
+                for i in 0..r as usize {
+                    for j in 0..c as usize {
+                        if ids[i][j] == usize::MAX {
+                            continue;
+                        }
+                        let pin = g.add_node(
+                            NodeKind::Plio { dir: PlioDir::In },
+                            format!("{in_name}_in_r{rep}_{i}_{j}"),
+                        );
+                        let pout = g.add_node(
+                            NodeKind::Plio { dir: PlioDir::Out },
+                            format!("{out_name}_out_r{rep}_{i}_{j}"),
+                        );
+                        g.edges.push(Edge::new(
+                            pin,
+                            ids[i][j],
+                            EdgeKind::Stream,
+                            in_name,
+                            DepKind::Read,
+                            rate,
+                        ));
+                        g.edges.push(Edge::new(
+                            ids[i][j],
+                            pout,
+                            EdgeKind::Stream,
+                            out_name,
+                            DepKind::Output,
+                            rate,
+                        ));
+                        g.edges.push(Edge::new(
+                            bc,
+                            ids[i][j],
+                            EdgeKind::Broadcast,
+                            bc_name,
+                            DepKind::Read,
+                            1e3, // negligible sustained rate
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck5000::BoardConfig;
+    use crate::mapping::dse::{explore, DseConstraints};
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    fn build_for(rec: crate::recurrence::spec::UniformRecurrence, cap: u64) -> MappedGraph {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        build(&cand, &CostModel::new(board))
+    }
+
+    #[test]
+    fn mm_graph_shape() {
+        let g = build_for(library::mm(8192, 8192, 8192, DType::F32), 400);
+        assert_eq!(g.num_aies(), 400);
+        // A row feeds + B col feeds in; C out per core
+        assert_eq!(g.plio_count(PlioDir::In), 8 + 50);
+        assert_eq!(g.plio_count(PlioDir::Out), 400);
+        // systolic shared-buffer edges: A: 8×49, B: 7×50
+        let shared = g
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::SharedBuffer)
+            .count();
+        assert_eq!(shared, 8 * 49 + 7 * 50);
+    }
+
+    #[test]
+    fn conv_graph_has_private_streams_and_broadcast() {
+        let g = build_for(library::conv2d(10240, 10240, 4, 4, DType::F32), 400);
+        let aies = g.num_aies();
+        assert_eq!(g.plio_count(PlioDir::In), aies + 1); // + broadcast
+        assert_eq!(g.plio_count(PlioDir::Out), aies);
+        let bcast = g
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::Broadcast)
+            .count();
+        assert_eq!(bcast, aies);
+    }
+
+    #[test]
+    fn plio_neighbours_reported() {
+        let g = build_for(library::mm(1024, 1024, 1024, DType::F32), 400);
+        for p in g.plio_nodes() {
+            let nb = g.plio_neighbours(p.id);
+            assert!(!nb.is_empty(), "PLIO {} disconnected", p.name);
+        }
+    }
+
+    #[test]
+    fn edge_rates_positive() {
+        let g = build_for(library::fir(1048576, 15, DType::F32), 256);
+        for e in &g.edges {
+            assert!(e.rate > 0.0);
+        }
+    }
+}

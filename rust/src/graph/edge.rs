@@ -1,0 +1,63 @@
+//! Edges of the mapped graph: streams between kernels and ports.
+
+use super::node::NodeId;
+use crate::polyhedral::dependence::DepKind;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Neighbour-to-neighbour transfer via shared buffer (AIE DMA).
+    SharedBuffer,
+    /// Stream over the NoC (PLIO↔AIE or packet-switched).
+    Stream,
+    /// Broadcast stream (one source fanning out to many).
+    Broadcast,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub kind: EdgeKind,
+    /// Which array's data this stream carries.
+    pub array: String,
+    /// The dependence class that created the edge.
+    pub dep: DepKind,
+    /// Sustained bytes per second this edge must carry.
+    pub rate: f64,
+    /// Packet-switch group: edges sharing a group share one PLIO port.
+    pub packet_group: Option<u32>,
+}
+
+impl Edge {
+    pub fn new(
+        src: NodeId,
+        dst: NodeId,
+        kind: EdgeKind,
+        array: impl Into<String>,
+        dep: DepKind,
+        rate: f64,
+    ) -> Self {
+        Self {
+            src,
+            dst,
+            kind,
+            array: array.into(),
+            dep,
+            rate,
+            packet_group: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_construction() {
+        let e = Edge::new(0, 1, EdgeKind::Stream, "A", DepKind::Read, 1e9);
+        assert_eq!(e.src, 0);
+        assert_eq!(e.packet_group, None);
+        assert_eq!(e.kind, EdgeKind::Stream);
+    }
+}

@@ -1,0 +1,15 @@
+//! Mapped-graph construction (paper §III-C-1, Figure 4).
+//!
+//! Turns an abstract [`crate::mapping::MappingCandidate`] into the
+//! concrete dataflow graph the AIE compiler consumes: one node per AIE
+//! kernel instance and per PLIO port, edges for every stream, with
+//! packet-switch merging and broadcast applied so the PLIO budget holds.
+
+pub mod builder;
+pub mod edge;
+pub mod node;
+pub mod packet;
+
+pub use builder::{build, MappedGraph};
+pub use edge::{Edge, EdgeKind};
+pub use node::{Node, NodeId, NodeKind};

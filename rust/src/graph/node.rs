@@ -1,0 +1,75 @@
+//! Nodes of the mapped graph: AIE kernel instances and PLIO ports.
+
+use crate::arch::array::Coord;
+use crate::arch::plio::PlioDir;
+
+pub type NodeId = usize;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeKind {
+    /// An AIE kernel instance at a virtual systolic coordinate.
+    Aie {
+        /// Virtual (row, col) in the systolic space (one round's worth).
+        virt: Coord,
+    },
+    /// A PLIO port endpoint (column assigned later by Algorithm 1).
+    Plio { dir: PlioDir },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: NodeKind,
+    /// Human-readable instance name (stable across codegen).
+    pub name: String,
+}
+
+impl Node {
+    pub fn is_aie(&self) -> bool {
+        matches!(self.kind, NodeKind::Aie { .. })
+    }
+
+    pub fn is_plio(&self) -> bool {
+        matches!(self.kind, NodeKind::Plio { .. })
+    }
+
+    pub fn virt(&self) -> Option<Coord> {
+        match self.kind {
+            NodeKind::Aie { virt } => Some(virt),
+            _ => None,
+        }
+    }
+
+    pub fn plio_dir(&self) -> Option<PlioDir> {
+        match self.kind {
+            NodeKind::Plio { dir } => Some(dir),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_kind_queries() {
+        let a = Node {
+            id: 0,
+            kind: NodeKind::Aie {
+                virt: Coord::new(1, 2),
+            },
+            name: "k_1_2".into(),
+        };
+        let p = Node {
+            id: 1,
+            kind: NodeKind::Plio { dir: PlioDir::In },
+            name: "pi0".into(),
+        };
+        assert!(a.is_aie() && !a.is_plio());
+        assert_eq!(a.virt(), Some(Coord::new(1, 2)));
+        assert!(p.is_plio());
+        assert_eq!(p.plio_dir(), Some(PlioDir::In));
+        assert_eq!(a.plio_dir(), None);
+    }
+}

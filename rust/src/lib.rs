@@ -1,0 +1,43 @@
+//! # WideSA — high array-utilization mapping of uniform recurrences on ACAP
+//!
+//! Reproduction of *WideSA: A High Array Utilization Mapping Scheme for
+//! Uniform Recurrences on the Versal ACAP Architecture* (Dai, Shi, Luo —
+//! CS.AR 2024) as a three-layer rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the WideSA framework: a polyhedral mapping
+//!   engine that derives systolic-array schedules for uniform recurrences
+//!   ([`mapping`]), a mapped-graph builder with packet-switch/broadcast
+//!   port reduction ([`graph`]), the routing-aware PLIO assignment of the
+//!   paper's Algorithm 1 ([`plio`]), a constraint-guided place-and-route
+//!   substrate standing in for the Vitis AIE compiler ([`place_route`]),
+//!   a cycle-approximate simulator of the VCK5000 board ([`sim`]),
+//!   heterogeneous-backend code generators ([`codegen`]), the baselines
+//!   the paper compares against ([`baselines`]), and the evaluation
+//!   harness that regenerates every table and figure ([`eval`]).
+//! * **L2/L1 (python/, build-time only)** — the recurrences' compute as
+//!   JAX graphs calling Pallas tile kernels, AOT-lowered to HLO text.
+//! * **Runtime bridge** — [`runtime`] loads the AOT artifacts through the
+//!   PJRT C API (`xla` crate) so mapped designs can be *functionally*
+//!   replayed tile-by-tile from rust ([`coordinator`]); python never runs
+//!   on the request path.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or
+//! `cargo run --release -- table3` to regenerate the paper's Table III.
+
+pub mod arch;
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod eval;
+pub mod graph;
+pub mod mapping;
+pub mod place_route;
+pub mod plio;
+pub mod polyhedral;
+pub mod recurrence;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use coordinator::framework::{WideSa, WideSaConfig};
+pub use recurrence::{dtype::DType, library, spec::UniformRecurrence};

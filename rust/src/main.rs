@@ -1,0 +1,183 @@
+//! WideSA CLI — the leader entrypoint.
+//!
+//! Subcommands regenerate the paper's tables and figures, run the mapping
+//! pipeline on any benchmark, emit backend code bundles, and functionally
+//! replay designs through the PJRT runtime. `widesa help` lists them.
+
+use anyhow::{bail, Result};
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::coordinator::{exec, verify};
+use widesa::eval;
+use widesa::mapping::dse::DseConstraints;
+use widesa::recurrence::dtype::DType;
+use widesa::recurrence::library;
+use widesa::recurrence::spec::UniformRecurrence;
+use widesa::runtime::client::Runtime;
+use widesa::util::rng::XorShift64;
+
+const HELP: &str = "\
+widesa — WideSA reproduction: high array-utilization mapping on a simulated Versal ACAP
+
+USAGE: widesa <COMMAND> [ARGS]
+
+COMMANDS (evaluation):
+  table1                 regenerate Table I  (bandwidth profile)
+  table3                 regenerate Table III (throughput + AIE efficiency, 14 rows)
+  table4                 regenerate Table IV (PL-only vs WideSA energy efficiency)
+  figure6                regenerate Figure 6 (AIE / PLIO / buffer scalability sweeps)
+  pnr-ablation           E5: constrained vs unconstrained place & route
+  ablations              E7: technique ablations (latency hiding, threading, merge, movers)
+
+COMMANDS (framework):
+  map <bench> <dtype> [--aies N]    run the mapping pipeline, print the design report
+  codegen <bench> <dtype> <outdir>  emit AIE kernel / ADF graph / PL movers / host code
+  run-mm [n m k]                    functional replay of MM through PJRT (default 512³)
+  selftest                          quick end-to-end smoke test
+
+  <bench>: mm | conv2d | fft2d | fir    <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
+";
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "f32" => DType::F32,
+        "i8" => DType::I8,
+        "i16" => DType::I16,
+        "i32" => DType::I32,
+        "cf32" => DType::CF32,
+        "ci16" => DType::CI16,
+        _ => bail!("unknown dtype {s} (f32|i8|i16|i32|cf32|ci16)"),
+    })
+}
+
+fn parse_bench(bench: &str, dtype: DType) -> Result<UniformRecurrence> {
+    Ok(match bench {
+        "mm" => library::mm(8192, 8192, 8192, dtype),
+        "conv2d" => library::conv2d(10240, 10240, 4, 4, dtype),
+        "fft2d" => library::fft2d(8192, 8192, dtype),
+        "fir" => library::fir(1048576, 15, dtype),
+        _ => bail!("unknown benchmark {bench} (mm|conv2d|fft2d|fir)"),
+    })
+}
+
+fn framework(max_aies: Option<u64>) -> WideSa {
+    WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+}
+
+fn cmd_map(args: &[String]) -> Result<()> {
+    let (bench, dtype) = (args.first(), args.get(1));
+    let (Some(bench), Some(dtype)) = (bench, dtype) else {
+        bail!("usage: widesa map <bench> <dtype> [--aies N]");
+    };
+    let mut aies = None;
+    if let Some(i) = args.iter().position(|a| a == "--aies") {
+        aies = Some(args.get(i + 1).map(|v| v.parse()).transpose()?.unwrap_or(400));
+    }
+    let rec = parse_bench(bench, parse_dtype(dtype)?)?;
+    let d = framework(aies).compile(&rec)?;
+    println!("{}", d.report());
+    Ok(())
+}
+
+fn cmd_codegen(args: &[String]) -> Result<()> {
+    let (Some(bench), Some(dtype), Some(outdir)) = (args.first(), args.get(1), args.get(2))
+    else {
+        bail!("usage: widesa codegen <bench> <dtype> <outdir>");
+    };
+    let rec = parse_bench(bench, parse_dtype(dtype)?)?;
+    let d = framework(Some(400)).compile(&rec)?;
+    d.code.write_to(std::path::Path::new(outdir))?;
+    println!(
+        "wrote kernel.cc, graph.cpp, dma_mover.cpp, host.cpp, constraints.json to {outdir}"
+    );
+    Ok(())
+}
+
+fn cmd_run_mm(args: &[String]) -> Result<()> {
+    let n: usize = args.first().map(|v| v.parse()).transpose()?.unwrap_or(512);
+    let m: usize = args.get(1).map(|v| v.parse()).transpose()?.unwrap_or(n);
+    let k: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(n);
+    println!("functional MM replay: {n}×{m}×{k} f32 through PJRT");
+    let mut rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = XorShift64::new(1234);
+    let mut a = vec![0f32; n * k];
+    let mut b = vec![0f32; k * m];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    let (c, stats) = exec::run_mm(&mut rt, &a, &b, n, m, k)?;
+    let want = verify::mm_ref(&a, &b, &vec![0.0; n * m], n, m, k);
+    let err = verify::max_abs_diff(&c, &want);
+    let gflops = 2.0 * (n as f64) * (m as f64) * (k as f64) / stats.seconds / 1e9;
+    println!(
+        "rounds={} wall={:.3}s functional-throughput={:.2} GFLOP/s max|Δ|={err:.2e}",
+        stats.rounds, stats.seconds, gflops
+    );
+    if err > 1e-2 {
+        bail!("verification FAILED (max|Δ| = {err})");
+    }
+    println!("verification OK");
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    println!("1/3 mapping pipeline ...");
+    let d = framework(Some(400)).compile(&library::mm(2048, 2048, 2048, DType::F32))?;
+    if !d.compile.success {
+        bail!("place & route failed");
+    }
+    println!("    ok: {}", d.sim.summary());
+    println!("2/3 PJRT runtime ...");
+    let mut rt = Runtime::new()?;
+    rt.executable("mm_f32_128")?;
+    println!("    ok: platform {}", rt.platform());
+    println!("3/3 functional replay ...");
+    cmd_run_mm(&["256".into()])?;
+    println!("selftest OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("table1") => {
+            let (_, table) = eval::table1::run();
+            println!("{table}");
+        }
+        Some("table3") => {
+            let (_, table) = eval::table3::run();
+            println!("{table}");
+        }
+        Some("table4") => {
+            let (_, table) = eval::table4::run();
+            println!("{table}");
+        }
+        Some("figure6") => {
+            let (_, _, rendered) = eval::figure6::run();
+            println!("{rendered}");
+        }
+        Some("pnr-ablation") => {
+            let (_, table) = eval::pnr_ablation::run();
+            println!("{table}");
+        }
+        Some("ablations") => {
+            let (_, table) = eval::ablations::run();
+            println!("{table}");
+        }
+        Some("map") => cmd_map(&args[1..])?,
+        Some("codegen") => cmd_codegen(&args[1..])?,
+        Some("run-mm") => cmd_run_mm(&args[1..])?,
+        Some("selftest") => cmd_selftest()?,
+        Some("help") | None => print!("{HELP}"),
+        Some(other) => {
+            eprint!("unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

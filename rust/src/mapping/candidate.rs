@@ -1,0 +1,132 @@
+//! A complete mapping candidate: every decision the WideSA mapper makes
+//! for one design point, bundled for costing, graph building and codegen.
+
+use crate::mapping::latency::LatencyHiding;
+use crate::mapping::partition::ArrayPartition;
+use crate::mapping::spacetime::SpaceTimeChoice;
+use crate::mapping::threading::Threading;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::recurrence::tiling::KernelScope;
+
+/// Workload families the kernel-level mapper specialises for (the
+/// microkernel issue-efficiency calibration keys on this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Mm,
+    Conv2d,
+    Fir,
+    Fft2d,
+}
+
+impl Kind {
+    pub fn of(rec: &UniformRecurrence) -> Self {
+        let n = rec.name.as_str();
+        if n.starts_with("mm") {
+            Kind::Mm
+        } else if n.starts_with("conv2d") {
+            Kind::Conv2d
+        } else if n.starts_with("fir") {
+            Kind::Fir
+        } else if n.starts_with("fft2d") {
+            Kind::Fft2d
+        } else {
+            // default to the most generic systolic family
+            Kind::Mm
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MappingCandidate {
+    pub rec: UniformRecurrence,
+    pub kind: Kind,
+    pub scope: KernelScope,
+    pub choice: SpaceTimeChoice,
+    pub partition: ArrayPartition,
+    pub latency: LatencyHiding,
+    pub threading: Threading,
+}
+
+impl MappingCandidate {
+    /// AIE cores the design occupies.
+    pub fn aies_used(&self) -> u64 {
+        self.partition.active_aies() * self.threading.factor
+    }
+
+    /// Physical array shape used per replica (rows, cols).
+    pub fn replica_shape(&self) -> (u64, u64) {
+        match self.partition.phys.as_slice() {
+            [r, c] => (*r, *c),
+            [len] => {
+                // serpentine over rows of 50
+                let cols = (*len).min(50);
+                let rows = len.div_ceil(cols);
+                (rows, cols)
+            }
+            _ => (1, 1),
+        }
+    }
+
+    /// Sequential rounds of the physical array (space folding ×
+    /// threading handled separately).
+    pub fn rounds(&self) -> u64 {
+        self.partition.rounds
+    }
+
+    /// Time steps within one round: product of Time-role loop extents in
+    /// the space-time nest, with the threaded loop divided by its factor.
+    pub fn time_steps_per_round(&self) -> u64 {
+        use crate::polyhedral::schedule::LoopRole;
+        let mut steps = 1u64;
+        for d in self.choice.nest.loops_with_role(LoopRole::Time) {
+            let mut e = self.choice.nest.domain.dims[d].extent;
+            if self.threading.dim == Some(d) {
+                e = e.div_ceil(self.threading.factor);
+            }
+            steps = steps.saturating_mul(e);
+        }
+        steps
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let (r, c) = self.replica_shape();
+        format!(
+            "{}: space {:?} → {}×{} phys ×{} threads = {} AIEs, {} rounds × {} steps, core tile {:?} ({} B)",
+            self.rec.name,
+            self.choice.space,
+            r,
+            c,
+            self.threading.factor,
+            self.aies_used(),
+            self.rounds(),
+            self.time_steps_per_round(),
+            self.scope.core_factors,
+            self.scope.core_bytes,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    #[test]
+    fn kind_inference() {
+        assert_eq!(
+            Kind::of(&library::mm(64, 64, 64, DType::F32)),
+            Kind::Mm
+        );
+        assert_eq!(
+            Kind::of(&library::conv2d(64, 64, 4, 4, DType::I8)),
+            Kind::Conv2d
+        );
+        assert_eq!(Kind::of(&library::fir(1024, 15, DType::F32)), Kind::Fir);
+        assert_eq!(
+            Kind::of(&library::fft2d(64, 64, DType::CF32)),
+            Kind::Fft2d
+        );
+    }
+}

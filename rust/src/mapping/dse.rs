@@ -1,0 +1,171 @@
+//! Design-space exploration: enumerate space-time choices × partitions ×
+//! threading factors, score each with the cost model, return the best
+//! legal candidate (the "optimal schedule" search of §II-B / §III-B).
+
+use crate::arch::vck5000::BoardConfig;
+use crate::mapping::candidate::{Kind, MappingCandidate};
+use crate::mapping::cost::{CostModel, PerfEstimate};
+use crate::mapping::latency;
+use crate::mapping::partition::partition;
+use crate::mapping::spacetime;
+use crate::mapping::threading;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::recurrence::tiling::demarcate;
+
+/// Resource constraints for a DSE run (Figure 6 sweeps these).
+#[derive(Debug, Clone, Default)]
+pub struct DseConstraints {
+    /// Cap on AIEs used (None = whole array).
+    pub max_aies: Option<u64>,
+    /// Disable latency hiding (ablation).
+    pub no_latency_hiding: bool,
+    /// Disable multiple threading (ablation).
+    pub no_threading: bool,
+}
+
+/// Explore and return the best candidate with its estimate.
+pub fn explore(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+) -> Option<(MappingCandidate, PerfEstimate)> {
+    explore_all(rec, board, cons).into_iter().next()
+}
+
+/// All evaluated candidates, best first.
+pub fn explore_all(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+) -> Vec<(MappingCandidate, PerfEstimate)> {
+    let scope = demarcate(rec);
+    let graph_loops = scope.graph_loops();
+    let choices = spacetime::enumerate(&scope.graph_nest, &graph_loops);
+    let model = CostModel::new(board.clone());
+    let budget = cons
+        .max_aies
+        .unwrap_or(board.array.num_cores() as u64)
+        .min(board.array.num_cores() as u64);
+
+    let mut results: Vec<(MappingCandidate, PerfEstimate)> = Vec::new();
+    for choice in choices {
+        let part = partition(&choice.nest, &choice.space, &board.array, Some(budget));
+        let spare = budget / part.active_aies().max(1);
+        // Latency hiding plans over the kernel-scope loops of the
+        // recurrence's core nest.
+        let kernel_nest = rec.loop_nest();
+        let lat = if cons.no_latency_hiding {
+            latency::LatencyHiding {
+                factors: vec![],
+                chains: 1,
+            }
+        } else {
+            latency::plan(&kernel_nest, &board.array.core)
+        };
+        let thr = if cons.no_threading {
+            threading::Threading::none()
+        } else {
+            threading::plan(&choice.nest, spare)
+        };
+        let cand = MappingCandidate {
+            rec: rec.clone(),
+            kind: Kind::of(rec),
+            scope: scope.clone(),
+            choice,
+            partition: part,
+            latency: lat,
+            threading: thr,
+        };
+        if cand.aies_used() > budget {
+            continue;
+        }
+        let est = model.estimate(&cand);
+        results.push((cand, est));
+    }
+    results.sort_by(|a, b| b.1.tops.partial_cmp(&a.1.tops).unwrap());
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    #[test]
+    fn mm_dse_finds_2d_mapping() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let (cand, est) = explore(&rec, &board, &DseConstraints::default()).unwrap();
+        assert_eq!(cand.choice.dims(), 2, "MM should map to a 2D array");
+        assert!(est.tops > 1.0);
+        assert!(cand.aies_used() <= 400);
+    }
+
+    #[test]
+    fn dse_respects_aie_budget() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        for budget in [50, 100, 200, 400] {
+            let cons = DseConstraints {
+                max_aies: Some(budget),
+                ..Default::default()
+            };
+            let (cand, _) = explore(&rec, &board, &cons).unwrap();
+            assert!(cand.aies_used() <= budget, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_in_aie_budget() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let mut last = 0.0;
+        for budget in [50, 100, 200, 400] {
+            let cons = DseConstraints {
+                max_aies: Some(budget),
+                ..Default::default()
+            };
+            let (_, est) = explore(&rec, &board, &cons).unwrap();
+            assert!(
+                est.tops >= last * 0.95,
+                "throughput dropped at budget {budget}: {} < {last}",
+                est.tops
+            );
+            last = est.tops;
+        }
+    }
+
+    #[test]
+    fn latency_hiding_ablation_hurts() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let (_, with) = explore(&rec, &board, &DseConstraints::default()).unwrap();
+        let (_, without) = explore(
+            &rec,
+            &board,
+            &DseConstraints {
+                no_latency_hiding: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            with.tops > without.tops * 1.5,
+            "latency hiding should matter: {} vs {}",
+            with.tops,
+            without.tops
+        );
+    }
+
+    #[test]
+    fn all_candidates_ranked() {
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let board = BoardConfig::vck5000();
+        let all = explore_all(&rec, &board, &DseConstraints::default());
+        assert!(all.len() >= 3);
+        for w in all.windows(2) {
+            assert!(w[0].1.tops >= w[1].1.tops);
+        }
+    }
+}

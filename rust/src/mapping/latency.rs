@@ -1,0 +1,145 @@
+//! Latency hiding (paper §III-B-3).
+//!
+//! Accumulation statements carry a loop dependence through the MAC
+//! pipeline: with a single accumulation chain the core stalls
+//! `mac_pipeline_depth` cycles per vector MAC. The transform identifies
+//! parallel loops (no carried dependence), strip-mines them, and sinks
+//! the point loops innermost so the kernel interleaves `chains`
+//! independent accumulators — exactly the paper's tiling of (i, j) by
+//! (N2, M2) with point loops permuted innermost.
+
+use crate::arch::aie::AieCore;
+use crate::polyhedral::schedule::{LoopNest, LoopRole};
+
+/// Chosen latency-hiding factors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHiding {
+    /// (loop index in the *kernel-scope* nest, strip factor) pairs.
+    pub factors: Vec<(usize, u64)>,
+    /// Independent accumulation chains the kernel interleaves.
+    pub chains: u64,
+}
+
+impl LatencyHiding {
+    /// Pipeline efficiency achieved on `core`.
+    pub fn efficiency(&self, core: &AieCore) -> f64 {
+        core.accumulation_efficiency(self.chains)
+    }
+}
+
+/// Loops (by index) eligible for latency hiding inside the kernel scope:
+/// parallel w.r.t. every *flow* dependence (read reuse does not stall the
+/// accumulator).
+pub fn parallel_kernel_loops(nest: &LoopNest) -> Vec<usize> {
+    use crate::polyhedral::dependence::DepKind;
+    (0..nest.rank())
+        .filter(|&d| {
+            nest.domain.dims[d].extent > 1
+                && nest
+                    .deps
+                    .iter()
+                    .filter(|dep| dep.kind == DepKind::Flow)
+                    .all(|dep| dep.vector[d] == 0)
+        })
+        .collect()
+}
+
+/// Pick strip factors so the product of point extents covers the MAC
+/// pipeline depth (more chains than depth wastes accumulator registers).
+pub fn plan(nest: &LoopNest, core: &AieCore) -> LatencyHiding {
+    let depth = core.mac_pipeline_depth.max(1);
+    let mut chains = 1u64;
+    let mut factors = Vec::new();
+    for d in parallel_kernel_loops(nest) {
+        if chains >= depth {
+            break;
+        }
+        let want = depth / chains;
+        let f = want.min(nest.domain.dims[d].extent).min(core.acc_registers);
+        if f > 1 {
+            factors.push((d, f));
+            chains *= f;
+        }
+    }
+    LatencyHiding { factors, chains }
+}
+
+/// Apply the plan: strip-mine each chosen loop and sink the point loop
+/// innermost with the Latency role.
+pub fn apply(nest: &LoopNest, plan: &LatencyHiding) -> LoopNest {
+    use crate::polyhedral::transform::tile_and_sink;
+    let mut out = nest.clone();
+    // Indices shift as we tile: process in descending index order.
+    let mut fs = plan.factors.clone();
+    fs.sort_by(|a, b| b.0.cmp(&a.0));
+    for (d, f) in fs {
+        out = tile_and_sink(&out, d, f, LoopRole::Latency);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::{DepKind, Dependence};
+    use crate::polyhedral::domain::{IterationDomain, LoopDim};
+
+    fn mm_kernel_nest() -> LoopNest {
+        // core-scope MM loops (i2, j2, k2) with the accumulation carried
+        // along k2 only.
+        LoopNest::new(
+            IterationDomain::new(vec![
+                LoopDim::new("i2", 32),
+                LoopDim::new("j2", 32),
+                LoopDim::new("k2", 32),
+            ]),
+            vec![
+                Dependence::new("A", DepKind::Read, vec![0, 1, 0]),
+                Dependence::new("C", DepKind::Flow, vec![0, 0, 1]),
+            ],
+        )
+    }
+
+    #[test]
+    fn parallel_loops_exclude_reduction() {
+        let nest = mm_kernel_nest();
+        let par = parallel_kernel_loops(&nest);
+        assert_eq!(par, vec![0, 1]); // i2, j2 parallel; k2 carries flow
+    }
+
+    #[test]
+    fn plan_covers_pipeline_depth() {
+        let nest = mm_kernel_nest();
+        let core = AieCore::default();
+        let p = plan(&nest, &core);
+        assert!(p.chains >= core.mac_pipeline_depth.min(4));
+        assert!((p.efficiency(&core) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_sinks_point_loops() {
+        let nest = mm_kernel_nest();
+        let core = AieCore::default();
+        let p = plan(&nest, &core);
+        let out = apply(&nest, &p);
+        assert_eq!(out.rank(), nest.rank() + p.factors.len());
+        // innermost loops have the Latency role
+        for extra in 0..p.factors.len() {
+            assert_eq!(out.roles[out.rank() - 1 - extra], LoopRole::Latency);
+        }
+        assert_eq!(out.cardinality(), nest.cardinality());
+    }
+
+    #[test]
+    fn no_parallel_loops_means_single_chain() {
+        // pure chain recurrence: only a carried loop
+        let nest = LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("t", 64)]),
+            vec![Dependence::new("s", DepKind::Flow, vec![1])],
+        );
+        let core = AieCore::default();
+        let p = plan(&nest, &core);
+        assert_eq!(p.chains, 1);
+        assert!((p.efficiency(&core) - 0.25).abs() < 1e-9);
+    }
+}

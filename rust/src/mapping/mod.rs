@@ -1,0 +1,23 @@
+//! The WideSA systolic mapping engine (paper §III).
+//!
+//! Pipeline: [`spacetime`] enumerates legal space-time transformations of
+//! the graph-level loop nest (§III-B-1); [`partition`] tiles the space
+//! loops onto the physical array shape (§III-B-2); [`latency`] applies
+//! latency hiding to cover the MAC pipeline (§III-B-3); [`threading`]
+//! unrolls parallelizable time loops across spare AIEs (§III-B-4);
+//! [`cost`] scores each [`candidate::MappingCandidate`] with the analytic
+//! performance model; [`dse`] runs the whole enumeration and picks the
+//! best legal mapping under the board's resource budgets.
+
+pub mod candidate;
+pub mod cost;
+pub mod dse;
+pub mod latency;
+pub mod partition;
+pub mod spacetime;
+pub mod threading;
+
+pub use candidate::MappingCandidate;
+pub use cost::{CostModel, PerfBound, PerfEstimate};
+pub use dse::{explore, DseConstraints};
+pub use spacetime::SpaceTimeChoice;

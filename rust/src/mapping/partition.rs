@@ -1,0 +1,166 @@
+//! Array partition (paper §III-B-2).
+//!
+//! The virtual systolic array produced by the space-time transformation
+//! can exceed the physical 8×50 grid; partitioning tiles the space loops
+//! so one *round* of the physical array covers an (R × C) block of the
+//! virtual array, and the outer tile loops become sequential rounds.
+
+use crate::arch::array::AieArray;
+use crate::polyhedral::schedule::LoopNest;
+use crate::util::math::ceil_div;
+
+/// How the virtual space maps onto the physical array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayPartition {
+    /// Virtual extents of the (up to two) space loops.
+    pub virt: Vec<u64>,
+    /// Physical extents used per round (rows, cols for 2D; len for 1D).
+    pub phys: Vec<u64>,
+    /// Sequential rounds needed to cover the virtual array.
+    pub rounds: u64,
+}
+
+impl ArrayPartition {
+    /// AIEs active per round from the space mapping alone (before
+    /// multiple threading).
+    pub fn active_aies(&self) -> u64 {
+        self.phys.iter().product()
+    }
+
+    /// Total virtual tiles to cover.
+    pub fn total_tiles(&self) -> u64 {
+        self.virt.iter().product()
+    }
+
+    /// Utilisation over the linearised round schedule (the DMA movers
+    /// stream virtual tiles through the array as a work queue, so only
+    /// the final partial round wastes cores): ≈ 1 for large problems.
+    pub fn edge_efficiency(&self) -> f64 {
+        let total = self.total_tiles().max(1);
+        total as f64 / (self.rounds * self.active_aies()).max(1) as f64
+    }
+}
+
+/// Partition the space loops of `nest` onto `array`, optionally capping
+/// the number of AIEs used (Figure 6 sweeps). The first space loop maps
+/// to array rows, the second to columns; a 1D space maps to a serpentine
+/// over the whole budget.
+pub fn partition(
+    nest: &LoopNest,
+    space: &[usize],
+    array: &AieArray,
+    max_aies: Option<u64>,
+) -> ArrayPartition {
+    let budget = max_aies
+        .unwrap_or(array.num_cores() as u64)
+        .min(array.num_cores() as u64)
+        .max(1);
+    // Positions: after the space-time permutation the space loops are
+    // outermost, i.e. nest dims 0..space.len().
+    let virt: Vec<u64> = (0..space.len())
+        .map(|s| nest.domain.dims[s].extent)
+        .collect();
+    match virt.len() {
+        1 => {
+            let len = virt[0].min(budget);
+            ArrayPartition {
+                rounds: ceil_div(virt[0], len),
+                virt,
+                phys: vec![len],
+            }
+        }
+        2 => {
+            // Choose (r, c) ≤ (rows, cols) maximising used AIEs under the
+            // budget. Rounds are *linearised*: the DMA movers stream
+            // virtual (i, j) tiles through the array as a work queue, so
+            // the only waste is the final partial round.
+            let total: u64 = virt.iter().product();
+            let mut best: Option<(u64, u64, f64)> = None;
+            for r in 1..=array.rows as u64 {
+                for c in 1..=array.cols as u64 {
+                    if r * c > budget {
+                        continue;
+                    }
+                    let r_eff = virt[0].min(r);
+                    let c_eff = virt[1].min(c);
+                    let used = r_eff * c_eff;
+                    let rounds = ceil_div(total, used);
+                    let cover = total as f64 / (rounds * used) as f64;
+                    let score = used as f64 * (0.5 + 0.5 * cover);
+                    if best.map_or(true, |(_, _, s)| score > s) {
+                        best = Some((r_eff, c_eff, score));
+                    }
+                }
+            }
+            let (r, c, _) = best.expect("non-empty array");
+            ArrayPartition {
+                rounds: ceil_div(total, r * c),
+                virt,
+                phys: vec![r, c],
+            }
+        }
+        n => panic!("unsupported space rank {n}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::{DepKind, Dependence};
+    use crate::polyhedral::domain::{IterationDomain, LoopDim};
+
+    fn nest2d(vi: u64, vj: u64) -> LoopNest {
+        LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("it", vi), LoopDim::new("jt", vj)]),
+            vec![Dependence::new("A", DepKind::Read, vec![0, 1])],
+        )
+    }
+
+    #[test]
+    fn full_array_partition_mm_like() {
+        // 256×256 virtual tiles on 8×50: phys should be the whole array
+        let nest = nest2d(256, 256);
+        let p = partition(&nest, &[0, 1], &AieArray::default(), None);
+        assert_eq!(p.phys, vec![8, 50]);
+        // linearised work-queue rounds: ceil(256·256 / 400)
+        assert_eq!(p.rounds, (256u64 * 256).div_ceil(400));
+        assert_eq!(p.active_aies(), 400);
+        assert!(p.edge_efficiency() > 0.99);
+    }
+
+    #[test]
+    fn budget_cap_respected() {
+        let nest = nest2d(256, 256);
+        let p = partition(&nest, &[0, 1], &AieArray::default(), Some(100));
+        assert!(p.active_aies() <= 100);
+        assert!(p.active_aies() >= 90, "should use most of the budget: {p:?}");
+    }
+
+    #[test]
+    fn small_virtual_array_uses_fewer_cores() {
+        let nest = nest2d(4, 10);
+        let p = partition(&nest, &[0, 1], &AieArray::default(), None);
+        assert_eq!(p.phys, vec![4, 10]);
+        assert_eq!(p.rounds, 1);
+        assert!((p.edge_efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_1d() {
+        let nest = LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("nt", 4096)]),
+            vec![],
+        );
+        let p = partition(&nest, &[0], &AieArray::default(), Some(256));
+        assert_eq!(p.phys, vec![256]);
+        assert_eq!(p.rounds, 16);
+    }
+
+    #[test]
+    fn edge_efficiency_penalises_ragged_cover() {
+        let nest = nest2d(9, 50); // 9 rows over 8-phys rows → 2 ragged rounds
+        let p = partition(&nest, &[0, 1], &AieArray::default(), None);
+        assert!(p.edge_efficiency() < 1.0);
+        assert!(p.edge_efficiency() > 0.5);
+    }
+}

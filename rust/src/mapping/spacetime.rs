@@ -1,0 +1,175 @@
+//! Space-time transformation (paper §III-B-1).
+//!
+//! Candidate space loops are the loops of the outermost permutable band
+//! whose dependence distances are at most one (a systolic array can only
+//! realise neighbour transfers). The mapper enumerates all 1- and
+//! 2-element subsets of the candidate pool (the AIE array is physically
+//! 2D), permutes the chosen loops outermost, marks the rest as time
+//! loops, and keeps only schedules that remain legal.
+
+use crate::polyhedral::legality::is_legal_order;
+use crate::polyhedral::schedule::{LoopNest, LoopRole};
+use crate::polyhedral::transform::Transform;
+
+/// One space-time choice: which graph-nest loops become space loops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpaceTimeChoice {
+    /// Indices (into the *original* graph nest) of the space loops,
+    /// ordered (array-row dim first, array-column dim second).
+    pub space: Vec<usize>,
+    /// The transformed nest: space loops outermost, roles assigned.
+    pub nest: LoopNest,
+}
+
+impl SpaceTimeChoice {
+    pub fn dims(&self) -> usize {
+        self.space.len()
+    }
+}
+
+/// Loops eligible as space loops: |dependence distance| ≤ 1 on that loop
+/// for every dependence (paper: "loops in the outermost loop band with
+/// dependence distances no greater than one").
+pub fn candidate_space_loops(nest: &LoopNest, graph_loops: &[usize]) -> Vec<usize> {
+    graph_loops
+        .iter()
+        .copied()
+        .filter(|&d| nest.max_dep_distance(d) <= 1 && nest.domain.dims[d].extent > 1)
+        .collect()
+}
+
+/// Enumerate all 1D and 2D space-loop selections that yield a legal
+/// sequential order after permuting space outermost. `graph_loops` are
+/// the loops in graph scope (kernel-scope loops stay innermost).
+pub fn enumerate(nest: &LoopNest, graph_loops: &[usize]) -> Vec<SpaceTimeChoice> {
+    let cands = candidate_space_loops(nest, graph_loops);
+    let mut out = Vec::new();
+    // 2D selections (ordered pairs — row/col assignment matters for the
+    // rectangular array) and 1D selections.
+    for &a in &cands {
+        for &b in &cands {
+            if a != b {
+                if let Some(c) = build_choice(nest, graph_loops, &[a, b]) {
+                    out.push(c);
+                }
+            }
+        }
+        if let Some(c) = build_choice(nest, graph_loops, &[a]) {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn build_choice(
+    nest: &LoopNest,
+    graph_loops: &[usize],
+    space: &[usize],
+) -> Option<SpaceTimeChoice> {
+    // New order: space loops, then remaining graph loops (original
+    // relative order), then kernel-scope loops.
+    let rank = nest.rank();
+    let mut order: Vec<usize> = space.to_vec();
+    for &g in graph_loops {
+        if !space.contains(&g) {
+            order.push(g);
+        }
+    }
+    for d in 0..rank {
+        if !order.contains(&d) {
+            order.push(d);
+        }
+    }
+    let mut permuted = Transform::Permute(order.clone()).apply(nest);
+    // Assign roles.
+    for (new_pos, &old) in order.iter().enumerate() {
+        permuted.roles[new_pos] = if space.contains(&old) {
+            LoopRole::Space
+        } else if permuted.roles[new_pos] == LoopRole::Kernel {
+            LoopRole::Kernel
+        } else {
+            LoopRole::Time
+        };
+    }
+    // Legality: the sequential order must respect all dependences. Space
+    // loop components of read dependences are realised as pipelined
+    // neighbour forwards (unit time step), so for the order check we only
+    // require lexicographic non-negativity.
+    if !is_legal_order(&permuted.deps) {
+        return None;
+    }
+    Some(SpaceTimeChoice {
+        space: space.to_vec(),
+        nest: permuted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+    use crate::recurrence::tiling::demarcate;
+
+    fn mm_graph() -> (LoopNest, Vec<usize>) {
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let scope = demarcate(&rec);
+        let loops = scope.graph_loops();
+        (scope.graph_nest, loops)
+    }
+
+    #[test]
+    fn mm_candidates_are_all_graph_loops() {
+        let (nest, loops) = mm_graph();
+        let cands = candidate_space_loops(&nest, &loops);
+        // All three MM tile loops have |d| ≤ 1
+        assert_eq!(cands.len(), loops.len());
+    }
+
+    #[test]
+    fn mm_enumeration_includes_ij_choice() {
+        let (nest, loops) = mm_graph();
+        let choices = enumerate(&nest, &loops);
+        assert!(!choices.is_empty());
+        // the canonical (i, j) spatial choice must be present
+        assert!(choices.iter().any(|c| c.space.len() == 2));
+        // every choice's space loops are marked Space and outermost
+        for c in &choices {
+            for s in 0..c.space.len() {
+                assert_eq!(c.nest.roles[s], LoopRole::Space);
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_counts_1d_and_2d() {
+        let (nest, loops) = mm_graph();
+        let choices = enumerate(&nest, &loops);
+        let n = candidate_space_loops(&nest, &loops).len();
+        // ordered pairs + singletons, all legal for MM
+        assert_eq!(choices.len(), n * (n - 1) + n);
+    }
+
+    #[test]
+    fn fir_has_limited_space_choices() {
+        let rec = library::fir(1048576, 15, DType::F32);
+        let scope = demarcate(&rec);
+        let loops = scope.graph_loops();
+        let choices = enumerate(&scope.graph_nest, &loops);
+        // FIR's tap loop tile usually has extent 1 after demarcation
+        // (taps=15 fits in-core), so space choices are over n only.
+        assert!(!choices.is_empty());
+        for c in &choices {
+            assert!(c.dims() <= 2);
+        }
+    }
+
+    #[test]
+    fn extent1_loops_are_not_space_candidates() {
+        let (mut nest, loops) = mm_graph();
+        // force one loop to extent 1
+        nest.domain.dims[loops[0]].extent = 1;
+        let cands = candidate_space_loops(&nest, &loops);
+        assert!(!cands.contains(&loops[0]));
+    }
+}

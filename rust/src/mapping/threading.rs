@@ -1,0 +1,153 @@
+//! Multiple threading (paper §III-B-4).
+//!
+//! AIE cores execute concurrently, so a *parallelizable* time loop (one
+//! whose iterations exchange no values — e.g. the reduction loop k in MM
+//! split into partial sums recombined afterwards) can be strip-mined and
+//! its point loop unrolled across replicas of the whole systolic array:
+//! the same kernel program with different indexing, multiplying the
+//! active-AIE count without new programs to write.
+
+use crate::polyhedral::dependence::DepKind;
+use crate::polyhedral::schedule::{LoopNest, LoopRole};
+
+/// A multiple-threading decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Threading {
+    /// Time-loop index being threaded (in the space-time nest), if any.
+    pub dim: Option<usize>,
+    /// Replication factor (1 = no threading).
+    pub factor: u64,
+    /// Whether the threaded loop is a reduction (partial results must be
+    /// recombined — adds one reduction pass per round).
+    pub is_reduction: bool,
+}
+
+impl Threading {
+    pub fn none() -> Self {
+        Self {
+            dim: None,
+            factor: 1,
+            is_reduction: false,
+        }
+    }
+}
+
+/// Time loops eligible for threading: every dependence with a non-zero
+/// component on the loop is a Flow/Output *reduction* dependence (partial
+/// sums can be recombined associatively) or none at all.
+pub fn threadable_time_loops(nest: &LoopNest) -> Vec<(usize, bool)> {
+    nest.loops_with_role(LoopRole::Time)
+        .into_iter()
+        .filter_map(|d| {
+            if nest.domain.dims[d].extent <= 1 {
+                return None;
+            }
+            let carried: Vec<_> = nest
+                .deps
+                .iter()
+                .filter(|dep| dep.vector[d] != 0)
+                .collect();
+            if carried.is_empty() {
+                Some((d, false))
+            } else if carried
+                .iter()
+                .all(|dep| matches!(dep.kind, DepKind::Flow | DepKind::Output))
+            {
+                // reduction chain: threadable with a recombine pass
+                Some((d, true))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Pick the threading factor that fills `spare` replicas of the array
+/// (factor divides the loop extent where possible).
+pub fn plan(nest: &LoopNest, spare_replicas: u64) -> Threading {
+    if spare_replicas <= 1 {
+        return Threading::none();
+    }
+    let mut best = Threading::none();
+    for (dim, is_reduction) in threadable_time_loops(nest) {
+        let extent = nest.domain.dims[dim].extent;
+        // largest divisor of extent ≤ spare_replicas (fall back to cap)
+        let mut f = spare_replicas.min(extent);
+        while f > 1 && extent % f != 0 {
+            f -= 1;
+        }
+        if f > best.factor {
+            best = Threading {
+                dim: Some(dim),
+                factor: f,
+                is_reduction,
+            };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::Dependence;
+    use crate::polyhedral::domain::{IterationDomain, LoopDim};
+
+    fn spacetime_mm() -> LoopNest {
+        // (i, j) space; k time carrying the C reduction
+        let mut nest = LoopNest::new(
+            IterationDomain::new(vec![
+                LoopDim::new("it", 8),
+                LoopDim::new("jt", 50),
+                LoopDim::new("kt", 256),
+            ]),
+            vec![
+                Dependence::new("A", DepKind::Read, vec![0, 1, 0]),
+                Dependence::new("C", DepKind::Flow, vec![0, 0, 1]),
+                Dependence::new("C", DepKind::Output, vec![0, 0, 1]),
+            ],
+        );
+        nest.roles = vec![LoopRole::Space, LoopRole::Space, LoopRole::Time];
+        nest
+    }
+
+    #[test]
+    fn k_is_threadable_as_reduction() {
+        let nest = spacetime_mm();
+        let t = threadable_time_loops(&nest);
+        assert_eq!(t, vec![(2, true)]);
+    }
+
+    #[test]
+    fn read_carried_time_loop_not_threadable() {
+        let mut nest = spacetime_mm();
+        nest.deps
+            .push(Dependence::new("A", DepKind::Read, vec![0, 0, 1]));
+        // now k also carries a read dep — still threadable? Read deps are
+        // reuse only, but our conservative rule requires all carried deps
+        // to be Flow/Output. The added Read blocks threading.
+        assert!(threadable_time_loops(&nest).is_empty());
+    }
+
+    #[test]
+    fn plan_picks_divisor_factor() {
+        let nest = spacetime_mm();
+        let t = plan(&nest, 4);
+        assert_eq!(t.dim, Some(2));
+        assert_eq!(t.factor, 4); // 256 % 4 == 0
+        assert!(t.is_reduction);
+    }
+
+    #[test]
+    fn plan_respects_non_divisor_budget() {
+        let nest = spacetime_mm();
+        let t = plan(&nest, 3);
+        assert!(t.factor <= 3 && 256 % t.factor == 0);
+    }
+
+    #[test]
+    fn no_spare_means_no_threading() {
+        let nest = spacetime_mm();
+        assert_eq!(plan(&nest, 1), Threading::none());
+    }
+}

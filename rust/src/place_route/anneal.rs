@@ -1,0 +1,262 @@
+//! Unconstrained placement baseline: simulated annealing over random
+//! placements — the stand-in for the raw ILP flow the Vitis compiler
+//! runs when no constraints are provided (§II-A-2: "as the design scale
+//! increases ... finding a legal solution efficiently becomes challenging
+//! for the solvers"). E5 compares this against the constraint-guided
+//! deterministic placement.
+//!
+//! Moves are evaluated *incrementally*: only the edges incident to the
+//! moved (and swapped) nodes are re-scored, so one iteration is O(degree)
+//! rather than O(edges) — the difference between simulating thousands and
+//! millions of solver iterations in the E5 ablation.
+
+use crate::arch::array::{AieArray, Coord};
+use crate::graph::builder::MappedGraph;
+use crate::graph::edge::EdgeKind;
+use crate::graph::node::NodeId;
+use crate::place_route::placement::Placement;
+use crate::util::rng::XorShift64;
+use std::collections::HashMap;
+
+/// Annealing outcome.
+#[derive(Debug, Clone)]
+pub struct AnnealResult {
+    pub placement: Placement,
+    /// Shared-buffer edges whose endpoints are not neighbours (must be 0
+    /// for a legal design).
+    pub violations: usize,
+    pub iterations: u64,
+    pub converged: bool,
+}
+
+/// Penalty per non-adjacent shared-buffer edge.
+const VIOLATION_PENALTY: u64 = 100;
+
+fn edge_cost(a: Coord, b: Coord, array: &AieArray) -> (u64, bool) {
+    let d = a.manhattan(b) as u64;
+    let violated = !array.shares_buffer(a, b);
+    (d + if violated { VIOLATION_PENALTY } else { 0 }, violated)
+}
+
+/// Full-cost scan (initialisation and verification).
+fn full_cost(
+    edges: &[(NodeId, NodeId)],
+    coords: &HashMap<NodeId, Coord>,
+    array: &AieArray,
+) -> (u64, usize) {
+    let mut total = 0u64;
+    let mut violations = 0usize;
+    for &(s, d) in edges {
+        let (c, v) = edge_cost(coords[&s], coords[&d], array);
+        total += c;
+        violations += v as usize;
+    }
+    (total, violations)
+}
+
+/// Anneal a placement from a random start. `max_iters` bounds runtime;
+/// convergence = zero violations.
+pub fn anneal(g: &MappedGraph, array: &AieArray, seed: u64, max_iters: u64) -> AnnealResult {
+    let mut rng = XorShift64::new(seed);
+    let aies: Vec<NodeId> = g.aie_nodes().map(|n| n.id).collect();
+    let slots: Vec<Coord> = array.coords().collect();
+    assert!(aies.len() <= slots.len(), "design larger than array");
+
+    let shared_edges: Vec<(NodeId, NodeId)> = g
+        .edges
+        .iter()
+        .filter(|e| e.kind == EdgeKind::SharedBuffer)
+        .map(|e| (e.src, e.dst))
+        .collect();
+    // incidence: node → indices into shared_edges
+    let mut incident: HashMap<NodeId, Vec<usize>> = HashMap::new();
+    for (i, &(s, d)) in shared_edges.iter().enumerate() {
+        incident.entry(s).or_default().push(i);
+        incident.entry(d).or_default().push(i);
+    }
+
+    // random initial assignment: shuffle slots
+    let mut perm: Vec<usize> = (0..slots.len()).collect();
+    for i in (1..perm.len()).rev() {
+        let j = rng.gen_range(i as u64 + 1) as usize;
+        perm.swap(i, j);
+    }
+    let mut coords: HashMap<NodeId, Coord> = aies
+        .iter()
+        .enumerate()
+        .map(|(k, &id)| (id, slots[perm[k]]))
+        .collect();
+    let mut slot_of: HashMap<Coord, NodeId> = coords.iter().map(|(&n, &c)| (c, n)).collect();
+
+    let (mut cur_cost, mut cur_viol) = full_cost(&shared_edges, &coords, array);
+    let mut temp = 50.0f64;
+    let mut iters = 0u64;
+    let mut affected: Vec<usize> = Vec::with_capacity(16);
+
+    while iters < max_iters && cur_viol > 0 {
+        iters += 1;
+        // Move selection: mostly min-conflicts repair (move one endpoint
+        // of a violated edge next to its partner), occasionally a random
+        // perturbation to escape local minima.
+        let (n, to) = if rng.gen_f64() < 0.8 && !shared_edges.is_empty() {
+            let start = rng.gen_range(shared_edges.len() as u64) as usize;
+            let mut pick = None;
+            for k in 0..shared_edges.len() {
+                let (s, d) = shared_edges[(start + k) % shared_edges.len()];
+                if !array.shares_buffer(coords[&s], coords[&d]) {
+                    pick = Some((s, d));
+                    break;
+                }
+            }
+            match pick {
+                Some((s, d)) => {
+                    let nbs = array.neighbours(coords[&d]);
+                    let to = nbs[rng.gen_range(nbs.len() as u64) as usize];
+                    (s, to)
+                }
+                None => {
+                    let n = aies[rng.gen_range(aies.len() as u64) as usize];
+                    (n, slots[rng.gen_range(slots.len() as u64) as usize])
+                }
+            }
+        } else {
+            let n = aies[rng.gen_range(aies.len() as u64) as usize];
+            (n, slots[rng.gen_range(slots.len() as u64) as usize])
+        };
+        let from = coords[&n];
+        if from == to {
+            continue;
+        }
+        let other = slot_of.get(&to).copied();
+
+        // affected edges: incident to n and (if swapping) to other
+        affected.clear();
+        if let Some(v) = incident.get(&n) {
+            affected.extend_from_slice(v);
+        }
+        if let Some(o) = other {
+            if let Some(v) = incident.get(&o) {
+                affected.extend_from_slice(v);
+            }
+        }
+        affected.sort_unstable();
+        affected.dedup();
+
+        let score = |coords: &HashMap<NodeId, Coord>| -> (u64, i64) {
+            let mut c = 0u64;
+            let mut v = 0i64;
+            for &i in &affected {
+                let (s, d) = shared_edges[i];
+                let (ec, ev) = edge_cost(coords[&s], coords[&d], array);
+                c += ec;
+                v += ev as i64;
+            }
+            (c, v)
+        };
+        let (before_c, before_v) = score(&coords);
+
+        // apply
+        coords.insert(n, to);
+        slot_of.insert(to, n);
+        slot_of.remove(&from);
+        if let Some(o) = other {
+            coords.insert(o, from);
+            slot_of.insert(from, o);
+        }
+
+        let (after_c, after_v) = score(&coords);
+        let candidate_cost = (cur_cost + after_c).saturating_sub(before_c);
+        let accept = candidate_cost <= cur_cost
+            || rng.gen_f64() < (-((candidate_cost - cur_cost) as f64) / temp.max(1e-3)).exp();
+        if accept {
+            cur_cost = candidate_cost;
+            cur_viol = (cur_viol as i64 + after_v - before_v) as usize;
+        } else {
+            // revert
+            coords.insert(n, from);
+            slot_of.insert(from, n);
+            slot_of.remove(&to);
+            if let Some(o) = other {
+                coords.insert(o, to);
+                slot_of.insert(to, o);
+            } else {
+                slot_of.remove(&to);
+            }
+        }
+        temp *= 0.9995;
+    }
+    // exact final verification
+    let (_, final_viol) = full_cost(&shared_edges, &coords, array);
+    AnnealResult {
+        placement: Placement { coords },
+        violations: final_viol,
+        iterations: iters,
+        converged: final_viol == 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck5000::BoardConfig;
+    use crate::graph::builder::build;
+    use crate::mapping::cost::CostModel;
+    use crate::mapping::dse::{explore, DseConstraints};
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    fn graph(cap: u64) -> MappedGraph {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, _) =
+            explore(&library::mm(2048, 2048, 2048, DType::F32), &board, &cons).unwrap();
+        build(&cand, &CostModel::new(board))
+    }
+
+    #[test]
+    fn small_design_converges() {
+        let g = graph(16);
+        let r = anneal(&g, &AieArray::default(), 1, 2_000_000);
+        assert!(r.converged, "violations left: {}", r.violations);
+        assert!(r.placement.shared_buffers_adjacent(&g, &AieArray::default()));
+    }
+
+    #[test]
+    fn large_design_struggles_within_small_budget() {
+        // The paper's observation: high utilisation makes unconstrained
+        // P&R hard. At 400 AIEs the annealer should NOT converge within a
+        // budget that is ample for the 16-core design.
+        let g = graph(400);
+        let r = anneal(&g, &AieArray::default(), 1, 50_000);
+        assert!(!r.converged, "unexpectedly converged in 50k iters");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = graph(16);
+        let a = anneal(&g, &AieArray::default(), 7, 100_000);
+        let b = anneal(&g, &AieArray::default(), 7, 100_000);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.violations, b.violations);
+    }
+
+    #[test]
+    fn incremental_cost_matches_full_scan() {
+        // run a short anneal and verify the tracked violation count via
+        // the exact final recount (converged flag is recomputed exactly)
+        let g = graph(64);
+        let r = anneal(&g, &AieArray::default(), 5, 10_000);
+        // violations from the struct must equal a fresh full scan
+        let edges: Vec<_> = g
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::SharedBuffer)
+            .map(|e| (e.src, e.dst))
+            .collect();
+        let (_, v) = full_cost(&edges, &r.placement.coords, &AieArray::default());
+        assert_eq!(v, r.violations);
+    }
+}

@@ -1,0 +1,164 @@
+//! The Vitis-compiler stand-in: place and route a mapped graph either
+//! with WideSA's constraints (deterministic placement + Algorithm 1 +
+//! router) or without (annealing from a random start) — the comparison
+//! behind the paper's claim that systolic constraints make large designs
+//! compile (CHARM "struggles to compile large designs on Vitis 2022.1").
+
+use crate::arch::vck5000::BoardConfig;
+use crate::graph::builder::MappedGraph;
+use crate::place_route::anneal::anneal;
+use crate::place_route::constraints::ConstraintSet;
+use crate::place_route::placement::{place, Placement};
+use crate::place_route::router::route_all;
+use crate::plio::assignment::assign;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct CompileOutcome {
+    pub success: bool,
+    pub wall_s: f64,
+    /// Solver iterations (annealing) or 0 for the deterministic path.
+    pub iterations: u64,
+    pub placement: Option<Placement>,
+    pub constraints: Option<ConstraintSet>,
+    pub max_congestion: u32,
+}
+
+/// Compile with WideSA constraints: deterministic placement, Algorithm 1
+/// PLIO assignment, XY routing. Fails only if the design genuinely does
+/// not fit.
+pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
+    let t0 = Instant::now();
+    let Some(pl) = place(g, &board.array) else {
+        return CompileOutcome {
+            success: false,
+            wall_s: t0.elapsed().as_secs_f64(),
+            iterations: 0,
+            placement: None,
+            constraints: None,
+            max_congestion: u32::MAX,
+        };
+    };
+    let a = assign(
+        g,
+        &pl,
+        &board.plio,
+        board.array.rc_west,
+        board.array.rc_east,
+    );
+    let routing = route_all(
+        g,
+        &pl,
+        &a.columns,
+        board.array.cols,
+        board.array.rc_west,
+        board.array.rc_east,
+    );
+    let cs = ConstraintSet::from_design(g, &pl, &a.columns);
+    CompileOutcome {
+        success: a.feasible && routing.success && pl.shared_buffers_adjacent(g, &board.array),
+        wall_s: t0.elapsed().as_secs_f64(),
+        iterations: 0,
+        placement: Some(pl),
+        constraints: Some(cs),
+        max_congestion: routing.max_west.max(routing.max_east),
+    }
+}
+
+/// Compile without constraints: annealing placement under an iteration
+/// budget (the raw-ILP stand-in), then Algorithm-1-free column packing.
+pub fn compile_unconstrained(
+    g: &MappedGraph,
+    board: &BoardConfig,
+    seed: u64,
+    max_iters: u64,
+) -> CompileOutcome {
+    let t0 = Instant::now();
+    let r = anneal(g, &board.array, seed, max_iters);
+    if !r.converged {
+        return CompileOutcome {
+            success: false,
+            wall_s: t0.elapsed().as_secs_f64(),
+            iterations: r.iterations,
+            placement: Some(r.placement),
+            constraints: None,
+            max_congestion: u32::MAX,
+        };
+    }
+    let a = assign(
+        g,
+        &r.placement,
+        &board.plio,
+        board.array.rc_west,
+        board.array.rc_east,
+    );
+    let routing = route_all(
+        g,
+        &r.placement,
+        &a.columns,
+        board.array.cols,
+        board.array.rc_west,
+        board.array.rc_east,
+    );
+    CompileOutcome {
+        success: a.feasible && routing.success,
+        wall_s: t0.elapsed().as_secs_f64(),
+        iterations: r.iterations,
+        placement: Some(r.placement),
+        constraints: None,
+        max_congestion: routing.max_west.max(routing.max_east),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build;
+    use crate::graph::packet::merge_ports;
+    use crate::mapping::cost::CostModel;
+    use crate::mapping::dse::{explore, DseConstraints};
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    fn graph(cap: u64) -> (MappedGraph, BoardConfig) {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, _) =
+            explore(&library::mm(8192, 8192, 8192, DType::F32), &board, &cons).unwrap();
+        let model = CostModel::new(board.clone());
+        let (g, _) = merge_ports(&build(&cand, &model), model.channel_bw());
+        (g, board)
+    }
+
+    #[test]
+    fn constrained_compile_succeeds_at_400() {
+        let (g, board) = graph(400);
+        let out = compile(&g, &board);
+        assert!(out.success);
+        assert!(out.constraints.is_some());
+    }
+
+    #[test]
+    fn constrained_is_fast() {
+        let (g, board) = graph(400);
+        let out = compile(&g, &board);
+        assert!(out.wall_s < 5.0, "constrained compile took {}s", out.wall_s);
+    }
+
+    #[test]
+    fn unconstrained_fails_at_400_within_budget() {
+        let (g, board) = graph(400);
+        let out = compile_unconstrained(&g, &board, 3, 20_000);
+        assert!(!out.success, "unconstrained should not converge at 400 AIEs in 20k iters");
+    }
+
+    #[test]
+    fn unconstrained_succeeds_small() {
+        let (g, board) = graph(16);
+        let out = compile_unconstrained(&g, &board, 3, 2_000_000);
+        assert!(out.success, "16-core design should anneal to legality");
+    }
+}

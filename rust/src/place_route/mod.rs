@@ -1,0 +1,20 @@
+//! Placement & routing substrate — the stand-in for the Vitis AIE
+//! compiler's ILP place-and-route (paper §II-A-2, §III-C).
+//!
+//! [`placement`] realises the systolic regular-duplicate placement with
+//! shared-buffer constraints; [`router`] routes every stream with XY mesh
+//! routing under per-boundary channel capacities; [`constraints`] renders
+//! the location constraints WideSA hands the compiler; [`anneal`] is the
+//! unconstrained baseline (simulated annealing standing in for the raw
+//! ILP flow); [`compiler`] wraps both into the compile-success/compile-
+//! time experiment (E5).
+
+pub mod anneal;
+pub mod compiler;
+pub mod constraints;
+pub mod placement;
+pub mod router;
+
+pub use compiler::{compile, CompileOutcome};
+pub use placement::{place, Placement};
+pub use router::{route_all, RoutingReport};

@@ -1,0 +1,137 @@
+//! Constraint-guided placement: the systolic array's regular pattern
+//! makes placement a deterministic tiling of replicas onto the grid
+//! (paper §III-C-2: "transformation of the kernels' placement into a
+//! regular duplicate pattern of a single kernel").
+
+use crate::arch::array::{AieArray, Coord};
+use crate::graph::builder::MappedGraph;
+use crate::graph::edge::EdgeKind;
+use crate::graph::node::NodeId;
+use std::collections::HashMap;
+
+/// A placement: physical coordinates for every AIE node.
+#[derive(Debug, Clone, Default)]
+pub struct Placement {
+    pub coords: HashMap<NodeId, Coord>,
+}
+
+impl Placement {
+    pub fn coord(&self, n: NodeId) -> Option<Coord> {
+        self.coords.get(&n).copied()
+    }
+
+    /// Column of an AIE node (Algorithm 1's `x_col`).
+    pub fn col(&self, n: NodeId) -> Option<u32> {
+        self.coord(n).map(|c| c.col)
+    }
+
+    /// All placements are within bounds and distinct.
+    pub fn is_valid(&self, array: &AieArray) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        self.coords
+            .values()
+            .all(|&c| array.contains(c) && seen.insert(c))
+    }
+
+    /// Every shared-buffer edge must connect physical neighbours — the
+    /// placement constraint that lets ports use the shared buffer.
+    pub fn shared_buffers_adjacent(&self, g: &MappedGraph, array: &AieArray) -> bool {
+        g.edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::SharedBuffer)
+            .all(|e| {
+                match (self.coord(e.src), self.coord(e.dst)) {
+                    (Some(a), Some(b)) => array.shares_buffer(a, b),
+                    _ => false,
+                }
+            })
+    }
+}
+
+/// Place a mapped graph: replica 0 sits at the origin; further threading
+/// replicas tile right-then-up across the grid. Returns None if the
+/// replicas do not fit the array.
+pub fn place(g: &MappedGraph, array: &AieArray) -> Option<Placement> {
+    let (r, c) = g.replica;
+    if r > array.rows || c > array.cols {
+        return None;
+    }
+    let per_row = (array.cols / c).max(1); // replicas side by side
+    let mut out = Placement::default();
+    let mut rep_of_node: HashMap<NodeId, (u32, Coord)> = HashMap::new();
+    // Recover each AIE node's replica index and in-replica coordinate
+    // from its name (k_r<rep>_<i>_<j>) — stable builder contract.
+    for n in g.aie_nodes() {
+        let parts: Vec<&str> = n.name.split('_').collect();
+        let rep: u32 = parts[1][1..].parse().ok()?;
+        let i: u32 = parts[2].parse().ok()?;
+        let j: u32 = parts[3].parse().ok()?;
+        rep_of_node.insert(n.id, (rep, Coord::new(i, j)));
+    }
+    for (&id, &(rep, local)) in &rep_of_node {
+        let block_row = rep / per_row;
+        let block_col = rep % per_row;
+        let coord = Coord::new(block_row * r + local.row, block_col * c + local.col);
+        if !array.contains(coord) {
+            return None;
+        }
+        out.coords.insert(id, coord);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck5000::BoardConfig;
+    use crate::graph::builder::build;
+    use crate::mapping::cost::CostModel;
+    use crate::mapping::dse::{explore, DseConstraints};
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    fn graph_for(rec: crate::recurrence::spec::UniformRecurrence, cap: u64) -> MappedGraph {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        build(&cand, &CostModel::new(board))
+    }
+
+    #[test]
+    fn mm_placement_valid_and_adjacent() {
+        let g = graph_for(library::mm(8192, 8192, 8192, DType::F32), 400);
+        let array = AieArray::default();
+        let p = place(&g, &array).expect("placement");
+        assert!(p.is_valid(&array));
+        assert!(p.shared_buffers_adjacent(&g, &array));
+        assert_eq!(p.coords.len(), 400);
+    }
+
+    #[test]
+    fn small_graph_placement() {
+        let g = graph_for(library::mm(1024, 1024, 1024, DType::F32), 64);
+        let array = AieArray::default();
+        let p = place(&g, &array).expect("placement");
+        assert!(p.is_valid(&array));
+        assert!(p.shared_buffers_adjacent(&g, &array));
+    }
+
+    #[test]
+    fn oversized_replica_rejected() {
+        let mut g = graph_for(library::mm(1024, 1024, 1024, DType::F32), 400);
+        g.replica = (9, 50); // taller than the array
+        assert!(place(&g, &AieArray::default()).is_none());
+    }
+
+    #[test]
+    fn fir_replicas_tile_the_grid() {
+        let g = graph_for(library::fir(1048576, 15, DType::F32), 256);
+        let array = AieArray::default();
+        let p = place(&g, &array).expect("placement");
+        assert!(p.is_valid(&array));
+        assert_eq!(p.coords.len(), g.num_aies());
+    }
+}

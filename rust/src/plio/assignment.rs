@@ -1,0 +1,218 @@
+//! Algorithm 1: routing-aware PLIO assignment.
+//!
+//! For each PLIO port, collect the columns of its connected AIE cores,
+//! take the median, and claim the nearest still-available interface-
+//! column slot. The median balances west/east crossings around the port
+//! — the greedy that "generates an optimal placement for the PLIO ports,
+//! ensuring successful routing on the NoC".
+
+use super::congestion::{congestion, CongestionProfile};
+use crate::arch::plio::{PlioDir, PlioSpec};
+use crate::graph::builder::MappedGraph;
+use crate::graph::node::NodeId;
+use crate::place_route::placement::Placement;
+use std::collections::HashMap;
+
+/// Result: a column per PLIO node plus the final congestion profile.
+#[derive(Debug, Clone)]
+pub struct PlioAssignment {
+    pub columns: HashMap<NodeId, u32>,
+    pub congestion: CongestionProfile,
+    /// Whether the congestion satisfies the routing-resource bounds.
+    pub feasible: bool,
+}
+
+/// Per-column slot availability (each direction budgeted separately).
+struct Slots {
+    capacity: u32,
+    used: HashMap<u32, u32>,
+    columns: Vec<u32>,
+}
+
+impl Slots {
+    fn new(spec: &PlioSpec) -> Self {
+        Self {
+            capacity: spec.channels_per_column,
+            used: HashMap::new(),
+            columns: spec.columns.clone(),
+        }
+    }
+
+    /// Nearest column to `want` with a free slot (Algorithm 1's
+    /// find_nearest + remove).
+    fn claim_nearest(&mut self, want: u32) -> Option<u32> {
+        let mut best: Option<(u32, u32)> = None; // (distance, col)
+        for &col in &self.columns {
+            let used = self.used.get(&col).copied().unwrap_or(0);
+            if used >= self.capacity {
+                continue;
+            }
+            let d = col.abs_diff(want);
+            if best.map_or(true, |(bd, bc)| d < bd || (d == bd && col < bc)) {
+                best = Some((d, col));
+            }
+        }
+        let (_, col) = best?;
+        *self.used.entry(col).or_default() += 1;
+        Some(col)
+    }
+}
+
+/// Run Algorithm 1 over all PLIO nodes of the graph. Ports are processed
+/// in descending connectivity (most-constrained first), inputs and
+/// outputs drawing from separate slot pools (in/out channels are distinct
+/// hardware).
+pub fn assign(
+    g: &MappedGraph,
+    placement: &Placement,
+    spec: &PlioSpec,
+    rc_west: u32,
+    rc_east: u32,
+) -> PlioAssignment {
+    let mut in_slots = Slots::new(spec);
+    let mut out_slots = Slots::new(spec);
+
+    // (node, connected AIE columns) per PLIO, most-connected first.
+    let mut ports: Vec<(NodeId, PlioDir, Vec<u32>)> = g
+        .plio_nodes()
+        .map(|n| {
+            let mut cols: Vec<u32> = g
+                .plio_neighbours(n.id)
+                .into_iter()
+                .filter_map(|a| placement.col(a))
+                .collect();
+            cols.sort_unstable();
+            (n.id, n.plio_dir().unwrap(), cols)
+        })
+        .collect();
+    ports.sort_by(|a, b| b.2.len().cmp(&a.2.len()).then(a.0.cmp(&b.0)));
+
+    let mut columns = HashMap::new();
+    for (id, dir, cols) in ports {
+        // median of connected AIE columns (Algorithm 1 lines 3–11)
+        let want = if cols.is_empty() {
+            spec.columns.first().copied().unwrap_or(0)
+        } else {
+            cols[cols.len() / 2]
+        };
+        let slots = match dir {
+            PlioDir::In => &mut in_slots,
+            PlioDir::Out => &mut out_slots,
+        };
+        if let Some(col) = slots.claim_nearest(want) {
+            columns.insert(id, col);
+        }
+    }
+
+    let num_cols = spec.columns.iter().copied().max().unwrap_or(0) + 1;
+    let prof = congestion(g, placement, &columns, num_cols);
+    let feasible =
+        columns.len() == g.plio_nodes().count() && prof.within(rc_west, rc_east);
+    PlioAssignment {
+        columns,
+        congestion: prof,
+        feasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::array::AieArray;
+    use crate::arch::vck5000::BoardConfig;
+    use crate::graph::builder::build;
+    use crate::graph::packet::merge_ports;
+    use crate::mapping::cost::CostModel;
+    use crate::mapping::dse::{explore, DseConstraints};
+    use crate::place_route::placement::place;
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    fn assigned(
+        rec: crate::recurrence::spec::UniformRecurrence,
+        cap: u64,
+    ) -> (MappedGraph, PlioAssignment) {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        let model = CostModel::new(board.clone());
+        let (g, _) = merge_ports(&build(&cand, &model), model.channel_bw());
+        let pl = place(&g, &AieArray::default()).unwrap();
+        let a = assign(&g, &pl, &board.plio, board.array.rc_west, board.array.rc_east);
+        (g, a)
+    }
+
+    #[test]
+    fn mm_assignment_feasible_at_full_array() {
+        let (g, a) = assigned(library::mm(8192, 8192, 8192, DType::F32), 400);
+        assert_eq!(a.columns.len(), g.plio_nodes().count());
+        assert!(
+            a.feasible,
+            "W {} E {} over budget",
+            a.congestion.max_west(),
+            a.congestion.max_east()
+        );
+    }
+
+    #[test]
+    fn conv_assignment_feasible() {
+        let (_, a) = assigned(library::conv2d(10240, 10240, 8, 8, DType::I8), 400);
+        assert!(a.feasible);
+    }
+
+    #[test]
+    fn fir_assignment_feasible() {
+        let (_, a) = assigned(library::fir(1048576, 15, DType::F32), 256);
+        assert!(a.feasible);
+    }
+
+    #[test]
+    fn slots_respect_per_column_capacity() {
+        let (_, a) = assigned(library::mm(8192, 8192, 8192, DType::I8), 400);
+        let mut per_col: HashMap<u32, u32> = HashMap::new();
+        for &c in a.columns.values() {
+            *per_col.entry(c).or_default() += 1;
+        }
+        // 2 per direction per column → ≤ 4 total
+        for (col, n) in per_col {
+            assert!(n <= 4, "column {col} hosts {n} ports");
+        }
+    }
+
+    #[test]
+    fn median_placement_beats_leftmost() {
+        // Compare Algorithm 1 congestion against a naive leftmost packing.
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let (cand, _) =
+            explore(&library::mm(8192, 8192, 8192, DType::F32), &board, &cons).unwrap();
+        let model = CostModel::new(board.clone());
+        let (g, _) = merge_ports(&build(&cand, &model), model.channel_bw());
+        let pl = place(&g, &AieArray::default()).unwrap();
+        let smart = assign(&g, &pl, &board.plio, 6, 6);
+
+        // Naive: every port to the leftmost available column slot.
+        let mut naive_cols = HashMap::new();
+        let mut used: HashMap<u32, u32> = HashMap::new();
+        for n in g.plio_nodes() {
+            let col = (0..50)
+                .find(|c| used.get(c).copied().unwrap_or(0) < 4)
+                .unwrap();
+            *used.entry(col).or_default() += 1;
+            naive_cols.insert(n.id, col);
+        }
+        let naive = congestion(&g, &pl, &naive_cols, 50);
+        let smart_max = smart.congestion.max_west().max(smart.congestion.max_east());
+        let naive_max = naive.max_west().max(naive.max_east());
+        assert!(
+            smart_max < naive_max,
+            "Algorithm 1 ({smart_max}) should beat leftmost ({naive_max})"
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! The paper's congestion model (§III-C-2).
+//!
+//! With PLIOs in row 0, a stream between PLIO `p` (column `p_col`) and
+//! AIE `x` (column `x_col`) crosses every column boundary between them
+//! horizontally. `Cong_i^west` counts streams crossing boundary `i`
+//! westward (and symmetrically eastward):
+//!
+//! ```text
+//! Cong_i^west = Σ_{p,x} W_i[p][x],
+//! W_i[p][x] = 1 if (p_col < i and x_col > i and (x,p) ∈ Edges)
+//!          or  (p_col > i and x_col < i and (p,x) ∈ Edges)
+//! ```
+//!
+//! (Westward traffic at boundary `i` flows from higher to lower columns.)
+
+use crate::graph::builder::MappedGraph;
+use crate::graph::node::NodeId;
+use crate::place_route::placement::Placement;
+use std::collections::HashMap;
+
+/// Congestion per column boundary (index i = boundary between col i and
+/// i+1, matching the paper's summation bounds).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CongestionProfile {
+    pub west: Vec<u32>,
+    pub east: Vec<u32>,
+}
+
+impl CongestionProfile {
+    pub fn max_west(&self) -> u32 {
+        self.west.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn max_east(&self) -> u32 {
+        self.east.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn within(&self, rc_west: u32, rc_east: u32) -> bool {
+        self.max_west() <= rc_west && self.max_east() <= rc_east
+    }
+}
+
+/// Compute congestion for a PLIO column assignment. `plio_cols` maps each
+/// PLIO node to its column; AIE columns come from the placement. Streams
+/// are deduplicated per (plio, aie) pair as in the paper's W_i.
+pub fn congestion(
+    g: &MappedGraph,
+    placement: &Placement,
+    plio_cols: &HashMap<NodeId, u32>,
+    num_cols: u32,
+) -> CongestionProfile {
+    // Size boundaries to the widest column actually used (guards against
+    // callers passing a narrower nominal width).
+    let max_col = placement
+        .coords
+        .values()
+        .map(|c| c.col)
+        .chain(plio_cols.values().copied())
+        .max()
+        .unwrap_or(0)
+        .max(num_cols.saturating_sub(1));
+    let nb = max_col as usize;
+    let mut west = vec![0u32; nb];
+    let mut east = vec![0u32; nb];
+    let mut seen = std::collections::HashSet::new();
+    // Broadcast multicast trunks: one horizontal crossing per boundary
+    // regardless of fan-out — collect extents per port.
+    let mut bcast_extent: HashMap<NodeId, (u32, u32)> = HashMap::new();
+    for e in &g.edges {
+        let (p, x) = if g.nodes[e.src].is_plio() && g.nodes[e.dst].is_aie() {
+            (e.src, e.dst)
+        } else if g.nodes[e.dst].is_plio() && g.nodes[e.src].is_aie() {
+            (e.dst, e.src)
+        } else {
+            continue;
+        };
+        let (Some(&pc), Some(xc)) = (plio_cols.get(&p), placement.col(x)) else {
+            continue;
+        };
+        if e.kind == crate::graph::edge::EdgeKind::Broadcast {
+            let ext = bcast_extent.entry(p).or_insert((xc, xc));
+            ext.0 = ext.0.min(xc);
+            ext.1 = ext.1.max(xc);
+            continue;
+        }
+        if !seen.insert((p, x)) {
+            continue;
+        }
+        if pc == xc {
+            continue; // pure vertical climb
+        }
+        let (lo, hi) = (pc.min(xc), pc.max(xc));
+        // Eastward if data moves to a higher column. Input (p → x):
+        // eastward iff x_col > p_col. Output (x → p): eastward iff
+        // p_col > x_col. Both reduce to "towards the higher column" of
+        // the actual direction of flow.
+        let flow_east = if g.nodes[e.src].id == p {
+            xc > pc
+        } else {
+            pc > xc
+        };
+        for b in lo..hi {
+            if flow_east {
+                east[b as usize] += 1;
+            } else {
+                west[b as usize] += 1;
+            }
+        }
+    }
+    for (p, (lo, hi)) in bcast_extent {
+        let pc = plio_cols[&p];
+        // trunk spans [min(lo, pc), max(hi, pc)]: eastward part from pc
+        // to hi, westward part from pc down to lo
+        for b in pc.min(hi)..hi.max(pc) {
+            if b >= pc {
+                east[b as usize] += 1;
+            }
+        }
+        for b in lo.min(pc)..pc.max(lo) {
+            if b < pc {
+                west[b as usize] += 1;
+            }
+        }
+    }
+    CongestionProfile { west, east }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::array::Coord;
+    use crate::arch::plio::PlioDir;
+    use crate::graph::edge::{Edge, EdgeKind};
+    use crate::graph::node::{Node, NodeKind};
+    use crate::polyhedral::dependence::DepKind;
+
+    /// Tiny hand-built graph: one input PLIO feeding two AIEs, one output.
+    fn toy() -> (MappedGraph, Placement) {
+        let mut g = MappedGraph::default();
+        g.nodes = vec![
+            Node {
+                id: 0,
+                kind: NodeKind::Plio { dir: PlioDir::In },
+                name: "in".into(),
+            },
+            Node {
+                id: 1,
+                kind: NodeKind::Aie {
+                    virt: Coord::new(0, 0),
+                },
+                name: "k_r0_0_0".into(),
+            },
+            Node {
+                id: 2,
+                kind: NodeKind::Aie {
+                    virt: Coord::new(0, 3),
+                },
+                name: "k_r0_0_3".into(),
+            },
+            Node {
+                id: 3,
+                kind: NodeKind::Plio { dir: PlioDir::Out },
+                name: "out".into(),
+            },
+        ];
+        g.edges = vec![
+            Edge::new(0, 1, EdgeKind::Stream, "A", DepKind::Read, 1.0),
+            Edge::new(0, 2, EdgeKind::Stream, "A", DepKind::Read, 1.0),
+            Edge::new(2, 3, EdgeKind::Stream, "C", DepKind::Output, 1.0),
+        ];
+        let mut p = Placement::default();
+        p.coords.insert(1, Coord::new(2, 0));
+        p.coords.insert(2, Coord::new(2, 3));
+        (g, p)
+    }
+
+    #[test]
+    fn eastward_input_counts_boundaries() {
+        let (g, pl) = toy();
+        let mut cols = HashMap::new();
+        cols.insert(0usize, 0u32); // input PLIO at col 0
+        cols.insert(3usize, 5u32); // output PLIO at col 5
+        let prof = congestion(&g, &pl, &cols, 8);
+        // in→AIE@3 crosses boundaries 0,1,2 eastward
+        assert_eq!(&prof.east[0..3], &[1, 1, 1]);
+        // AIE@3→out@5 crosses boundaries 3,4 eastward
+        assert_eq!(&prof.east[3..5], &[1, 1]);
+        assert_eq!(prof.max_west(), 0);
+    }
+
+    #[test]
+    fn westward_output() {
+        let (g, pl) = toy();
+        let mut cols = HashMap::new();
+        cols.insert(0usize, 3u32); // input at col 3: vertical for AIE@3
+        cols.insert(3usize, 1u32); // output west of AIE@3
+        let prof = congestion(&g, &pl, &cols, 8);
+        // in@3 → AIE@0 crosses 0,1,2 westward; AIE@3 → out@1 crosses 1,2 westward
+        assert_eq!(prof.west, vec![1, 2, 2, 0, 0, 0, 0]);
+        assert_eq!(prof.max_east(), 0);
+    }
+
+    #[test]
+    fn same_column_is_free() {
+        let (g, pl) = toy();
+        let mut cols = HashMap::new();
+        cols.insert(0usize, 0u32);
+        cols.insert(3usize, 3u32);
+        let prof = congestion(&g, &pl, &cols, 8);
+        // in@0→AIE@0 vertical; out@3→AIE@3 vertical; only in@0→AIE@3 crosses
+        assert_eq!(prof.east, vec![1, 1, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn within_budget_check() {
+        let (g, pl) = toy();
+        let mut cols = HashMap::new();
+        cols.insert(0usize, 0u32);
+        cols.insert(3usize, 5u32);
+        let prof = congestion(&g, &pl, &cols, 8);
+        assert!(prof.within(6, 6));
+        assert!(!prof.within(6, 0));
+    }
+}

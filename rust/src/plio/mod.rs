@@ -1,0 +1,17 @@
+//! Routing-aware PLIO assignment (paper §III-C-2, Algorithm 1).
+//!
+//! After placement, every PLIO node needs an interface column. Routing on
+//! the mesh makes this a satisfiability problem: horizontal crossings per
+//! column boundary must stay within the NoC's channel budget
+//! (`Cong_i^{west/east} ≤ RC`). [`congestion`] computes the paper's
+//! congestion sums, [`assignment`] implements the greedy median heuristic
+//! of Algorithm 1, and [`sat`] checks feasibility (and provides an
+//! exhaustive fallback for small instances, used to validate the greedy).
+
+pub mod assignment;
+pub mod congestion;
+pub mod sat;
+
+pub use assignment::{assign, PlioAssignment};
+pub use congestion::{congestion, CongestionProfile};
+pub use sat::{check, exhaustive_assign};

@@ -1,0 +1,217 @@
+//! Satisfiability checking for PLIO assignments.
+//!
+//! The paper formulates PLIO assignment as a satisfiability problem over
+//! the congestion constraints; [`check`] verifies an assignment, and
+//! [`exhaustive_assign`] finds a feasible assignment by backtracking —
+//! exponential, so only usable on small instances, where it serves as
+//! ground truth for the greedy (property tests compare the two).
+
+use super::congestion::congestion;
+use crate::arch::plio::{PlioDir, PlioSpec};
+use crate::graph::builder::MappedGraph;
+use crate::graph::node::NodeId;
+use crate::place_route::placement::Placement;
+use std::collections::HashMap;
+
+/// Verify `columns` against capacity and congestion bounds.
+pub fn check(
+    g: &MappedGraph,
+    placement: &Placement,
+    columns: &HashMap<NodeId, u32>,
+    spec: &PlioSpec,
+    rc_west: u32,
+    rc_east: u32,
+) -> bool {
+    // per-column, per-direction capacity
+    let mut used: HashMap<(u32, PlioDir), u32> = HashMap::new();
+    for n in g.plio_nodes() {
+        let Some(&col) = columns.get(&n.id) else {
+            return false;
+        };
+        if !spec.columns.contains(&col) {
+            return false;
+        }
+        let dir = n.plio_dir().unwrap();
+        let u = used.entry((col, dir)).or_default();
+        *u += 1;
+        if *u > spec.channels_per_column {
+            return false;
+        }
+    }
+    let num_cols = spec.columns.iter().copied().max().unwrap_or(0) + 1;
+    congestion(g, placement, columns, num_cols).within(rc_west, rc_east)
+}
+
+/// Backtracking search for a feasible assignment (small instances only).
+pub fn exhaustive_assign(
+    g: &MappedGraph,
+    placement: &Placement,
+    spec: &PlioSpec,
+    rc_west: u32,
+    rc_east: u32,
+) -> Option<HashMap<NodeId, u32>> {
+    let ports: Vec<NodeId> = g.plio_nodes().map(|n| n.id).collect();
+    let mut columns = HashMap::new();
+    fn bt(
+        idx: usize,
+        ports: &[NodeId],
+        g: &MappedGraph,
+        placement: &Placement,
+        spec: &PlioSpec,
+        rc_west: u32,
+        rc_east: u32,
+        columns: &mut HashMap<NodeId, u32>,
+    ) -> bool {
+        if idx == ports.len() {
+            return check(g, placement, columns, spec, rc_west, rc_east);
+        }
+        for &col in &spec.columns {
+            columns.insert(ports[idx], col);
+            // prune: partial assignment must not already violate capacity
+            let dir = g.nodes[ports[idx]].plio_dir().unwrap();
+            let cap_ok = columns
+                .iter()
+                .filter(|(id, c)| {
+                    g.nodes[**id].plio_dir() == Some(dir) && **c == col
+                })
+                .count()
+                <= spec.channels_per_column as usize;
+            if cap_ok
+                && bt(
+                    idx + 1,
+                    ports,
+                    g,
+                    placement,
+                    spec,
+                    rc_west,
+                    rc_east,
+                    columns,
+                )
+            {
+                return true;
+            }
+            columns.remove(&ports[idx]);
+        }
+        false
+    }
+    if bt(
+        0,
+        &ports,
+        g,
+        placement,
+        spec,
+        rc_west,
+        rc_east,
+        &mut columns,
+    ) {
+        Some(columns)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::array::{AieArray, Coord};
+    use crate::graph::edge::{Edge, EdgeKind};
+    use crate::graph::node::{Node, NodeKind};
+    use crate::plio::assignment::assign;
+    use crate::polyhedral::dependence::DepKind;
+
+    /// 2×2 systolic toy with 2 in + 2 out PLIOs on a 4-column array.
+    fn toy() -> (MappedGraph, Placement, PlioSpec) {
+        let mut g = MappedGraph {
+            replica: (2, 2),
+            replicas: 1,
+            ..Default::default()
+        };
+        for (i, (r, c)) in [(0u32, 0u32), (0, 1), (1, 0), (1, 1)].iter().enumerate() {
+            g.nodes.push(Node {
+                id: i,
+                kind: NodeKind::Aie {
+                    virt: Coord::new(*r, *c),
+                },
+                name: format!("k_r0_{r}_{c}"),
+            });
+        }
+        for (id, dir, name) in [
+            (4usize, crate::arch::plio::PlioDir::In, "in0"),
+            (5, crate::arch::plio::PlioDir::In, "in1"),
+            (6, crate::arch::plio::PlioDir::Out, "out0"),
+            (7, crate::arch::plio::PlioDir::Out, "out1"),
+        ] {
+            g.nodes.push(Node {
+                id,
+                kind: NodeKind::Plio { dir },
+                name: name.into(),
+            });
+        }
+        g.edges = vec![
+            Edge::new(4, 0, EdgeKind::Stream, "A", DepKind::Read, 1.0),
+            Edge::new(5, 2, EdgeKind::Stream, "A", DepKind::Read, 1.0),
+            Edge::new(1, 6, EdgeKind::Stream, "C", DepKind::Output, 1.0),
+            Edge::new(3, 7, EdgeKind::Stream, "C", DepKind::Output, 1.0),
+        ];
+        let mut p = Placement::default();
+        p.coords.insert(0, Coord::new(0, 1));
+        p.coords.insert(1, Coord::new(0, 2));
+        p.coords.insert(2, Coord::new(1, 1));
+        p.coords.insert(3, Coord::new(1, 2));
+        let spec = PlioSpec {
+            in_channels: 4,
+            out_channels: 4,
+            columns: vec![0, 1, 2, 3],
+            channels_per_column: 1,
+            ..PlioSpec::default()
+        };
+        (g, p, spec)
+    }
+
+    #[test]
+    fn exhaustive_finds_feasible_toy() {
+        let (g, p, spec) = toy();
+        let cols = exhaustive_assign(&g, &p, &spec, 2, 2).expect("feasible");
+        assert!(check(&g, &p, &cols, &spec, 2, 2));
+    }
+
+    #[test]
+    fn greedy_matches_exhaustive_feasibility() {
+        let (g, p, spec) = toy();
+        let greedy = assign(&g, &p, &spec, 2, 2);
+        let exact = exhaustive_assign(&g, &p, &spec, 2, 2);
+        assert_eq!(greedy.feasible, exact.is_some());
+        if greedy.feasible {
+            assert!(check(&g, &p, &greedy.columns, &spec, 2, 2));
+        }
+    }
+
+    #[test]
+    fn infeasible_when_rc_zero_and_columns_misaligned() {
+        let (g, p, mut spec) = toy();
+        // only one column available: every stream must cross boundaries,
+        // rc = 0 forbids all crossings
+        spec.columns = vec![0];
+        spec.channels_per_column = 4;
+        assert!(exhaustive_assign(&g, &p, &spec, 0, 0).is_none());
+        let greedy = assign(&g, &p, &spec, 0, 0);
+        assert!(!greedy.feasible);
+    }
+
+    #[test]
+    fn check_rejects_overfull_columns() {
+        let (g, p, spec) = toy();
+        let mut cols = HashMap::new();
+        for n in g.plio_nodes() {
+            cols.insert(n.id, 0u32); // all on column 0; capacity 1/dir
+        }
+        assert!(!check(&g, &p, &cols, &spec, 10, 10));
+    }
+
+    #[test]
+    fn toy_array_sanity() {
+        let (g, p, _) = toy();
+        assert!(p.is_valid(&AieArray::default()));
+        assert_eq!(g.num_aies(), 4);
+    }
+}

@@ -1,0 +1,275 @@
+//! Affine expressions and maps over loop iterators.
+//!
+//! An [`AffineExpr`] is `Σ coeff_i · iter_i + constant`; an [`AffineMap`]
+//! is a tuple of expressions — the representation used for array accesses
+//! (e.g. `A[i][k]` in MM is the map `{ (i,j,k) -> (i,k) }`) and for the
+//! linear part of schedule transforms.
+
+use std::fmt;
+
+/// `Σ coeffs[i] · iter_i + constant`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineExpr {
+    pub coeffs: Vec<i64>,
+    pub constant: i64,
+}
+
+impl AffineExpr {
+    pub fn new(coeffs: Vec<i64>, constant: i64) -> Self {
+        Self { coeffs, constant }
+    }
+
+    /// The expression selecting iterator `i` out of `n`.
+    pub fn var(i: usize, n: usize) -> Self {
+        let mut coeffs = vec![0; n];
+        coeffs[i] = 1;
+        Self::new(coeffs, 0)
+    }
+
+    pub fn constant(c: i64, n: usize) -> Self {
+        Self::new(vec![0; n], c)
+    }
+
+    /// Evaluate at an integer point.
+    pub fn eval(&self, point: &[i64]) -> i64 {
+        debug_assert_eq!(point.len(), self.coeffs.len());
+        self.constant
+            + self
+                .coeffs
+                .iter()
+                .zip(point)
+                .map(|(c, p)| c * p)
+                .sum::<i64>()
+    }
+
+    pub fn num_dims(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    /// Apply to a *vector* (differences of points): the constant drops out.
+    pub fn eval_vector(&self, v: &[i64]) -> i64 {
+        self.coeffs.iter().zip(v).map(|(c, p)| c * p).sum()
+    }
+}
+
+impl fmt::Display for AffineExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (i, c) in self.coeffs.iter().enumerate() {
+            if *c == 0 {
+                continue;
+            }
+            if !first {
+                write!(f, " + ")?;
+            }
+            if *c == 1 {
+                write!(f, "i{i}")?;
+            } else {
+                write!(f, "{c}·i{i}")?;
+            }
+            first = false;
+        }
+        if self.constant != 0 || first {
+            if !first {
+                write!(f, " + ")?;
+            }
+            write!(f, "{}", self.constant)?;
+        }
+        Ok(())
+    }
+}
+
+/// A tuple of affine expressions: `{ iters -> (e_0, ..., e_{m-1}) }`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineMap {
+    pub exprs: Vec<AffineExpr>,
+}
+
+impl AffineMap {
+    pub fn new(exprs: Vec<AffineExpr>) -> Self {
+        Self { exprs }
+    }
+
+    /// Identity map on `n` iterators.
+    pub fn identity(n: usize) -> Self {
+        Self::new((0..n).map(|i| AffineExpr::var(i, n)).collect())
+    }
+
+    /// Map selecting (and optionally offsetting) a subset of iterators:
+    /// output d reads iterator `dims[d]` plus `offsets[d]`.
+    pub fn select(dims: &[usize], offsets: &[i64], n: usize) -> Self {
+        debug_assert_eq!(dims.len(), offsets.len());
+        Self::new(
+            dims.iter()
+                .zip(offsets)
+                .map(|(&d, &o)| {
+                    let mut e = AffineExpr::var(d, n);
+                    e.constant = o;
+                    e
+                })
+                .collect(),
+        )
+    }
+
+    pub fn num_results(&self) -> usize {
+        self.exprs.len()
+    }
+
+    pub fn num_dims(&self) -> usize {
+        self.exprs.first().map_or(0, AffineExpr::num_dims)
+    }
+
+    pub fn eval(&self, point: &[i64]) -> Vec<i64> {
+        self.exprs.iter().map(|e| e.eval(point)).collect()
+    }
+
+    pub fn eval_vector(&self, v: &[i64]) -> Vec<i64> {
+        self.exprs.iter().map(|e| e.eval_vector(v)).collect()
+    }
+
+    /// Linear-part matrix (rows = results).
+    pub fn matrix(&self) -> Vec<Vec<i64>> {
+        self.exprs.iter().map(|e| e.coeffs.clone()).collect()
+    }
+
+    /// Is the linear part a permutation matrix (each row/col one ±1)?
+    pub fn is_permutation(&self) -> bool {
+        let m = self.matrix();
+        if m.len() != self.num_dims() {
+            return false;
+        }
+        let n = m.len();
+        let mut col_seen = vec![false; n];
+        for row in &m {
+            let nz: Vec<usize> = (0..n).filter(|&j| row[j] != 0).collect();
+            if nz.len() != 1 || row[nz[0]].abs() != 1 || col_seen[nz[0]] {
+                return false;
+            }
+            col_seen[nz[0]] = true;
+        }
+        true
+    }
+
+    /// Determinant of the (square) linear part — Bareiss fraction-free
+    /// elimination, exact over i64 for the small matrices used here.
+    pub fn determinant(&self) -> Option<i64> {
+        let mut m = self.matrix();
+        let n = m.len();
+        if n == 0 || m.iter().any(|r| r.len() != n) {
+            return None;
+        }
+        let mut sign = 1i64;
+        let mut prev = 1i64;
+        for k in 0..n {
+            if m[k][k] == 0 {
+                match (k + 1..n).find(|&r| m[r][k] != 0) {
+                    Some(swap) => {
+                        m.swap(k, swap);
+                        sign = -sign;
+                    }
+                    None => return Some(0), // singular
+                }
+            }
+            for i in k + 1..n {
+                for j in k + 1..n {
+                    m[i][j] = (m[i][j] * m[k][k] - m[i][k] * m[k][j]) / prev;
+                }
+                m[i][k] = 0;
+            }
+            prev = m[k][k];
+        }
+        Some(sign * m[n - 1][n - 1])
+    }
+
+    /// Unimodular ⇔ |det| == 1 (legal loop-nest transformation basis).
+    pub fn is_unimodular(&self) -> bool {
+        self.determinant().map(i64::abs) == Some(1)
+    }
+}
+
+impl fmt::Display for AffineMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, e) in self.exprs.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_affine_expr() {
+        // 2i + 3j - 1
+        let e = AffineExpr::new(vec![2, 3], -1);
+        assert_eq!(e.eval(&[4, 5]), 2 * 4 + 3 * 5 - 1);
+        assert_eq!(e.eval_vector(&[1, 1]), 5); // constant drops
+    }
+
+    #[test]
+    fn identity_and_select() {
+        let id = AffineMap::identity(3);
+        assert_eq!(id.eval(&[7, 8, 9]), vec![7, 8, 9]);
+        // A[i][k] access in MM: select dims 0, 2 of (i,j,k)
+        let a = AffineMap::select(&[0, 2], &[0, 0], 3);
+        assert_eq!(a.eval(&[7, 8, 9]), vec![7, 9]);
+        // offset access x[i + 1]
+        let x = AffineMap::select(&[0], &[1], 2);
+        assert_eq!(x.eval(&[4, 0]), vec![5]);
+    }
+
+    #[test]
+    fn permutation_detection() {
+        let id = AffineMap::identity(3);
+        assert!(id.is_permutation());
+        let perm = AffineMap::new(vec![
+            AffineExpr::var(2, 3),
+            AffineExpr::var(0, 3),
+            AffineExpr::var(1, 3),
+        ]);
+        assert!(perm.is_permutation());
+        let skew = AffineMap::new(vec![
+            AffineExpr::new(vec![1, 1], 0),
+            AffineExpr::new(vec![0, 1], 0),
+        ]);
+        assert!(!skew.is_permutation());
+    }
+
+    #[test]
+    fn determinant_and_unimodularity() {
+        let skew = AffineMap::new(vec![
+            AffineExpr::new(vec![1, 1], 0),
+            AffineExpr::new(vec![0, 1], 0),
+        ]);
+        assert_eq!(skew.determinant(), Some(1));
+        assert!(skew.is_unimodular());
+        let scale = AffineMap::new(vec![
+            AffineExpr::new(vec![2, 0], 0),
+            AffineExpr::new(vec![0, 1], 0),
+        ]);
+        assert_eq!(scale.determinant(), Some(2));
+        assert!(!scale.is_unimodular());
+        let singular = AffineMap::new(vec![
+            AffineExpr::new(vec![1, 1], 0),
+            AffineExpr::new(vec![2, 2], 0),
+        ]);
+        assert_eq!(singular.determinant(), Some(0));
+    }
+
+    #[test]
+    fn determinant_3x3_with_pivot() {
+        let m = AffineMap::new(vec![
+            AffineExpr::new(vec![0, 1, 0], 0),
+            AffineExpr::new(vec![1, 0, 0], 0),
+            AffineExpr::new(vec![0, 0, 1], 0),
+        ]);
+        assert_eq!(m.determinant(), Some(-1));
+        assert!(m.is_unimodular());
+    }
+}

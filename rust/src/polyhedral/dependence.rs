@@ -1,0 +1,111 @@
+//! Uniform dependences and their extraction from array accesses.
+//!
+//! For a uniform recurrence every dependence is a constant integer vector
+//! `d` meaning iteration `I` depends on iteration `I − d`. Following
+//! AutoSA (paper §III-C-1) dependences are classified as:
+//!
+//! * **Read** — the same read-only datum is used at iterations that
+//!   differ by `d` (reuse direction for input propagation),
+//! * **Flow** — a value written at `I − d` is read at `I` (true systolic
+//!   forwarding / accumulation chains),
+//! * **Output** — the same location is written at `I − d` and `I`
+//!   (reduction chains; the last write wins).
+
+use super::affine::AffineMap;
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DepKind {
+    Read,
+    Flow,
+    Output,
+}
+
+impl fmt::Display for DepKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DepKind::Read => write!(f, "read"),
+            DepKind::Flow => write!(f, "flow"),
+            DepKind::Output => write!(f, "output"),
+        }
+    }
+}
+
+/// A uniform dependence: `iteration I depends on I − vector`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Dependence {
+    pub array: String,
+    pub kind: DepKind,
+    pub vector: Vec<i64>,
+}
+
+impl Dependence {
+    pub fn new(array: impl Into<String>, kind: DepKind, vector: Vec<i64>) -> Self {
+        Self {
+            array: array.into(),
+            kind,
+            vector,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.vector.len()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.vector.iter().all(|&c| c == 0)
+    }
+}
+
+impl fmt::Display for Dependence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}] {:?}", self.array, self.kind, self.vector)
+    }
+}
+
+/// Derive the *reuse* dependence vectors of a read access: the basis
+/// directions of the access map's null space — iterations mapping to the
+/// same element. Exact for the unit-coefficient selection maps used by
+/// uniform recurrences: a loop dim not referenced by the access is a
+/// reuse direction.
+pub fn reuse_directions(access: &AffineMap, rank: usize) -> Vec<Vec<i64>> {
+    let mut out = Vec::new();
+    for d in 0..rank {
+        let referenced = access.exprs.iter().any(|e| e.coeffs[d] != 0);
+        if !referenced {
+            let mut v = vec![0; rank];
+            v[d] = 1;
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::affine::AffineMap;
+
+    #[test]
+    fn mm_reuse_directions() {
+        // MM over (i, j, k): A[i,k] reused along j; B[k,j] along i; C[i,j] along k.
+        let a = AffineMap::select(&[0, 2], &[0, 0], 3);
+        let b = AffineMap::select(&[2, 1], &[0, 0], 3);
+        let c = AffineMap::select(&[0, 1], &[0, 0], 3);
+        assert_eq!(reuse_directions(&a, 3), vec![vec![0, 1, 0]]);
+        assert_eq!(reuse_directions(&b, 3), vec![vec![1, 0, 0]]);
+        assert_eq!(reuse_directions(&c, 3), vec![vec![0, 0, 1]]);
+    }
+
+    #[test]
+    fn fully_referenced_access_has_no_reuse() {
+        let m = AffineMap::identity(3);
+        assert!(reuse_directions(&m, 3).is_empty());
+    }
+
+    #[test]
+    fn zero_dep_detection() {
+        assert!(Dependence::new("A", DepKind::Read, vec![0, 0]).is_zero());
+        assert!(!Dependence::new("A", DepKind::Flow, vec![0, 1]).is_zero());
+    }
+}

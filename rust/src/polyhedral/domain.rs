@@ -1,0 +1,165 @@
+//! Rectangular iteration domains.
+//!
+//! After loop normalisation every uniform recurrence in scope iterates a
+//! product of half-open intervals `[0, extent)`; tiling and permutation
+//! keep the domain rectangular, which is what makes the exact dependence
+//! arithmetic in [`super::transform`] possible.
+
+use std::fmt;
+
+/// One loop dimension: a named, normalised `[0, extent)` iterator.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LoopDim {
+    pub name: String,
+    pub extent: u64,
+}
+
+impl LoopDim {
+    pub fn new(name: impl Into<String>, extent: u64) -> Self {
+        Self {
+            name: name.into(),
+            extent,
+        }
+    }
+}
+
+/// A product of normalised loop dimensions, outermost first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IterationDomain {
+    pub dims: Vec<LoopDim>,
+}
+
+impl IterationDomain {
+    pub fn new(dims: Vec<LoopDim>) -> Self {
+        Self { dims }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of iteration points (saturating).
+    pub fn cardinality(&self) -> u64 {
+        self.dims
+            .iter()
+            .map(|d| d.extent)
+            .fold(1u64, |a, b| a.saturating_mul(b))
+    }
+
+    pub fn extents(&self) -> Vec<u64> {
+        self.dims.iter().map(|d| d.extent).collect()
+    }
+
+    pub fn contains(&self, point: &[i64]) -> bool {
+        point.len() == self.rank()
+            && point
+                .iter()
+                .zip(&self.dims)
+                .all(|(&p, d)| p >= 0 && (p as u64) < d.extent)
+    }
+
+    /// Iterate all points (only for small domains — used by tests and the
+    /// functional executor's schedule walker).
+    pub fn points(&self) -> DomainPoints<'_> {
+        DomainPoints {
+            domain: self,
+            current: vec![0; self.rank()],
+            done: self.cardinality() == 0,
+        }
+    }
+
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.dims.iter().position(|d| d.name == name)
+    }
+}
+
+impl fmt::Display for IterationDomain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{ ")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, " × ")?;
+            }
+            write!(f, "{}:[0,{})", d.name, d.extent)?;
+        }
+        write!(f, " }}")
+    }
+}
+
+/// Row-major point iterator over a rectangular domain.
+pub struct DomainPoints<'a> {
+    domain: &'a IterationDomain,
+    current: Vec<i64>,
+    done: bool,
+}
+
+impl Iterator for DomainPoints<'_> {
+    type Item = Vec<i64>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let out = self.current.clone();
+        // increment innermost-first
+        for i in (0..self.current.len()).rev() {
+            self.current[i] += 1;
+            if (self.current[i] as u64) < self.domain.dims[i].extent {
+                return Some(out);
+            }
+            self.current[i] = 0;
+        }
+        self.done = true;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d3() -> IterationDomain {
+        IterationDomain::new(vec![
+            LoopDim::new("i", 2),
+            LoopDim::new("j", 3),
+            LoopDim::new("k", 4),
+        ])
+    }
+
+    #[test]
+    fn cardinality_and_contains() {
+        let d = d3();
+        assert_eq!(d.cardinality(), 24);
+        assert!(d.contains(&[1, 2, 3]));
+        assert!(!d.contains(&[2, 0, 0]));
+        assert!(!d.contains(&[0, -1, 0]));
+        assert!(!d.contains(&[0, 0]));
+    }
+
+    #[test]
+    fn points_enumerates_all_exactly_once() {
+        let d = d3();
+        let pts: Vec<_> = d.points().collect();
+        assert_eq!(pts.len(), 24);
+        let mut uniq = pts.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 24);
+        assert_eq!(pts[0], vec![0, 0, 0]);
+        assert_eq!(pts[1], vec![0, 0, 1]); // innermost fastest
+        assert!(pts.iter().all(|p| d.contains(p)));
+    }
+
+    #[test]
+    fn empty_domain_has_no_points() {
+        let d = IterationDomain::new(vec![LoopDim::new("i", 0)]);
+        assert_eq!(d.points().count(), 0);
+    }
+
+    #[test]
+    fn dim_lookup() {
+        let d = d3();
+        assert_eq!(d.dim_index("j"), Some(1));
+        assert_eq!(d.dim_index("z"), None);
+    }
+}

@@ -1,0 +1,155 @@
+//! Schedule legality: exact lexicographic checks on dependence vectors.
+//!
+//! For uniform recurrences a loop order is a legal sequential schedule iff
+//! every non-zero dependence vector is lexicographically positive in that
+//! order; a space-time mapping is legal iff, additionally, every
+//! dependence with a non-zero *space* component is realisable as a
+//! neighbour (|component| ≤ 1) transfer whose time projection is strictly
+//! positive (the cycle that carries the datum).
+
+use super::dependence::Dependence;
+use super::schedule::{LoopNest, LoopRole};
+
+/// Lexicographically positive (first non-zero component > 0)?
+pub fn lex_positive(v: &[i64]) -> bool {
+    for &c in v {
+        if c > 0 {
+            return true;
+        }
+        if c < 0 {
+            return false;
+        }
+    }
+    false // all-zero: not strictly positive
+}
+
+/// Lexicographically non-negative (zero allowed)?
+pub fn lex_nonnegative(v: &[i64]) -> bool {
+    v.iter().all(|&c| c == 0) || lex_positive(v)
+}
+
+/// Is the current loop order a legal sequential schedule?
+pub fn is_legal_order(deps: &[Dependence]) -> bool {
+    deps.iter().all(|d| lex_nonnegative(&d.vector))
+}
+
+/// Space-time legality for a systolic mapping (paper §III-B-1):
+/// * every dependence space projection must have |component| ≤ 1 on each
+///   space loop (neighbour-to-neighbour NoC/DMA links only);
+/// * any dependence that moves in space or carries a value must advance
+///   strictly in time (its time projection is lex-positive), otherwise it
+///   cannot be realised by a pipelined array.
+pub fn is_legal_spacetime(nest: &LoopNest) -> bool {
+    let space = nest.loops_with_role(LoopRole::Space);
+    let time: Vec<usize> = (0..nest.rank())
+        .filter(|i| {
+            matches!(
+                nest.roles[*i],
+                LoopRole::Time | LoopRole::Thread | LoopRole::Latency | LoopRole::Kernel
+            )
+        })
+        .collect();
+    for d in &nest.deps {
+        if d.is_zero() {
+            continue;
+        }
+        let sp: Vec<i64> = space.iter().map(|&i| d.vector[i]).collect();
+        let tp: Vec<i64> = time.iter().map(|&i| d.vector[i]).collect();
+        if sp.iter().any(|&c| c.abs() > 1) {
+            return false; // non-neighbour space hop
+        }
+        let moves_in_space = sp.iter().any(|&c| c != 0);
+        if moves_in_space || !tp.iter().all(|&c| c == 0) {
+            // value crosses cores or time: must advance in time
+            if !lex_positive(&tp) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::DepKind;
+    use crate::polyhedral::domain::{IterationDomain, LoopDim};
+
+    #[test]
+    fn lex_checks() {
+        assert!(lex_positive(&[0, 1, -5]));
+        assert!(!lex_positive(&[0, -1, 5]));
+        assert!(!lex_positive(&[0, 0, 0]));
+        assert!(lex_nonnegative(&[0, 0, 0]));
+        assert!(!lex_nonnegative(&[-1, 2]));
+    }
+
+    #[test]
+    fn legal_order_mm() {
+        let deps = vec![
+            Dependence::new("A", DepKind::Read, vec![0, 1, 0]),
+            Dependence::new("B", DepKind::Read, vec![1, 0, 0]),
+            Dependence::new("C", DepKind::Flow, vec![0, 0, 1]),
+        ];
+        assert!(is_legal_order(&deps));
+        let bad = vec![Dependence::new("X", DepKind::Flow, vec![0, -1, 0])];
+        assert!(!is_legal_order(&bad));
+    }
+
+    fn spacetime_nest(roles: Vec<LoopRole>, deps: Vec<Vec<i64>>) -> LoopNest {
+        let rank = roles.len();
+        let dims = (0..rank).map(|i| LoopDim::new(format!("l{i}"), 8)).collect();
+        let deps = deps
+            .into_iter()
+            .map(|v| Dependence::new("X", DepKind::Flow, v))
+            .collect();
+        let mut nest = LoopNest::new(IterationDomain::new(dims), deps);
+        nest.roles = roles;
+        nest
+    }
+
+    #[test]
+    fn mm_spacetime_is_legal() {
+        use LoopRole::{Space, Time};
+        // space (i, j), time k; deps (0,1,0) must advance in time? No —
+        // the A read dep moves one hop in j and zero in time... in the
+        // systolic design A is forwarded j→j+1 while k advances, i.e. the
+        // transfer dep as *realised* is (0,1,+1 in time pipeline). The
+        // builder realises read deps with a one-cycle forward, so the
+        // nest-level check treats pure-space read moves as legal:
+        let nest = spacetime_nest(
+            vec![Space, Space, Time],
+            vec![vec![0, 1, 0], vec![1, 0, 0], vec![0, 0, 1]],
+        );
+        // (0,1,0): moves in space, time proj (0) — not lex positive ⇒ the
+        // raw check fails; with the forwarding realisation (see
+        // graph::builder) read deps get a unit time step:
+        assert!(!is_legal_spacetime(&nest));
+        let realised = spacetime_nest(
+            vec![Space, Space, Time],
+            vec![vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 1]],
+        );
+        assert!(is_legal_spacetime(&realised));
+    }
+
+    #[test]
+    fn far_hop_is_illegal() {
+        use LoopRole::{Space, Time};
+        let nest = spacetime_nest(vec![Space, Time], vec![vec![2, 1]]);
+        assert!(!is_legal_spacetime(&nest));
+    }
+
+    #[test]
+    fn time_regression_is_illegal() {
+        use LoopRole::{Space, Time};
+        let nest = spacetime_nest(vec![Space, Time], vec![vec![1, -1]]);
+        assert!(!is_legal_spacetime(&nest));
+    }
+
+    #[test]
+    fn zero_dep_is_always_legal() {
+        use LoopRole::{Space, Time};
+        let nest = spacetime_nest(vec![Space, Time], vec![vec![0, 0]]);
+        assert!(is_legal_spacetime(&nest));
+    }
+}

@@ -1,0 +1,26 @@
+//! Polyhedral substrate for uniform recurrences (DESIGN.md §7).
+//!
+//! Uniform recurrences (Karp–Miller–Winograd) have *constant* dependence
+//! vectors, which lets this layer be exact without an ISL dependency:
+//! iteration domains are rectangular after loop normalisation
+//! ([`domain`]), accesses are affine maps with unit linear parts
+//! ([`affine`]), dependences are integer vectors ([`dependence`]), and
+//! schedules are compositions of permutation / tiling / skewing band
+//! transforms ([`transform`]) whose effect on dependence vectors is
+//! computed exactly, so legality ([`legality`]) is a lexicographic check
+//! on the transformed vectors — the same criterion AutoSA/PolySA apply
+//! through ISL.
+
+pub mod affine;
+pub mod dependence;
+pub mod domain;
+pub mod legality;
+pub mod schedule;
+pub mod transform;
+
+pub use affine::{AffineExpr, AffineMap};
+pub use dependence::{DepKind, Dependence};
+pub use domain::{IterationDomain, LoopDim};
+pub use legality::{is_legal_order, lex_positive};
+pub use schedule::{LoopNest, LoopRole};
+pub use transform::Transform;

@@ -1,0 +1,185 @@
+//! Loop nests with schedule roles — the working representation the
+//! mapping engine transforms.
+//!
+//! A [`LoopNest`] couples a rectangular [`IterationDomain`] with the
+//! current dependence vectors (kept aligned with the loop order) and a
+//! per-loop [`LoopRole`] assignment. Space-time transformation, array
+//! partitioning, latency hiding and multiple threading (paper §III-B) are
+//! all compositions of [`super::transform::Transform`]s over this type.
+
+use super::dependence::Dependence;
+use super::domain::{IterationDomain, LoopDim};
+use std::fmt;
+
+/// The schedule role a loop ends up with after mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopRole {
+    /// Not yet assigned (fresh nest).
+    Unassigned,
+    /// Space loop — mapped to a physical array dimension (§III-B-1).
+    Space,
+    /// Array-partition loop — outer tile over space (§III-B-2).
+    Partition,
+    /// Time loop — sequential on the array.
+    Time,
+    /// Latency-hiding point loop — innermost, no carried dependence
+    /// (§III-B-3).
+    Latency,
+    /// Multiple-threading loop — parallel time iterations unrolled across
+    /// AIEs (§III-B-4).
+    Thread,
+    /// Core-kernel loop — inside the AIE kernel scope (§III-A).
+    Kernel,
+}
+
+impl fmt::Display for LoopRole {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            LoopRole::Unassigned => "unassigned",
+            LoopRole::Space => "space",
+            LoopRole::Partition => "partition",
+            LoopRole::Time => "time",
+            LoopRole::Latency => "latency",
+            LoopRole::Thread => "thread",
+            LoopRole::Kernel => "kernel",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A loop nest under transformation: domain + aligned dependences + roles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopNest {
+    pub domain: IterationDomain,
+    pub deps: Vec<Dependence>,
+    pub roles: Vec<LoopRole>,
+}
+
+impl LoopNest {
+    pub fn new(domain: IterationDomain, deps: Vec<Dependence>) -> Self {
+        let rank = domain.rank();
+        for d in &deps {
+            assert_eq!(d.rank(), rank, "dependence rank must match domain rank");
+        }
+        Self {
+            domain,
+            deps,
+            roles: vec![LoopRole::Unassigned; rank],
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.domain.rank()
+    }
+
+    pub fn dim(&self, i: usize) -> &LoopDim {
+        &self.domain.dims[i]
+    }
+
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.domain.dim_index(name)
+    }
+
+    /// Indices of loops with a given role, outermost first.
+    pub fn loops_with_role(&self, role: LoopRole) -> Vec<usize> {
+        (0..self.rank()).filter(|&i| self.roles[i] == role).collect()
+    }
+
+    /// A loop is parallel iff no dependence has a non-zero component on it
+    /// (every carried value flows elsewhere).
+    pub fn is_parallel(&self, dim: usize) -> bool {
+        self.deps.iter().all(|d| d.vector[dim] == 0)
+    }
+
+    /// Dependence distance bound on a loop: max |component| across deps.
+    pub fn max_dep_distance(&self, dim: usize) -> i64 {
+        self.deps
+            .iter()
+            .map(|d| d.vector[dim].abs())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total MAC-carrying iterations (domain cardinality).
+    pub fn cardinality(&self) -> u64 {
+        self.domain.cardinality()
+    }
+}
+
+impl fmt::Display for LoopNest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.domain)?;
+        for (i, r) in self.roles.iter().enumerate() {
+            writeln!(
+                f,
+                "  {}: extent {:6}  role {}",
+                self.domain.dims[i].name, self.domain.dims[i].extent, r
+            )?;
+        }
+        for d in &self.deps {
+            writeln!(f, "  dep {d}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::DepKind;
+
+    fn mm_nest() -> LoopNest {
+        let domain = IterationDomain::new(vec![
+            LoopDim::new("i", 8),
+            LoopDim::new("j", 8),
+            LoopDim::new("k", 8),
+        ]);
+        let deps = vec![
+            Dependence::new("A", DepKind::Read, vec![0, 1, 0]),
+            Dependence::new("B", DepKind::Read, vec![1, 0, 0]),
+            Dependence::new("C", DepKind::Flow, vec![0, 0, 1]),
+        ];
+        LoopNest::new(domain, deps)
+    }
+
+    #[test]
+    fn parallel_loop_detection() {
+        let nest = mm_nest();
+        // In MM no loop is fully parallel w.r.t. all three arrays' deps:
+        assert!(!nest.is_parallel(0));
+        assert!(!nest.is_parallel(1));
+        assert!(!nest.is_parallel(2));
+        // But considering only the flow dep (C), i and j are parallel:
+        let flow_only = LoopNest::new(nest.domain.clone(), vec![nest.deps[2].clone()]);
+        assert!(flow_only.is_parallel(0));
+        assert!(flow_only.is_parallel(1));
+        assert!(!flow_only.is_parallel(2));
+    }
+
+    #[test]
+    fn dep_distance_bounds() {
+        let nest = mm_nest();
+        assert_eq!(nest.max_dep_distance(0), 1);
+        assert_eq!(nest.max_dep_distance(2), 1);
+    }
+
+    #[test]
+    fn role_queries() {
+        let mut nest = mm_nest();
+        nest.roles[0] = LoopRole::Space;
+        nest.roles[1] = LoopRole::Space;
+        nest.roles[2] = LoopRole::Time;
+        assert_eq!(nest.loops_with_role(LoopRole::Space), vec![0, 1]);
+        assert_eq!(nest.loops_with_role(LoopRole::Time), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank")]
+    fn mismatched_dep_rank_panics() {
+        let domain = IterationDomain::new(vec![LoopDim::new("i", 4)]);
+        LoopNest::new(
+            domain,
+            vec![Dependence::new("A", DepKind::Read, vec![0, 1])],
+        );
+    }
+}

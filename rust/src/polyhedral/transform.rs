@@ -1,0 +1,274 @@
+//! Loop-nest transformations with exact dependence-vector updates.
+//!
+//! The mapping engine only ever needs three primitive transforms for this
+//! class of programs (paper §III-B): **permutation** (reordering bands),
+//! **strip-mine tiling** (splitting one loop into tile × point loops) and
+//! **skewing** (for wavefront schedules of recurrences whose space
+//! components would otherwise be negative). Each updates the dependence
+//! vectors exactly; tiling conservatively *expands* one dependence into
+//! the set of (tile, point) component pairs that can occur, so legality
+//! checked afterwards is sound.
+
+use super::dependence::Dependence;
+use super::domain::LoopDim;
+use super::schedule::{LoopNest, LoopRole};
+use crate::util::math::ceil_div;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Transform {
+    /// Reorder loops: `order[new_pos] = old_pos` (a permutation).
+    Permute(Vec<usize>),
+    /// Strip-mine loop `dim` by `factor`: tile loop stays at `dim`, the
+    /// point loop is inserted at `dim + 1`.
+    Tile { dim: usize, factor: u64 },
+    /// Skew loop `target` by `factor ×` loop `source` (wavefront).
+    Skew {
+        target: usize,
+        source: usize,
+        factor: i64,
+    },
+}
+
+impl Transform {
+    pub fn apply(&self, nest: &LoopNest) -> LoopNest {
+        match self {
+            Transform::Permute(order) => permute(nest, order),
+            Transform::Tile { dim, factor } => tile(nest, *dim, *factor),
+            Transform::Skew {
+                target,
+                source,
+                factor,
+            } => skew(nest, *target, *source, *factor),
+        }
+    }
+}
+
+/// Apply a sequence of transforms left to right.
+pub fn apply_all(nest: &LoopNest, ts: &[Transform]) -> LoopNest {
+    ts.iter().fold(nest.clone(), |n, t| t.apply(&n))
+}
+
+fn permute(nest: &LoopNest, order: &[usize]) -> LoopNest {
+    let rank = nest.rank();
+    assert_eq!(order.len(), rank, "permutation must cover all loops");
+    let mut seen = vec![false; rank];
+    for &o in order {
+        assert!(o < rank && !seen[o], "invalid permutation {order:?}");
+        seen[o] = true;
+    }
+    let dims = order
+        .iter()
+        .map(|&o| nest.domain.dims[o].clone())
+        .collect();
+    let roles = order.iter().map(|&o| nest.roles[o]).collect();
+    let deps = nest
+        .deps
+        .iter()
+        .map(|d| {
+            let v = order.iter().map(|&o| d.vector[o]).collect();
+            Dependence::new(d.array.clone(), d.kind, v)
+        })
+        .collect();
+    LoopNest {
+        domain: super::domain::IterationDomain::new(dims),
+        deps,
+        roles,
+    }
+}
+
+fn tile(nest: &LoopNest, dim: usize, factor: u64) -> LoopNest {
+    let rank = nest.rank();
+    assert!(dim < rank);
+    assert!(factor >= 1);
+    let old = &nest.domain.dims[dim];
+    let tile_extent = ceil_div(old.extent, factor);
+
+    let mut dims = nest.domain.dims.clone();
+    dims[dim] = LoopDim::new(format!("{}t", old.name), tile_extent);
+    dims.insert(dim + 1, LoopDim::new(format!("{}p", old.name), factor));
+
+    let mut roles = nest.roles.clone();
+    let role = roles[dim];
+    roles.insert(dim + 1, role);
+
+    // Expand each dependence: component d on `dim` splits into the set of
+    // (tile, point) pairs that can realise it. For |d| < factor these are
+    // (0, d) — same tile — and (sign, d − sign·factor) — crossing a tile
+    // boundary. d == 0 stays (0, 0); |d| == factor becomes exactly
+    // (sign, 0).
+    let mut deps = Vec::new();
+    for d in &nest.deps {
+        let c = d.vector[dim];
+        let mut splits: Vec<(i64, i64)> = Vec::new();
+        if c == 0 {
+            splits.push((0, 0));
+        } else {
+            let sign = c.signum();
+            let mag = c.abs() as u64;
+            assert!(
+                mag <= factor,
+                "dependence distance {} exceeds tile factor {} on loop {}",
+                mag,
+                factor,
+                nest.domain.dims[dim].name
+            );
+            if mag < factor {
+                splits.push((0, c));
+            }
+            splits.push((sign, c - sign * factor as i64));
+        }
+        for (t, p) in splits {
+            let mut v = d.vector.clone();
+            v[dim] = t;
+            v.insert(dim + 1, p);
+            deps.push(Dependence::new(d.array.clone(), d.kind, v));
+        }
+    }
+
+    LoopNest {
+        domain: super::domain::IterationDomain::new(dims),
+        deps,
+        roles,
+    }
+}
+
+fn skew(nest: &LoopNest, target: usize, source: usize, factor: i64) -> LoopNest {
+    assert_ne!(target, source);
+    let rank = nest.rank();
+    assert!(target < rank && source < rank);
+    // Domain of the skewed loop grows (conservative rectangular hull).
+    let mut dims = nest.domain.dims.clone();
+    let grow = (factor.unsigned_abs()) * (dims[source].extent.saturating_sub(1));
+    dims[target] = LoopDim::new(
+        format!("{}s", dims[target].name),
+        dims[target].extent + grow,
+    );
+    let deps = nest
+        .deps
+        .iter()
+        .map(|d| {
+            let mut v = d.vector.clone();
+            v[target] += factor * v[source];
+            Dependence::new(d.array.clone(), d.kind, v)
+        })
+        .collect();
+    LoopNest {
+        domain: super::domain::IterationDomain::new(dims),
+        deps,
+        roles: nest.roles.clone(),
+    }
+}
+
+/// Convenience: strip-mine `dim` and push the point loop to the innermost
+/// position (the latency-hiding move of §III-B-3).
+pub fn tile_and_sink(nest: &LoopNest, dim: usize, factor: u64, role: LoopRole) -> LoopNest {
+    let tiled = tile(nest, dim, factor);
+    let rank = tiled.rank();
+    // Move loop dim+1 (the point loop) to the end.
+    let mut order: Vec<usize> = (0..rank).filter(|&i| i != dim + 1).collect();
+    order.push(dim + 1);
+    let mut out = permute(&tiled, &order);
+    let last = out.rank() - 1;
+    out.roles[last] = role;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::DepKind;
+    use crate::polyhedral::domain::IterationDomain;
+
+    fn nest() -> LoopNest {
+        LoopNest::new(
+            IterationDomain::new(vec![
+                LoopDim::new("i", 16),
+                LoopDim::new("j", 16),
+                LoopDim::new("k", 16),
+            ]),
+            vec![
+                Dependence::new("A", DepKind::Read, vec![0, 1, 0]),
+                Dependence::new("C", DepKind::Flow, vec![0, 0, 1]),
+            ],
+        )
+    }
+
+    #[test]
+    fn permute_moves_deps_with_loops() {
+        let n = nest();
+        let p = Transform::Permute(vec![2, 0, 1]).apply(&n);
+        assert_eq!(p.domain.dims[0].name, "k");
+        assert_eq!(p.deps[0].vector, vec![0, 0, 1]); // A dep followed j
+        assert_eq!(p.deps[1].vector, vec![1, 0, 0]); // C dep followed k
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid permutation")]
+    fn permute_rejects_duplicates() {
+        Transform::Permute(vec![0, 0, 1]).apply(&nest());
+    }
+
+    #[test]
+    fn tile_splits_extent_and_expands_deps() {
+        let n = nest();
+        let t = Transform::Tile { dim: 2, factor: 4 }.apply(&n);
+        assert_eq!(t.rank(), 4);
+        assert_eq!(t.domain.dims[2].extent, 4); // kt = 16/4
+        assert_eq!(t.domain.dims[3].extent, 4); // kp
+        // A dep (0,1,0) -> single (0,1,0,0)
+        let a: Vec<_> = t.deps.iter().filter(|d| d.array == "A").collect();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].vector, vec![0, 1, 0, 0]);
+        // C dep (0,0,1) -> {(0,0,0,1), (0,0,1,1-4)}
+        let c: Vec<_> = t.deps.iter().filter(|d| d.array == "C").collect();
+        assert_eq!(c.len(), 2);
+        assert!(c.iter().any(|d| d.vector == vec![0, 0, 0, 1]));
+        assert!(c.iter().any(|d| d.vector == vec![0, 0, 1, -3]));
+    }
+
+    #[test]
+    fn tile_exact_multiple_dep() {
+        // dep distance == factor → exactly (sign, 0)
+        let n = LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("i", 8)]),
+            vec![Dependence::new("X", DepKind::Flow, vec![2])],
+        );
+        let t = Transform::Tile { dim: 0, factor: 2 }.apply(&n);
+        assert_eq!(t.deps.len(), 1);
+        assert_eq!(t.deps[0].vector, vec![1, 0]);
+    }
+
+    #[test]
+    fn tile_preserves_cardinality_when_divisible() {
+        let n = nest();
+        let t = Transform::Tile { dim: 0, factor: 4 }.apply(&n);
+        assert_eq!(t.cardinality(), n.cardinality());
+    }
+
+    #[test]
+    fn skew_makes_wavefront_legal() {
+        // dep (1, -1) is lex-negative on loop 1 after loop 0 fixed... skew
+        // j by +1·i turns (1,-1) into (1, 0).
+        let n = LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("i", 4), LoopDim::new("j", 4)]),
+            vec![Dependence::new("X", DepKind::Flow, vec![1, -1])],
+        );
+        let s = Transform::Skew {
+            target: 1,
+            source: 0,
+            factor: 1,
+        }
+        .apply(&n);
+        assert_eq!(s.deps[0].vector, vec![1, 0]);
+        assert_eq!(s.domain.dims[1].extent, 4 + 3); // rectangular hull grows
+    }
+
+    #[test]
+    fn tile_and_sink_moves_point_loop_innermost() {
+        let n = nest();
+        let t = tile_and_sink(&n, 0, 4, LoopRole::Latency);
+        assert_eq!(t.rank(), 4);
+        assert_eq!(t.domain.dims[3].name, "ip");
+        assert_eq!(t.roles[3], LoopRole::Latency);
+    }
+}

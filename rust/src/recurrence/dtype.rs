@@ -1,0 +1,121 @@
+//! Data types of the paper's benchmarks and their AIE execution widths.
+//!
+//! Per-cycle MAC counts are the AIE (AIE-ML v1, VC1902) vector-unit
+//! widths the paper's §I/§II quote (128 int8 MACs/cycle; the other widths
+//! follow from the 1024-bit vector datapath): int16 = 32, int32 = 8
+//! (32×32→64 via MAC intrinsics), fp32 = 8, cfloat = 2 complex = 8 real,
+//! cint16 = 8 complex MACs/cycle.
+
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I8,
+    I16,
+    I32,
+    /// Complex float (two f32 planes).
+    CF32,
+    /// Complex int16 (two i16 planes).
+    CI16,
+}
+
+impl DType {
+    /// Storage bytes per element.
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::I8 => 1,
+            DType::I16 => 2,
+            DType::F32 | DType::I32 | DType::CI16 => 4,
+            DType::CF32 => 8,
+        }
+    }
+
+    /// MAC operations one AIE core issues per cycle for this type.
+    /// (For complex types this counts *complex* MACs.)
+    pub fn macs_per_cycle_aie(self) -> u64 {
+        match self {
+            DType::I8 => 128,
+            DType::I16 => 32,
+            DType::I32 => 8,
+            DType::F32 => 8,
+            DType::CF32 => 2,
+            DType::CI16 => 8,
+        }
+    }
+
+    /// Arithmetic ops counted per MAC when reporting TOPS (mul + add; a
+    /// complex MAC is 4 mul + 4 add = 8 real ops, the convention the
+    /// paper's FFT/FIR cfloat rows use).
+    pub fn ops_per_mac(self) -> u64 {
+        match self {
+            DType::CF32 | DType::CI16 => 8,
+            _ => 2,
+        }
+    }
+
+    /// DSP58 slices per MAC for a PL-only implementation (Table IV's
+    /// AutoSA baselines; fp32 MACs cost ~3 DSP58 + fabric, int8 packs two
+    /// MACs per DSP58 — the calibration DESIGN.md §1 documents).
+    pub fn dsp_per_mac_pl(self) -> f64 {
+        match self {
+            DType::I8 => 0.5,
+            DType::I16 => 1.0,
+            DType::I32 => 2.0,
+            DType::F32 => 3.0,
+            DType::CF32 => 12.0,
+            DType::CI16 => 4.0,
+        }
+    }
+
+    pub fn is_complex(self) -> bool {
+        matches!(self, DType::CF32 | DType::CI16)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "Float",
+            DType::I8 => "Int8",
+            DType::I16 => "Int16",
+            DType::I32 => "Int32",
+            DType::CF32 => "Cfloat",
+            DType::CI16 => "Cint16",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_hardware() {
+        assert_eq!(DType::I8.bytes(), 1);
+        assert_eq!(DType::CF32.bytes(), 8);
+        assert_eq!(DType::I8.macs_per_cycle_aie(), 128);
+        assert_eq!(DType::F32.macs_per_cycle_aie(), 8);
+    }
+
+    #[test]
+    fn peak_int8_tops_of_full_array() {
+        // 400 AIEs × 128 MACs × 2 ops × 1.25 GHz = 128 TOPS peak — the
+        // headroom against which the paper's 32.49 TOPS is ~25 %.
+        let peak: f64 = 400.0 * 128.0 * 2.0 * 1.25e9 / 1e12;
+        assert!((peak - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complex_ops_counting() {
+        assert_eq!(DType::CF32.ops_per_mac(), 8);
+        assert_eq!(DType::F32.ops_per_mac(), 2);
+        assert!(DType::CI16.is_complex());
+        assert!(!DType::I16.is_complex());
+    }
+}

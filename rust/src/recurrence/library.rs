@@ -1,0 +1,206 @@
+//! The paper's benchmark recurrences (Table II) as [`UniformRecurrence`]s.
+
+use crate::polyhedral::affine::AffineMap;
+use crate::polyhedral::domain::{IterationDomain, LoopDim};
+use crate::recurrence::dtype::DType;
+use crate::recurrence::spec::{Access, AccessKind, UniformRecurrence};
+
+/// Matrix multiplication `C[i,j] += A[i,k] · B[k,j]` over `[n, m, k]`.
+pub fn mm(n: u64, m: u64, k: u64, dtype: DType) -> UniformRecurrence {
+    let domain = IterationDomain::new(vec![
+        LoopDim::new("i", n),
+        LoopDim::new("j", m),
+        LoopDim::new("k", k),
+    ]);
+    UniformRecurrence {
+        name: format!("mm_{n}x{m}x{k}_{dtype}"),
+        domain,
+        accesses: vec![
+            Access::new("A", AccessKind::Read, AffineMap::select(&[0, 2], &[0, 0], 3)),
+            Access::new("B", AccessKind::Read, AffineMap::select(&[2, 1], &[0, 0], 3)),
+            Access::new(
+                "C",
+                AccessKind::Accumulate,
+                AffineMap::select(&[0, 1], &[0, 0], 3),
+            ),
+        ],
+        dtype,
+        macs_per_iter: 1,
+    }
+}
+
+/// 2D convolution `Y[h,w] += X[h+p, w+q] · K[p,q]` over `[h, w, p, q]`
+/// (the paper's 10240×10240 image with a p×q kernel).
+pub fn conv2d(h: u64, w: u64, p: u64, q: u64, dtype: DType) -> UniformRecurrence {
+    let domain = IterationDomain::new(vec![
+        LoopDim::new("h", h),
+        LoopDim::new("w", w),
+        LoopDim::new("p", p),
+        LoopDim::new("q", q),
+    ]);
+    UniformRecurrence {
+        name: format!("conv2d_{h}x{w}_{p}x{q}_{dtype}"),
+        domain,
+        accesses: vec![
+            // X[h+p, w+q]: linear part selects (h,w) with +p/+q halo terms;
+            // modelled with unit coefficients on both loops of each dim.
+            Access::new(
+                "X",
+                AccessKind::Read,
+                AffineMap::new(vec![
+                    crate::polyhedral::affine::AffineExpr::new(vec![1, 0, 1, 0], 0),
+                    crate::polyhedral::affine::AffineExpr::new(vec![0, 1, 0, 1], 0),
+                ]),
+            ),
+            Access::new(
+                "K",
+                AccessKind::Read,
+                AffineMap::select(&[2, 3], &[0, 0], 4),
+            ),
+            Access::new(
+                "Y",
+                AccessKind::Accumulate,
+                AffineMap::select(&[0, 1], &[0, 0], 4),
+            ),
+        ],
+        dtype,
+        macs_per_iter: 1,
+    }
+}
+
+/// FIR filter `y[n] += h[t] · x[n+t]` over `[n, taps]`.
+pub fn fir(n: u64, taps: u64, dtype: DType) -> UniformRecurrence {
+    let domain = IterationDomain::new(vec![LoopDim::new("n", n), LoopDim::new("t", taps)]);
+    UniformRecurrence {
+        name: format!("fir_{n}x{taps}_{dtype}"),
+        domain,
+        accesses: vec![
+            Access::new(
+                "x",
+                AccessKind::Read,
+                AffineMap::new(vec![crate::polyhedral::affine::AffineExpr::new(
+                    vec![1, 1],
+                    0,
+                )]),
+            ),
+            Access::new("h", AccessKind::Read, AffineMap::select(&[1], &[0], 2)),
+            Access::new("y", AccessKind::Accumulate, AffineMap::select(&[0], &[0], 2)),
+        ],
+        dtype,
+        macs_per_iter: 1,
+    }
+}
+
+/// 2D FFT over an `rows × cols` grid, decomposed as batched radix-2
+/// stages: iteration space `[pass, row, stage, butterfly]` where pass 0
+/// does row FFTs and pass 1 column FFTs (after transpose). Each butterfly
+/// is one complex MAC (twiddle multiply) plus adds.
+pub fn fft2d(rows: u64, cols: u64, dtype: DType) -> UniformRecurrence {
+    assert!(cols.is_power_of_two(), "FFT size must be a power of two");
+    assert!(dtype.is_complex(), "FFT operates on complex data");
+    let stages = cols.trailing_zeros() as u64;
+    let domain = IterationDomain::new(vec![
+        LoopDim::new("pass", 2),
+        LoopDim::new("row", rows),
+        LoopDim::new("stage", stages),
+        LoopDim::new("bfly", cols / 2),
+    ]);
+    UniformRecurrence {
+        name: format!("fft2d_{rows}x{cols}_{dtype}"),
+        domain,
+        accesses: vec![
+            // the working vector is read and rewritten every stage: an
+            // accumulate-like carried dependence along `stage` (and along
+            // `pass` at the macro level)
+            Access::new(
+                "X",
+                AccessKind::Accumulate,
+                AffineMap::select(&[1, 3], &[0, 0], 4),
+            ),
+            Access::new("W", AccessKind::Read, AffineMap::select(&[3], &[0], 4)),
+        ],
+        dtype,
+        macs_per_iter: 1,
+    }
+}
+
+/// Table II problem instances, in paper order.
+pub fn table2_benchmarks() -> Vec<UniformRecurrence> {
+    vec![
+        mm(8192, 8192, 8192, DType::F32),
+        mm(10240, 10240, 10240, DType::I8),
+        mm(9600, 9600, 9600, DType::I16),
+        mm(8192, 8192, 8192, DType::I32),
+        conv2d(10240, 10240, 4, 4, DType::F32),
+        conv2d(10240, 10240, 8, 8, DType::I8),
+        conv2d(10240, 10240, 4, 4, DType::I16),
+        conv2d(10240, 10240, 4, 4, DType::I32),
+        fft2d(8192, 8192, DType::CF32),
+        fft2d(8192, 8192, DType::CI16),
+        fir(1048576, 15, DType::F32),
+        fir(1048576, 15, DType::I8),
+        fir(1048576, 15, DType::I16),
+        fir(1048576, 15, DType::CF32),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::dependence::DepKind;
+
+    #[test]
+    fn mm_shape() {
+        let r = mm(8192, 8192, 8192, DType::F32);
+        assert_eq!(r.rank(), 3);
+        assert_eq!(r.total_macs(), 8192u64.pow(3));
+    }
+
+    #[test]
+    fn conv_deps_include_kernel_reuse() {
+        let r = conv2d(64, 64, 4, 4, DType::I8);
+        let deps = r.dependences();
+        // K[p,q] reused along h and w
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "K" && d.vector == vec![1, 0, 0, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "K" && d.vector == vec![0, 1, 0, 0]));
+        // Y accumulated along p and q
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "Y" && d.kind == DepKind::Flow && d.vector == vec![0, 0, 1, 0]));
+    }
+
+    #[test]
+    fn fir_deps() {
+        let r = fir(1024, 15, DType::F32);
+        let deps = r.dependences();
+        // h reused along n; y accumulated along t
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "h" && d.kind == DepKind::Read && d.vector == vec![1, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "y" && d.kind == DepKind::Flow && d.vector == vec![0, 1]));
+    }
+
+    #[test]
+    fn fft_requires_complex_pow2() {
+        let r = fft2d(8192, 8192, DType::CF32);
+        // 2 passes × 8192 rows × 13 stages × 4096 butterflies
+        assert_eq!(r.total_macs(), 2 * 8192 * 13 * 4096);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fft_rejects_non_pow2() {
+        fft2d(100, 100, DType::CF32);
+    }
+
+    #[test]
+    fn table2_has_14_rows() {
+        assert_eq!(table2_benchmarks().len(), 14);
+    }
+}

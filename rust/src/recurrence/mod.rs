@@ -1,0 +1,12 @@
+//! Uniform-recurrence specifications: the paper's four benchmarks
+//! (Table II) expressed as loop nests with typed accesses, plus the
+//! kernel-scope tiling of §III-A.
+
+pub mod dtype;
+pub mod library;
+pub mod spec;
+pub mod tiling;
+
+pub use dtype::DType;
+pub use spec::{Access, AccessKind, UniformRecurrence};
+pub use tiling::{demarcate, KernelScope};

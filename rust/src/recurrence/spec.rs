@@ -1,0 +1,201 @@
+//! Uniform-recurrence specification: loop nest + typed affine accesses.
+//!
+//! This is the framework's input language (the role the C++ source plays
+//! in the paper's Figure 5): a named statement in a rectangular loop nest
+//! whose array accesses all have unit-coefficient affine maps, so every
+//! dependence is a constant vector (Karp–Miller–Winograd uniformity).
+
+use crate::polyhedral::affine::AffineMap;
+use crate::polyhedral::dependence::{reuse_directions, DepKind, Dependence};
+use crate::polyhedral::domain::IterationDomain;
+use crate::polyhedral::schedule::LoopNest;
+use crate::recurrence::dtype::DType;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Read-only input array.
+    Read,
+    /// Read-modify-write accumulation (flow + output dependence source).
+    Accumulate,
+    /// Pure output.
+    Write,
+}
+
+/// One array access of the statement.
+#[derive(Debug, Clone)]
+pub struct Access {
+    pub array: String,
+    pub kind: AccessKind,
+    pub map: AffineMap,
+}
+
+impl Access {
+    pub fn new(array: impl Into<String>, kind: AccessKind, map: AffineMap) -> Self {
+        Self {
+            array: array.into(),
+            kind,
+            map,
+        }
+    }
+}
+
+/// A uniform recurrence: `for dims { S: accesses }` with `macs_per_iter`
+/// MAC operations per innermost iteration point.
+#[derive(Debug, Clone)]
+pub struct UniformRecurrence {
+    pub name: String,
+    pub domain: IterationDomain,
+    pub accesses: Vec<Access>,
+    pub dtype: DType,
+    /// MACs per iteration point (1 for MM/Conv/FIR; FFT butterflies carry
+    /// one complex MAC + adds).
+    pub macs_per_iter: u64,
+}
+
+impl UniformRecurrence {
+    pub fn rank(&self) -> usize {
+        self.domain.rank()
+    }
+
+    /// Total MAC count of the computation.
+    pub fn total_macs(&self) -> u64 {
+        self.domain.cardinality().saturating_mul(self.macs_per_iter)
+    }
+
+    /// Total arithmetic ops (the TOPS numerator, paper convention).
+    pub fn total_ops(&self) -> f64 {
+        self.total_macs() as f64 * self.dtype.ops_per_mac() as f64
+    }
+
+    /// Extract the uniform dependences:
+    /// * each `Read` access contributes its reuse directions as read deps,
+    /// * each `Accumulate` access contributes reuse directions as flow
+    ///   deps (the carried partial sums) and the same directions as
+    ///   output deps (last write wins),
+    /// * `Write` accesses with reuse contribute output deps.
+    pub fn dependences(&self) -> Vec<Dependence> {
+        let rank = self.rank();
+        let mut out = Vec::new();
+        for acc in &self.accesses {
+            for dir in reuse_directions(&acc.map, rank) {
+                match acc.kind {
+                    AccessKind::Read => {
+                        out.push(Dependence::new(acc.array.clone(), DepKind::Read, dir))
+                    }
+                    AccessKind::Accumulate => {
+                        out.push(Dependence::new(
+                            acc.array.clone(),
+                            DepKind::Flow,
+                            dir.clone(),
+                        ));
+                        out.push(Dependence::new(acc.array.clone(), DepKind::Output, dir));
+                    }
+                    AccessKind::Write => {
+                        out.push(Dependence::new(acc.array.clone(), DepKind::Output, dir))
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Build the transformable loop nest (domain + dependences).
+    pub fn loop_nest(&self) -> LoopNest {
+        LoopNest::new(self.domain.clone(), self.dependences())
+    }
+
+    /// Bytes of one element of each distinct array, for bandwidth math.
+    pub fn element_bytes(&self) -> u64 {
+        self.dtype.bytes()
+    }
+
+    /// Footprint in bytes of array `name` (product of its extent along
+    /// each referenced dim — exact for selection maps).
+    pub fn array_footprint(&self, name: &str) -> Option<u64> {
+        let acc = self.accesses.iter().find(|a| a.array == name)?;
+        let mut elems: u64 = 1;
+        for e in &acc.map.exprs {
+            // extent along this output dim = extent of referenced loop
+            // plus |offset| halo (for shifted stencil accesses).
+            let mut dim_extent: u64 = 1;
+            for (d, &c) in e.coeffs.iter().enumerate() {
+                if c != 0 {
+                    dim_extent = dim_extent
+                        .saturating_mul(self.domain.dims[d].extent.saturating_mul(c.unsigned_abs()));
+                }
+            }
+            elems = elems.saturating_mul(dim_extent + e.constant.unsigned_abs());
+        }
+        Some(elems.saturating_mul(self.dtype.bytes()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyhedral::domain::LoopDim;
+
+    fn mm() -> UniformRecurrence {
+        let domain = IterationDomain::new(vec![
+            LoopDim::new("i", 8),
+            LoopDim::new("j", 8),
+            LoopDim::new("k", 8),
+        ]);
+        UniformRecurrence {
+            name: "mm".into(),
+            domain,
+            accesses: vec![
+                Access::new("A", AccessKind::Read, AffineMap::select(&[0, 2], &[0, 0], 3)),
+                Access::new("B", AccessKind::Read, AffineMap::select(&[2, 1], &[0, 0], 3)),
+                Access::new(
+                    "C",
+                    AccessKind::Accumulate,
+                    AffineMap::select(&[0, 1], &[0, 0], 3),
+                ),
+            ],
+            dtype: DType::F32,
+            macs_per_iter: 1,
+        }
+    }
+
+    #[test]
+    fn mm_dependences() {
+        let deps = mm().dependences();
+        // A read along j, B read along i, C flow+output along k.
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "A" && d.kind == DepKind::Read && d.vector == vec![0, 1, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "B" && d.kind == DepKind::Read && d.vector == vec![1, 0, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "C" && d.kind == DepKind::Flow && d.vector == vec![0, 0, 1]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "C" && d.kind == DepKind::Output && d.vector == vec![0, 0, 1]));
+        assert_eq!(deps.len(), 4);
+    }
+
+    #[test]
+    fn mm_total_ops() {
+        let r = mm();
+        assert_eq!(r.total_macs(), 512);
+        assert_eq!(r.total_ops(), 1024.0); // 2 ops per MAC
+    }
+
+    #[test]
+    fn footprints() {
+        let r = mm();
+        // A is 8×8 f32 = 256 B
+        assert_eq!(r.array_footprint("A"), Some(256));
+        assert_eq!(r.array_footprint("Z"), None);
+    }
+
+    #[test]
+    fn loop_nest_carries_deps() {
+        let nest = mm().loop_nest();
+        assert_eq!(nest.rank(), 3);
+        assert_eq!(nest.deps.len(), 4);
+    }
+}

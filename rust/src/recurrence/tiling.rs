@@ -1,0 +1,221 @@
+//! Kernel scope demarcation (paper §III-A, Figure 2).
+//!
+//! Splits the recurrence's loops into the *core scope* (the innermost
+//! tile executed by one AIE kernel invocation) and the *graph scope*
+//! (the outer nest mapped across the AIE array and over time). The tiling
+//! factors are chosen so the core tile's working set fits the AIE local
+//! data memory and the tile carries enough MACs to amortise kernel
+//! start-up — after this demarcation, graph-level and kernel-level
+//! mapping are independent problems (as the paper observes).
+
+use crate::polyhedral::schedule::{LoopNest, LoopRole};
+use crate::polyhedral::transform::Transform;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::util::math::divisors;
+
+/// Result of demarcation: tiling factors and both scopes' loop nests.
+#[derive(Debug, Clone)]
+pub struct KernelScope {
+    /// Per-original-loop core-tile factor (1 = not tiled into the core).
+    pub core_factors: Vec<u64>,
+    /// The graph-level nest (tile loops only, roles unassigned).
+    pub graph_nest: LoopNest,
+    /// Working-set bytes of one core tile.
+    pub core_bytes: u64,
+    /// MACs per core-kernel invocation.
+    pub core_macs: u64,
+}
+
+/// AIE data memory available to a kernel's buffers: 32 KB minus stack and
+/// system reservations; double-buffered I/O halves the usable window.
+pub const CORE_BUDGET_BYTES: u64 = 32 * 1024;
+pub const CORE_USABLE_BYTES: u64 = 24 * 1024; // after stack + runtime
+pub const DOUBLE_BUFFER_FACTOR: u64 = 2;
+
+/// Bytes of the core tile's working set for a recurrence, given per-loop
+/// tile factors: sum over arrays of the tile footprint of each access.
+pub fn core_tile_bytes(rec: &UniformRecurrence, factors: &[u64]) -> u64 {
+    let mut total = 0u64;
+    for acc in &rec.accesses {
+        let mut elems = 1u64;
+        for e in &acc.map.exprs {
+            let mut ext = 1u64;
+            for (d, &c) in e.coeffs.iter().enumerate() {
+                if c != 0 {
+                    // halo: stencil accesses (two loops on one subscript)
+                    // add extents − 1
+                    ext = if ext == 1 {
+                        factors[d]
+                    } else {
+                        ext + factors[d] - 1
+                    };
+                }
+            }
+            elems = elems.saturating_mul(ext.max(1));
+        }
+        total = total.saturating_mul(1).saturating_add(elems.saturating_mul(rec.dtype.bytes()));
+    }
+    total
+}
+
+/// MACs of one core tile.
+pub fn core_tile_macs(rec: &UniformRecurrence, factors: &[u64]) -> u64 {
+    factors
+        .iter()
+        .product::<u64>()
+        .saturating_mul(rec.macs_per_iter)
+}
+
+/// Choose core-tile factors maximising MACs per tile subject to the
+/// double-buffered local-memory budget, preferring square-ish tiles
+/// (better reuse per byte moved). Factors are divisors of the extents so
+/// the graph nest stays rectangular.
+pub fn demarcate(rec: &UniformRecurrence) -> KernelScope {
+    let nest = rec.loop_nest();
+    let rank = nest.rank();
+    let budget = CORE_USABLE_BYTES / DOUBLE_BUFFER_FACTOR;
+
+    // Candidate factors per loop: divisors capped at 4096 (a single DMA
+    // descriptor's practical burst; the memory budget is what actually
+    // stops the ascent for multi-dimensional tiles).
+    let cands: Vec<Vec<u64>> = (0..rank)
+        .map(|d| {
+            divisors(nest.domain.dims[d].extent)
+                .into_iter()
+                .filter(|&f| f <= 4096)
+                .collect()
+        })
+        .collect();
+
+    // Greedy ascent: start at all-1s, repeatedly bump the loop whose next
+    // divisor gives the best MAC/byte gain while staying within budget.
+    let mut idx = vec![0usize; rank];
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        let current: Vec<u64> = (0..rank).map(|d| cands[d][idx[d]]).collect();
+        for d in 0..rank {
+            if idx[d] + 1 >= cands[d].len() {
+                continue;
+            }
+            let mut trial = current.clone();
+            trial[d] = cands[d][idx[d] + 1];
+            let bytes = core_tile_bytes(rec, &trial);
+            if bytes > budget {
+                continue;
+            }
+            let macs = core_tile_macs(rec, &trial) as f64;
+            let density = macs / bytes.max(1) as f64;
+            if best.map_or(true, |(_, b)| density > b) {
+                best = Some((d, density));
+            }
+        }
+        match best {
+            Some((d, _)) => idx[d] += 1,
+            None => break,
+        }
+    }
+    let core_factors: Vec<u64> = (0..rank).map(|d| cands[d][idx[d]]).collect();
+    let core_bytes = core_tile_bytes(rec, &core_factors);
+    let core_macs = core_tile_macs(rec, &core_factors);
+
+    // Build the graph nest: tile each loop by its core factor; the point
+    // loops become Kernel-role loops which we then *drop* from the graph
+    // nest (they live inside the AIE kernel).
+    let mut gn = nest.clone();
+    // Tile from innermost to outermost so indices stay valid.
+    for d in (0..rank).rev() {
+        if core_factors[d] > 1 {
+            gn = Transform::Tile {
+                dim: d,
+                factor: core_factors[d],
+            }
+            .apply(&gn);
+            // mark the point loop as kernel scope
+            gn.roles[d + 1] = LoopRole::Kernel;
+        }
+    }
+    KernelScope {
+        core_factors,
+        graph_nest: gn,
+        core_bytes,
+        core_macs,
+    }
+}
+
+impl KernelScope {
+    /// Graph-scope loops (everything not marked Kernel), outermost first.
+    pub fn graph_loops(&self) -> Vec<usize> {
+        (0..self.graph_nest.rank())
+            .filter(|&i| self.graph_nest.roles[i] != LoopRole::Kernel)
+            .collect()
+    }
+
+    /// Cycles one AIE core needs per kernel invocation at peak issue,
+    /// before pipeline-efficiency derating.
+    pub fn core_peak_cycles(&self, rec: &UniformRecurrence) -> u64 {
+        self.core_macs
+            .div_ceil(rec.dtype.macs_per_cycle_aie())
+            .max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    #[test]
+    fn mm_core_tile_fits_budget() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let scope = demarcate(&rec);
+        assert!(scope.core_bytes <= CORE_USABLE_BYTES / DOUBLE_BUFFER_FACTOR);
+        assert!(scope.core_macs >= 32 * 32 * 8, "tile too small: {scope:?}");
+        // all factors divide the extents
+        for (f, d) in scope.core_factors.iter().zip(&rec.domain.dims) {
+            assert_eq!(d.extent % f, 0);
+        }
+    }
+
+    #[test]
+    fn mm_int8_tile_is_larger_than_f32() {
+        let f32t = demarcate(&library::mm(8192, 8192, 8192, DType::F32));
+        let i8t = demarcate(&library::mm(10240, 10240, 10240, DType::I8));
+        assert!(i8t.core_macs >= f32t.core_macs);
+    }
+
+    #[test]
+    fn core_bytes_formula_mm() {
+        let rec = library::mm(64, 64, 64, DType::F32);
+        // factors (8, 8, 8): A 8×8 + B 8×8 + C 8×8 = 192 elems × 4 B
+        assert_eq!(core_tile_bytes(&rec, &[8, 8, 8]), 192 * 4);
+    }
+
+    #[test]
+    fn conv_halo_counted() {
+        let rec = library::conv2d(64, 64, 4, 4, DType::F32);
+        // factors (8, 8, 4, 4): X (8+4-1)² + K 4·4 + Y 8·8 elements
+        let expect = (11 * 11 + 16 + 64) * 4;
+        assert_eq!(core_tile_bytes(&rec, &[8, 8, 4, 4]), expect);
+    }
+
+    #[test]
+    fn graph_nest_drops_kernel_loops_from_graph_scope() {
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let scope = demarcate(&rec);
+        let graph_loops = scope.graph_loops();
+        // kernel point loops excluded
+        assert!(graph_loops.len() < scope.graph_nest.rank());
+        // graph loops have whole-tile extents
+        for &g in &graph_loops {
+            assert!(scope.graph_nest.domain.dims[g].extent >= 1);
+        }
+    }
+
+    #[test]
+    fn peak_cycles_positive() {
+        let rec = library::fir(1048576, 15, DType::F32);
+        let scope = demarcate(&rec);
+        assert!(scope.core_peak_cycles(&rec) > 0);
+    }
+}

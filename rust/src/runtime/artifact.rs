@@ -1,0 +1,133 @@
+//! Artifact manifest: what the build-time python lowered, with shapes.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor's shape + dtype as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: HLO file + signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|x| x.as_u64().map(|u| u as usize).ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            let hlo = entry
+                .get("hlo")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing hlo"))?;
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                hlo_path: dir.join(hlo),
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+            };
+            if !spec.hlo_path.exists() {
+                bail!("{name}: HLO file {:?} missing", spec.hlo_path);
+            }
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Self { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Default artifact directory: `$WIDESA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("WIDESA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.artifacts.contains_key("mm_f32_128"));
+        let a = m.get("mm_f32_128").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![128, 128]);
+        assert_eq!(a.outputs[0].dtype, "float32");
+        assert_eq!(a.inputs[0].elements(), 128 * 128);
+    }
+
+    #[test]
+    fn missing_dir_fails_gracefully() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

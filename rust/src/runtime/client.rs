@@ -1,0 +1,101 @@
+//! PJRT client wrapper with a compiled-executable cache.
+//!
+//! One [`Runtime`] per process: compiling an HLO module is expensive
+//! (hundreds of ms), so executables are compiled on first use and cached
+//! by artifact name — the L3 hot path only pays buffer transfer +
+//! execution.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create over the default artifact directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            manifest,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn compile_caches_executables() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        assert_eq!(rt.cached(), 0);
+        rt.executable("mm_f32_128").unwrap();
+        assert_eq!(rt.cached(), 1);
+        rt.executable("mm_f32_128").unwrap();
+        assert_eq!(rt.cached(), 1); // cache hit
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        assert!(rt.executable("no_such_artifact").is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Typed execution over artifacts: host tensors in, host tensors out.
+//!
+//! The L2 lowering uses `return_tuple=True`, so every execution returns
+//! one tuple literal which is decomposed into per-output tensors here.
+
+use super::artifact::TensorSpec;
+use super::client::Runtime;
+use anyhow::{bail, Context, Result};
+
+/// Host tensor payload (f32 and i32 cover the functional-replay dtypes;
+/// int8/int16/complex designs are timing-simulated and functionally
+/// validated at the python layer — DESIGN.md §7).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TensorData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host tensor: shape + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn zeros_like_spec(spec: &TensorSpec) -> Result<Self> {
+        let n = spec.elements();
+        Ok(match spec.dtype.as_str() {
+            "float32" => Tensor::f32(spec.shape.clone(), vec![0.0; n]),
+            "int32" => Tensor::i32(spec.shape.clone(), vec![0; n]),
+            other => bail!("unsupported replay dtype {other}"),
+        })
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let data = match spec.dtype.as_str() {
+            "float32" => TensorData::F32(lit.to_vec::<f32>()?),
+            "int32" => TensorData::I32(lit.to_vec::<i32>()?),
+            other => bail!("unsupported replay dtype {other}"),
+        };
+        Ok(Tensor {
+            shape: spec.shape.clone(),
+            data,
+        })
+    }
+
+    /// Validate against a spec (shape + dtype).
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape == spec.shape
+            && matches!(
+                (&self.data, spec.dtype.as_str()),
+                (TensorData::F32(_), "float32") | (TensorData::I32(_), "int32")
+            )
+    }
+}
+
+impl Runtime {
+    /// Execute an artifact with typed host tensors; validates the
+    /// signature against the manifest on both sides.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !t.matches(s) {
+                bail!(
+                    "{name}: input {i} mismatch: got shape {:?}, want {:?} {}",
+                    t.shape,
+                    s.shape,
+                    s.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| Tensor::from_literal(lit, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use crate::util::rng::XorShift64;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    /// Host-side oracle: C' = C + A·B over row-major f32.
+    fn mm_ref(a: &[f32], b: &[f32], c: &[f32], n: usize, m: usize, k: usize) -> Vec<f32> {
+        let mut out = c.to_vec();
+        for i in 0..n {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                for j in 0..m {
+                    out[i * m + j] += av * b[kk * m + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn mm_artifact_matches_host_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let n = 128;
+        let mut rng = XorShift64::new(42);
+        let mut a = vec![0f32; n * n];
+        let mut b = vec![0f32; n * n];
+        let mut c = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        rng.fill_f32(&mut c);
+        let out = rt
+            .run(
+                "mm_f32_128",
+                &[
+                    Tensor::f32(vec![n, n], a.clone()),
+                    Tensor::f32(vec![n, n], b.clone()),
+                    Tensor::f32(vec![n, n], c.clone()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let want = mm_ref(&a, &b, &c, n, n, n);
+        let got = out[0].data.as_f32().unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let bad = Tensor::f32(vec![2, 2], vec![0.0; 4]);
+        let err = rt
+            .run("mm_f32_128", &[bad.clone(), bad.clone(), bad])
+            .unwrap_err();
+        assert!(err.to_string().contains("mismatch"));
+    }
+
+    #[test]
+    fn i32_artifact_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let n = 128;
+        let a = Tensor::i32(vec![n, n], vec![1; n * n]);
+        let b = Tensor::i32(vec![n, n], vec![2; n * n]);
+        let c = Tensor::i32(vec![n, n], vec![3; n * n]);
+        let out = rt.run("mm_i32_128", &[a, b, c]).unwrap();
+        // C' = 3 + 1·2·128 = 259 everywhere
+        assert!(out[0].data.as_i32().unwrap().iter().all(|&v| v == 259));
+    }
+}

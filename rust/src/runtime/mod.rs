@@ -1,0 +1,15 @@
+//! Runtime bridge: load AOT-compiled HLO artifacts and execute them on
+//! the PJRT CPU client from the rust hot path (python never runs here).
+//!
+//! [`artifact`] reads `artifacts/manifest.json` (produced once by
+//! `python -m compile.aot`); [`client`] owns the PJRT client and an
+//! executable cache; [`executor`] marshals typed host buffers in and out
+//! of tuple-rooted executions.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use executor::{Tensor, TensorData};

@@ -1,0 +1,243 @@
+//! Round-level discrete-event simulation of a mapped design.
+//!
+//! The schedule a WideSA design executes is a stream of rounds; each
+//! round loads its input tiles through the assigned PLIO ports, computes
+//! on the array, and drains outputs. The movers double-buffer: round
+//! `i+1`'s load overlaps round `i`'s compute, and drains overlap the next
+//! round's compute. This engine walks that timeline event by event with
+//! per-phase durations derived from the same first-principles quantities
+//! the analytic model uses — but *composed* temporally rather than
+//! bounded, so pipeline bubbles (cold start, prefetch misses, drain
+//! backpressure) appear naturally.
+
+use crate::mapping::candidate::MappingCandidate;
+use crate::mapping::cost::{issue_efficiency, CostModel, PerfBound};
+use crate::sim::memory::Prefetcher;
+use crate::sim::metrics::SimReport;
+use crate::sim::trace::{stall_fraction, RoundTrace};
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Simulate cold-DRAM end-to-end (true) or on-chip staging (false).
+    pub cold_dram: bool,
+    /// Keep the full per-round trace (memory ∝ rounds).
+    pub keep_trace: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            cold_dram: false,
+            keep_trace: false,
+        }
+    }
+}
+
+/// Simulate `cand` under `model`.
+pub fn simulate(cand: &MappingCandidate, model: &CostModel, cfg: &SimConfig) -> (SimReport, Vec<RoundTrace>) {
+    let core = &model.board.array.core;
+    let dtype = cand.rec.dtype;
+    let eff = issue_efficiency(cand.kind, dtype) * cand.latency.efficiency(core);
+    let mac_rate_core = core.macs_per_cycle(dtype) as f64 * core.freq_hz * eff;
+
+    let sched_rounds = cand.rounds().max(1);
+    let steps = cand.time_steps_per_round().max(1);
+    let step_s = cand.scope.core_macs.max(1) as f64 / mac_rate_core;
+
+    // Streaming designs overlap load/compute *within* a round (cores
+    // start as soon as their first tile lands); model that by slicing
+    // rounds so the pipeline has at least 32 stages of granularity.
+    let slice = (32u64.div_ceil(sched_rounds)).max(1);
+    let rounds = sched_rounds * slice;
+    let compute_round_s = steps as f64 * step_s / slice as f64;
+
+    // Phase durations shared with the analytic model: per-round PLIO
+    // in/out times at the assigned port counts.
+    let est = model.estimate(cand);
+    let in_round_s = est.plio_in_s / rounds as f64;
+    let out_round_s = est.plio_out_s / rounds as f64;
+    let in_bytes_round = est.dram_bytes as f64 / rounds as f64; // prefetch granularity
+
+    let mut prefetch = if cfg.cold_dram {
+        Prefetcher::new(model.board.pl.dram_bandwidth())
+    } else {
+        Prefetcher::onchip()
+    };
+
+    // Systolic fill before the first round's compute completes its value.
+    let (r, c) = cand.replica_shape();
+    let fill_s = match cand.kind {
+        crate::mapping::candidate::Kind::Mm => (r + c) as f64 * step_s,
+        _ => 0.0,
+    };
+
+    let mut trace: Vec<RoundTrace> = Vec::with_capacity(if cfg.keep_trace {
+        rounds.min(1 << 20) as usize
+    } else {
+        0
+    });
+
+    // Double-buffered timeline: the mover can load round i+1 while the
+    // array computes round i; one load and one drain in flight at a time.
+    let mut mover_free = 0.0f64; // input mover availability
+    let mut array_free = fill_s; // array availability
+    let mut drain_free = 0.0f64; // output mover availability
+    let mut end = 0.0f64;
+    let mut first_load_start = f64::INFINITY;
+
+    for round in 0..rounds {
+        let ready = prefetch.fetch(mover_free, in_bytes_round);
+        let load_start = mover_free.max(ready - in_round_s.max(0.0)).max(0.0);
+        let load_start = load_start.max(if ready > load_start + in_round_s {
+            ready - in_round_s
+        } else {
+            load_start
+        });
+        let load_end = load_start.max(ready - in_round_s).max(load_start) + in_round_s;
+        let load_end = load_end.max(ready);
+        mover_free = load_end;
+
+        let compute_start = load_end.max(array_free);
+        let compute_end = compute_start + compute_round_s;
+        array_free = compute_end;
+
+        let drain_start = compute_end.max(drain_free);
+        let drain_end = drain_start + out_round_s;
+        drain_free = drain_end;
+        end = drain_end;
+
+        first_load_start = first_load_start.min(load_start);
+        if cfg.keep_trace {
+            trace.push(RoundTrace {
+                round,
+                load_start,
+                load_end,
+                compute_start,
+                compute_end,
+                drain_end,
+            });
+        }
+    }
+
+    let seconds = end;
+    let ops = cand.rec.total_ops();
+    let tops = ops / seconds / 1e12;
+    let aies = cand.aies_used().max(1);
+    let stall = if cfg.keep_trace {
+        stall_fraction(&trace)
+    } else {
+        (1.0 - (rounds as f64 * compute_round_s) / seconds).max(0.0)
+    };
+    let bound = if cfg.cold_dram && est.dram_s > est.compute_s.max(est.plio_in_s) {
+        PerfBound::Dram
+    } else {
+        est.bound
+    };
+
+    (
+        SimReport {
+            seconds,
+            cycles: (seconds * core.freq_hz) as u64,
+            tops,
+            aies,
+            tops_per_aie: tops / aies as f64,
+            stall_fraction: stall,
+            bound,
+            rounds,
+        },
+        trace,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck5000::BoardConfig;
+    use crate::mapping::dse::{explore, DseConstraints};
+    use crate::recurrence::dtype::DType;
+    use crate::recurrence::library;
+
+    fn sim_for(
+        rec: crate::recurrence::spec::UniformRecurrence,
+        cap: u64,
+        cold: bool,
+    ) -> (SimReport, crate::mapping::cost::PerfEstimate) {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, est) = explore(&rec, &board, &cons).unwrap();
+        let model = CostModel::new(board);
+        let (rep, _) = simulate(
+            &cand,
+            &model,
+            &SimConfig {
+                cold_dram: cold,
+                keep_trace: false,
+            },
+        );
+        (rep, est)
+    }
+
+    #[test]
+    fn sim_agrees_with_analytic_mm() {
+        let (rep, est) = sim_for(library::mm(8192, 8192, 8192, DType::F32), 400, false);
+        let rel = (rep.tops - est.tops).abs() / est.tops;
+        assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.tops);
+    }
+
+    #[test]
+    fn sim_agrees_with_analytic_conv() {
+        let (rep, est) = sim_for(library::conv2d(10240, 10240, 8, 8, DType::I8), 400, false);
+        let rel = (rep.tops - est.tops).abs() / est.tops;
+        assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.tops);
+    }
+
+    #[test]
+    fn cold_dram_is_slower_or_equal() {
+        let (warm, _) = sim_for(library::mm(4096, 4096, 4096, DType::F32), 400, false);
+        let (cold, _) = sim_for(library::mm(4096, 4096, 4096, DType::F32), 400, true);
+        assert!(cold.tops <= warm.tops * 1.001);
+    }
+
+    #[test]
+    fn trace_is_monotone_and_pipelined() {
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let (cand, _) =
+            explore(&library::mm(4096, 4096, 4096, DType::F32), &board, &cons).unwrap();
+        let model = CostModel::new(board);
+        let (_, trace) = simulate(
+            &cand,
+            &model,
+            &SimConfig {
+                cold_dram: false,
+                keep_trace: true,
+            },
+        );
+        assert!(!trace.is_empty());
+        for w in trace.windows(2) {
+            // rounds retire in order
+            assert!(w[1].compute_end >= w[0].compute_end);
+            // double buffering: next load may start before previous
+            // compute ends
+            assert!(w[1].load_start <= w[0].compute_end + 1e-9);
+        }
+        for t in &trace {
+            assert!(t.load_end >= t.load_start);
+            assert!(t.compute_start >= t.load_end - 1e-12);
+            assert!(t.drain_end >= t.compute_end);
+        }
+    }
+
+    #[test]
+    fn stall_fraction_small_when_compute_bound() {
+        let (rep, est) = sim_for(library::mm(8192, 8192, 8192, DType::I8), 400, false);
+        assert_eq!(est.bound, crate::mapping::cost::PerfBound::Compute);
+        assert!(rep.stall_fraction < 0.2, "stall {}", rep.stall_fraction);
+    }
+}

@@ -1,0 +1,32 @@
+//! Simulation end metrics.
+
+use crate::mapping::cost::PerfBound;
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Wall time of the simulated execution (seconds).
+    pub seconds: f64,
+    /// Equivalent AIE cycles (at the core clock).
+    pub cycles: u64,
+    pub tops: f64,
+    pub aies: u64,
+    pub tops_per_aie: f64,
+    /// Fraction of wall time cores spent stalled on input/drain.
+    pub stall_fraction: f64,
+    pub bound: PerfBound,
+    pub rounds: u64,
+}
+
+impl SimReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:.4} TOPS on {} AIEs ({:.4} TOPS/AIE), {:.3} ms, stall {:.1}%, bound {}",
+            self.tops,
+            self.aies,
+            self.tops_per_aie,
+            self.seconds * 1e3,
+            self.stall_fraction * 100.0,
+            self.bound
+        )
+    }
+}

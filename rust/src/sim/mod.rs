@@ -1,0 +1,19 @@
+//! Cycle-approximate simulator of a mapped design on the ACAP model.
+//!
+//! Where [`crate::mapping::cost`] computes closed-form bounds, this
+//! module *executes* the round schedule: per-round load / compute / drain
+//! phases flow through a double-buffered timeline with per-port PLIO
+//! contention and a DRAM prefetcher ([`memory`]), producing a trace
+//! ([`trace`]) and end metrics ([`metrics`]). Agreement between the two
+//! (tests assert ≤15 % divergence) is the evidence the closed forms used
+//! by the evaluation harness are right; divergence appears exactly when
+//! pipelining effects matter (short runs, cold starts).
+
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+pub mod trace;
+
+pub use engine::{simulate, SimConfig};
+pub use metrics::SimReport;
+pub use trace::RoundTrace;

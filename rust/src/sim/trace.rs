@@ -1,0 +1,74 @@
+//! Per-round execution trace.
+
+/// Timestamps (seconds) of one round's phases.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundTrace {
+    pub round: u64,
+    pub load_start: f64,
+    pub load_end: f64,
+    pub compute_start: f64,
+    pub compute_end: f64,
+    pub drain_end: f64,
+}
+
+impl RoundTrace {
+    /// Was this round's compute stalled waiting for input?
+    pub fn input_stalled(&self) -> bool {
+        self.compute_start > self.load_end + 1e-15 || self.load_end > self.load_start
+    }
+
+    pub fn compute_s(&self) -> f64 {
+        self.compute_end - self.compute_start
+    }
+}
+
+/// Aggregate stall statistics over a trace.
+pub fn stall_fraction(trace: &[RoundTrace]) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = trace.last().unwrap().drain_end - trace.first().unwrap().load_start;
+    let compute: f64 = trace.iter().map(RoundTrace::compute_s).sum();
+    (1.0 - compute / total.max(1e-15)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stall_fraction_zero_when_fully_busy() {
+        let trace = vec![
+            RoundTrace {
+                round: 0,
+                load_start: 0.0,
+                load_end: 0.0,
+                compute_start: 0.0,
+                compute_end: 1.0,
+                drain_end: 1.0,
+            },
+            RoundTrace {
+                round: 1,
+                load_start: 0.5,
+                load_end: 1.0,
+                compute_start: 1.0,
+                compute_end: 2.0,
+                drain_end: 2.0,
+            },
+        ];
+        assert!(stall_fraction(&trace) < 1e-12);
+    }
+
+    #[test]
+    fn stall_fraction_half_when_half_idle() {
+        let trace = vec![RoundTrace {
+            round: 0,
+            load_start: 0.0,
+            load_end: 1.0,
+            compute_start: 1.0,
+            compute_end: 2.0,
+            drain_end: 2.0,
+        }];
+        assert!((stall_fraction(&trace) - 0.5).abs() < 1e-12);
+    }
+}

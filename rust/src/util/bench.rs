@@ -1,0 +1,75 @@
+//! Minimal benchmarking harness (the offline vendor set has no criterion):
+//! warmup + N timed runs, reporting min/median/mean. `cargo bench` runs
+//! the `rust/benches/*.rs` binaries built on this.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let scale = |s: f64| -> String {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else if s >= 1e-6 {
+                format!("{:.3} µs", s * 1e6)
+            } else {
+                format!("{:.1} ns", s * 1e9)
+            }
+        };
+        format!(
+            "{:48} min {:>12} median {:>12} mean {:>12} ({} iters)",
+            self.name,
+            scale(self.min_s),
+            scale(self.median_s),
+            scale(self.mean_s),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` over `iters` runs after one warmup; prints and returns stats.
+pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+    };
+    println!("{}", res.report());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_stats() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", 5, || {
+            x = x.wrapping_add(std::hint::black_box(17));
+        });
+        assert!(r.min_s <= r.median_s);
+        assert!(r.min_s <= r.mean_s);
+        assert_eq!(r.iters, 5);
+        assert!(r.report().contains("noop-ish"));
+    }
+}

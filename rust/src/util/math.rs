@@ -1,0 +1,97 @@
+//! Integer helpers used across tiling, partitioning and the cost model.
+
+/// Ceiling division for positive integers.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Greatest common divisor (Euclid).
+pub fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Least common multiple.
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        a / gcd(a, b) * b
+    }
+}
+
+/// All ordered factor pairs (r, c) with r·c == n.
+pub fn factor_pairs(n: u64) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push((d, n / d));
+            if d != n / d {
+                out.push((n / d, d));
+            }
+        }
+        d += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Divisors of n in ascending order.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push(d);
+            if d != n / d {
+                out.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 100), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn gcd_lcm_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 5), 0);
+    }
+
+    #[test]
+    fn factor_pairs_cover_all() {
+        let ps = factor_pairs(12);
+        assert!(ps.contains(&(3, 4)));
+        assert!(ps.contains(&(12, 1)));
+        for (r, c) in ps {
+            assert_eq!(r * c, 12);
+        }
+    }
+
+    #[test]
+    fn divisors_sorted_complete() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(13), vec![1, 13]);
+    }
+}

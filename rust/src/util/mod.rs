@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic PRNG, integer math, formatting.
+
+pub mod bench;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod table;
+
+pub use math::{ceil_div, factor_pairs, gcd, lcm};
+pub use rng::XorShift64;
+pub use table::TextTable;

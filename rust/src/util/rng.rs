@@ -1,0 +1,99 @@
+//! Deterministic xorshift64* PRNG — reproducible workloads and annealing
+//! without an external dependency.
+
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: seed.max(1),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform float in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard-normal-ish via sum of uniforms (Irwin–Hall, k=12).
+    pub fn gen_normal(&mut self) -> f64 {
+        let mut s = 0.0;
+        for _ in 0..12 {
+            s += self.gen_f64();
+        }
+        s - 6.0
+    }
+
+    /// Fill a buffer with small random f32 values.
+    pub fn fill_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = (self.gen_f64() as f32) * 2.0 - 1.0;
+        }
+    }
+
+    /// Fill a buffer with small random i32 values in [-8, 8).
+    pub fn fill_i32(&mut self, buf: &mut [i32]) {
+        for v in buf.iter_mut() {
+            *v = self.gen_range(16) as i32 - 8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_respected() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            assert!(r.gen_range(10) < 10);
+            let f = r.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = XorShift64::new(3);
+        let n = 10_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = r.gen_normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

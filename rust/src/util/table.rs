@@ -1,0 +1,108 @@
+//! Plain-text table rendering for the evaluation harness — the CLI prints
+//! the same rows the paper's tables report.
+
+#[derive(Debug, Default, Clone)]
+pub struct TextTable {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let fmt_row = |row: &[String]| -> String {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+            out.push_str(&format!("|-{}-|", sep.join("-|-")));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format TOPS-style numbers the way the paper prints them.
+pub fn fmt3(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.1}")
+    } else if x >= 10.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = TextTable::new("T");
+        t.header(&["name", "tops"]);
+        t.row(vec!["mm".into(), "4.15".into()]);
+        t.row(vec!["conv2d".into(), "36.02".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("| mm     | 4.15  |"));
+        assert_eq!(t.num_rows(), 2);
+    }
+
+    #[test]
+    fn fmt3_scales_precision() {
+        assert_eq!(fmt3(4.153), "4.153");
+        assert_eq!(fmt3(32.49), "32.49");
+        assert_eq!(fmt3(128.0), "128.0");
+    }
+}

@@ -1,0 +1,99 @@
+//! Integration: the full three-layer stack — map with L3, replay through
+//! the L1/L2 AOT kernels via PJRT, verify against host oracles. This is
+//! the automated version of `examples/mm_e2e.rs`.
+
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::coordinator::{exec, verify};
+use widesa::mapping::dse::DseConstraints;
+use widesa::recurrence::{dtype::DType, library};
+use widesa::runtime::artifact::Manifest;
+use widesa::runtime::client::Runtime;
+use widesa::util::rng::XorShift64;
+
+fn runtime() -> Option<Runtime> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new().unwrap())
+}
+
+#[test]
+fn mm_map_and_replay_agree() {
+    let Some(mut rt) = runtime() else { return };
+    let n = 256usize;
+    // L3 mapping of the same (small) problem
+    let ws = WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let d = ws
+        .compile(&library::mm(n as u64, n as u64, n as u64, DType::F32))
+        .unwrap();
+    assert!(d.compile.success);
+
+    // functional replay
+    let mut rng = XorShift64::new(31);
+    let mut a = vec![0f32; n * n];
+    let mut b = vec![0f32; n * n];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    let (c, stats) = exec::run_mm(&mut rt, &a, &b, n, n, n).unwrap();
+    assert!(stats.rounds > 0);
+    let want = verify::mm_ref(&a, &b, &vec![0.0; n * n], n, n, n);
+    assert!(verify::max_abs_diff(&c, &want) < 1e-2);
+}
+
+#[test]
+fn conv_pipeline_replay() {
+    let Some(mut rt) = runtime() else { return };
+    const H: usize = 128;
+    const W: usize = 128;
+    let mut rng = XorShift64::new(37);
+    let mut x = vec![0f32; (H + 3) * (W + 3)];
+    let mut k = vec![0f32; 16];
+    rng.fill_f32(&mut x);
+    rng.fill_f32(&mut k);
+    let (y, _) = exec::run_conv2d(&mut rt, &x, &k, H, W).unwrap();
+    let want = verify::conv2d_ref(&x, &k, H, W, 4, 4);
+    assert!(verify::max_abs_diff(&y, &want) < 1e-3);
+}
+
+#[test]
+fn fft2d_replay_matches_oracle() {
+    let Some(mut rt) = runtime() else { return };
+    let (rows, cols) = (256usize, 256usize);
+    let mut rng = XorShift64::new(41);
+    let mut re = vec![0f32; rows * cols];
+    let mut im = vec![0f32; rows * cols];
+    rng.fill_f32(&mut re);
+    rng.fill_f32(&mut im);
+    let (gre, gim, stats) = exec::run_fft2d(&mut rt, &re, &im, rows, cols).unwrap();
+    assert_eq!(stats.rounds, 2 * (rows / 64) as u64);
+    let mut wre = re.clone();
+    let mut wim = im.clone();
+    verify::fft2d_ref(&mut wre, &mut wim, rows, cols);
+    // FFT magnitudes grow with N; compare with a relative-ish tolerance
+    let scale = wre.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    let er = verify::max_abs_diff(&gre, &wre) / scale;
+    let ei = verify::max_abs_diff(&gim, &wim) / scale;
+    assert!(er < 1e-3 && ei < 1e-3, "relative errors {er} / {ei}");
+}
+
+#[test]
+fn fir_replay_long_signal() {
+    let Some(mut rt) = runtime() else { return };
+    let n = 16384usize;
+    let mut rng = XorShift64::new(43);
+    let mut x = vec![0f32; n + 14];
+    let mut h = vec![0f32; 15];
+    rng.fill_f32(&mut x);
+    rng.fill_f32(&mut h);
+    let (y, stats) = exec::run_fir(&mut rt, &x, &h, n).unwrap();
+    assert_eq!(stats.rounds, (n / 4096) as u64);
+    let want = verify::fir_ref(&x, &h, n);
+    assert!(verify::max_abs_diff(&y, &want) < 1e-3);
+}

@@ -1,0 +1,200 @@
+//! Integration: the full mapping pipeline (no PJRT) across benchmarks,
+//! budgets and ablations — every stage's invariants checked against the
+//! next stage's inputs.
+
+use widesa::arch::array::AieArray;
+use widesa::arch::plio::PlioDir;
+use widesa::arch::vck5000::BoardConfig;
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::graph::builder::build;
+use widesa::graph::packet::merge_ports;
+use widesa::mapping::cost::{CostModel, PerfBound};
+use widesa::mapping::dse::{explore, DseConstraints};
+use widesa::place_route::placement::place;
+use widesa::plio::assignment::assign;
+use widesa::recurrence::{dtype::DType, library};
+
+fn ws(max_aies: u64) -> WideSa {
+    WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(max_aies),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+}
+
+#[test]
+fn every_table2_benchmark_compiles_end_to_end() {
+    for rec in library::table2_benchmarks() {
+        let cap = if rec.name.starts_with("fft") {
+            320
+        } else if rec.name.starts_with("fir") {
+            256
+        } else {
+            400
+        };
+        let d = ws(cap)
+            .compile(&rec)
+            .unwrap_or_else(|e| panic!("{}: {e}", rec.name));
+        assert!(d.compile.success, "{} failed P&R", rec.name);
+        assert!(d.estimate.tops > 0.0);
+        assert!(d.merge_stats.in_ports_after <= 78, "{}", rec.name);
+        assert!(d.merge_stats.out_ports_after <= 78, "{}", rec.name);
+        assert!(d.estimate.aies <= cap);
+    }
+}
+
+#[test]
+fn graph_matches_candidate_shape() {
+    let board = BoardConfig::vck5000();
+    for cap in [64, 160, 400] {
+        let cons = DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        };
+        let (cand, _) =
+            explore(&library::mm(4096, 4096, 4096, DType::F32), &board, &cons).unwrap();
+        let model = CostModel::new(board.clone());
+        let g = build(&cand, &model);
+        assert_eq!(g.num_aies() as u64, cand.aies_used());
+    }
+}
+
+#[test]
+fn placement_plus_assignment_is_consistent() {
+    let board = BoardConfig::vck5000();
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    let (cand, _) = explore(&library::mm(8192, 8192, 8192, DType::I8), &board, &cons).unwrap();
+    let model = CostModel::new(board.clone());
+    let (g, _) = merge_ports(&build(&cand, &model), model.channel_bw());
+    let pl = place(&g, &AieArray::default()).unwrap();
+    assert!(pl.is_valid(&AieArray::default()));
+    assert!(pl.shared_buffers_adjacent(&g, &AieArray::default()));
+    let a = assign(&g, &pl, &board.plio, board.array.rc_west, board.array.rc_east);
+    assert!(a.feasible);
+    // every PLIO node got a column inside the interface range
+    for n in g.plio_nodes() {
+        let col = a.columns[&n.id];
+        assert!(board.plio.columns.contains(&col));
+    }
+    // per-column capacity: ≤ channels_per_column per direction
+    use std::collections::HashMap;
+    let mut per: HashMap<(u32, PlioDir), u32> = HashMap::new();
+    for n in g.plio_nodes() {
+        *per.entry((a.columns[&n.id], n.plio_dir().unwrap()))
+            .or_default() += 1;
+    }
+    for ((c, d), count) in per {
+        assert!(
+            count <= board.plio.channels_per_column,
+            "column {c} {d:?} hosts {count}"
+        );
+    }
+}
+
+#[test]
+fn ablations_order_correctly() {
+    // full pipeline ≥ no-latency-hiding; threading never hurts
+    let board = BoardConfig::vck5000();
+    let rec = library::mm(8192, 8192, 8192, DType::F32);
+    let full = explore(
+        &rec,
+        &board,
+        &DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .1;
+    let no_lat = explore(
+        &rec,
+        &board,
+        &DseConstraints {
+            max_aies: Some(400),
+            no_latency_hiding: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .1;
+    let no_thread = explore(
+        &rec,
+        &board,
+        &DseConstraints {
+            max_aies: Some(400),
+            no_threading: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .1;
+    assert!(full.tops >= no_lat.tops);
+    assert!(full.tops >= no_thread.tops * 0.999);
+}
+
+#[test]
+fn sim_and_analytic_agree_across_benchmarks() {
+    for (rec, cap) in [
+        (library::mm(8192, 8192, 8192, DType::F32), 400u64),
+        (library::conv2d(10240, 10240, 4, 4, DType::I16), 400),
+        (library::fir(1048576, 15, DType::I8), 256),
+        (library::fft2d(8192, 8192, DType::CI16), 320),
+    ] {
+        let d = ws(cap).compile(&rec).unwrap();
+        let rel = (d.sim.tops - d.estimate.tops).abs() / d.estimate.tops;
+        assert!(
+            rel < 0.15,
+            "{}: sim {:.3} vs analytic {:.3}",
+            rec.name,
+            d.sim.tops,
+            d.estimate.tops
+        );
+    }
+}
+
+#[test]
+fn bound_classification_sensible() {
+    // Table III operating points are compute-bound; tiny PLIO budgets
+    // flip to PLIO-bound.
+    let d = ws(400)
+        .compile(&library::mm(8192, 8192, 8192, DType::F32))
+        .unwrap();
+    assert_eq!(d.estimate.bound, PerfBound::Compute);
+
+    let starved = WideSa::new(WideSaConfig {
+        board: BoardConfig::vck5000().with_plio_budget(4),
+        constraints: DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        },
+        mover_bits: 128,
+        ..Default::default()
+    });
+    let d2 = starved
+        .compile(&library::mm(8192, 8192, 8192, DType::F32))
+        .unwrap();
+    assert_ne!(d2.estimate.bound, PerfBound::Compute);
+    assert!(d2.estimate.tops < d.estimate.tops);
+}
+
+#[test]
+fn codegen_scales_with_design() {
+    let small = ws(64)
+        .compile(&library::mm(2048, 2048, 2048, DType::F32))
+        .unwrap();
+    let large = ws(400)
+        .compile(&library::mm(8192, 8192, 8192, DType::F32))
+        .unwrap();
+    // graph code instantiates more kernels for the larger design
+    assert!(large.code.adf_graph.len() > small.code.adf_graph.len());
+    // one kernel program regardless of scale (the paper's reuse claim)
+    assert_eq!(
+        small.code.aie_kernel.lines().count(),
+        large.code.aie_kernel.lines().count()
+    );
+}

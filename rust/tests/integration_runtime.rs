@@ -1,0 +1,156 @@
+//! Integration: the PJRT runtime against every AOT artifact — every
+//! manifest entry loads, compiles, executes and returns sane values.
+//! Skips (with a notice) when `make artifacts` has not been run.
+
+use widesa::runtime::artifact::Manifest;
+use widesa::runtime::client::Runtime;
+use widesa::runtime::executor::{Tensor, TensorData};
+use widesa::util::rng::XorShift64;
+
+fn runtime() -> Option<Runtime> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new().unwrap())
+}
+
+fn random_input(spec: &widesa::runtime::artifact::TensorSpec, rng: &mut XorShift64) -> Tensor {
+    let n = spec.elements();
+    match spec.dtype.as_str() {
+        "float32" => {
+            let mut v = vec![0f32; n];
+            rng.fill_f32(&mut v);
+            Tensor::f32(spec.shape.clone(), v)
+        }
+        "int32" => {
+            let mut v = vec![0i32; n];
+            rng.fill_i32(&mut v);
+            Tensor::i32(spec.shape.clone(), v)
+        }
+        other => panic!("unsupported dtype {other}"),
+    }
+}
+
+#[test]
+fn every_artifact_executes_with_valid_outputs() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+    let mut rng = XorShift64::new(99);
+    assert!(names.len() >= 8, "expected the full artifact set");
+    for name in names {
+        let spec = rt.spec(&name).unwrap().clone();
+        let inputs: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|s| random_input(s, &mut rng))
+            .collect();
+        let outputs = rt.run(&name, &inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(outputs.len(), spec.outputs.len(), "{name}");
+        for (o, s) in outputs.iter().zip(&spec.outputs) {
+            assert_eq!(o.shape, s.shape, "{name}");
+            assert_eq!(o.data.len(), s.elements(), "{name}");
+            if let TensorData::F32(v) = &o.data {
+                assert!(v.iter().all(|x| x.is_finite()), "{name}: non-finite output");
+            }
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reused_across_runs() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.spec("mm_f32_128").unwrap().clone();
+    let mut rng = XorShift64::new(5);
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|s| random_input(s, &mut rng))
+        .collect();
+    let t0 = std::time::Instant::now();
+    rt.run("mm_f32_128", &inputs).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..3 {
+        rt.run("mm_f32_128", &inputs).unwrap();
+    }
+    let warm = t1.elapsed() / 3;
+    assert_eq!(rt.cached(), 1);
+    assert!(
+        warm < cold,
+        "warm {warm:?} should beat cold {cold:?} (compile amortised)"
+    );
+}
+
+#[test]
+fn mm_artifacts_agree_with_each_other() {
+    // 256-tile artifact on a 256 input must equal four 128-tile calls.
+    let Some(mut rt) = runtime() else { return };
+    let n = 256usize;
+    let mut rng = XorShift64::new(17);
+    let mut a = vec![0f32; n * n];
+    let mut b = vec![0f32; n * n];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    let zero = vec![0f32; n * n];
+    let big = rt
+        .run(
+            "mm_f32_256",
+            &[
+                Tensor::f32(vec![n, n], a.clone()),
+                Tensor::f32(vec![n, n], b.clone()),
+                Tensor::f32(vec![n, n], zero.clone()),
+            ],
+        )
+        .unwrap();
+    let (c_small, _) =
+        widesa::coordinator::exec::run_mm(&mut rt, &a, &b, n, n, n).unwrap();
+    let big_c = big[0].data.as_f32().unwrap();
+    let err = widesa::coordinator::verify::max_abs_diff(big_c, &c_small);
+    assert!(err < 1e-2, "artifact disagreement: {err}");
+}
+
+#[test]
+fn fft_artifact_matches_host_fft() {
+    let Some(mut rt) = runtime() else { return };
+    let (b, n) = (64usize, 256usize);
+    let mut rng = XorShift64::new(23);
+    let mut re = vec![0f32; b * n];
+    let mut im = vec![0f32; b * n];
+    rng.fill_f32(&mut re);
+    rng.fill_f32(&mut im);
+    // the artifact expects bit-reversed-order rows (host-side permute)
+    let bits = n.trailing_zeros();
+    let rev: Vec<usize> = (0..n)
+        .map(|i| ((i as u32).reverse_bits() >> (32 - bits)) as usize)
+        .collect();
+    let permute = |v: &[f32]| -> Vec<f32> {
+        let mut out = vec![0f32; b * n];
+        for row in 0..b {
+            for (i, &s) in rev.iter().enumerate() {
+                out[row * n + i] = v[row * n + s];
+            }
+        }
+        out
+    };
+    let out = rt
+        .run(
+            "fft1d_f32_64x256",
+            &[
+                Tensor::f32(vec![b, n], permute(&re)),
+                Tensor::f32(vec![b, n], permute(&im)),
+            ],
+        )
+        .unwrap();
+    // host oracle per row
+    for row in 0..b {
+        let mut hr = re[row * n..(row + 1) * n].to_vec();
+        let mut hi = im[row * n..(row + 1) * n].to_vec();
+        widesa::coordinator::verify::fft_ref(&mut hr, &mut hi);
+        let gr = &out[0].data.as_f32().unwrap()[row * n..(row + 1) * n];
+        let gi = &out[1].data.as_f32().unwrap()[row * n..(row + 1) * n];
+        let er = widesa::coordinator::verify::max_abs_diff(gr, &hr);
+        let ei = widesa::coordinator::verify::max_abs_diff(gi, &hi);
+        assert!(er < 1e-2 && ei < 1e-2, "row {row}: {er} / {ei}");
+    }
+}

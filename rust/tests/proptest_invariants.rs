@@ -1,0 +1,317 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! scheduling state). The vendored offline crate set has no proptest, so
+//! properties are swept with the crate's deterministic PRNG — hundreds of
+//! random cases per property, fully reproducible.
+
+use widesa::arch::array::{AieArray, Coord};
+use widesa::arch::plio::{PlioDir, PlioSpec};
+use widesa::arch::vck5000::BoardConfig;
+use widesa::graph::builder::{build, MappedGraph};
+use widesa::graph::edge::{Edge, EdgeKind};
+use widesa::graph::node::{Node, NodeKind};
+use widesa::graph::packet::{merge_ports, MAX_FANIN};
+use widesa::mapping::cost::CostModel;
+use widesa::mapping::dse::{explore, DseConstraints};
+use widesa::mapping::partition::partition;
+use widesa::place_route::placement::{place, Placement};
+use widesa::plio::assignment::assign;
+use widesa::plio::congestion::congestion;
+use widesa::plio::sat::{check, exhaustive_assign};
+use widesa::polyhedral::dependence::{DepKind, Dependence};
+use widesa::polyhedral::domain::{IterationDomain, LoopDim};
+use widesa::polyhedral::legality::{is_legal_order, lex_positive};
+use widesa::polyhedral::schedule::LoopNest;
+use widesa::polyhedral::transform::{apply_all, Transform};
+use widesa::recurrence::{dtype::DType, library};
+use widesa::util::rng::XorShift64;
+
+const CASES: usize = 200;
+
+fn random_nest(rng: &mut XorShift64) -> LoopNest {
+    let rank = 2 + rng.gen_range(3) as usize;
+    let dims: Vec<LoopDim> = (0..rank)
+        .map(|i| LoopDim::new(format!("l{i}"), 4 + rng.gen_range(60)))
+        .collect();
+    let ndeps = 1 + rng.gen_range(3) as usize;
+    let deps: Vec<Dependence> = (0..ndeps)
+        .map(|_| {
+            // lexicographically non-negative by construction: first
+            // non-zero entry positive
+            let mut v = vec![0i64; rank];
+            let lead = rng.gen_range(rank as u64) as usize;
+            v[lead] = 1;
+            for c in v.iter_mut().skip(lead + 1) {
+                *c = rng.gen_range(3) as i64 - 1;
+            }
+            Dependence::new("X", DepKind::Flow, v)
+        })
+        .collect();
+    LoopNest::new(IterationDomain::new(dims), deps)
+}
+
+#[test]
+fn prop_tiling_preserves_cardinality_and_legality() {
+    let mut rng = XorShift64::new(1000);
+    for _ in 0..CASES {
+        let nest = random_nest(&mut rng);
+        let dim = rng.gen_range(nest.rank() as u64) as usize;
+        let extent = nest.domain.dims[dim].extent;
+        // pick a divisor factor so cardinality is exactly preserved
+        let divisors: Vec<u64> = (1..=extent).filter(|f| extent % f == 0).collect();
+        let factor = divisors[rng.gen_range(divisors.len() as u64) as usize];
+        let tiled = Transform::Tile { dim, factor }.apply(&nest);
+        assert_eq!(tiled.cardinality(), nest.cardinality());
+        assert_eq!(tiled.rank(), nest.rank() + 1);
+        // legality preserved: tiling a legal nest stays legal
+        assert!(is_legal_order(&nest.deps));
+        assert!(
+            is_legal_order(&tiled.deps),
+            "tiling dim {dim} by {factor} broke legality: {:?}",
+            tiled.deps
+        );
+    }
+}
+
+#[test]
+fn prop_permutation_roundtrip_is_identity() {
+    let mut rng = XorShift64::new(2000);
+    for _ in 0..CASES {
+        let nest = random_nest(&mut rng);
+        let rank = nest.rank();
+        // random permutation
+        let mut order: Vec<usize> = (0..rank).collect();
+        for i in (1..rank).rev() {
+            let j = rng.gen_range(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        // inverse
+        let mut inv = vec![0usize; rank];
+        for (new, &old) in order.iter().enumerate() {
+            inv[old] = new;
+        }
+        let round = apply_all(
+            &nest,
+            &[Transform::Permute(order.clone()), Transform::Permute(inv)],
+        );
+        assert_eq!(round, nest);
+    }
+}
+
+#[test]
+fn prop_lex_positive_total_on_nonzero() {
+    let mut rng = XorShift64::new(3000);
+    for _ in 0..CASES {
+        let v: Vec<i64> = (0..4).map(|_| rng.gen_range(5) as i64 - 2).collect();
+        let neg: Vec<i64> = v.iter().map(|c| -c).collect();
+        if v.iter().any(|&c| c != 0) {
+            assert_ne!(lex_positive(&v), lex_positive(&neg), "{v:?}");
+        } else {
+            assert!(!lex_positive(&v) && !lex_positive(&neg));
+        }
+    }
+}
+
+#[test]
+fn prop_partition_respects_budget_and_covers_tiles() {
+    let mut rng = XorShift64::new(4000);
+    let array = AieArray::default();
+    for _ in 0..CASES {
+        let vi = 1 + rng.gen_range(300);
+        let vj = 1 + rng.gen_range(300);
+        let budget = 1 + rng.gen_range(400);
+        let nest = LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("i", vi), LoopDim::new("j", vj)]),
+            vec![],
+        );
+        let p = partition(&nest, &[0, 1], &array, Some(budget));
+        assert!(p.active_aies() <= budget, "budget {budget}: {p:?}");
+        assert!(p.phys[0] <= array.rows as u64 && p.phys[1] <= array.cols as u64);
+        // rounds × active must cover all virtual tiles
+        assert!(
+            p.rounds * p.active_aies() >= vi * vj,
+            "under-covered: {p:?}"
+        );
+        // and not overshoot by more than one round
+        assert!((p.rounds - 1) * p.active_aies() < vi * vj);
+        let eff = p.edge_efficiency();
+        assert!(eff > 0.0 && eff <= 1.0 + 1e-12);
+    }
+}
+
+#[test]
+fn prop_packet_merge_invariants() {
+    let mut rng = XorShift64::new(5000);
+    let board = BoardConfig::vck5000();
+    let model = CostModel::new(board.clone());
+    for _ in 0..24 {
+        let budget = 16 + rng.gen_range(384);
+        let recs = [
+            library::mm(2048, 2048, 2048, DType::F32),
+            library::conv2d(1024, 1024, 4, 4, DType::I8),
+            library::fir(262144, 15, DType::I16),
+        ];
+        let rec = &recs[rng.gen_range(3) as usize];
+        let cons = DseConstraints {
+            max_aies: Some(budget),
+            ..Default::default()
+        };
+        let Some((cand, _)) = explore(rec, &board, &cons) else {
+            continue;
+        };
+        let g = build(&cand, &model);
+        let (m, stats) = merge_ports(&g, model.channel_bw());
+        // AIEs and edge count preserved
+        assert_eq!(m.num_aies(), g.num_aies());
+        assert_eq!(m.edges.len(), g.edges.len());
+        // ports never increase
+        assert!(stats.in_ports_after <= stats.in_ports_before);
+        assert!(stats.out_ports_after <= stats.out_ports_before);
+        // fan-in limit per port (excluding broadcasts)
+        use std::collections::HashMap;
+        let mut fanin: HashMap<usize, usize> = HashMap::new();
+        for e in &m.edges {
+            if e.kind == EdgeKind::Broadcast {
+                continue;
+            }
+            if m.nodes[e.src].is_plio() {
+                *fanin.entry(e.src).or_default() += 1;
+            }
+            if m.nodes[e.dst].is_plio() {
+                *fanin.entry(e.dst).or_default() += 1;
+            }
+        }
+        for (p, n) in fanin {
+            assert!(n <= MAX_FANIN, "port {p} fanin {n}");
+        }
+        // all endpoints valid after reindexing
+        for e in &m.edges {
+            assert!(e.src < m.nodes.len() && e.dst < m.nodes.len());
+        }
+    }
+}
+
+/// Random small PLIO instances where greedy and exhaustive must agree on
+/// feasibility (and greedy's accepted solutions must pass the checker).
+#[test]
+fn prop_algorithm1_sound_vs_exhaustive() {
+    let mut rng = XorShift64::new(6000);
+    for case in 0..60 {
+        // 2-4 AIEs on a 4-wide strip, 2-4 PLIOs, tight budgets
+        let n_aie = 2 + rng.gen_range(3) as usize;
+        let n_plio = 2 + rng.gen_range(3) as usize;
+        let mut g = MappedGraph {
+            replica: (1, 4),
+            replicas: 1,
+            ..Default::default()
+        };
+        let mut placement = Placement::default();
+        for i in 0..n_aie {
+            let col = rng.gen_range(4) as u32;
+            g.nodes.push(Node {
+                id: i,
+                kind: NodeKind::Aie {
+                    virt: Coord::new(0, col),
+                },
+                name: format!("k_r0_0_{col}"),
+            });
+            placement.coords.insert(i, Coord::new(1 + i as u32 % 4, col));
+        }
+        for p in 0..n_plio {
+            let id = n_aie + p;
+            let dir = if p % 2 == 0 { PlioDir::In } else { PlioDir::Out };
+            g.nodes.push(Node {
+                id,
+                kind: NodeKind::Plio { dir },
+                name: format!("p{p}"),
+            });
+            // connect to 1-2 random AIEs
+            for _ in 0..=rng.gen_range(2) {
+                let a = rng.gen_range(n_aie as u64) as usize;
+                let (s, d) = if dir == PlioDir::In { (id, a) } else { (a, id) };
+                g.edges.push(Edge::new(s, d, EdgeKind::Stream, "X", DepKind::Read, 1.0));
+            }
+        }
+        let spec = PlioSpec {
+            in_channels: 4,
+            out_channels: 4,
+            columns: vec![0, 1, 2, 3],
+            channels_per_column: 1,
+            ..PlioSpec::default()
+        };
+        let rc = 1 + rng.gen_range(2) as u32;
+        let greedy = assign(&g, &placement, &spec, rc, rc);
+        let exact = exhaustive_assign(&g, &placement, &spec, rc, rc);
+        if greedy.feasible {
+            assert!(
+                check(&g, &placement, &greedy.columns, &spec, rc, rc),
+                "case {case}: greedy accepted an invalid assignment"
+            );
+            assert!(
+                exact.is_some(),
+                "case {case}: greedy feasible but exhaustive says impossible"
+            );
+        }
+        // exhaustive solutions always pass the checker
+        if let Some(cols) = exact {
+            assert!(check(&g, &placement, &cols, &spec, rc, rc), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_congestion_is_column_local() {
+    // moving a PLIO to the column of its only neighbour zeroes its
+    // contribution
+    let mut rng = XorShift64::new(7000);
+    for _ in 0..CASES {
+        let aie_col = rng.gen_range(50) as u32;
+        let mut g = MappedGraph::default();
+        g.nodes.push(Node {
+            id: 0,
+            kind: NodeKind::Aie {
+                virt: Coord::new(0, aie_col),
+            },
+            name: "k_r0_0_0".into(),
+        });
+        g.nodes.push(Node {
+            id: 1,
+            kind: NodeKind::Plio { dir: PlioDir::In },
+            name: "p".into(),
+        });
+        g.edges.push(Edge::new(1, 0, EdgeKind::Stream, "X", DepKind::Read, 1.0));
+        let mut placement = Placement::default();
+        placement.coords.insert(0, Coord::new(3, aie_col));
+        let mut cols = std::collections::HashMap::new();
+        cols.insert(1usize, aie_col);
+        let prof = congestion(&g, &placement, &cols, 50);
+        assert_eq!(prof.max_west() + prof.max_east(), 0);
+        // and a distant column contributes |distance| boundaries
+        let far = (aie_col + 10) % 50;
+        cols.insert(1usize, far);
+        let prof2 = congestion(&g, &placement, &cols, 50);
+        let total: u32 = prof2.west.iter().chain(prof2.east.iter()).sum();
+        assert_eq!(total, aie_col.abs_diff(far));
+    }
+}
+
+#[test]
+fn prop_placement_is_injective_and_in_bounds() {
+    let mut rng = XorShift64::new(8000);
+    let board = BoardConfig::vck5000();
+    let model = CostModel::new(board.clone());
+    for _ in 0..24 {
+        let budget = 8 + rng.gen_range(392);
+        let cons = DseConstraints {
+            max_aies: Some(budget),
+            ..Default::default()
+        };
+        let rec = library::mm(4096, 4096, 4096, DType::I16);
+        let Some((cand, _)) = explore(&rec, &board, &cons) else {
+            continue;
+        };
+        let g = build(&cand, &model);
+        let p = place(&g, &AieArray::default()).expect("placement");
+        assert!(p.is_valid(&AieArray::default()));
+        assert_eq!(p.coords.len(), g.num_aies());
+    }
+}
