@@ -1,0 +1,31 @@
+# WideSA build entry points.
+#
+# The rust workspace is self-contained (`make build` / `make test` need no
+# python). `make artifacts` AOT-lowers the L2 variants to HLO text for the
+# optional PJRT runtime backend; it requires a JAX install (see
+# python/README.md) and is a no-op for the default stub backend.
+
+ARTIFACTS := artifacts
+
+.PHONY: build test bench doc artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+artifacts: $(ARTIFACTS)/manifest.json
+
+$(ARTIFACTS)/manifest.json: python/compile/model.py python/compile/aot.py python/compile/kernels/*.py
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS)
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS)

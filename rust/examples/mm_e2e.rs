@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 2. functional replay through the AOT kernels -------------------
     let mut rt = Runtime::new()?;
-    println!("\n[replay] PJRT platform: {}", rt.platform());
+    println!("\n[replay] runtime backend: {}", rt.platform());
     let mut rng = XorShift64::new(2024);
     let mut a = vec![0f32; n * n];
     let mut b = vec![0f32; n * n];

@@ -29,6 +29,17 @@ fn main() -> anyhow::Result<()> {
     let design = ws.compile(&rec)?;
     println!("\n{}", design.report());
 
+    // The paper's headline metric: how much of the 8×50 array the mapping
+    // actually keeps busy.
+    let used = design.estimate.aies;
+    let total = ws.config.board.array.num_cores() as u64;
+    println!(
+        "AIE utilization: {used}/{total} cores = {:.1}% (MAC occupancy {:.1}%, {:.2} TOPS on-chip)",
+        100.0 * used as f64 / total as f64,
+        100.0 * design.estimate.occupancy,
+        design.estimate.tops,
+    );
+
     // 4. Inspect the generated AIE kernel (one program serves all cores).
     println!("generated AIE kernel (first 20 lines):");
     for line in design.code.aie_kernel.lines().take(20) {

@@ -71,6 +71,23 @@ impl CompiledDesign {
 }
 
 /// The WideSA framework entry point.
+///
+/// ```
+/// use widesa::{library, DType, DseConstraints, WideSa, WideSaConfig};
+///
+/// // Map a small FIR onto a 32-core budget and inspect the decisions.
+/// let ws = WideSa::new(WideSaConfig {
+///     constraints: DseConstraints {
+///         max_aies: Some(32),
+///         ..Default::default()
+///     },
+///     ..Default::default()
+/// });
+/// let design = ws.compile(&library::fir(65536, 15, DType::F32)).unwrap();
+/// assert!(design.compile.success);
+/// assert!(design.candidate.aies_used() <= 32);
+/// assert!(design.sim.tops > 0.0);
+/// ```
 pub struct WideSa {
     pub config: WideSaConfig,
 }

@@ -2,27 +2,54 @@
 //!
 //! Reproduction of *WideSA: A High Array Utilization Mapping Scheme for
 //! Uniform Recurrences on the Versal ACAP Architecture* (Dai, Shi, Luo —
-//! CS.AR 2024) as a three-layer rust + JAX/Pallas stack:
+//! CS.AR 2024, arXiv:2401.16792) as a three-layer rust + JAX/Pallas stack:
 //!
 //! * **L3 (this crate)** — the WideSA framework: a polyhedral mapping
 //!   engine that derives systolic-array schedules for uniform recurrences
-//!   ([`mapping`]), a mapped-graph builder with packet-switch/broadcast
-//!   port reduction ([`graph`]), the routing-aware PLIO assignment of the
-//!   paper's Algorithm 1 ([`plio`]), a constraint-guided place-and-route
-//!   substrate standing in for the Vitis AIE compiler ([`place_route`]),
-//!   a cycle-approximate simulator of the VCK5000 board ([`sim`]),
-//!   heterogeneous-backend code generators ([`codegen`]), the baselines
-//!   the paper compares against ([`baselines`]), and the evaluation
-//!   harness that regenerates every table and figure ([`eval`]).
-//! * **L2/L1 (python/, build-time only)** — the recurrences' compute as
+//!   ([`mapping`], paper §III-B), a mapped-graph builder with
+//!   packet-switch/broadcast port reduction ([`graph`], §III-C-1), the
+//!   routing-aware PLIO assignment of the paper's Algorithm 1 ([`plio`],
+//!   §III-C-2), a constraint-guided place-and-route substrate standing in
+//!   for the Vitis AIE compiler ([`place_route`], §II-A-2/§III-C), a
+//!   cycle-approximate simulator of the VCK5000 board ([`sim`]),
+//!   heterogeneous-backend code generators ([`codegen`], Figure 5), the
+//!   baselines the paper compares against ([`baselines`]), and the
+//!   evaluation harness that regenerates every table and figure
+//!   ([`eval`]).
+//! * **L2/L1 (`python/`, build-time only)** — the recurrences' compute as
 //!   JAX graphs calling Pallas tile kernels, AOT-lowered to HLO text.
-//! * **Runtime bridge** — [`runtime`] loads the AOT artifacts through the
-//!   PJRT C API (`xla` crate) so mapped designs can be *functionally*
-//!   replayed tile-by-tile from rust ([`coordinator`]); python never runs
-//!   on the request path.
+//! * **Runtime bridge** — [`runtime`] functionally replays mapped designs
+//!   tile-by-tile from rust ([`coordinator`]); python never runs on the
+//!   request path. By default a deterministic in-process stub executor
+//!   ([`runtime::stub`]) runs the kernels in host code; enable the
+//!   off-by-default `pjrt` cargo feature to execute the real AOT
+//!   artifacts through the PJRT C API (`xla` crate).
 //!
-//! Quickstart: see `examples/quickstart.rs`, or
-//! `cargo run --release -- table3` to regenerate the paper's Table III.
+//! ## Quickstart
+//!
+//! One call takes a uniform recurrence through demarcation → space-time
+//! DSE → mapped graph → PLIO assignment → place & route → simulation →
+//! code generation:
+//!
+//! ```
+//! use widesa::{library, DType, DseConstraints, WideSa, WideSaConfig};
+//!
+//! let ws = WideSa::new(WideSaConfig {
+//!     constraints: DseConstraints {
+//!         max_aies: Some(64), // small budget keeps the doctest fast
+//!         ..Default::default()
+//!     },
+//!     ..Default::default()
+//! });
+//! let design = ws.compile(&library::mm(1024, 1024, 1024, DType::F32)).unwrap();
+//! assert!(design.compile.success, "place & route must succeed");
+//! assert!(design.estimate.tops > 0.0);
+//! assert!(design.estimate.aies <= 64);
+//! println!("{}", design.report());
+//! ```
+//!
+//! See `examples/quickstart.rs`, or `cargo run --release -- table3` to
+//! regenerate the paper's Table III.
 
 pub mod arch;
 pub mod baselines;
@@ -39,5 +66,6 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-pub use coordinator::framework::{WideSa, WideSaConfig};
+pub use coordinator::framework::{CompiledDesign, WideSa, WideSaConfig};
+pub use mapping::dse::DseConstraints;
 pub use recurrence::{dtype::DType, library, spec::UniformRecurrence};

@@ -31,10 +31,14 @@ COMMANDS (evaluation):
 COMMANDS (framework):
   map <bench> <dtype> [--aies N]    run the mapping pipeline, print the design report
   codegen <bench> <dtype> <outdir>  emit AIE kernel / ADF graph / PL movers / host code
-  run-mm [n m k]                    functional replay of MM through PJRT (default 512³)
+  run-mm [n m k]                    functional replay of MM (default 512³)
   selftest                          quick end-to-end smoke test
 
   <bench>: mm | conv2d | fft2d | fir    <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
+
+The functional replay runs on the in-process stub executor by default;
+build with `--features pjrt` (plus `make artifacts`) to execute the real
+AOT-lowered HLO through the PJRT runtime.
 ";
 
 fn parse_dtype(s: &str) -> Result<DType> {
@@ -102,9 +106,9 @@ fn cmd_run_mm(args: &[String]) -> Result<()> {
     let n: usize = args.first().map(|v| v.parse()).transpose()?.unwrap_or(512);
     let m: usize = args.get(1).map(|v| v.parse()).transpose()?.unwrap_or(n);
     let k: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(n);
-    println!("functional MM replay: {n}×{m}×{k} f32 through PJRT");
+    println!("functional MM replay: {n}×{m}×{k} f32");
     let mut rt = Runtime::new()?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("runtime backend: {}", rt.platform());
     let mut rng = XorShift64::new(1234);
     let mut a = vec![0f32; n * k];
     let mut b = vec![0f32; k * m];
@@ -132,10 +136,10 @@ fn cmd_selftest() -> Result<()> {
         bail!("place & route failed");
     }
     println!("    ok: {}", d.sim.summary());
-    println!("2/3 PJRT runtime ...");
+    println!("2/3 runtime backend ...");
     let mut rt = Runtime::new()?;
     rt.executable("mm_f32_128")?;
-    println!("    ok: platform {}", rt.platform());
+    println!("    ok: backend {}", rt.platform());
     println!("3/3 functional replay ...");
     cmd_run_mm(&["256".into()])?;
     println!("selftest OK");

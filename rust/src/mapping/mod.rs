@@ -8,6 +8,17 @@
 //! [`cost`] scores each [`candidate::MappingCandidate`] with the analytic
 //! performance model; [`dse`] runs the whole enumeration and picks the
 //! best legal mapping under the board's resource budgets.
+//!
+//! Paper map:
+//!
+//! | module        | paper                                             |
+//! |---------------|---------------------------------------------------|
+//! | [`spacetime`] | §III-B-1 space-time transformation                |
+//! | [`partition`] | §III-B-2 array partition                          |
+//! | [`latency`]   | §III-B-3 latency hiding                           |
+//! | [`threading`] | §III-B-4 multiple threading                       |
+//! | [`cost`]      | analytic model behind Table III / Figure 6        |
+//! | [`dse`]       | the "optimal schedule" search of §II-B / §III-B   |
 
 pub mod candidate;
 pub mod cost;

@@ -8,6 +8,14 @@
 //! unconstrained baseline (simulated annealing standing in for the raw
 //! ILP flow); [`compiler`] wraps both into the compile-success/compile-
 //! time experiment (E5).
+//!
+//! Paper map: [`placement::place`] ↔ §III-C-2's "regular duplicate
+//! pattern of a single kernel" (deterministic systolic placement);
+//! [`router::route_all`] ↔ XY mesh routing under the per-boundary
+//! `RC_west`/`RC_east` channel budgets; [`constraints::ConstraintSet`] ↔
+//! the location-constraint file WideSA hands `aiecompiler`;
+//! [`anneal::anneal`] ↔ the unconstrained solver whose degradation at
+//! scale motivates §II-A-2.
 
 pub mod anneal;
 pub mod compiler;

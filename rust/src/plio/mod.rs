@@ -7,6 +7,13 @@
 //! congestion sums, [`assignment`] implements the greedy median heuristic
 //! of Algorithm 1, and [`sat`] checks feasibility (and provides an
 //! exhaustive fallback for small instances, used to validate the greedy).
+//!
+//! Paper map: [`assignment::assign`] ↔ Algorithm 1 (find-median /
+//! find-nearest / remove loop, most-constrained port first);
+//! [`congestion::congestion`] ↔ the `W_i[p][x]` summation of §III-C-2;
+//! [`sat::check`] ↔ the satisfiability formulation the paper reduces
+//! assignment to, with [`sat::exhaustive_assign`] as the ground-truth
+//! solver the property tests compare the greedy against.
 
 pub mod assignment;
 pub mod congestion;

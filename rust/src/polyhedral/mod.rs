@@ -10,6 +10,13 @@
 //! computed exactly, so legality ([`legality`]) is a lexicographic check
 //! on the transformed vectors — the same criterion AutoSA/PolySA apply
 //! through ISL.
+//!
+//! This layer underpins the paper's §III-B space-time transformation:
+//! [`transform::Transform`] supplies the permute/tile/skew band
+//! transforms the mapper composes, and
+//! [`legality::is_legal_spacetime`] enforces the systolic realisability
+//! conditions (neighbour-only space hops, strictly advancing time) of
+//! §III-B-1.
 
 pub mod affine;
 pub mod dependence;

@@ -1,4 +1,14 @@
 //! The paper's benchmark recurrences (Table II) as [`UniformRecurrence`]s.
+//!
+//! ```
+//! use widesa::{library, DType};
+//!
+//! let rec = library::mm(8, 8, 8, DType::F32);
+//! assert_eq!(rec.rank(), 3);
+//! assert_eq!(rec.total_macs(), 512);
+//! // MACs count 2 ops (mul + add) in the paper's TOPS convention.
+//! assert_eq!(rec.total_ops(), 1024.0);
+//! ```
 
 use crate::polyhedral::affine::AffineMap;
 use crate::polyhedral::domain::{IterationDomain, LoopDim};

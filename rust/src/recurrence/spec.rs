@@ -41,6 +41,22 @@ impl Access {
 
 /// A uniform recurrence: `for dims { S: accesses }` with `macs_per_iter`
 /// MAC operations per innermost iteration point.
+///
+/// Dependence extraction is exact for this program class — every
+/// dependence is a constant vector:
+///
+/// ```
+/// use widesa::{library, DType};
+/// use widesa::polyhedral::dependence::DepKind;
+///
+/// let rec = library::mm(64, 64, 64, DType::F32);
+/// let deps = rec.dependences();
+/// // A[i,k] is reused along j; the C accumulation is carried along k.
+/// assert!(deps.iter().any(|d| d.array == "A"
+///     && d.kind == DepKind::Read && d.vector == vec![0, 1, 0]));
+/// assert!(deps.iter().any(|d| d.array == "C"
+///     && d.kind == DepKind::Flow && d.vector == vec![0, 0, 1]));
+/// ```
 #[derive(Debug, Clone)]
 pub struct UniformRecurrence {
     pub name: String,

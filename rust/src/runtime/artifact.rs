@@ -88,6 +88,94 @@ impl Manifest {
         Ok(Self { artifacts, dir })
     }
 
+    /// Load `<dir>/manifest.json` when it exists, else fall back to the
+    /// [`Manifest::builtin`] signature set. This is what the default
+    /// (stub-executor) runtime uses: it needs only tensor signatures, not
+    /// HLO files, so a checkout that never ran `make artifacts` still gets
+    /// a working functional-replay path.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Self> {
+        if dir.as_ref().join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::builtin())
+        }
+    }
+
+    /// The built-in artifact signature set: an exact mirror of the
+    /// `VARIANTS` registry in `python/compile/model.py` (names, shapes and
+    /// dtypes), with placeholder HLO paths. The stub executor implements
+    /// every entry in host code; the PJRT backend never sees this manifest
+    /// (it requires the real `make artifacts` output).
+    pub fn builtin() -> Self {
+        let dir = PathBuf::from("<builtin>");
+        let ts = |shape: &[usize], dtype: &str| TensorSpec {
+            shape: shape.to_vec(),
+            dtype: dtype.to_string(),
+        };
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    hlo_path: dir.join(format!("{name}.hlo.txt")),
+                    inputs,
+                    outputs,
+                },
+            );
+        };
+        // MM graph tiles (accumulate form): C' = C + A·B.
+        for (name, n, dt) in [
+            ("mm_f32_256", 256usize, "float32"),
+            ("mm_f32_128", 128, "float32"),
+            ("mm_i32_128", 128, "int32"),
+        ] {
+            add(
+                name,
+                vec![ts(&[n, n], dt), ts(&[n, n], dt), ts(&[n, n], dt)],
+                vec![ts(&[n, n], dt)],
+            );
+        }
+        // Conv2D graph tiles: halo-extended input, P×Q kernel, acc tile.
+        for (name, h, p, dt) in [
+            ("conv2d_f32_128x4", 128usize, 4usize, "float32"),
+            ("conv2d_i32_64x4", 64, 4, "int32"),
+        ] {
+            add(
+                name,
+                vec![
+                    ts(&[h + p - 1, h + p - 1], dt),
+                    ts(&[p, p], dt),
+                    ts(&[h, h], dt),
+                ],
+                vec![ts(&[h, h], dt)],
+            );
+        }
+        // FIR graph tiles.
+        add(
+            "fir_f32_4096x15",
+            vec![ts(&[4096 + 14], "float32"), ts(&[15], "float32")],
+            vec![ts(&[4096], "float32")],
+        );
+        add(
+            "fir_cf32_2048x15",
+            vec![
+                ts(&[2048 + 14], "float32"),
+                ts(&[2048 + 14], "float32"),
+                ts(&[15], "float32"),
+                ts(&[15], "float32"),
+            ],
+            vec![ts(&[2048], "float32"), ts(&[2048], "float32")],
+        );
+        // FFT graph tile: 64 bit-reversed-order rows of length-256 FFTs.
+        add(
+            "fft1d_f32_64x256",
+            vec![ts(&[64, 256], "float32"), ts(&[64, 256], "float32")],
+            vec![ts(&[64, 256], "float32"), ts(&[64, 256], "float32")],
+        );
+        Self { artifacts, dir }
+    }
+
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
@@ -129,5 +217,33 @@ mod tests {
     fn missing_dir_fails_gracefully() {
         let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn builtin_mirrors_python_variant_registry() {
+        let m = Manifest::builtin();
+        assert_eq!(m.artifacts.len(), 8);
+        for name in [
+            "mm_f32_256",
+            "mm_f32_128",
+            "mm_i32_128",
+            "conv2d_f32_128x4",
+            "conv2d_i32_64x4",
+            "fir_f32_4096x15",
+            "fir_cf32_2048x15",
+            "fft1d_f32_64x256",
+        ] {
+            assert!(m.artifacts.contains_key(name), "{name} missing");
+        }
+        let mm = m.get("mm_f32_128").unwrap();
+        assert_eq!(mm.inputs.len(), 3);
+        assert_eq!(mm.outputs[0].shape, vec![128, 128]);
+        assert_eq!(mm.inputs[0].elements(), 128 * 128);
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back_without_artifacts() {
+        let m = Manifest::load_or_builtin("/nonexistent-dir-xyz").unwrap();
+        assert!(m.artifacts.contains_key("fft1d_f32_64x256"));
     }
 }

@@ -1,21 +1,94 @@
-//! PJRT client wrapper with a compiled-executable cache.
+//! Runtime client with a compiled-executable cache — two backends behind
+//! one API.
 //!
-//! One [`Runtime`] per process: compiling an HLO module is expensive
-//! (hundreds of ms), so executables are compiled on first use and cached
-//! by artifact name — the L3 hot path only pays buffer transfer +
-//! execution.
+//! * **Default (no feature):** the deterministic in-process stub executor
+//!   ([`super::stub`]). Artifacts resolve against the on-disk manifest
+//!   when `make artifacts` has been run, else against the built-in
+//!   signature set ([`Manifest::builtin`]) — so [`Runtime::new`] always
+//!   succeeds and the functional-replay path needs no JAX/XLA toolchain.
+//! * **`pjrt` feature:** the real bridge — parse the AOT-lowered HLO
+//!   text, compile through the PJRT CPU client (`xla` crate) and cache
+//!   the loaded executable per artifact name. Compiling an HLO module is
+//!   expensive (hundreds of ms), so one [`Runtime`] per process and the
+//!   L3 hot path only pays buffer transfer + execution.
 
 use super::artifact::{ArtifactSpec, Manifest};
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(not(feature = "pjrt"))]
+use super::stub::StubExecutable;
+
 pub struct Runtime {
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    #[cfg(not(feature = "pjrt"))]
+    cache: HashMap<String, StubExecutable>,
 }
 
+impl Runtime {
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create over the default artifact directory; without on-disk
+    /// artifacts the built-in signature set backs the stub executor.
+    pub fn new() -> Result<Self> {
+        Ok(Self {
+            manifest: Manifest::load_or_builtin(Manifest::default_dir())?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Create over an explicit artifact directory (must exist).
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            manifest: Manifest::load(dir)?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Create backed by the builtin signature set, ignoring any on-disk
+    /// artifacts — fully deterministic, for tests and offline use.
+    pub fn with_builtin() -> Self {
+        Self {
+            manifest: Manifest::builtin(),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Backend identification (the PJRT backend reports the platform the
+    /// PJRT client runs on; the stub is an in-process CPU interpreter).
+    pub fn platform(&self) -> String {
+        "widesa-stub cpu (in-process)".to_string()
+    }
+
+    /// Resolve (or fetch from cache) an artifact's stub kernel.
+    pub fn executable(&mut self, name: &str) -> Result<&StubExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let exe = StubExecutable::compile(&spec)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create over the default artifact directory.
     pub fn new() -> Result<Self> {
@@ -36,10 +109,6 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.manifest.get(name)
-    }
-
     /// Compile (or fetch from cache) an artifact's executable.
     pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(name) {
@@ -58,11 +127,6 @@ impl Runtime {
             self.cache.insert(name.to_string(), exe);
         }
         Ok(&self.cache[name])
-    }
-
-    /// Number of compiled executables resident.
-    pub fn cached(&self) -> usize {
-        self.cache.len()
     }
 }
 
@@ -96,6 +160,19 @@ mod tests {
             return;
         }
         let mut rt = Runtime::new().unwrap();
+        assert!(rt.executable("no_such_artifact").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_works_without_artifacts() {
+        // No on-disk manifest needed: the builtin signature set backs it.
+        let mut rt = Runtime::with_builtin();
+        assert_eq!(rt.cached(), 0);
+        rt.executable("mm_f32_128").unwrap();
+        rt.executable("mm_f32_128").unwrap();
+        assert_eq!(rt.cached(), 1);
+        assert!(rt.platform().contains("stub"));
         assert!(rt.executable("no_such_artifact").is_err());
     }
 }

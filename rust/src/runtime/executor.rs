@@ -1,11 +1,18 @@
 //! Typed execution over artifacts: host tensors in, host tensors out.
 //!
-//! The L2 lowering uses `return_tuple=True`, so every execution returns
-//! one tuple literal which is decomposed into per-output tensors here.
+//! Both backends share the host [`Tensor`] type and the signature
+//! validation; they differ only in what happens between validated inputs
+//! and outputs. The PJRT backend marshals tensors into XLA literals and
+//! decomposes the tuple-rooted result (the L2 lowering uses
+//! `return_tuple=True`); the default stub backend dispatches straight to
+//! the in-process kernel ([`super::stub`]).
 
-use super::artifact::TensorSpec;
+use super::artifact::{ArtifactSpec, TensorSpec};
 use super::client::Runtime;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 /// Host tensor payload (f32 and i32 cover the functional-replay dtypes;
 /// int8/int16/complex designs are timing-simulated and functionally
@@ -76,6 +83,18 @@ impl Tensor {
         })
     }
 
+    /// Validate against a spec (shape + dtype).
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape == spec.shape
+            && matches!(
+                (&self.data, spec.dtype.as_str()),
+                (TensorData::F32(_), "float32") | (TensorData::I32(_), "int32")
+            )
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Tensor {
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -96,39 +115,58 @@ impl Tensor {
             data,
         })
     }
+}
 
-    /// Validate against a spec (shape + dtype).
-    pub fn matches(&self, spec: &TensorSpec) -> bool {
-        self.shape == spec.shape
-            && matches!(
-                (&self.data, spec.dtype.as_str()),
-                (TensorData::F32(_), "float32") | (TensorData::I32(_), "int32")
-            )
+/// Check an input list against an artifact signature (both backends).
+fn validate_inputs(name: &str, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if !t.matches(s) {
+            bail!(
+                "{name}: input {i} mismatch: got shape {:?}, want {:?} {}",
+                t.shape,
+                s.shape,
+                s.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Execute an artifact with typed host tensors through the in-process
+    /// stub kernel; validates the signature against the manifest on both
+    /// sides.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?.clone();
+        validate_inputs(name, &spec, inputs)?;
+        let exe = self.executable(name)?;
+        let outputs = exe.execute(inputs)?;
+        if outputs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                outputs.len()
+            );
+        }
+        Ok(outputs)
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
-    /// Execute an artifact with typed host tensors; validates the
-    /// signature against the manifest on both sides.
+    /// Execute an artifact with typed host tensors on the PJRT client;
+    /// validates the signature against the manifest on both sides.
     pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let spec = self.spec(name)?.clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if !t.matches(s) {
-                bail!(
-                    "{name}: input {i} mismatch: got shape {:?}, want {:?} {}",
-                    t.shape,
-                    s.shape,
-                    s.dtype
-                );
-            }
-        }
+        validate_inputs(name, &spec, inputs)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(Tensor::to_literal)
@@ -159,25 +197,12 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::verify::{max_abs_diff, mm_ref};
     use crate::runtime::artifact::Manifest;
     use crate::util::rng::XorShift64;
 
     fn have_artifacts() -> bool {
         Manifest::default_dir().join("manifest.json").exists()
-    }
-
-    /// Host-side oracle: C' = C + A·B over row-major f32.
-    fn mm_ref(a: &[f32], b: &[f32], c: &[f32], n: usize, m: usize, k: usize) -> Vec<f32> {
-        let mut out = c.to_vec();
-        for i in 0..n {
-            for kk in 0..k {
-                let av = a[i * k + kk];
-                for j in 0..m {
-                    out[i * m + j] += av * b[kk * m + j];
-                }
-            }
-        }
-        out
     }
 
     #[test]
@@ -207,10 +232,46 @@ mod tests {
             .unwrap();
         assert_eq!(out.len(), 1);
         let want = mm_ref(&a, &b, &c, n, n, n);
-        let got = out[0].data.as_f32().unwrap();
-        for (g, w) in got.iter().zip(&want) {
-            assert!((g - w).abs() < 1e-2, "{g} vs {w}");
-        }
+        assert!(max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-2);
+    }
+
+    /// The default stub backend must serve `run` with NO artifacts on
+    /// disk: builtin manifest, validation, dispatch, output count.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_run_path_works_without_artifacts() {
+        let mut rt = Runtime::with_builtin();
+        let n = 128;
+        let mut rng = XorShift64::new(77);
+        let mut a = vec![0f32; n * n];
+        let mut b = vec![0f32; n * n];
+        let mut c = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        rng.fill_f32(&mut c);
+        let out = rt
+            .run(
+                "mm_f32_128",
+                &[
+                    Tensor::f32(vec![n, n], a.clone()),
+                    Tensor::f32(vec![n, n], b.clone()),
+                    Tensor::f32(vec![n, n], c.clone()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let want = mm_ref(&a, &b, &c, n, n, n);
+        assert!(max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-2);
+
+        // signature validation fires before dispatch
+        let bad = Tensor::f32(vec![2, 2], vec![0.0; 4]);
+        let err = rt
+            .run("mm_f32_128", &[bad.clone(), bad.clone(), bad])
+            .unwrap_err();
+        assert!(err.to_string().contains("mismatch"));
+        // wrong arity rejected too
+        let ok = Tensor::f32(vec![n, n], vec![0.0; n * n]);
+        assert!(rt.run("mm_f32_128", &[ok]).is_err());
     }
 
     #[test]

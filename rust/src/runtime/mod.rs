@@ -1,14 +1,26 @@
-//! Runtime bridge: load AOT-compiled HLO artifacts and execute them on
-//! the PJRT CPU client from the rust hot path (python never runs here).
+//! Runtime bridge: execute the AOT-compiled graph-tile kernels from the
+//! rust hot path (python never runs here).
 //!
-//! [`artifact`] reads `artifacts/manifest.json` (produced once by
-//! `python -m compile.aot`); [`client`] owns the PJRT client and an
-//! executable cache; [`executor`] marshals typed host buffers in and out
-//! of tuple-rooted executions.
+//! Two interchangeable backends sit behind one [`client::Runtime`] API:
+//!
+//! * **stub (default)** — [`stub`] is a deterministic in-process
+//!   executor implementing every kernel of the L2 variant registry in
+//!   host code. No JAX/XLA toolchain required; without on-disk artifacts
+//!   the built-in signature set ([`artifact::Manifest::builtin`]) backs
+//!   it, so `Runtime::new()` always succeeds.
+//! * **PJRT (`pjrt` cargo feature)** — loads the HLO text artifacts
+//!   produced by `python -m compile.aot` (`make artifacts`) and executes
+//!   them on the PJRT CPU client via the `xla` crate.
+//!
+//! [`artifact`] reads `artifacts/manifest.json` (or synthesises the
+//! builtin set); [`client`] owns the backend and an executable cache;
+//! [`executor`] validates typed host buffers against the manifest
+//! signature and marshals them in and out of executions.
 
 pub mod artifact;
 pub mod client;
 pub mod executor;
+pub mod stub;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
 pub use client::Runtime;

@@ -1,0 +1,417 @@
+//! Deterministic in-process stub executor — the default runtime backend.
+//!
+//! The real runtime bridge replays AOT-lowered HLO artifacts through the
+//! PJRT C API (enable the `pjrt` cargo feature). This module is what runs
+//! when that toolchain is absent: a host-side reimplementation of every
+//! kernel in the L2 variant registry (`python/compile/model.py`
+//! `VARIANTS`), dispatched by artifact name. Each kernel computes exactly
+//! what its Pallas counterpart computes — the same math as the oracles in
+//! [`crate::coordinator::verify`] — so the functional-replay path
+//! ([`crate::coordinator::exec`]), the CLI `run-mm`/`selftest` commands
+//! and the e2e examples work bit-for-bit deterministically on any machine
+//! with no JAX/XLA installation.
+//!
+//! Kernels are shape-generic: sizes are read from the input tensors, so a
+//! stub "executable" serves any artifact whose name carries the right
+//! family prefix (`mm_f32_*`, `fir_cf32_*`, ...).
+
+use super::artifact::ArtifactSpec;
+use super::executor::{Tensor, TensorData};
+use anyhow::{bail, Result};
+
+/// Kernel families the stub implements (mirror of the python `VARIANTS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    /// `C' = C + A·B` over f32 (accumulate form for host k-chaining).
+    MmF32,
+    /// Integer MM (wrapping arithmetic, as numpy int32 wraps).
+    MmI32,
+    /// `acc' = acc + conv2d_valid(x, k)` over f32 (halo-extended input).
+    Conv2dF32,
+    /// Integer conv (wrapping).
+    Conv2dI32,
+    /// `y[i] = Σ_t h[t]·x[i+t]` over f32.
+    FirF32,
+    /// Complex FIR on separate re/im planes.
+    FirCf32,
+    /// Radix-2 DIT butterfly stages over bit-reversed-order rows.
+    Fft1dF32,
+}
+
+/// A "compiled" stub kernel: the artifact's signature plus its dispatch.
+#[derive(Debug, Clone)]
+pub struct StubExecutable {
+    spec: ArtifactSpec,
+    kind: Kind,
+}
+
+fn f32_of<'a>(t: &'a Tensor, name: &str, what: &str) -> Result<&'a [f32]> {
+    match &t.data {
+        TensorData::F32(v) => Ok(v),
+        _ => bail!("{name}: {what} must be f32"),
+    }
+}
+
+fn i32_of<'a>(t: &'a Tensor, name: &str, what: &str) -> Result<&'a [i32]> {
+    match &t.data {
+        TensorData::I32(v) => Ok(v),
+        _ => bail!("{name}: {what} must be i32"),
+    }
+}
+
+impl StubExecutable {
+    /// "Compile" an artifact: resolve its name to a builtin kernel.
+    pub fn compile(spec: &ArtifactSpec) -> Result<Self> {
+        let kind = if spec.name.starts_with("mm_f32") {
+            Kind::MmF32
+        } else if spec.name.starts_with("mm_i32") {
+            Kind::MmI32
+        } else if spec.name.starts_with("conv2d_f32") {
+            Kind::Conv2dF32
+        } else if spec.name.starts_with("conv2d_i32") {
+            Kind::Conv2dI32
+        } else if spec.name.starts_with("fir_f32") {
+            Kind::FirF32
+        } else if spec.name.starts_with("fir_cf32") {
+            Kind::FirCf32
+        } else if spec.name.starts_with("fft1d_f32") {
+            Kind::Fft1dF32
+        } else {
+            bail!(
+                "stub executor has no builtin kernel for artifact {:?}; \
+                 build with `--features pjrt` to execute arbitrary HLO",
+                spec.name
+            )
+        };
+        Ok(Self {
+            spec: spec.clone(),
+            kind,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Execute on host tensors. Inputs are assumed already validated
+    /// against the artifact signature (the runtime's `run` does that).
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let name = &self.spec.name;
+        match self.kind {
+            Kind::MmF32 => {
+                let (n, k) = (inputs[0].shape[0], inputs[0].shape[1]);
+                let m = inputs[1].shape[1];
+                let a = f32_of(&inputs[0], name, "A")?;
+                let b = f32_of(&inputs[1], name, "B")?;
+                let c = f32_of(&inputs[2], name, "C")?;
+                let mut out = c.to_vec();
+                // No zero-skip here: 0·Inf must stay NaN so the stub
+                // agrees with the XLA artifact on non-finite inputs.
+                for i in 0..n {
+                    for kk in 0..k {
+                        let av = a[i * k + kk];
+                        for j in 0..m {
+                            out[i * m + j] += av * b[kk * m + j];
+                        }
+                    }
+                }
+                Ok(vec![Tensor::f32(vec![n, m], out)])
+            }
+            Kind::MmI32 => {
+                let (n, k) = (inputs[0].shape[0], inputs[0].shape[1]);
+                let m = inputs[1].shape[1];
+                let a = i32_of(&inputs[0], name, "A")?;
+                let b = i32_of(&inputs[1], name, "B")?;
+                let c = i32_of(&inputs[2], name, "C")?;
+                let mut out = c.to_vec();
+                for i in 0..n {
+                    for kk in 0..k {
+                        let av = a[i * k + kk];
+                        if av == 0 {
+                            continue;
+                        }
+                        for j in 0..m {
+                            out[i * m + j] =
+                                out[i * m + j].wrapping_add(av.wrapping_mul(b[kk * m + j]));
+                        }
+                    }
+                }
+                Ok(vec![Tensor::i32(vec![n, m], out)])
+            }
+            Kind::Conv2dF32 => {
+                let (p, q) = (inputs[1].shape[0], inputs[1].shape[1]);
+                let (h, w) = (inputs[2].shape[0], inputs[2].shape[1]);
+                let xw = w + q - 1;
+                let x = f32_of(&inputs[0], name, "X")?;
+                let k = f32_of(&inputs[1], name, "K")?;
+                let acc = f32_of(&inputs[2], name, "acc")?;
+                let mut out = acc.to_vec();
+                for i in 0..h {
+                    for j in 0..w {
+                        let mut s = 0f32;
+                        for a in 0..p {
+                            for b in 0..q {
+                                s += x[(i + a) * xw + (j + b)] * k[a * q + b];
+                            }
+                        }
+                        out[i * w + j] += s;
+                    }
+                }
+                Ok(vec![Tensor::f32(vec![h, w], out)])
+            }
+            Kind::Conv2dI32 => {
+                let (p, q) = (inputs[1].shape[0], inputs[1].shape[1]);
+                let (h, w) = (inputs[2].shape[0], inputs[2].shape[1]);
+                let xw = w + q - 1;
+                let x = i32_of(&inputs[0], name, "X")?;
+                let k = i32_of(&inputs[1], name, "K")?;
+                let acc = i32_of(&inputs[2], name, "acc")?;
+                let mut out = acc.to_vec();
+                for i in 0..h {
+                    for j in 0..w {
+                        let mut s = 0i32;
+                        for a in 0..p {
+                            for b in 0..q {
+                                s = s.wrapping_add(
+                                    x[(i + a) * xw + (j + b)].wrapping_mul(k[a * q + b]),
+                                );
+                            }
+                        }
+                        out[i * w + j] = out[i * w + j].wrapping_add(s);
+                    }
+                }
+                Ok(vec![Tensor::i32(vec![h, w], out)])
+            }
+            Kind::FirF32 => {
+                let taps = inputs[1].shape[0];
+                let n = inputs[0].shape[0] + 1 - taps;
+                let x = f32_of(&inputs[0], name, "x")?;
+                let h = f32_of(&inputs[1], name, "h")?;
+                let y = fir_real(x, h, n);
+                Ok(vec![Tensor::f32(vec![n], y)])
+            }
+            Kind::FirCf32 => {
+                let taps = inputs[2].shape[0];
+                let n = inputs[0].shape[0] + 1 - taps;
+                let xr = f32_of(&inputs[0], name, "x_re")?;
+                let xi = f32_of(&inputs[1], name, "x_im")?;
+                let hr = f32_of(&inputs[2], name, "h_re")?;
+                let hi = f32_of(&inputs[3], name, "h_im")?;
+                // (xr + i·xi) ⊛ (hr + i·hi) = (rr − ii) + i·(ri + ir)
+                let rr = fir_real(xr, hr, n);
+                let ii = fir_real(xi, hi, n);
+                let ri = fir_real(xr, hi, n);
+                let ir = fir_real(xi, hr, n);
+                let yre: Vec<f32> = rr.iter().zip(&ii).map(|(a, b)| a - b).collect();
+                let yim: Vec<f32> = ri.iter().zip(&ir).map(|(a, b)| a + b).collect();
+                Ok(vec![Tensor::f32(vec![n], yre), Tensor::f32(vec![n], yim)])
+            }
+            Kind::Fft1dF32 => {
+                let (rows, n) = (inputs[0].shape[0], inputs[0].shape[1]);
+                if !n.is_power_of_two() {
+                    bail!("{name}: FFT length {n} is not a power of two");
+                }
+                let re_in = f32_of(&inputs[0], name, "re")?;
+                let im_in = f32_of(&inputs[1], name, "im")?;
+                let mut re = re_in.to_vec();
+                let mut im = im_in.to_vec();
+                for r in 0..rows {
+                    fft_stages_row(&mut re[r * n..(r + 1) * n], &mut im[r * n..(r + 1) * n]);
+                }
+                Ok(vec![
+                    Tensor::f32(vec![rows, n], re),
+                    Tensor::f32(vec![rows, n], im),
+                ])
+            }
+        }
+    }
+}
+
+/// y[i] = Σ_t h[t] · x[i + t] (the artifact's correlation convention).
+fn fir_real(x: &[f32], h: &[f32], n: usize) -> Vec<f32> {
+    let taps = h.len();
+    (0..n)
+        .map(|i| (0..taps).map(|t| h[t] * x[i + t]).sum())
+        .collect()
+}
+
+/// All radix-2 DIT butterfly stages over one row that is already in
+/// bit-reversed order (the artifact contract: the host permutes, the
+/// kernel runs the stages — see `python/compile/kernels/fft.py`).
+fn fft_stages_row(re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    let mut m = 1;
+    while m < n {
+        let theta = -std::f64::consts::PI / m as f64;
+        for g in (0..n).step_by(2 * m) {
+            for j in 0..m {
+                let ang = theta * j as f64;
+                let (twr, twi) = (ang.cos() as f32, ang.sin() as f32);
+                let (br, bi) = (re[g + m + j], im[g + m + j]);
+                let (tr, ti) = (br * twr - bi * twi, br * twi + bi * twr);
+                let (ar, ai) = (re[g + j], im[g + j]);
+                re[g + j] = ar + tr;
+                im[g + j] = ai + ti;
+                re[g + m + j] = ar - tr;
+                im[g + m + j] = ai - ti;
+            }
+        }
+        m *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::verify;
+    use crate::runtime::artifact::Manifest;
+    use crate::util::rng::XorShift64;
+
+    fn exe(name: &str) -> StubExecutable {
+        let m = Manifest::builtin();
+        StubExecutable::compile(m.get(name).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn mm_matches_oracle() {
+        let n = 128;
+        let mut rng = XorShift64::new(11);
+        let mut a = vec![0f32; n * n];
+        let mut b = vec![0f32; n * n];
+        let mut c = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        rng.fill_f32(&mut c);
+        let out = exe("mm_f32_128")
+            .execute(&[
+                Tensor::f32(vec![n, n], a.clone()),
+                Tensor::f32(vec![n, n], b.clone()),
+                Tensor::f32(vec![n, n], c.clone()),
+            ])
+            .unwrap();
+        let want = verify::mm_ref(&a, &b, &c, n, n, n);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-3);
+    }
+
+    #[test]
+    fn mm_i32_all_ones() {
+        let n = 128;
+        let a = Tensor::i32(vec![n, n], vec![1; n * n]);
+        let b = Tensor::i32(vec![n, n], vec![2; n * n]);
+        let c = Tensor::i32(vec![n, n], vec![3; n * n]);
+        let out = exe("mm_i32_128").execute(&[a, b, c]).unwrap();
+        // 3 + 1·2·128 = 259 everywhere
+        assert!(out[0].data.as_i32().unwrap().iter().all(|&v| v == 259));
+    }
+
+    #[test]
+    fn conv_matches_oracle() {
+        let (h, w, p) = (128usize, 128usize, 4usize);
+        let mut rng = XorShift64::new(13);
+        let mut x = vec![0f32; (h + p - 1) * (w + p - 1)];
+        let mut k = vec![0f32; p * p];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut k);
+        let out = exe("conv2d_f32_128x4")
+            .execute(&[
+                Tensor::f32(vec![h + p - 1, w + p - 1], x.clone()),
+                Tensor::f32(vec![p, p], k.clone()),
+                Tensor::f32(vec![h, w], vec![0.0; h * w]),
+            ])
+            .unwrap();
+        let want = verify::conv2d_ref(&x, &k, h, w, p, p);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-3);
+    }
+
+    #[test]
+    fn fir_matches_oracle() {
+        let (n, taps) = (4096usize, 15usize);
+        let mut rng = XorShift64::new(17);
+        let mut x = vec![0f32; n + taps - 1];
+        let mut h = vec![0f32; taps];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut h);
+        let out = exe("fir_f32_4096x15")
+            .execute(&[
+                Tensor::f32(vec![n + taps - 1], x.clone()),
+                Tensor::f32(vec![taps], h.clone()),
+            ])
+            .unwrap();
+        let want = verify::fir_ref(&x, &h, n);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-4);
+    }
+
+    #[test]
+    fn fft_on_bit_reversed_rows_matches_host_fft() {
+        let (b, n) = (64usize, 256usize);
+        let mut rng = XorShift64::new(19);
+        let mut re = vec![0f32; b * n];
+        let mut im = vec![0f32; b * n];
+        rng.fill_f32(&mut re);
+        rng.fill_f32(&mut im);
+        // the stub expects bit-reversed-order rows; permute on the host
+        let bits = n.trailing_zeros();
+        let rev: Vec<usize> = (0..n)
+            .map(|i| ((i as u32).reverse_bits() >> (32 - bits)) as usize)
+            .collect();
+        let permute = |v: &[f32]| -> Vec<f32> {
+            let mut out = vec![0f32; b * n];
+            for row in 0..b {
+                for (i, &s) in rev.iter().enumerate() {
+                    out[row * n + i] = v[row * n + s];
+                }
+            }
+            out
+        };
+        let out = exe("fft1d_f32_64x256")
+            .execute(&[
+                Tensor::f32(vec![b, n], permute(&re)),
+                Tensor::f32(vec![b, n], permute(&im)),
+            ])
+            .unwrap();
+        for row in 0..b {
+            let mut hr = re[row * n..(row + 1) * n].to_vec();
+            let mut hi = im[row * n..(row + 1) * n].to_vec();
+            verify::fft_ref(&mut hr, &mut hi);
+            let gr = &out[0].data.as_f32().unwrap()[row * n..(row + 1) * n];
+            let gi = &out[1].data.as_f32().unwrap()[row * n..(row + 1) * n];
+            assert!(verify::max_abs_diff(gr, &hr) < 1e-2, "row {row}");
+            assert!(verify::max_abs_diff(gi, &hi) < 1e-2, "row {row}");
+        }
+    }
+
+    #[test]
+    fn complex_fir_agrees_with_real_decomposition() {
+        let (n, taps) = (2048usize, 15usize);
+        let mut rng = XorShift64::new(23);
+        let mut xr = vec![0f32; n + taps - 1];
+        let mut xi = vec![0f32; n + taps - 1];
+        let mut hr = vec![0f32; taps];
+        let mut hi = vec![0f32; taps];
+        rng.fill_f32(&mut xr);
+        rng.fill_f32(&mut xi);
+        rng.fill_f32(&mut hr);
+        rng.fill_f32(&mut hi);
+        let out = exe("fir_cf32_2048x15")
+            .execute(&[
+                Tensor::f32(vec![n + taps - 1], xr.clone()),
+                Tensor::f32(vec![n + taps - 1], xi.clone()),
+                Tensor::f32(vec![taps], hr.clone()),
+                Tensor::f32(vec![taps], hi.clone()),
+            ])
+            .unwrap();
+        let rr = verify::fir_ref(&xr, &hr, n);
+        let ii = verify::fir_ref(&xi, &hi, n);
+        let yre: Vec<f32> = rr.iter().zip(&ii).map(|(a, b)| a - b).collect();
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &yre) < 1e-4);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let m = Manifest::builtin();
+        let mut spec = m.get("mm_f32_128").unwrap().clone();
+        spec.name = "weird_kernel".into();
+        assert!(StubExecutable::compile(&spec).is_err());
+    }
+}

@@ -8,6 +8,13 @@
 //! (tests assert ≤15 % divergence) is the evidence the closed forms used
 //! by the evaluation harness are right; divergence appears exactly when
 //! pipelining effects matter (short runs, cold starts).
+//!
+//! The simulated quantities mirror the paper's measurement setup: on-chip
+//! throughput with PL-staged inputs is what Table III reports, and the
+//! cold-DRAM mode adds the Table I PL-DRAM bound for honest end-to-end
+//! numbers. [`engine::simulate`] walks the double-buffered round
+//! timeline; [`metrics::SimReport`] carries TOPS / stall fraction /
+//! binding resource.
 
 pub mod engine;
 pub mod memory;

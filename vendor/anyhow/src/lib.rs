@@ -1,0 +1,257 @@
+//! Vendored, API-compatible subset of the [`anyhow`] error-handling crate.
+//!
+//! The WideSA evaluation environment builds from a clean checkout with no
+//! crates.io access, so the one external dependency the crate relies on is
+//! vendored here as a ~200-line reimplementation of the slice of the
+//! `anyhow` 1.x API the codebase uses:
+//!
+//! * [`Error`] — an opaque error value carrying a message plus a chain of
+//!   causes (outermost context first). Like the real `anyhow::Error`, it
+//!   deliberately does **not** implement [`std::error::Error`], which is
+//!   what makes the blanket `From` conversion below coherent.
+//! * [`Result<T>`] — `std::result::Result` defaulted to [`Error`].
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, wrapping the underlying error with a new outer message.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//!
+//! Display shows the outermost message only (matching `anyhow`); Debug
+//! shows the full `Caused by:` chain, so `unwrap()` panics stay readable.
+//!
+//! [`anyhow`]: https://docs.rs/anyhow
+
+use std::fmt;
+
+/// Opaque error: outermost message plus the chain of underlying causes.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost-but-one first (each entry one `Caused by:` line).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a plain message (what [`anyhow!`] expands to).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self {
+            msg: msg.to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Self {
+            msg: context.to_string(),
+            chain,
+        }
+    }
+
+    /// The chain of messages, outermost first (for diagnostics).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(String::as_str))
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any concrete `std` error converts into [`Error`], capturing its source
+/// chain. Coherent because [`Error`] itself does not implement
+/// [`std::error::Error`] (the same trick the real crate uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self {
+            msg: e.to_string(),
+            chain,
+        }
+    }
+}
+
+/// `std::result::Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with a new message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with a lazily evaluated message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+/// One impl covers both plain `std` errors and already-wrapped
+/// [`Error`]s: everything that can become an [`Error`].
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, or from any single
+/// [`Display`](fmt::Display) value (`anyhow!(err)`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context_only() {
+        let e: Error = io_err().into();
+        let wrapped = e.context("reading manifest");
+        assert_eq!(wrapped.to_string(), "reading manifest");
+        assert_eq!(wrapped.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = io_err().into();
+        let wrapped = e.context("outer");
+        let dbg = format!("{wrapped:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("file missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(f(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+}
