@@ -4,10 +4,13 @@
 # python). `make artifacts` AOT-lowers the L2 variants to HLO text for the
 # optional PJRT runtime backend; it requires a JAX install (see
 # python/README.md) and is a no-op for the default stub backend.
+# `make serve-smoke` pipes three JSON-lines requests through the compile
+# service and asserts three responses come back.
 
 ARTIFACTS := artifacts
+SERVE_SMOKE_OUT := target/serve-smoke.out
 
-.PHONY: build test bench doc artifacts clean
+.PHONY: build test bench doc artifacts serve-smoke clean
 
 build:
 	cargo build --release
@@ -17,6 +20,18 @@ test:
 
 bench:
 	cargo bench
+
+serve-smoke: build
+	printf '%s\n%s\n%s\n' \
+	  '{"id":1,"bench":"fir","dims":[65536,15],"max_aies":32}' \
+	  '{"id":2,"bench":"fir","dims":[65536,15],"max_aies":32}' \
+	  '{"id":3,"bench":"mm","dims":[1024,1024,1024],"max_aies":64}' \
+	  | ./target/release/widesa serve --stdin --workers 2 > $(SERVE_SMOKE_OUT)
+	@test "$$(grep -c '"ok":true' $(SERVE_SMOKE_OUT))" -eq 3 \
+	  || { echo "serve-smoke FAILED:"; cat $(SERVE_SMOKE_OUT); exit 1; }
+	@grep -Eq '"(cached|deduped)":true' $(SERVE_SMOKE_OUT) \
+	  || { echo "serve-smoke FAILED: duplicate request was neither cached nor deduplicated"; cat $(SERVE_SMOKE_OUT); exit 1; }
+	@echo "serve-smoke OK (3 responses, duplicate amortized)"
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

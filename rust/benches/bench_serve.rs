@@ -1,0 +1,61 @@
+//! Bench: the serve layer's two performance claims.
+//!
+//! 1. **Cache amortization** — a cache-hit request must complete ≥ 100×
+//!    faster than a cold compile of the same key (it is a sharded-map
+//!    lookup plus an `Arc` clone, vs DSE + P&R + simulation + codegen).
+//!    This binary *enforces* the ratio: it exits non-zero below 100×.
+//! 2. **DSE sharding** — candidate scoring sharded across threads
+//!    against the serial `explore_all` reference (identical ranking,
+//!    lower wall time on multi-core).
+//!
+//! Run with `cargo bench --bench bench_serve`.
+
+use std::time::Instant;
+use widesa::mapping::dse::{explore_all, explore_all_parallel, DseConstraints};
+use widesa::recurrence::library;
+use widesa::serve::{CacheOutcome, ServeConfig, ServeHandle};
+use widesa::util::bench::bench;
+use widesa::{DType, WideSaConfig};
+
+fn main() {
+    let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let handle = ServeHandle::new(ServeConfig::default());
+    let rec = library::mm(8192, 8192, 8192, DType::F32);
+
+    println!("== serve: cache hit vs cold compile ==");
+    let t0 = Instant::now();
+    let cold = handle.compile(&rec).expect("cold compile");
+    let cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.outcome, CacheOutcome::Miss);
+    println!("cold compile (miss): {:.3} ms", cold_s * 1e3);
+
+    let hit = bench("serve/cache-hit", 2000, || {
+        let r = handle.compile(&rec).expect("hit");
+        assert_eq!(r.outcome, CacheOutcome::Hit);
+        std::hint::black_box(r.design.estimate.tops);
+    });
+    let speedup = cold_s / hit.median_s.max(1e-12);
+    println!("cache-hit speedup over cold compile: {speedup:.0}×");
+
+    println!("\n== serve: sharded DSE scoring ({threads} cores) ==");
+    let board = WideSaConfig::default().board;
+    let cons = DseConstraints::default();
+    let serial = bench("dse/explore-all serial", 30, || {
+        std::hint::black_box(explore_all(&rec, &board, &cons).len());
+    });
+    let parallel = bench(&format!("dse/explore-all ×{threads}"), 30, || {
+        std::hint::black_box(explore_all_parallel(&rec, &board, &cons, threads).len());
+    });
+    println!(
+        "parallel DSE speedup: {:.2}× (serial {:.3} ms → parallel {:.3} ms)",
+        serial.median_s / parallel.median_s.max(1e-12),
+        serial.median_s * 1e3,
+        parallel.median_s * 1e3,
+    );
+
+    if speedup < 100.0 {
+        eprintln!("FAIL: cache-hit speedup {speedup:.0}× is below the required 100×");
+        std::process::exit(1);
+    }
+    println!("\nbench_serve OK (cache-hit ≥ 100× cold compile)");
+}

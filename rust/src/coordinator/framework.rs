@@ -8,13 +8,14 @@ use crate::codegen::{self, CodeBundle};
 use crate::graph::builder::{build, MappedGraph};
 use crate::graph::packet::{merge_ports_with_budget, MergeStats};
 use crate::mapping::cost::{CostModel, PerfEstimate};
-use crate::mapping::dse::{explore_all, DseConstraints};
+use crate::mapping::dse::{explore_all, explore_all_parallel, DseConstraints};
 use crate::mapping::MappingCandidate;
 use crate::place_route::compiler::{compile, CompileOutcome};
 use crate::recurrence::spec::UniformRecurrence;
 use crate::sim::engine::{simulate, SimConfig};
 use crate::sim::metrics::SimReport;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Framework configuration.
 #[derive(Debug, Clone)]
@@ -25,6 +26,10 @@ pub struct WideSaConfig {
     pub mover_bits: u64,
     /// Simulate cold-DRAM end-to-end in the sim report.
     pub cold_dram: bool,
+    /// Threads to shard DSE candidate scoring across (1 = serial). The
+    /// parallel path returns bit-identical rankings — see
+    /// [`explore_all_parallel`].
+    pub dse_threads: usize,
 }
 
 impl Default for WideSaConfig {
@@ -34,6 +39,7 @@ impl Default for WideSaConfig {
             constraints: DseConstraints::default(),
             mover_bits: 512,
             cold_dram: false,
+            dse_threads: 1,
         }
     }
 }
@@ -41,7 +47,14 @@ impl Default for WideSaConfig {
 /// Everything the framework produces for one recurrence.
 pub struct CompiledDesign {
     pub candidate: MappingCandidate,
+    /// Analytic performance estimate (the DSE's ranking view).
     pub estimate: PerfEstimate,
+    /// The same model evaluated with the *exact* merged PLIO port counts
+    /// of [`CompiledDesign::merge_stats`] — the estimate that agrees with
+    /// what place & route actually sees. For compute-bound designs this
+    /// matches [`CompiledDesign::estimate`]; it diverges exactly when
+    /// port packing is the binding resource.
+    pub estimate_exact: PerfEstimate,
     pub graph: MappedGraph,
     pub merge_stats: MergeStats,
     pub compile: CompileOutcome,
@@ -52,12 +65,14 @@ pub struct CompiledDesign {
 impl CompiledDesign {
     pub fn report(&self) -> String {
         format!(
-            "{}\n  mapping : {}\n  est     : {:.3} TOPS ({:.4}/AIE), bound {}\n  sim     : {}\n  ports   : {} in / {} out (merged from {} / {})\n  compile : success={} congestion={} in {:.3}s\n",
+            "{}\n  mapping : {}\n  est     : {:.3} TOPS ({:.4}/AIE), bound {}\n  exact   : {:.3} TOPS with merged ports, bound {}\n  sim     : {}\n  ports   : {} in / {} out (merged from {} / {})\n  compile : success={} congestion={} in {:.3}s\n",
             self.candidate.rec.name,
             self.candidate.summary(),
             self.estimate.tops,
             self.estimate.tops_per_aie,
             self.estimate.bound,
+            self.estimate_exact.tops,
+            self.estimate_exact.bound,
             self.sim.summary(),
             self.merge_stats.in_ports_after,
             self.merge_stats.out_ports_after,
@@ -110,9 +125,37 @@ impl WideSa {
     /// compiles, the best estimate is returned with `compile.success =
     /// false` so callers can inspect why.
     pub fn compile(&self, rec: &UniformRecurrence) -> Result<CompiledDesign> {
+        let ranked = if self.config.dse_threads > 1 {
+            explore_all_parallel(
+                rec,
+                &self.config.board,
+                &self.config.constraints,
+                self.config.dse_threads,
+            )
+        } else {
+            explore_all(rec, &self.config.board, &self.config.constraints)
+        };
+        self.compile_ranked(rec, ranked)
+    }
+
+    /// As [`WideSa::compile`], returning the design behind an [`Arc`] so
+    /// it can be shared across threads (the serve layer's cache hands the
+    /// same compiled design to many concurrent requests).
+    pub fn compile_arc(&self, rec: &UniformRecurrence) -> Result<Arc<CompiledDesign>> {
+        self.compile(rec).map(Arc::new)
+    }
+
+    /// The back half of [`WideSa::compile`]: take an already-ranked
+    /// candidate list (from any `explore_all` variant — serial, scoped
+    /// threads, or the serve layer's worker pool) through graph build,
+    /// port merging, place & route, simulation and codegen.
+    pub fn compile_ranked(
+        &self,
+        rec: &UniformRecurrence,
+        ranked: Vec<(MappingCandidate, PerfEstimate)>,
+    ) -> Result<CompiledDesign> {
         let model =
             CostModel::new(self.config.board.clone()).with_mover_bits(self.config.mover_bits);
-        let ranked = explore_all(rec, &self.config.board, &self.config.constraints);
         if ranked.is_empty() {
             return Err(anyhow!("no legal mapping for {}", rec.name));
         }
@@ -128,6 +171,13 @@ impl WideSa {
                 self.config.board.plio.in_channels as usize,
                 self.config.board.plio.out_channels as usize,
             );
+            // exact-port estimate: same model, but with the port counts
+            // the packet-switch merge actually realised
+            let estimate_exact = model.estimate_with_ports(
+                &candidate,
+                merge_stats.in_ports_after as u64,
+                merge_stats.out_ports_after as u64,
+            );
             let compile_out = compile(&graph, &self.config.board);
             let success = compile_out.success;
             let (sim, _) = simulate(
@@ -142,6 +192,7 @@ impl WideSa {
             let design = CompiledDesign {
                 candidate,
                 estimate,
+                estimate_exact,
                 graph,
                 merge_stats,
                 compile: compile_out,
@@ -199,6 +250,48 @@ mod tests {
         });
         let d = ws.compile(&library::mm(512, 512, 512, DType::F32)).unwrap();
         assert!(d.compile.success, "fallback should yield a compilable design");
+    }
+
+    #[test]
+    fn parallel_dse_compile_matches_serial() {
+        let serial = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let parallel = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            },
+            dse_threads: 4,
+            ..Default::default()
+        });
+        let rec = library::mm(2048, 2048, 2048, DType::F32);
+        let a = serial.compile(&rec).unwrap();
+        let b = parallel.compile(&rec).unwrap();
+        assert_eq!(a.candidate.summary(), b.candidate.summary());
+        assert_eq!(a.estimate.tops.to_bits(), b.estimate.tops.to_bits());
+        assert_eq!(a.merge_stats, b.merge_stats);
+    }
+
+    #[test]
+    fn exact_estimate_present_and_bounded() {
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ws.compile(&library::mm(8192, 8192, 8192, DType::F32)).unwrap();
+        assert_eq!(d.estimate_exact.plio_in_ports as usize, d.merge_stats.in_ports_after);
+        assert_eq!(d.estimate_exact.plio_out_ports as usize, d.merge_stats.out_ports_after);
+        assert!(d.estimate_exact.tops > 0.0);
+        let report = d.report();
+        assert!(report.contains("exact"));
     }
 
     #[test]

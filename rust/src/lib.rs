@@ -13,9 +13,11 @@
 //!   for the Vitis AIE compiler ([`place_route`], §II-A-2/§III-C), a
 //!   cycle-approximate simulator of the VCK5000 board ([`sim`]),
 //!   heterogeneous-backend code generators ([`codegen`], Figure 5), the
-//!   baselines the paper compares against ([`baselines`]), and the
+//!   baselines the paper compares against ([`baselines`]), the
 //!   evaluation harness that regenerates every table and figure
-//!   ([`eval`]).
+//!   ([`eval`]), and a long-lived compile service with a sharded design
+//!   cache, single-flight deduplication and pool-sharded DSE ([`serve`],
+//!   the ROADMAP's serving layer).
 //! * **L2/L1 (`python/`, build-time only)** — the recurrences' compute as
 //!   JAX graphs calling Pallas tile kernels, AOT-lowered to HLO text.
 //! * **Runtime bridge** — [`runtime`] functionally replays mapped designs
@@ -50,6 +52,11 @@
 //!
 //! See `examples/quickstart.rs`, or `cargo run --release -- table3` to
 //! regenerate the paper's Table III.
+//!
+//! For repeated mappings, wrap the framework in the compile service —
+//! [`ServeHandle`] caches designs by canonical key and deduplicates
+//! concurrent identical requests; `widesa serve --stdin` exposes the
+//! same thing as a JSON-lines process (see [`serve`]).
 
 pub mod arch;
 pub mod baselines;
@@ -63,9 +70,11 @@ pub mod plio;
 pub mod polyhedral;
 pub mod recurrence;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
 pub use coordinator::framework::{CompiledDesign, WideSa, WideSaConfig};
 pub use mapping::dse::DseConstraints;
 pub use recurrence::{dtype::DType, library, spec::UniformRecurrence};
+pub use serve::{CacheOutcome, ServeConfig, ServeHandle, ServeResult, ServeStats};

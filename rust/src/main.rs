@@ -13,6 +13,7 @@ use widesa::recurrence::dtype::DType;
 use widesa::recurrence::library;
 use widesa::recurrence::spec::UniformRecurrence;
 use widesa::runtime::client::Runtime;
+use widesa::serve::{serve_stdin, serve_tcp, ServeConfig, ServeHandle};
 use widesa::util::rng::XorShift64;
 
 const HELP: &str = "\
@@ -33,6 +34,15 @@ COMMANDS (framework):
   codegen <bench> <dtype> <outdir>  emit AIE kernel / ADF graph / PL movers / host code
   run-mm [n m k]                    functional replay of MM (default 512³)
   selftest                          quick end-to-end smoke test
+
+COMMANDS (service):
+  serve --stdin                     JSON-lines compile service on stdin/stdout (EOF exits)
+  serve --tcp ADDR                  same protocol on a TCP listener (e.g. 127.0.0.1:7171)
+    options: --cache N (design-cache entries, default 64)
+             --workers N (concurrent requests), --dse-threads N (scoring shards),
+             --aies N / --mover-bits N / --cold-dram (base compile config)
+    request:  {\"id\":1,\"bench\":\"mm\",\"dtype\":\"f32\",\"dims\":[8192,8192,8192],\"max_aies\":400}
+    response: {\"id\":1,\"ok\":true,\"cached\":false,\"key\":\"…\",\"tops\":4.13,…}
 
   <bench>: mm | conv2d | fft2d | fir    <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
 
@@ -129,6 +139,66 @@ fn cmd_run_mm(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    let mut stdin_mode = false;
+    let mut tcp_addr: Option<String> = None;
+    let flag_val = |args: &[String], i: usize, flag: &str| -> Result<String> {
+        args.get(i + 1)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--stdin" => stdin_mode = true,
+            "--tcp" => {
+                tcp_addr = Some(flag_val(args, i, "--tcp")?);
+                i += 1;
+            }
+            "--cache" => {
+                cfg.cache_capacity = flag_val(args, i, "--cache")?.parse()?;
+                i += 1;
+            }
+            "--workers" => {
+                cfg.request_workers = flag_val(args, i, "--workers")?.parse()?;
+                i += 1;
+            }
+            "--dse-threads" => {
+                cfg.dse_threads = flag_val(args, i, "--dse-threads")?.parse()?;
+                i += 1;
+            }
+            "--aies" => {
+                cfg.base.constraints.max_aies = Some(flag_val(args, i, "--aies")?.parse()?);
+                i += 1;
+            }
+            "--mover-bits" => {
+                cfg.base.mover_bits = flag_val(args, i, "--mover-bits")?.parse()?;
+                i += 1;
+            }
+            "--cold-dram" => cfg.base.cold_dram = true,
+            other => bail!("unknown serve option {other:?} (see `widesa help`)"),
+        }
+        i += 1;
+    }
+    if stdin_mode == tcp_addr.is_some() {
+        bail!("serve needs exactly one of --stdin or --tcp ADDR");
+    }
+    let handle = ServeHandle::new(cfg);
+    if let Some(addr) = tcp_addr {
+        let listener = std::net::TcpListener::bind(&addr)?;
+        serve_tcp(&handle, listener)?;
+    } else {
+        serve_stdin(&handle)?;
+        let s = handle.stats();
+        eprintln!(
+            "widesa serve: done — {} hits, {} misses, {} deduped, {} errors, {} cached designs",
+            s.hits, s.misses, s.deduped, s.errors, s.cache.len
+        );
+    }
+    Ok(())
+}
+
 fn cmd_selftest() -> Result<()> {
     println!("1/3 mapping pipeline ...");
     let d = framework(Some(400)).compile(&library::mm(2048, 2048, 2048, DType::F32))?;
@@ -176,6 +246,7 @@ fn main() -> Result<()> {
         Some("map") => cmd_map(&args[1..])?,
         Some("codegen") => cmd_codegen(&args[1..])?,
         Some("run-mm") => cmd_run_mm(&args[1..])?,
+        Some("serve") => cmd_serve(&args[1..])?,
         Some("selftest") => cmd_selftest()?,
         Some("help") | None => print!("{HELP}"),
         Some(other) => {

@@ -142,7 +142,33 @@ impl CostModel {
         aie_side.min(pl_side)
     }
 
+    /// Score a candidate with the *analytic* port-packing estimate (the
+    /// DSE's view, where no mapped graph exists yet).
     pub fn estimate(&self, cand: &MappingCandidate) -> PerfEstimate {
+        self.estimate_impl(cand, None)
+    }
+
+    /// Score a candidate with *exact* merged PLIO port counts — the
+    /// numbers [`crate::graph::packet::merge_ports_with_budget`] actually
+    /// produced for the built graph — instead of the analytic packing
+    /// approximation. This is what the framework reports once a design
+    /// has been through port merging, so the published estimate agrees
+    /// with what place & route actually sees. Counts are clamped to the
+    /// board's channel budget exactly like the analytic path.
+    pub fn estimate_with_ports(
+        &self,
+        cand: &MappingCandidate,
+        in_ports: u64,
+        out_ports: u64,
+    ) -> PerfEstimate {
+        self.estimate_impl(cand, Some((in_ports, out_ports)))
+    }
+
+    fn estimate_impl(
+        &self,
+        cand: &MappingCandidate,
+        exact_ports: Option<(u64, u64)>,
+    ) -> PerfEstimate {
         let core = &self.board.array.core;
         let dtype = cand.rec.dtype;
         let eff = issue_efficiency(cand.kind, dtype) * cand.latency.efficiency(core);
@@ -160,29 +186,36 @@ impl CostModel {
         let traffic = self.traffic(cand, rounds, steps);
         let bw = self.channel_bw();
 
-        // Port counts: stream classes are packed by sustained rate.
-        let pack = |streams: u64, bytes_per_stream: f64, max_fanin: u64| -> u64 {
-            if streams == 0 {
-                return 0;
+        // Port counts: exact merged counts when the caller has a built
+        // graph, else stream classes packed analytically by rate.
+        let (in_ports_needed, out_ports_needed) = match exact_ports {
+            Some((i, o)) => (i, o),
+            None => {
+                let pack = |streams: u64, bytes_per_stream: f64, max_fanin: u64| -> u64 {
+                    if streams == 0 {
+                        return 0;
+                    }
+                    let rate = bytes_per_stream / compute_total_s.max(1e-12);
+                    let fanin = ((bw * 0.8 / rate.max(1.0)) as u64).clamp(1, max_fanin);
+                    streams.div_ceil(fanin)
+                };
+                let inp = pack(
+                    traffic.edge_in_streams,
+                    traffic.edge_in_bytes_per_stream,
+                    MAX_PACKET_FANIN_EDGE,
+                ) + pack(
+                    traffic.private_in_streams,
+                    traffic.private_in_bytes_per_stream,
+                    MAX_PACKET_FANIN_PRIVATE,
+                ) + traffic.broadcast_ports;
+                let outp = pack(
+                    traffic.private_out_streams,
+                    traffic.private_out_bytes_per_stream,
+                    MAX_PACKET_FANIN_PRIVATE,
+                );
+                (inp, outp)
             }
-            let rate = bytes_per_stream / compute_total_s.max(1e-12);
-            let fanin = ((bw * 0.8 / rate.max(1.0)) as u64).clamp(1, max_fanin);
-            streams.div_ceil(fanin)
         };
-        let in_ports_needed = pack(
-            traffic.edge_in_streams,
-            traffic.edge_in_bytes_per_stream,
-            MAX_PACKET_FANIN_EDGE,
-        ) + pack(
-            traffic.private_in_streams,
-            traffic.private_in_bytes_per_stream,
-            MAX_PACKET_FANIN_PRIVATE,
-        ) + traffic.broadcast_ports;
-        let out_ports_needed = pack(
-            traffic.private_out_streams,
-            traffic.private_out_bytes_per_stream,
-            MAX_PACKET_FANIN_PRIVATE,
-        );
 
         let in_ports = in_ports_needed.min(self.board.plio.in_channels as u64).max(1);
         let out_ports = out_ports_needed
@@ -521,6 +554,40 @@ mod tests {
             big.plio_in_s
         );
         assert!(small.tops <= big.tops);
+    }
+
+    #[test]
+    fn exact_port_estimate_tracks_merged_counts() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        let model = CostModel::new(board);
+        let analytic = model.estimate(&cand);
+        // Feeding the analytic path's own port counts back reproduces it.
+        let echo = model.estimate_with_ports(
+            &cand,
+            analytic.plio_in_ports as u64,
+            analytic.plio_out_ports as u64,
+        );
+        assert_eq!(echo.plio_in_ports, analytic.plio_in_ports);
+        assert_eq!(echo.plio_out_ports, analytic.plio_out_ports);
+        assert_eq!(echo.tops.to_bits(), analytic.tops.to_bits());
+        // Halving the ports cannot shrink PLIO time, and over-budget
+        // requests clamp to the board's channels.
+        let halved = model.estimate_with_ports(
+            &cand,
+            (analytic.plio_in_ports as u64 / 2).max(1),
+            (analytic.plio_out_ports as u64 / 2).max(1),
+        );
+        assert!(halved.plio_in_s >= analytic.plio_in_s);
+        assert!(halved.plio_out_s >= analytic.plio_out_s);
+        let clamped = model.estimate_with_ports(&cand, 10_000, 10_000);
+        assert!(clamped.plio_in_ports <= 78);
+        assert!(clamped.plio_out_ports <= 78);
     }
 
     #[test]

@@ -1,16 +1,26 @@
 //! Design-space exploration: enumerate space-time choices × partitions ×
 //! threading factors, score each with the cost model, return the best
 //! legal candidate (the "optimal schedule" search of §II-B / §III-B).
+//!
+//! The search is decomposed so callers can shard it: [`plan`] does the
+//! per-recurrence setup once (memoized demarcation, space-time
+//! enumeration, the loop-invariant latency-hiding plan), [`score_choice`]
+//! evaluates one candidate — a pure function of its inputs — and
+//! [`rank`] merges scored candidates in the canonical order. Both
+//! [`explore_all`] (serial) and [`explore_all_parallel`] (scoped-thread
+//! sharding) are thin drivers over those three, as is the serve layer's
+//! worker-pool variant — all produce bit-identical rankings.
 
 use crate::arch::vck5000::BoardConfig;
 use crate::mapping::candidate::{Kind, MappingCandidate};
 use crate::mapping::cost::{CostModel, PerfEstimate};
-use crate::mapping::latency;
+use crate::mapping::latency::{self, LatencyHiding};
 use crate::mapping::partition::partition;
-use crate::mapping::spacetime;
+use crate::mapping::spacetime::{self, SpaceTimeChoice};
 use crate::mapping::threading;
 use crate::recurrence::spec::UniformRecurrence;
-use crate::recurrence::tiling::demarcate;
+use crate::recurrence::tiling::{demarcate_cached, KernelScope};
+use crate::util::hash::Fnv64;
 
 /// Resource constraints for a DSE run (Figure 6 sweeps these).
 #[derive(Debug, Clone, Default)]
@@ -23,6 +33,109 @@ pub struct DseConstraints {
     pub no_threading: bool,
 }
 
+impl DseConstraints {
+    /// Fold the constraints into a stable fingerprint (serve cache key).
+    pub fn fingerprint(&self, h: &mut Fnv64) {
+        match self.max_aies {
+            Some(v) => {
+                h.write_u8(1);
+                h.write_u64(v);
+            }
+            None => h.write_u8(0),
+        }
+        h.write_bool(self.no_latency_hiding);
+        h.write_bool(self.no_threading);
+    }
+}
+
+/// Scored candidates in ranking order (what every `explore_all` variant
+/// returns and [`crate::WideSa::compile_ranked`] consumes).
+pub type Ranked = Vec<(MappingCandidate, PerfEstimate)>;
+
+/// The loop-invariant part of one DSE run: everything [`score_choice`]
+/// needs besides the choice itself.
+pub struct DsePlan {
+    pub scope: KernelScope,
+    /// Latency-hiding plan (identical for every candidate of a run: it
+    /// depends only on the kernel nest and the core, not the choice).
+    pub latency: LatencyHiding,
+    /// Effective AIE budget after clamping to the physical array.
+    pub budget: u64,
+    /// Space-time choices to score, in canonical enumeration order.
+    pub choices: Vec<SpaceTimeChoice>,
+}
+
+/// Per-recurrence setup: memoized demarcation, space-time enumeration and
+/// the shared latency plan.
+pub fn plan(rec: &UniformRecurrence, board: &BoardConfig, cons: &DseConstraints) -> DsePlan {
+    let scope = demarcate_cached(rec);
+    let graph_loops = scope.graph_loops();
+    let choices = spacetime::enumerate(&scope.graph_nest, &graph_loops);
+    let budget = cons
+        .max_aies
+        .unwrap_or(board.array.num_cores() as u64)
+        .min(board.array.num_cores() as u64);
+    // Latency hiding plans over the kernel-scope loops of the
+    // recurrence's core nest.
+    let latency = if cons.no_latency_hiding {
+        LatencyHiding {
+            factors: vec![],
+            chains: 1,
+        }
+    } else {
+        latency::plan(&rec.loop_nest(), &board.array.core)
+    };
+    DsePlan {
+        scope,
+        latency,
+        budget,
+        choices,
+    }
+}
+
+/// Score one space-time choice: partition, thread, estimate. Pure —
+/// shardable across threads with no ordering concerns. Returns `None`
+/// when the candidate exceeds the AIE budget.
+pub fn score_choice(
+    rec: &UniformRecurrence,
+    model: &CostModel,
+    cons: &DseConstraints,
+    plan: &DsePlan,
+    choice: SpaceTimeChoice,
+) -> Option<(MappingCandidate, PerfEstimate)> {
+    let board = &model.board;
+    let part = partition(&choice.nest, &choice.space, &board.array, Some(plan.budget));
+    let spare = plan.budget / part.active_aies().max(1);
+    let thr = if cons.no_threading {
+        threading::Threading::none()
+    } else {
+        threading::plan(&choice.nest, spare)
+    };
+    let cand = MappingCandidate {
+        rec: rec.clone(),
+        kind: Kind::of(rec),
+        scope: plan.scope.clone(),
+        choice,
+        partition: part,
+        latency: plan.latency.clone(),
+        threading: thr,
+    };
+    if cand.aies_used() > plan.budget {
+        return None;
+    }
+    let est = model.estimate(&cand);
+    Some((cand, est))
+}
+
+/// Canonical ranking: throughput-descending, ties broken by enumeration
+/// order (stable sort) — the merge step every exploration variant shares.
+pub fn rank(
+    mut results: Vec<(MappingCandidate, PerfEstimate)>,
+) -> Vec<(MappingCandidate, PerfEstimate)> {
+    results.sort_by(|a, b| b.1.tops.partial_cmp(&a.1.tops).unwrap());
+    results
+}
+
 /// Explore and return the best candidate with its estimate.
 pub fn explore(
     rec: &UniformRecurrence,
@@ -32,58 +145,81 @@ pub fn explore(
     explore_all(rec, board, cons).into_iter().next()
 }
 
-/// All evaluated candidates, best first.
+/// Score `choices` serially against a prepared plan and rank them — the
+/// one serial scoring body every exploration variant shares (so a future
+/// change to the scoring path cannot silently diverge between the
+/// serial, scoped-thread and worker-pool drivers).
+pub fn score_serial(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+    plan: &DsePlan,
+    choices: Vec<SpaceTimeChoice>,
+) -> Ranked {
+    let model = CostModel::new(board.clone());
+    let results = choices
+        .into_iter()
+        .filter_map(|choice| score_choice(rec, &model, cons, plan, choice))
+        .collect();
+    rank(results)
+}
+
+/// All evaluated candidates, best first (serial reference path).
 pub fn explore_all(
     rec: &UniformRecurrence,
     board: &BoardConfig,
     cons: &DseConstraints,
 ) -> Vec<(MappingCandidate, PerfEstimate)> {
-    let scope = demarcate(rec);
-    let graph_loops = scope.graph_loops();
-    let choices = spacetime::enumerate(&scope.graph_nest, &graph_loops);
-    let model = CostModel::new(board.clone());
-    let budget = cons
-        .max_aies
-        .unwrap_or(board.array.num_cores() as u64)
-        .min(board.array.num_cores() as u64);
+    let mut p = plan(rec, board, cons);
+    let choices = std::mem::take(&mut p.choices);
+    score_serial(rec, board, cons, &p, choices)
+}
 
-    let mut results: Vec<(MappingCandidate, PerfEstimate)> = Vec::new();
-    for choice in choices {
-        let part = partition(&choice.nest, &choice.space, &board.array, Some(budget));
-        let spare = budget / part.active_aies().max(1);
-        // Latency hiding plans over the kernel-scope loops of the
-        // recurrence's core nest.
-        let kernel_nest = rec.loop_nest();
-        let lat = if cons.no_latency_hiding {
-            latency::LatencyHiding {
-                factors: vec![],
-                chains: 1,
-            }
-        } else {
-            latency::plan(&kernel_nest, &board.array.core)
-        };
-        let thr = if cons.no_threading {
-            threading::Threading::none()
-        } else {
-            threading::plan(&choice.nest, spare)
-        };
-        let cand = MappingCandidate {
-            rec: rec.clone(),
-            kind: Kind::of(rec),
-            scope: scope.clone(),
-            choice,
-            partition: part,
-            latency: lat,
-            threading: thr,
-        };
-        if cand.aies_used() > budget {
-            continue;
-        }
-        let est = model.estimate(&cand);
-        results.push((cand, est));
+/// As [`explore_all`], with candidate scoring sharded over `threads`
+/// scoped threads.
+///
+/// Deterministic by construction: results land in a slot vector indexed
+/// by enumeration position, then go through the same stable [`rank`] as
+/// the serial path — the returned ranking (including every tie-break) is
+/// bit-identical to [`explore_all`]'s, regardless of thread count or
+/// scheduling.
+pub fn explore_all_parallel(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+    threads: usize,
+) -> Vec<(MappingCandidate, PerfEstimate)> {
+    if threads <= 1 {
+        return explore_all(rec, board, cons);
     }
-    results.sort_by(|a, b| b.1.tops.partial_cmp(&a.1.tops).unwrap());
-    results
+    let mut p = plan(rec, board, cons);
+    let choices = std::mem::take(&mut p.choices);
+    if choices.len() <= 1 {
+        return score_serial(rec, board, cons, &p, choices);
+    }
+    let model = CostModel::new(board.clone());
+    let indexed: Vec<(usize, SpaceTimeChoice)> = choices.into_iter().enumerate().collect();
+    let chunk = indexed.len().div_ceil(threads);
+    let mut slots: Vec<Option<(MappingCandidate, PerfEstimate)>> = Vec::new();
+    slots.resize_with(indexed.len(), || None);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for shard in indexed.chunks(chunk) {
+            let (p, model) = (&p, &model);
+            handles.push(s.spawn(move || {
+                shard
+                    .iter()
+                    .map(|(i, choice)| (*i, score_choice(rec, model, cons, p, choice.clone())))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            for (i, scored) in h.join().expect("DSE scoring shard panicked") {
+                slots[i] = scored;
+            }
+        }
+    });
+    rank(slots.into_iter().flatten().collect())
 }
 
 #[cfg(test)]
@@ -167,5 +303,42 @@ mod tests {
         for w in all.windows(2) {
             assert!(w[0].1.tops >= w[1].1.tops);
         }
+    }
+
+    #[test]
+    fn parallel_ranking_is_bit_identical_to_serial() {
+        let rec = library::mm(2048, 2048, 2048, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints::default();
+        let serial = explore_all(&rec, &board, &cons);
+        for threads in [2, 3, 8, 64] {
+            let par = explore_all_parallel(&rec, &board, &cons, threads);
+            assert_eq!(serial.len(), par.len(), "{threads} threads");
+            for (s, p) in serial.iter().zip(&par) {
+                assert_eq!(s.0.summary(), p.0.summary(), "{threads} threads");
+                assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn constraint_fingerprint_discriminates() {
+        let mut base = Fnv64::new();
+        DseConstraints::default().fingerprint(&mut base);
+        let mut capped = Fnv64::new();
+        DseConstraints {
+            max_aies: Some(64),
+            ..Default::default()
+        }
+        .fingerprint(&mut capped);
+        let mut ablated = Fnv64::new();
+        DseConstraints {
+            no_threading: true,
+            ..Default::default()
+        }
+        .fingerprint(&mut ablated);
+        assert_ne!(base.finish(), capped.finish());
+        assert_ne!(base.finish(), ablated.finish());
+        assert_ne!(capped.finish(), ablated.finish());
     }
 }

@@ -10,6 +10,7 @@ use crate::polyhedral::dependence::{reuse_directions, DepKind, Dependence};
 use crate::polyhedral::domain::IterationDomain;
 use crate::polyhedral::schedule::LoopNest;
 use crate::recurrence::dtype::DType;
+use crate::util::hash::Fnv64;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AccessKind {
@@ -125,6 +126,45 @@ impl UniformRecurrence {
         self.dtype.bytes()
     }
 
+    /// Stable canonical 64-bit fingerprint of the recurrence: the name,
+    /// every loop dimension (name + extent), every access (array, kind,
+    /// full affine map), the dtype and `macs_per_iter`.
+    ///
+    /// Two `UniformRecurrence` values hash equal iff they describe the
+    /// same computation, and the value is reproducible across processes
+    /// and machines (FNV-1a, no randomized hasher state) — this is the
+    /// recurrence half of the serve layer's design-cache key and the
+    /// memoization key for [`crate::recurrence::tiling::demarcate_cached`].
+    pub fn canonical_u64(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.name);
+        h.write_usize(self.rank());
+        for d in &self.domain.dims {
+            h.write_str(&d.name);
+            h.write_u64(d.extent);
+        }
+        h.write_usize(self.accesses.len());
+        for acc in &self.accesses {
+            h.write_str(&acc.array);
+            h.write_u8(match acc.kind {
+                AccessKind::Read => 0,
+                AccessKind::Accumulate => 1,
+                AccessKind::Write => 2,
+            });
+            h.write_usize(acc.map.exprs.len());
+            for e in &acc.map.exprs {
+                h.write_usize(e.coeffs.len());
+                for &c in &e.coeffs {
+                    h.write_i64(c);
+                }
+                h.write_i64(e.constant);
+            }
+        }
+        h.write_str(self.dtype.name());
+        h.write_u64(self.macs_per_iter);
+        h.finish()
+    }
+
     /// Footprint in bytes of array `name` (product of its extent along
     /// each referenced dim — exact for selection maps).
     pub fn array_footprint(&self, name: &str) -> Option<u64> {
@@ -213,5 +253,29 @@ mod tests {
         let nest = mm().loop_nest();
         assert_eq!(nest.rank(), 3);
         assert_eq!(nest.deps.len(), 4);
+    }
+
+    #[test]
+    fn canonical_key_is_stable_and_discriminating() {
+        let a = mm();
+        let b = mm();
+        assert_eq!(a.canonical_u64(), b.canonical_u64());
+
+        // any semantic difference changes the key
+        let mut bigger = mm();
+        bigger.domain.dims[2].extent = 16;
+        assert_ne!(a.canonical_u64(), bigger.canonical_u64());
+
+        let mut renamed = mm();
+        renamed.name = "mm_other".into();
+        assert_ne!(a.canonical_u64(), renamed.canonical_u64());
+
+        let mut retyped = mm();
+        retyped.dtype = DType::I8;
+        assert_ne!(a.canonical_u64(), retyped.canonical_u64());
+
+        let mut rekind = mm();
+        rekind.accesses[2].kind = AccessKind::Write;
+        assert_ne!(a.canonical_u64(), rekind.canonical_u64());
     }
 }

@@ -12,6 +12,8 @@ use crate::polyhedral::schedule::{LoopNest, LoopRole};
 use crate::polyhedral::transform::Transform;
 use crate::recurrence::spec::UniformRecurrence;
 use crate::util::math::divisors;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
 
 /// Result of demarcation: tiling factors and both scopes' loop nests.
 #[derive(Debug, Clone)]
@@ -142,6 +144,37 @@ pub fn demarcate(rec: &UniformRecurrence) -> KernelScope {
     }
 }
 
+/// Process-wide memo for [`demarcate`], keyed by
+/// [`UniformRecurrence::canonical_u64`].
+static DEMARCATE_CACHE: OnceLock<Mutex<HashMap<u64, KernelScope>>> = OnceLock::new();
+
+/// Number of distinct recurrences memoized before the cache resets (a
+/// DSE sweep touches a handful; this only guards pathological callers).
+const DEMARCATE_CACHE_MAX: usize = 512;
+
+/// Memoized [`demarcate`]: demarcation depends only on the recurrence
+/// (not the board or DSE constraints), yet every `explore_all` call — and
+/// there are many per served compile, and many more across the Figure 6
+/// sweeps — used to recompute the same divisor ascent. The memo makes
+/// repeated exploration of one recurrence pay the greedy search once per
+/// process.
+pub fn demarcate_cached(rec: &UniformRecurrence) -> KernelScope {
+    let key = rec.canonical_u64();
+    let cache = DEMARCATE_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(scope) = cache.lock().unwrap().get(&key) {
+        return scope.clone();
+    }
+    // Compute outside the lock: demarcation is the expensive part, and
+    // concurrent misses on *different* recurrences must not serialize.
+    let scope = demarcate(rec);
+    let mut map = cache.lock().unwrap();
+    if map.len() >= DEMARCATE_CACHE_MAX {
+        map.clear();
+    }
+    map.entry(key).or_insert_with(|| scope.clone());
+    scope
+}
+
 impl KernelScope {
     /// Graph-scope loops (everything not marked Kernel), outermost first.
     pub fn graph_loops(&self) -> Vec<usize> {
@@ -217,5 +250,22 @@ mod tests {
         let rec = library::fir(1048576, 15, DType::F32);
         let scope = demarcate(&rec);
         assert!(scope.core_peak_cycles(&rec) > 0);
+    }
+
+    #[test]
+    fn memoized_demarcation_matches_direct() {
+        let rec = library::conv2d(1024, 1024, 4, 4, DType::I16);
+        let direct = demarcate(&rec);
+        let cached1 = demarcate_cached(&rec);
+        let cached2 = demarcate_cached(&rec); // hit path
+        for got in [&cached1, &cached2] {
+            assert_eq!(got.core_factors, direct.core_factors);
+            assert_eq!(got.core_bytes, direct.core_bytes);
+            assert_eq!(got.core_macs, direct.core_macs);
+            assert_eq!(got.graph_nest.rank(), direct.graph_nest.rank());
+        }
+        // a different recurrence must not collide
+        let other = demarcate_cached(&library::conv2d(2048, 2048, 4, 4, DType::I16));
+        assert!(other.core_macs > 0);
     }
 }

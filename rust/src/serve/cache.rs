@@ -1,0 +1,295 @@
+//! Sharded LRU design cache + the canonical design key.
+//!
+//! The serve layer amortizes `WideSa::compile` across repeated requests:
+//! the compile pipeline is a pure function of `(recurrence, board, DSE
+//! constraints, mover width, DRAM mode)`, so its output can be cached
+//! under a stable hash of exactly those inputs ([`design_key`]). The
+//! cache is sharded — each shard owns an independent mutex — so hits
+//! from concurrent request workers don't serialize on one lock.
+
+use crate::arch::vck5000::BoardConfig;
+use crate::coordinator::framework::WideSaConfig;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::util::hash::Fnv64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fold every mapping-relevant board parameter into the key. Exhaustive
+/// over [`BoardConfig`]: two boards hash equal iff the compile pipeline
+/// cannot distinguish them.
+fn board_fingerprint(h: &mut Fnv64, b: &BoardConfig) {
+    h.write_str(&b.name);
+    h.write_u32(b.array.rows);
+    h.write_u32(b.array.cols);
+    h.write_u32(b.array.rc_west);
+    h.write_u32(b.array.rc_east);
+    let c = &b.array.core;
+    h.write_f64(c.freq_hz);
+    h.write_u64(c.local_mem_bytes);
+    h.write_u64(c.dma_bits);
+    h.write_u64(c.dma_ports);
+    h.write_u64(c.stream_bits);
+    h.write_u64(c.acc_registers);
+    h.write_u64(c.mac_pipeline_depth);
+    h.write_u32(b.plio.in_channels);
+    h.write_u32(b.plio.out_channels);
+    h.write_u64(b.plio.bits);
+    h.write_f64(b.plio.freq_hz);
+    h.write_usize(b.plio.columns.len());
+    for &col in &b.plio.columns {
+        h.write_u32(col);
+    }
+    h.write_u32(b.plio.channels_per_column);
+    h.write_u32(b.pl.dsp58);
+    h.write_u64(b.pl.bram_bits);
+    h.write_u64(b.pl.uram_bits);
+    h.write_f64(b.pl.freq_hz);
+    h.write_u32(b.pl.dram_channels);
+    h.write_f64(b.pl.dram_bw_per_channel);
+}
+
+/// Canonical cache key for one compile request: recurrence × board ×
+/// constraints × mover width × DRAM mode. Stable across processes (pure
+/// FNV-1a over explicit field bytes), so keys may be logged, compared
+/// between server runs, and echoed over the wire.
+pub fn design_key(rec: &UniformRecurrence, cfg: &WideSaConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(rec.canonical_u64());
+    board_fingerprint(&mut h, &cfg.board);
+    cfg.constraints.fingerprint(&mut h);
+    h.write_u64(cfg.mover_bits);
+    h.write_bool(cfg.cold_dram);
+    // dse_threads deliberately excluded: it changes how fast the answer
+    // arrives, never what the answer is (deterministic-merge guarantee).
+    h.finish()
+}
+
+struct Entry<V> {
+    value: V,
+    last_used: u64,
+}
+
+struct Shard<V> {
+    map: HashMap<u64, Entry<V>>,
+    /// Monotone per-shard access clock for LRU ordering.
+    tick: u64,
+}
+
+/// Cache statistics snapshot (all counters process-lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub len: usize,
+}
+
+/// A sharded LRU map from [`design_key`] to a cheaply-cloneable value
+/// (the serve layer stores `Arc<CompiledDesign>`).
+///
+/// Keys distribute over shards by residue; each shard evicts its own
+/// least-recently-used entry when it exceeds `capacity / shards`
+/// (rounded up), so total occupancy is bounded by roughly `capacity`.
+pub struct ShardedCache<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<V: Clone> ShardedCache<V> {
+    /// `capacity` total entries spread over `shards` independent locks
+    /// (both clamped to ≥ 1).
+    pub fn new(capacity: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let per_shard_cap = capacity.max(1).div_ceil(shards);
+        Self {
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        tick: 0,
+                    })
+                })
+                .collect(),
+            per_shard_cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard<V>> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    /// Look up a key, refreshing its recency on hit.
+    pub fn get(&self, key: u64) -> Option<V> {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        match shard.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a key, evicting the shard's LRU entry if the
+    /// shard is full.
+    pub fn insert(&self, key: u64, value: V) {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.tick += 1;
+        let tick = shard.tick;
+        if !shard.map.contains_key(&key) && shard.map.len() >= self.per_shard_cap {
+            let victim = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k);
+            if let Some(victim) = victim {
+                shard.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.map.insert(
+            key,
+            Entry {
+                value,
+                last_used: tick,
+            },
+        );
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total entry budget (shards × per-shard capacity; ≥ requested).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_cap * self.shards.len()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            len: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recurrence::{dtype::DType, library};
+
+    #[test]
+    fn hit_miss_and_stats() {
+        let c: ShardedCache<u32> = ShardedCache::new(8, 2);
+        assert_eq!(c.get(1), None);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(1), Some(10));
+        assert_eq!(c.get(2), Some(20));
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.insertions, 2);
+        assert_eq!(s.len, 2);
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recently_used() {
+        // single shard so the LRU order is fully observable
+        let c: ShardedCache<u32> = ShardedCache::new(3, 1);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(3, 3);
+        // touch 1 so 2 becomes the LRU
+        assert_eq!(c.get(1), Some(1));
+        c.insert(4, 4); // evicts 2
+        assert_eq!(c.get(2), None, "LRU entry must be evicted");
+        assert_eq!(c.get(1), Some(1));
+        assert_eq!(c.get(3), Some(3));
+        assert_eq!(c.get(4), Some(4));
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_evict() {
+        let c: ShardedCache<u32> = ShardedCache::new(2, 1);
+        c.insert(1, 1);
+        c.insert(2, 2);
+        c.insert(1, 11); // refresh, not a new entry
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1), Some(11));
+        assert_eq!(c.get(2), Some(2));
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn occupancy_bounded_across_shards() {
+        let c: ShardedCache<u64> = ShardedCache::new(16, 4);
+        for k in 0..1000u64 {
+            c.insert(k, k);
+        }
+        assert!(c.len() <= c.capacity(), "{} > {}", c.len(), c.capacity());
+        assert!(c.stats().evictions >= 1000 - c.capacity() as u64);
+    }
+
+    #[test]
+    fn design_key_sensitivity() {
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let cfg = WideSaConfig::default();
+        let base = design_key(&rec, &cfg);
+        // deterministic
+        assert_eq!(base, design_key(&rec, &cfg));
+
+        // recurrence changes the key
+        let other_rec = library::mm(2048, 1024, 1024, DType::F32);
+        assert_ne!(base, design_key(&other_rec, &cfg));
+
+        // each config axis changes the key
+        let mut c = cfg.clone();
+        c.constraints.max_aies = Some(64);
+        assert_ne!(base, design_key(&rec, &c));
+        let mut c = cfg.clone();
+        c.mover_bits = 128;
+        assert_ne!(base, design_key(&rec, &c));
+        let mut c = cfg.clone();
+        c.cold_dram = true;
+        assert_ne!(base, design_key(&rec, &c));
+        let mut c = cfg.clone();
+        c.board = c.board.with_plio_budget(8);
+        assert_ne!(base, design_key(&rec, &c));
+
+        // dse_threads is a how-fast knob, not a what-answer knob
+        let mut c = cfg.clone();
+        c.dse_threads = 8;
+        assert_eq!(base, design_key(&rec, &c));
+    }
+}

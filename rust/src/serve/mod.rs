@@ -1,0 +1,47 @@
+//! `widesa::serve` — the long-lived compile service.
+//!
+//! The ROADMAP's north star is a system that serves heavy traffic, not a
+//! one-shot CLI: the same recurrence shapes get mapped over and over
+//! (framework studies, autotuners, multi-tenant schedulers re-requesting
+//! Table II-class kernels), while `WideSa::compile`'s pipeline —
+//! demarcation → space-time DSE → port merging → place & route →
+//! simulation → codegen — is pure and deterministic. That combination is
+//! exactly what this subsystem exploits:
+//!
+//! * [`cache`] — a **sharded LRU design cache** keyed by a canonical
+//!   FNV-1a hash of `(recurrence, board, constraints, mover width, DRAM
+//!   mode)` ([`cache::design_key`]). A cache hit returns the shared
+//!   `Arc<CompiledDesign>` in microseconds; `bench_serve` demonstrates
+//!   the ≥100× gap to a cold compile.
+//! * [`server`] — [`server::ServeHandle`], the thread-safe programmatic
+//!   API with **single-flight deduplication**: concurrent identical
+//!   requests compile once, followers wait on the leader's result.
+//!   Plus the `widesa serve` front-ends: JSON-lines over stdin
+//!   ([`server::serve_stdin`]) or TCP ([`server::serve_tcp`]).
+//! * [`pool`] — fixed worker pools on std threads + channels. The
+//!   handle shards DSE candidate scoring across its pool with
+//!   order-preserving scatter, so the parallel search returns the
+//!   **bit-identical ranking** of the serial `explore_all`.
+//! * [`protocol`] — the JSON-lines request/response format (see its
+//!   module docs for the full schema).
+//!
+//! ```text
+//!   request line ──parse──▶ design_key ──▶ cache? ──hit──▶ response
+//!                                            │miss
+//!                                     single-flight leader?
+//!                                      │yes          │no
+//!                               DSE over pool     wait for leader
+//!                               P&R + sim + codegen     │
+//!                                      ▼                ▼
+//!                                 cache fill ──────▶ response
+//! ```
+
+pub mod cache;
+pub mod pool;
+pub mod protocol;
+pub mod server;
+
+pub use cache::{design_key, CacheStats, ShardedCache};
+pub use pool::WorkerPool;
+pub use protocol::CompileRequest;
+pub use server::{serve_stdin, serve_tcp, CacheOutcome, ServeConfig, ServeHandle, ServeResult, ServeStats};

@@ -1,0 +1,185 @@
+//! Fixed-size worker pool on std threads + channels (no external deps).
+//!
+//! Two pools live inside the serve layer: one runs protocol requests
+//! concurrently, the other shards DSE candidate scoring ([`WorkerPool`]
+//! is deliberately generic — a job is any `FnOnce`). Keeping them
+//! separate is what makes the system deadlock-free by construction: a
+//! request job may *wait* on scoring jobs, so scoring must never queue
+//! behind requests on the same executor.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed set of worker threads consuming jobs from one shared queue.
+///
+/// Dropping the pool closes the queue and joins every worker, so all
+/// submitted jobs finish before `drop` returns — `serve --stdin` relies
+/// on this to flush responses for every request read before exiting.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("widesa-worker-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue a fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(job))
+            .expect("worker queue closed");
+    }
+
+    /// Run a batch of jobs across the pool and return their results **in
+    /// submission order** (the deterministic-merge guarantee the sharded
+    /// DSE builds on). Blocks until every job has finished; if a job
+    /// panicked, the panic is re-raised here on the caller's thread.
+    pub fn scatter<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (rtx, rrx) = channel();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let rtx: Sender<(usize, std::thread::Result<T>)> = rtx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                // receiver may be gone if the caller already panicked
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = Vec::new();
+        slots.resize_with(n, || None);
+        for _ in 0..n {
+            let (i, out) = rrx.recv().expect("worker pool dropped mid-scatter");
+            match out {
+                Ok(v) => slots[i] = Some(v),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        slots.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only while dequeuing, never while running a job.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // a peer panicked while holding the lock
+        };
+        match job {
+            Ok(job) => {
+                // A panicking job must not kill the worker: scatter()
+                // observes the panic through its result channel instead.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Err(_) => return, // queue closed: pool is shutting down
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn scatter_preserves_submission_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64)
+            .map(|i| {
+                Box::new(move || {
+                    // stagger completion so out-of-order finish is likely
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    i * i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = pool.scatter(jobs);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_runs_all_pending_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_workers() {
+        let pool = WorkerPool::new(1);
+        pool.execute(|| panic!("job panic"));
+        let out = pool.scatter(vec![
+            Box::new(|| 41usize) as Box<dyn FnOnce() -> usize + Send>
+        ]);
+        assert_eq!(out, vec![41]);
+    }
+
+    #[test]
+    fn scatter_propagates_panics() {
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter(vec![
+                Box::new(|| 1usize) as Box<dyn FnOnce() -> usize + Send>,
+                Box::new(|| panic!("boom")) as Box<dyn FnOnce() -> usize + Send>,
+            ])
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+    }
+}

@@ -1,0 +1,290 @@
+//! JSON-lines request/response protocol for the compile service.
+//!
+//! One request per line in, one response per line out — trivially
+//! scriptable (`echo '…' | widesa serve --stdin`), trivially framed over
+//! TCP, and needing nothing beyond the crate's own [`crate::util::json`].
+//!
+//! ## Request
+//!
+//! ```json
+//! {"id": 1, "bench": "mm", "dtype": "f32", "dims": [8192, 8192, 8192],
+//!  "max_aies": 400, "mover_bits": 512, "cold_dram": false}
+//! ```
+//!
+//! * `bench` — `mm` | `conv2d` | `fir` | `fft2d` (required).
+//! * `dims` — loop extents: `mm` `[n, m, k]`, `conv2d` `[h, w, p, q]`,
+//!   `fir` `[n, taps]`, `fft2d` `[rows, cols]`. Optional; each benchmark
+//!   has a paper-shaped default.
+//! * `dtype` — `f32|i8|i16|i32|cf32|ci16`; defaults to `f32` (`cf32` for
+//!   `fft2d`, which requires a complex type).
+//! * `id` — any JSON value, echoed verbatim in the response.
+//! * `max_aies`, `mover_bits`, `cold_dram` — per-request overrides of the
+//!   server's base [`crate::WideSaConfig`].
+//!
+//! ## Response
+//!
+//! ```json
+//! {"id":1,"ok":true,"cached":false,"deduped":false,"key":"91ab…",
+//!  "name":"mm_8192x8192x8192_Float","aies":400,"tops":4.13,
+//!  "sim_tops":4.3,"bound":"compute","pnr":true,"congestion":2,
+//!  "in_ports":10,"out_ports":50,"wall_us":812345.2}
+//! ```
+//!
+//! `tops`/`bound`/port counts come from the exact-port estimate
+//! ([`crate::CompiledDesign::estimate_exact`]) — the numbers that agree
+//! with what place & route saw. Errors come back as
+//! `{"id":…,"ok":false,"error":"…"}`; the connection stays usable.
+
+use crate::recurrence::dtype::DType;
+use crate::recurrence::library;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::serve::server::CacheOutcome;
+use crate::util::json::{parse, Json};
+use crate::CompiledDesign;
+use anyhow::{anyhow, bail, Result};
+
+/// One parsed compile request.
+#[derive(Debug, Clone)]
+pub struct CompileRequest {
+    /// Echoed verbatim in the response (`null` when absent).
+    pub id: Json,
+    pub bench: String,
+    pub dtype: DType,
+    pub dims: Vec<u64>,
+    pub max_aies: Option<u64>,
+    pub mover_bits: Option<u64>,
+    pub cold_dram: Option<bool>,
+}
+
+pub fn parse_dtype(s: &str) -> Result<DType> {
+    Ok(match s {
+        "f32" => DType::F32,
+        "i8" => DType::I8,
+        "i16" => DType::I16,
+        "i32" => DType::I32,
+        "cf32" => DType::CF32,
+        "ci16" => DType::CI16,
+        _ => bail!("unknown dtype {s:?} (f32|i8|i16|i32|cf32|ci16)"),
+    })
+}
+
+fn get_u64(obj: &Json, key: &str) -> Result<Option<u64>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("field {key:?} must be a number"))?;
+            if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0) {
+                bail!("field {key:?} must be a non-negative integer, got {n}");
+            }
+            Ok(Some(n as u64))
+        }
+    }
+}
+
+/// Parse one JSON-line request.
+pub fn parse_request(line: &str) -> Result<CompileRequest> {
+    let root = parse(line.trim()).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+    if root.as_obj().is_none() {
+        bail!("request must be a JSON object");
+    }
+    let bench = root
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing required field \"bench\" (mm|conv2d|fir|fft2d)"))?
+        .to_string();
+    let dtype = match root.get("dtype").and_then(Json::as_str) {
+        Some(s) => parse_dtype(s)?,
+        // FFT operates on complex data; everything else defaults real.
+        None if bench == "fft2d" => DType::CF32,
+        None => DType::F32,
+    };
+    let dims = match root.get("dims") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow!("field \"dims\" must be an array of integers"))?
+            .iter()
+            .map(|d| {
+                let n = d.as_f64().unwrap_or(-1.0);
+                if n.is_finite() && n >= 1.0 && n.fract() == 0.0 {
+                    Ok(n as u64)
+                } else {
+                    Err(anyhow!("every dim must be an integer ≥ 1"))
+                }
+            })
+            .collect::<Result<Vec<u64>>>()?,
+    };
+    let cold_dram = match root.get("cold_dram") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_bool()
+                .ok_or_else(|| anyhow!("field \"cold_dram\" must be a boolean"))?,
+        ),
+    };
+    Ok(CompileRequest {
+        id: root.get("id").cloned().unwrap_or(Json::Null),
+        bench,
+        dtype,
+        dims,
+        max_aies: get_u64(&root, "max_aies")?,
+        mover_bits: get_u64(&root, "mover_bits")?,
+        cold_dram,
+    })
+}
+
+/// Materialize the request's recurrence from the benchmark library,
+/// validating arity and benchmark-specific constraints (so malformed
+/// requests become protocol errors, never panics inside a worker).
+pub fn request_recurrence(req: &CompileRequest) -> Result<UniformRecurrence> {
+    let dims = |n: usize, default: &[u64]| -> Result<Vec<u64>> {
+        if req.dims.is_empty() {
+            Ok(default.to_vec())
+        } else if req.dims.len() == n {
+            Ok(req.dims.clone())
+        } else {
+            bail!(
+                "bench {:?} takes {} dims, got {}",
+                req.bench,
+                n,
+                req.dims.len()
+            )
+        }
+    };
+    Ok(match req.bench.as_str() {
+        "mm" => {
+            let d = dims(3, &[8192, 8192, 8192])?;
+            library::mm(d[0], d[1], d[2], req.dtype)
+        }
+        "conv2d" => {
+            let d = dims(4, &[10240, 10240, 4, 4])?;
+            if d[2] > d[0] || d[3] > d[1] {
+                bail!("conv2d kernel ({}x{}) larger than image ({}x{})", d[2], d[3], d[0], d[1]);
+            }
+            library::conv2d(d[0], d[1], d[2], d[3], req.dtype)
+        }
+        "fir" => {
+            let d = dims(2, &[1048576, 15])?;
+            if d[1] > d[0] {
+                bail!("fir taps ({}) exceed signal length ({})", d[1], d[0]);
+            }
+            library::fir(d[0], d[1], req.dtype)
+        }
+        "fft2d" => {
+            let d = dims(2, &[8192, 8192])?;
+            if !req.dtype.is_complex() {
+                bail!("fft2d requires a complex dtype (cf32|ci16), got {}", req.dtype);
+            }
+            if !d[1].is_power_of_two() || d[1] < 2 {
+                bail!("fft2d cols must be a power of two ≥ 2, got {}", d[1]);
+            }
+            library::fft2d(d[0], d[1], req.dtype)
+        }
+        other => bail!("unknown bench {other:?} (mm|conv2d|fir|fft2d)"),
+    })
+}
+
+/// Render a success response line (no trailing newline).
+pub fn response_line(
+    id: &Json,
+    key: u64,
+    outcome: CacheOutcome,
+    design: &CompiledDesign,
+    wall_s: f64,
+) -> String {
+    let est = &design.estimate_exact;
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(true)),
+        ("cached", Json::Bool(outcome == CacheOutcome::Hit)),
+        ("deduped", Json::Bool(outcome == CacheOutcome::Deduped)),
+        ("key", Json::Str(format!("{key:016x}"))),
+        ("name", Json::Str(design.candidate.rec.name.clone())),
+        ("aies", Json::Num(est.aies as f64)),
+        ("tops", Json::Num(est.tops)),
+        ("tops_per_aie", Json::Num(est.tops_per_aie)),
+        ("bound", Json::Str(est.bound.to_string())),
+        ("sim_tops", Json::Num(design.sim.tops)),
+        ("pnr", Json::Bool(design.compile.success)),
+        ("congestion", Json::Num(design.compile.max_congestion as f64)),
+        ("in_ports", Json::Num(design.merge_stats.in_ports_after as f64)),
+        ("out_ports", Json::Num(design.merge_stats.out_ports_after as f64)),
+        ("wall_us", Json::Num(wall_s * 1e6)),
+    ])
+    .to_string()
+}
+
+/// Render an error response line (no trailing newline).
+pub fn error_line(id: &Json, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_request() {
+        let req = parse_request(
+            r#"{"id": 7, "bench": "mm", "dtype": "i8", "dims": [1024, 512, 256],
+                "max_aies": 100, "mover_bits": 128, "cold_dram": true}"#,
+        )
+        .unwrap();
+        assert_eq!(req.id, Json::Num(7.0));
+        assert_eq!(req.bench, "mm");
+        assert_eq!(req.dtype, DType::I8);
+        assert_eq!(req.dims, vec![1024, 512, 256]);
+        assert_eq!(req.max_aies, Some(100));
+        assert_eq!(req.mover_bits, Some(128));
+        assert_eq!(req.cold_dram, Some(true));
+        let rec = request_recurrence(&req).unwrap();
+        assert_eq!(rec.name, "mm_1024x512x256_Int8");
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let req = parse_request(r#"{"bench": "fft2d"}"#).unwrap();
+        assert_eq!(req.id, Json::Null);
+        assert_eq!(req.dtype, DType::CF32, "fft defaults complex");
+        let rec = request_recurrence(&req).unwrap();
+        assert!(rec.name.starts_with("fft2d_8192x8192"));
+
+        let req = parse_request(r#"{"bench": "fir"}"#).unwrap();
+        assert_eq!(req.dtype, DType::F32);
+        assert_eq!(request_recurrence(&req).unwrap().name, "fir_1048576x15_Float");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"[1,2]"#).is_err());
+        assert!(parse_request(r#"{"dtype":"f32"}"#).is_err(), "bench required");
+        assert!(parse_request(r#"{"bench":"mm","dims":[0,1,2]}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","dims":[1.5,2,3]}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","max_aies":-4}"#).is_err());
+
+        let bad_arity = parse_request(r#"{"bench":"mm","dims":[8,8]}"#).unwrap();
+        assert!(request_recurrence(&bad_arity).is_err());
+        let bad_bench = parse_request(r#"{"bench":"lu"}"#).unwrap();
+        assert!(request_recurrence(&bad_bench).is_err());
+        let real_fft = parse_request(r#"{"bench":"fft2d","dtype":"f32"}"#).unwrap();
+        assert!(request_recurrence(&real_fft).is_err());
+        let odd_fft = parse_request(r#"{"bench":"fft2d","dims":[64,100]}"#).unwrap();
+        assert!(request_recurrence(&odd_fft).is_err());
+    }
+
+    #[test]
+    fn error_line_round_trips() {
+        let line = error_line(&Json::Num(3.0), "no legal mapping for \"x\"");
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("no legal mapping"));
+    }
+}

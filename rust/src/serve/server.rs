@@ -1,0 +1,528 @@
+//! The long-lived compile service: [`ServeHandle`] (programmatic API)
+//! plus the stdin / TCP front-ends behind `widesa serve`.
+//!
+//! A request travels: canonical key ([`crate::serve::cache::design_key`])
+//! → sharded LRU cache probe → single-flight registration (concurrent
+//! identical requests compile **once**; followers block until the leader
+//! publishes) → cold compile with DSE candidate scoring sharded over the
+//! handle's dedicated worker pool → cache fill → response.
+//!
+//! Request handling and DSE scoring never share an executor — stdin
+//! requests run on their own [`WorkerPool`], TCP connections each get a
+//! thread, and scoring has the handle's dedicated pool — so a request
+//! waiting on scoring can never deadlock behind other request jobs
+//! (see [`crate::serve::pool`]).
+
+use crate::coordinator::framework::{CompiledDesign, WideSa, WideSaConfig};
+use crate::mapping::cost::{CostModel, PerfEstimate};
+use crate::mapping::dse::{self, Ranked};
+use crate::mapping::MappingCandidate;
+use crate::recurrence::spec::UniformRecurrence;
+use crate::serve::cache::{design_key, CacheStats, ShardedCache};
+use crate::serve::pool::WorkerPool;
+use crate::serve::protocol::{self, CompileRequest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// How a request was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Served straight from the design cache.
+    Hit,
+    /// This request compiled the design (the single-flight leader).
+    Miss,
+    /// Another in-flight request was already compiling the same key;
+    /// this one waited for it instead of compiling again.
+    Deduped,
+}
+
+/// One served compile: the shared design plus how it was obtained.
+pub struct ServeResult {
+    pub design: Arc<CompiledDesign>,
+    pub outcome: CacheOutcome,
+    /// Canonical design key (stable across server restarts).
+    pub key: u64,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Base compile configuration; per-request fields (`max_aies`,
+    /// `mover_bits`, `cold_dram`) override it.
+    pub base: WideSaConfig,
+    /// Total design-cache entries.
+    pub cache_capacity: usize,
+    /// Independent cache locks.
+    pub cache_shards: usize,
+    /// Worker threads sharding DSE candidate scoring per compile.
+    pub dse_threads: usize,
+    /// Worker threads running protocol requests (stdin / TCP loops).
+    pub request_workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map_or(4, |n| n.get());
+        Self {
+            base: WideSaConfig::default(),
+            cache_capacity: 64,
+            cache_shards: 8,
+            dse_threads: cores.clamp(1, 8),
+            request_workers: cores.clamp(1, 8),
+        }
+    }
+}
+
+/// Service statistics snapshot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub deduped: u64,
+    pub errors: u64,
+    pub cache: CacheStats,
+}
+
+/// A single-flight slot: the leader publishes here, followers wait.
+struct Flight {
+    /// `None` until resolved; errors travel as strings because
+    /// `anyhow::Error` is not `Clone` and every follower needs a copy.
+    slot: Mutex<Option<Result<Arc<CompiledDesign>, String>>>,
+    done: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Self {
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) -> Result<Arc<CompiledDesign>, String> {
+        let mut slot = self.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = self.done.wait(slot).unwrap();
+        }
+        slot.clone().unwrap()
+    }
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    cache: ShardedCache<Arc<CompiledDesign>>,
+    flights: Mutex<HashMap<u64, Arc<Flight>>>,
+    dse_pool: WorkerPool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    deduped: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Resolves a flight on drop so follower requests can never hang, even
+/// if the leader's compile panics.
+struct FlightGuard<'a> {
+    inner: &'a Inner,
+    key: u64,
+    flight: Arc<Flight>,
+    resolved: bool,
+}
+
+impl FlightGuard<'_> {
+    fn resolve(&mut self, result: Result<Arc<CompiledDesign>, String>) {
+        *self.flight.slot.lock().unwrap() = Some(result);
+        self.flight.done.notify_all();
+        self.inner.flights.lock().unwrap().remove(&self.key);
+        self.resolved = true;
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.resolved {
+            self.resolve(Err("compile panicked".into()));
+        }
+    }
+}
+
+/// The long-lived, thread-safe compile service. Cheap to clone (all
+/// clones share the cache, the in-flight table and the scoring pool), so
+/// one handle can serve stdin, a TCP listener and library callers at
+/// the same time.
+///
+/// ```
+/// use widesa::{library, CacheOutcome, DType, DseConstraints, ServeConfig, ServeHandle,
+///              WideSaConfig};
+///
+/// let handle = ServeHandle::new(ServeConfig {
+///     base: WideSaConfig {
+///         constraints: DseConstraints {
+///             max_aies: Some(32), // small budget keeps the doctest fast
+///             ..Default::default()
+///         },
+///         ..Default::default()
+///     },
+///     cache_capacity: 8,
+///     ..Default::default()
+/// });
+/// let rec = library::fir(65536, 15, DType::F32);
+/// let first = handle.compile(&rec).unwrap();
+/// assert_eq!(first.outcome, CacheOutcome::Miss);
+/// let second = handle.compile(&rec).unwrap();
+/// assert_eq!(second.outcome, CacheOutcome::Hit);
+/// // both requests share one compiled design
+/// assert!(std::sync::Arc::ptr_eq(&first.design, &second.design));
+/// ```
+#[derive(Clone)]
+pub struct ServeHandle {
+    inner: Arc<Inner>,
+}
+
+impl ServeHandle {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let cache = ShardedCache::new(cfg.cache_capacity, cfg.cache_shards);
+        let dse_pool = WorkerPool::new(cfg.dse_threads);
+        Self {
+            inner: Arc::new(Inner {
+                cfg,
+                cache,
+                flights: Mutex::new(HashMap::new()),
+                dse_pool,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                deduped: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.inner.cfg
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            deduped: self.inner.deduped.load(Ordering::Relaxed),
+            errors: self.inner.errors.load(Ordering::Relaxed),
+            cache: self.inner.cache.stats(),
+        }
+    }
+
+    /// Compile under the service's base configuration.
+    pub fn compile(&self, rec: &UniformRecurrence) -> Result<ServeResult> {
+        self.compile_with(rec, &self.inner.cfg.base)
+    }
+
+    /// Compile under an explicit configuration (cache-keyed on it).
+    pub fn compile_with(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Result<ServeResult> {
+        let key = design_key(rec, cfg);
+        let inner = &*self.inner;
+
+        if let Some(design) = inner.cache.get(key) {
+            inner.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(ServeResult {
+                design,
+                outcome: CacheOutcome::Hit,
+                key,
+            });
+        }
+
+        // Single-flight: exactly one thread becomes the leader for a key.
+        let (flight, leader) = {
+            let mut flights = inner.flights.lock().unwrap();
+            match flights.get(&key) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight::new());
+                    flights.insert(key, Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+
+        if !leader {
+            inner.deduped.fetch_add(1, Ordering::Relaxed);
+            return match flight.wait() {
+                Ok(design) => Ok(ServeResult {
+                    design,
+                    outcome: CacheOutcome::Deduped,
+                    key,
+                }),
+                Err(msg) => {
+                    inner.errors.fetch_add(1, Ordering::Relaxed);
+                    Err(anyhow!(msg))
+                }
+            };
+        }
+
+        let mut guard = FlightGuard {
+            inner,
+            key,
+            flight,
+            resolved: false,
+        };
+        // Leader double-check: between this thread's cache probe and its
+        // flight registration, a previous leader may have published (it
+        // fills the cache *before* deregistering its flight, so "no
+        // flight found" + "cache now full" is a completed compile, not a
+        // cold key). Without this, a request racing the tail of another
+        // compile would compile the same design twice.
+        if let Some(design) = inner.cache.get(key) {
+            inner.hits.fetch_add(1, Ordering::Relaxed);
+            guard.resolve(Ok(Arc::clone(&design)));
+            return Ok(ServeResult {
+                design,
+                outcome: CacheOutcome::Hit,
+                key,
+            });
+        }
+        inner.misses.fetch_add(1, Ordering::Relaxed);
+        let compiled = self.cold_compile(rec, cfg);
+        let published: Result<Arc<CompiledDesign>, String> = match &compiled {
+            Ok(design) => {
+                inner.cache.insert(key, Arc::clone(design));
+                Ok(Arc::clone(design))
+            }
+            Err(e) => {
+                inner.errors.fetch_add(1, Ordering::Relaxed);
+                Err(e.to_string())
+            }
+        };
+        guard.resolve(published);
+        compiled.map(|design| ServeResult {
+            design,
+            outcome: CacheOutcome::Miss,
+            key,
+        })
+    }
+
+    /// The cold path: DSE with candidate scoring scattered over the
+    /// handle's worker pool (deterministic merge — identical ranking to
+    /// the serial `explore_all`), then the framework back half.
+    fn cold_compile(
+        &self,
+        rec: &UniformRecurrence,
+        cfg: &WideSaConfig,
+    ) -> Result<Arc<CompiledDesign>> {
+        let ranked = self.explore_all_pooled(rec, cfg);
+        let ws = WideSa::new(cfg.clone());
+        ws.compile_ranked(rec, ranked).map(Arc::new)
+    }
+
+    /// `explore_all` with per-candidate scoring as pool jobs. Results
+    /// come back in submission (= enumeration) order via
+    /// [`WorkerPool::scatter`], then go through the canonical
+    /// [`dse::rank`] — bit-identical to the serial path.
+    fn explore_all_pooled(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Ranked {
+        if self.inner.dse_pool.workers() <= 1 {
+            return dse::explore_all(rec, &cfg.board, &cfg.constraints);
+        }
+        let mut plan = dse::plan(rec, &cfg.board, &cfg.constraints);
+        let choices = std::mem::take(&mut plan.choices);
+        if choices.len() <= 1 {
+            return dse::score_serial(rec, &cfg.board, &cfg.constraints, &plan, choices);
+        }
+        // Pool jobs are 'static: share the invariants behind Arcs.
+        type ScoreJob = Box<dyn FnOnce() -> Option<(MappingCandidate, PerfEstimate)> + Send>;
+        let rec = Arc::new(rec.clone());
+        let model = Arc::new(CostModel::new(cfg.board.clone()));
+        let cons = Arc::new(cfg.constraints.clone());
+        let plan = Arc::new(plan);
+        let jobs: Vec<ScoreJob> = choices
+            .into_iter()
+            .map(|choice| {
+                let (rec, model, cons, plan) =
+                    (Arc::clone(&rec), Arc::clone(&model), Arc::clone(&cons), Arc::clone(&plan));
+                Box::new(move || dse::score_choice(&rec, &model, &cons, &plan, choice))
+                    as ScoreJob
+            })
+            .collect();
+        let scored = self.inner.dse_pool.scatter(jobs);
+        dse::rank(scored.into_iter().flatten().collect())
+    }
+
+    /// Effective per-request configuration: the base with the request's
+    /// overrides applied.
+    pub fn effective_config(&self, req: &CompileRequest) -> WideSaConfig {
+        let mut cfg = self.inner.cfg.base.clone();
+        if let Some(aies) = req.max_aies {
+            cfg.constraints.max_aies = Some(aies);
+        }
+        if let Some(bits) = req.mover_bits {
+            cfg.mover_bits = bits;
+        }
+        if let Some(cold) = req.cold_dram {
+            cfg.cold_dram = cold;
+        }
+        cfg
+    }
+
+    /// Handle one protocol line end-to-end; always returns a response
+    /// line (success, protocol error, or — if the compile itself
+    /// panicked — an error carrying the request's own id), never panics
+    /// outward. The one-response-per-request contract holds even for the
+    /// single-flight leader whose compile dies: followers get the
+    /// `FlightGuard` error, the leader's requester gets this one.
+    pub fn handle_line(&self, line: &str) -> String {
+        let req = match protocol::parse_request(line) {
+            Ok(req) => req,
+            Err(e) => return protocol::error_line(&crate::util::json::Json::Null, &e.to_string()),
+        };
+        let rec = match protocol::request_recurrence(&req) {
+            Ok(rec) => rec,
+            Err(e) => return protocol::error_line(&req.id, &e.to_string()),
+        };
+        let cfg = self.effective_config(&req);
+        let t0 = Instant::now();
+        let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.compile_with(&rec, &cfg)
+        }));
+        match compiled {
+            Ok(Ok(res)) => protocol::response_line(
+                &req.id,
+                res.key,
+                res.outcome,
+                &res.design,
+                t0.elapsed().as_secs_f64(),
+            ),
+            Ok(Err(e)) => protocol::error_line(&req.id, &e.to_string()),
+            Err(_) => protocol::error_line(&req.id, "internal error: compile panicked"),
+        }
+    }
+}
+
+/// Serve JSON-lines over stdin/stdout until EOF. Requests run
+/// concurrently on the request pool; every request read gets a response
+/// before this returns (pool drop joins).
+pub fn serve_stdin(handle: &ServeHandle) -> Result<()> {
+    let pool = WorkerPool::new(handle.config().request_workers);
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let handle = handle.clone();
+        pool.execute(move || {
+            // println! takes the stdout lock per call: one response per
+            // line, never interleaved mid-line.
+            println!("{}", handle.handle_line(&line));
+        });
+    }
+    drop(pool); // join: flush every pending response
+    Ok(())
+}
+
+/// Serve JSON-lines over TCP: one thread per connection (connections are
+/// few and spend their life blocked on reads — parking one on a
+/// fixed-size pool would let `request_workers` idle keep-alive clients
+/// starve every later connection), one request/response pair per line,
+/// until the peer closes. Per-request work still shares the handle's
+/// design cache, single-flight table and DSE pool. Runs forever.
+pub fn serve_tcp(handle: &ServeHandle, listener: TcpListener) -> Result<()> {
+    if let Ok(addr) = listener.local_addr() {
+        eprintln!("widesa serve: listening on {addr}");
+    }
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            let _ = serve_connection(&handle, stream);
+        });
+    }
+    Ok(())
+}
+
+fn serve_connection(handle: &ServeHandle, stream: TcpStream) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = std::io::BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        writeln!(writer, "{}", handle.handle_line(&line))?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::dse::{explore_all, DseConstraints};
+    use crate::recurrence::{dtype::DType, library};
+
+    fn small_cfg() -> WideSaConfig {
+        WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(64),
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn miss_then_hit_shares_one_design() {
+        let handle = ServeHandle::new(ServeConfig {
+            base: small_cfg(),
+            ..Default::default()
+        });
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let a = handle.compile(&rec).unwrap();
+        assert_eq!(a.outcome, CacheOutcome::Miss);
+        let b = handle.compile(&rec).unwrap();
+        assert_eq!(b.outcome, CacheOutcome::Hit);
+        assert_eq!(a.key, b.key);
+        assert!(Arc::ptr_eq(&a.design, &b.design));
+        let stats = handle.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
+    }
+
+    #[test]
+    fn pooled_dse_matches_serial_ranking() {
+        let handle = ServeHandle::new(ServeConfig {
+            dse_threads: 4,
+            ..Default::default()
+        });
+        let cfg = WideSaConfig::default();
+        for rec in [
+            library::mm(2048, 2048, 2048, DType::F32),
+            library::fir(65536, 15, DType::I16),
+        ] {
+            let serial = explore_all(&rec, &cfg.board, &cfg.constraints);
+            let pooled = handle.explore_all_pooled(&rec, &cfg);
+            assert_eq!(serial.len(), pooled.len());
+            for (s, p) in serial.iter().zip(&pooled) {
+                assert_eq!(s.0.summary(), p.0.summary());
+                assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn failed_compile_reports_error_and_is_not_cached() {
+        let handle = ServeHandle::new(ServeConfig::default());
+        // rank-1 recurrence with a single iteration: the DSE has no
+        // space loops with extent > 1, so no legal mapping exists.
+        let rec = library::fir(1, 1, DType::F32);
+        let err = handle.compile(&rec);
+        // whether this errors or degenerately maps, the service must not
+        // be wedged afterwards: a follow-up normal request still works.
+        let ok = handle.compile(&library::fir(65536, 15, DType::F32));
+        assert!(ok.is_ok());
+        if err.is_err() {
+            assert_eq!(handle.stats().errors, 1);
+        }
+        assert!(handle.inner.flights.lock().unwrap().is_empty(), "no leaked flights");
+    }
+}

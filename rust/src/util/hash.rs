@@ -1,0 +1,126 @@
+//! Stable 64-bit hashing (FNV-1a) for canonical keys.
+//!
+//! `std::hash::DefaultHasher` makes no cross-version (or cross-process,
+//! with randomized state) stability promise, but the serve layer's design
+//! cache keys are part of the wire protocol — a client that remembers a
+//! key must get the same design back from a restarted server. FNV-1a is
+//! tiny, allocation-free and bit-for-bit reproducible everywhere.
+
+/// FNV-1a 64-bit incremental hasher.
+///
+/// ```
+/// use widesa::util::hash::Fnv64;
+///
+/// let mut h = Fnv64::new();
+/// h.write_str("mm");
+/// h.write_u64(8192);
+/// let a = h.finish();
+/// // Same inputs, same key — across runs and machines.
+/// let mut h2 = Fnv64::new();
+/// h2.write_str("mm");
+/// h2.write_u64(8192);
+/// assert_eq!(a, h2.finish());
+/// ```
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Hash an `f64` by its bit pattern (exact, no epsilon games — two
+    /// configs are "the same" only if their floats are identical).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_u8(v as u8);
+    }
+
+    /// Length-prefixed so `("ab","c")` and `("a","bc")` hash differently.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        let mut h = Fnv64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn order_and_boundaries_matter() {
+        let mut ab_c = Fnv64::new();
+        ab_c.write_str("ab");
+        ab_c.write_str("c");
+        let mut a_bc = Fnv64::new();
+        a_bc.write_str("a");
+        a_bc.write_str("bc");
+        assert_ne!(ab_c.finish(), a_bc.finish());
+    }
+
+    #[test]
+    fn floats_hash_by_bits() {
+        let mut a = Fnv64::new();
+        a.write_f64(0.1 + 0.2);
+        let mut b = Fnv64::new();
+        b.write_f64(0.3);
+        // 0.1+0.2 != 0.3 in f64 — distinct bit patterns, distinct keys.
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn empty_is_offset_basis() {
+        assert_eq!(Fnv64::new().finish(), 0xcbf2_9ce4_8422_2325);
+    }
+}

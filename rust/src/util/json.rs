@@ -1,5 +1,6 @@
-//! Minimal JSON parser (objects, arrays, strings, numbers, booleans,
-//! null) — enough to read `artifacts/manifest.json` without a serde
+//! Minimal JSON parser and writer (objects, arrays, strings, numbers,
+//! booleans, null) — enough to read `artifacts/manifest.json` and to
+//! speak the `serve` subsystem's JSON-lines protocol without a serde
 //! dependency (the offline vendor set has none).
 
 use std::collections::BTreeMap;
@@ -52,6 +53,71 @@ impl Json {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Build an object from key/value pairs (keys sort alphabetically —
+    /// `BTreeMap` — so rendered output is canonical).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+}
+
+/// Render with JSON string escaping.
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\t' => write!(f, "\\t")?,
+            '\r' => write!(f, "\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+/// Compact (single-line) rendering; `parse(v.to_string())` round-trips.
+/// Non-finite numbers (which JSON cannot represent) render as `null`.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) if !n.is_finite() => write!(f, "null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
         }
     }
 }
@@ -287,5 +353,34 @@ mod tests {
     fn unicode_passthrough() {
         let v = parse("\"héllo → wörld\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo → wörld"));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let v = Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("n", Json::Num(1.5)),
+            ("id", Json::Num(7.0)),
+            ("msg", Json::Str("a\"b\\c\nd".into())),
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Null])),
+        ]);
+        let s = v.to_string();
+        assert_eq!(parse(&s).unwrap(), v);
+        // integral floats render without a decimal point
+        assert!(s.contains("\"id\":7"));
+        assert!(s.contains("\"n\":1.5"));
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn render_escapes_control_chars() {
+        let s = Json::Str("\u{1}tab\there".into()).to_string();
+        assert_eq!(s, "\"\\u0001tab\\there\"");
+        assert_eq!(parse(&s).unwrap().as_str(), Some("\u{1}tab\there"));
     }
 }

@@ -1,6 +1,8 @@
-//! Small shared utilities: deterministic PRNG, integer math, formatting.
+//! Small shared utilities: deterministic PRNG, integer math, formatting,
+//! stable hashing and a dependency-free JSON reader/writer.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod math;
 pub mod rng;

@@ -1,0 +1,208 @@
+//! Integration tests for the `widesa::serve` subsystem: cache behaviour,
+//! single-flight deduplication under concurrent requests, determinism of
+//! the parallel DSE against the serial reference, and protocol
+//! round-trips through the real service.
+
+use std::sync::Arc;
+use widesa::mapping::dse::{explore_all, explore_all_parallel, DseConstraints};
+use widesa::recurrence::library;
+use widesa::serve::cache::design_key;
+use widesa::serve::{CacheOutcome, ServeConfig, ServeHandle};
+use widesa::util::json::{parse, Json};
+use widesa::{DType, DseConstraints as Cons, WideSaConfig};
+
+fn capped(max_aies: u64) -> WideSaConfig {
+    WideSaConfig {
+        constraints: Cons {
+            max_aies: Some(max_aies),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn small_handle() -> ServeHandle {
+    ServeHandle::new(ServeConfig {
+        base: capped(64),
+        cache_capacity: 16,
+        cache_shards: 4,
+        dse_threads: 4,
+        request_workers: 4,
+    })
+}
+
+#[test]
+fn cache_hit_returns_identical_design() {
+    let handle = small_handle();
+    let rec = library::mm(1024, 1024, 1024, DType::F32);
+    let miss = handle.compile(&rec).unwrap();
+    assert_eq!(miss.outcome, CacheOutcome::Miss);
+    let hit = handle.compile(&rec).unwrap();
+    assert_eq!(hit.outcome, CacheOutcome::Hit);
+    assert!(Arc::ptr_eq(&miss.design, &hit.design));
+    assert_eq!(miss.key, hit.key);
+    // and the key matches the standalone derivation
+    assert_eq!(miss.key, design_key(&rec, &capped(64)));
+}
+
+#[test]
+fn different_configs_get_different_cache_entries() {
+    let handle = small_handle();
+    let rec = library::fir(65536, 15, DType::F32);
+    let a = handle.compile_with(&rec, &capped(32)).unwrap();
+    let b = handle.compile_with(&rec, &capped(64)).unwrap();
+    assert_ne!(a.key, b.key);
+    assert_eq!(a.outcome, CacheOutcome::Miss);
+    assert_eq!(b.outcome, CacheOutcome::Miss);
+    assert!(!Arc::ptr_eq(&a.design, &b.design));
+    // both now cached
+    assert_eq!(
+        handle.compile_with(&rec, &capped(32)).unwrap().outcome,
+        CacheOutcome::Hit
+    );
+    assert_eq!(
+        handle.compile_with(&rec, &capped(64)).unwrap().outcome,
+        CacheOutcome::Hit
+    );
+}
+
+#[test]
+fn cache_eviction_recompiles_evicted_key() {
+    // capacity 1 × 1 shard: the second distinct design evicts the first
+    let handle = ServeHandle::new(ServeConfig {
+        base: capped(32),
+        cache_capacity: 1,
+        cache_shards: 1,
+        dse_threads: 2,
+        request_workers: 2,
+    });
+    let rec_a = library::fir(65536, 15, DType::F32);
+    let rec_b = library::fir(131072, 15, DType::F32);
+    assert_eq!(handle.compile(&rec_a).unwrap().outcome, CacheOutcome::Miss);
+    assert_eq!(handle.compile(&rec_b).unwrap().outcome, CacheOutcome::Miss);
+    // rec_a was evicted: compiling it again is a miss, rec_b stays hot
+    assert_eq!(handle.compile(&rec_a).unwrap().outcome, CacheOutcome::Miss);
+    let stats = handle.stats();
+    assert_eq!(stats.misses, 3);
+    assert!(stats.cache.evictions >= 2);
+}
+
+#[test]
+fn single_flight_dedups_concurrent_identical_requests() {
+    let handle = small_handle();
+    let rec = library::mm(1024, 1024, 1024, DType::I16);
+    const N: usize = 8;
+    let results: Vec<_> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..N {
+            let handle = handle.clone();
+            let rec = rec.clone();
+            joins.push(s.spawn(move || handle.compile(&rec).unwrap()));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    // exactly one thread compiled; everyone shares that one design
+    let stats = handle.stats();
+    assert_eq!(stats.misses, 1, "single-flight must compile once");
+    assert_eq!(stats.hits + stats.deduped, (N - 1) as u64);
+    for r in &results {
+        assert!(Arc::ptr_eq(&results[0].design, &r.design));
+        assert_eq!(r.key, results[0].key);
+    }
+    assert_eq!(
+        results.iter().filter(|r| r.outcome == CacheOutcome::Miss).count(),
+        1
+    );
+}
+
+#[test]
+fn parallel_dse_matches_serial_on_all_library_recurrences() {
+    // Acceptance criterion: identical winning candidate (and in fact the
+    // identical full ranking) on every Table II recurrence.
+    let cfg = WideSaConfig::default();
+    let cons = DseConstraints::default();
+    for rec in library::table2_benchmarks() {
+        let serial = explore_all(&rec, &cfg.board, &cons);
+        let parallel = explore_all_parallel(&rec, &cfg.board, &cons, 4);
+        assert_eq!(serial.len(), parallel.len(), "{}", rec.name);
+        assert!(!serial.is_empty(), "{}: no candidates", rec.name);
+        let (sw, se) = &serial[0];
+        let (pw, pe) = &parallel[0];
+        assert_eq!(sw.summary(), pw.summary(), "{}: winner differs", rec.name);
+        assert_eq!(
+            se.tops.to_bits(),
+            pe.tops.to_bits(),
+            "{}: winner estimate differs",
+            rec.name
+        );
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.0.summary(), p.0.summary(), "{}: ranking differs", rec.name);
+        }
+    }
+}
+
+#[test]
+fn protocol_round_trip_through_service() {
+    let handle = small_handle();
+    let line = r#"{"id": 42, "bench": "mm", "dtype": "f32", "dims": [1024, 1024, 1024], "max_aies": 64}"#;
+    let resp = handle.handle_line(line);
+    let v = parse(&resp).expect("response is valid JSON");
+    assert_eq!(v.get("id").unwrap().as_f64(), Some(42.0));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        v.get("name").unwrap().as_str(),
+        Some("mm_1024x1024x1024_Float")
+    );
+    assert!(v.get("tops").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("aies").unwrap().as_u64().unwrap() <= 64);
+    assert_eq!(v.get("key").unwrap().as_str().unwrap().len(), 16);
+
+    // the same request again is served from cache
+    let resp2 = handle.handle_line(line);
+    let v2 = parse(&resp2).unwrap();
+    assert_eq!(v2.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        v2.get("key").unwrap().as_str(),
+        v.get("key").unwrap().as_str()
+    );
+
+    // malformed requests produce protocol errors, not panics
+    let err = handle.handle_line("{\"bench\": \"lu\"}");
+    let ev = parse(&err).unwrap();
+    assert_eq!(ev.get("ok").unwrap().as_bool(), Some(false));
+    assert!(ev.get("error").unwrap().as_str().unwrap().contains("lu"));
+    let err2 = handle.handle_line("not json at all");
+    assert_eq!(parse(&err2).unwrap().get("ok").unwrap().as_bool(), Some(false));
+}
+
+#[test]
+fn tcp_front_end_serves_requests() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let handle = small_handle();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let handle = handle.clone();
+        // serve_tcp loops forever; park it on a detached thread (the
+        // process exit at the end of the test run reaps it).
+        std::thread::spawn(move || {
+            let _ = widesa::serve::serve_tcp(&handle, listener);
+        });
+    }
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(
+        stream,
+        "{}",
+        r#"{"id": "tcp-1", "bench": "fir", "dims": [65536, 15], "max_aies": 32}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = parse(line.trim()).unwrap();
+    assert_eq!(v.get("id").unwrap().as_str(), Some("tcp-1"));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+}

@@ -1,0 +1,148 @@
+//! Registry-sync test: the three places that must agree on the artifact
+//! set — the python `VARIANTS` table (`python/compile/model.py`), the
+//! rust builtin manifest (`Manifest::builtin()`), and the stub executor's
+//! dispatch — are checked against each other here, so a variant added or
+//! renamed in one place fails CI instead of failing at runtime (the
+//! ROADMAP's "three places in sync" hazard).
+
+use std::collections::BTreeSet;
+use widesa::runtime::artifact::Manifest;
+use widesa::runtime::stub::StubExecutable;
+
+fn model_py() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../python/compile/model.py");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {path} (repo layout changed?): {e}"))
+}
+
+/// Extract the `VARIANTS = { ... }` block.
+fn variants_block(src: &str) -> &str {
+    let start = src
+        .find("VARIANTS = {")
+        .expect("model.py no longer defines VARIANTS");
+    let rest = &src[start..];
+    // the table is a top-level dict: it ends at the first column-0 brace
+    let end = rest.find("\n}").expect("unterminated VARIANTS dict");
+    &rest[..end]
+}
+
+/// `"name": (...)` keys of the VARIANTS dict, in order.
+fn variant_names(block: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for line in block.lines() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix('"') {
+            if let Some(q) = rest.find('"') {
+                if rest[q + 1..].trim_start().starts_with(':') {
+                    names.push(rest[..q].to_string());
+                }
+            }
+        }
+    }
+    names
+}
+
+/// The integer arguments of each variant's example-argument factory call
+/// (e.g. `_mm_args(256, 256, 256, jnp.float32)` → `("_mm_args", [256,
+/// 256, 256], "float32")`).
+fn factory_call(block: &str, name: &str) -> (String, Vec<usize>, String) {
+    let line = block
+        .lines()
+        .find(|l| l.trim_start().starts_with(&format!("\"{name}\"")))
+        .unwrap_or_else(|| panic!("no VARIANTS line for {name}"));
+    let lambda = line
+        .split("lambda:")
+        .nth(1)
+        .unwrap_or_else(|| panic!("{name}: no argument factory lambda"));
+    let open = lambda.find('(').expect("factory call");
+    let func = lambda[..open].trim().to_string();
+    let close = lambda[open..].find(')').expect("factory call close") + open;
+    let args = &lambda[open + 1..close];
+    let mut ints = Vec::new();
+    let mut dtype = String::new();
+    for a in args.split(',') {
+        let a = a.trim();
+        if let Ok(v) = a.parse::<usize>() {
+            ints.push(v);
+        } else if let Some(d) = a.strip_prefix("jnp.") {
+            dtype = d.to_string();
+        }
+    }
+    (func, ints, dtype)
+}
+
+/// Input signature the python factory produces, mirrored in rust (the
+/// same shape arithmetic as model.py's `_*_args` helpers).
+fn expected_inputs(func: &str, ints: &[usize]) -> Vec<Vec<usize>> {
+    match func {
+        "_mm_args" => {
+            let (n, m, k) = (ints[0], ints[1], ints[2]);
+            vec![vec![n, k], vec![k, m], vec![n, m]]
+        }
+        "_conv_args" => {
+            let (h, w, p, q) = (ints[0], ints[1], ints[2], ints[3]);
+            vec![vec![h + p - 1, w + q - 1], vec![p, q], vec![h, w]]
+        }
+        "_fir_args" => {
+            let (n, taps) = (ints[0], ints[1]);
+            vec![vec![n + taps - 1], vec![taps]]
+        }
+        "_fir_c_args" => {
+            let (n, taps) = (ints[0], ints[1]);
+            vec![
+                vec![n + taps - 1],
+                vec![n + taps - 1],
+                vec![taps],
+                vec![taps],
+            ]
+        }
+        "_fft_args" => {
+            let (b, n) = (ints[0], ints[1]);
+            vec![vec![b, n], vec![b, n]]
+        }
+        other => panic!("unknown factory {other} — extend this test"),
+    }
+}
+
+#[test]
+fn builtin_manifest_matches_python_variants() {
+    let src = model_py();
+    let block = variants_block(&src);
+    let python: BTreeSet<String> = variant_names(block).into_iter().collect();
+    assert!(
+        !python.is_empty(),
+        "parsed zero VARIANTS keys — parser out of date with model.py?"
+    );
+    let builtin: BTreeSet<String> = Manifest::builtin().artifacts.keys().cloned().collect();
+    assert_eq!(
+        python, builtin,
+        "python VARIANTS and Manifest::builtin() disagree"
+    );
+}
+
+#[test]
+fn builtin_shapes_match_python_factories() {
+    let src = model_py();
+    let block = variants_block(&src);
+    let manifest = Manifest::builtin();
+    for name in variant_names(block) {
+        let (func, ints, dtype) = factory_call(block, &name);
+        let spec = manifest.get(&name).unwrap();
+        let want = expected_inputs(&func, &ints);
+        let got: Vec<Vec<usize>> = spec.inputs.iter().map(|t| t.shape.clone()).collect();
+        assert_eq!(got, want, "{name}: input shapes disagree with model.py");
+        for t in spec.inputs.iter().chain(&spec.outputs) {
+            assert_eq!(t.dtype, dtype, "{name}: dtype disagrees with model.py");
+        }
+    }
+}
+
+#[test]
+fn stub_dispatches_every_variant() {
+    let manifest = Manifest::builtin();
+    for (name, spec) in &manifest.artifacts {
+        let exe = StubExecutable::compile(spec)
+            .unwrap_or_else(|e| panic!("stub has no dispatch arm for {name}: {e}"));
+        assert_eq!(exe.name(), name);
+    }
+}
