@@ -10,7 +10,7 @@
 ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 
-.PHONY: build test bench doc artifacts serve-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke rank-smoke clean
 
 build:
 	cargo build --release
@@ -32,6 +32,12 @@ serve-smoke: build
 	@grep -Eq '"(cached|deduped)":true' $(SERVE_SMOKE_OUT) \
 	  || { echo "serve-smoke FAILED: duplicate request was neither cached nor deduplicated"; cat $(SERVE_SMOKE_OUT); exit 1; }
 	@echo "serve-smoke OK (3 responses, duplicate amortized)"
+
+# Gate the exact-port ranking: scoring a candidate with exact merged
+# port counts must cost ≤ 2× the legacy analytic score (bench_rank exits
+# non-zero above the bound).
+rank-smoke:
+	cargo bench --bench bench_rank
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

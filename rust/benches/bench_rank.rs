@@ -1,0 +1,97 @@
+//! Bench: the cost of ranking on the truth.
+//!
+//! The DSE prices every candidate with exact merged-PLIO port counts
+//! (`PortModel::Exact`, via the incremental predictor) instead of the
+//! legacy analytic packing. That exactness must stay cheap: this binary
+//! *enforces* that scoring a candidate under the exact model costs at
+//! most 2× the analytic score on the MM workload, and exits non-zero
+//! above the bound. It also reports where the two rankings diverge, so a
+//! perf run doubles as an A/B sanity check.
+//!
+//! Run with `cargo bench --bench bench_rank` (or `make rank-smoke`).
+
+use widesa::arch::vck5000::BoardConfig;
+use widesa::graph::builder::build;
+use widesa::graph::packet::{merge_ports_with_budget, predict_ports};
+use widesa::mapping::cost::{CostModel, PortModel};
+use widesa::mapping::dse::{self, explore_all, DseConstraints};
+use widesa::recurrence::library;
+use widesa::util::bench::bench;
+use widesa::DType;
+
+fn main() {
+    let board = BoardConfig::vck5000();
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    let rec = library::mm(8192, 8192, 8192, DType::F32);
+    let plan = dse::plan(&rec, &board, &cons);
+    let n = plan.choices.len().max(1);
+    let exact_model = CostModel::new(board.clone());
+    let analytic_model = CostModel::new(board.clone()).with_port_model(PortModel::Analytic);
+
+    println!("== rank: exact-port vs analytic candidate scoring (MM, {n} candidates) ==");
+    let exact = bench("rank/score-all exact", 300, || {
+        for choice in &plan.choices {
+            std::hint::black_box(dse::score_choice(&rec, &exact_model, &cons, &plan, choice.clone()));
+        }
+    });
+    let analytic = bench("rank/score-all analytic", 300, || {
+        for choice in &plan.choices {
+            std::hint::black_box(dse::score_choice(
+                &rec,
+                &analytic_model,
+                &cons,
+                &plan,
+                choice.clone(),
+            ));
+        }
+    });
+    let per_exact = exact.median_s / n as f64;
+    let per_analytic = analytic.median_s / n as f64;
+    let ratio = per_exact / per_analytic.max(1e-12);
+    println!(
+        "per-candidate score: exact {:.3} µs vs analytic {:.3} µs → {ratio:.2}× overhead",
+        per_exact * 1e6,
+        per_analytic * 1e6,
+    );
+
+    // A/B divergence report: where does exactness change the ranking?
+    let exact_rank = explore_all(&rec, &board, &cons);
+    let analytic_rank = explore_all(
+        &rec,
+        &board,
+        &DseConstraints {
+            analytic_ranking: true,
+            ..cons.clone()
+        },
+    );
+    let diverged = exact_rank
+        .iter()
+        .zip(&analytic_rank)
+        .filter(|(e, a)| e.0.summary() != a.0.summary())
+        .count();
+    println!("ranking positions where exact and analytic disagree: {diverged}/{}", exact_rank.len());
+
+    // Sanity: the exact winner's predicted ports equal the real merge.
+    if let Some((winner, est)) = exact_rank.first() {
+        let g = build(winner, &exact_model);
+        let (_, stats) = merge_ports_with_budget(&g, exact_model.channel_bw(), 78, 78);
+        let predicted = predict_ports(winner, &exact_model, exact_model.channel_bw(), 78, 78);
+        assert_eq!(predicted, stats, "predictor diverged from merge on the winner");
+        println!(
+            "winner: {} ports {}/{} (est {:.3} TOPS)",
+            winner.summary(),
+            stats.in_ports_after,
+            stats.out_ports_after,
+            est.tops
+        );
+    }
+
+    if ratio > 2.0 {
+        eprintln!("FAIL: exact-count ranking adds {ratio:.2}× > 2× per-candidate overhead");
+        std::process::exit(1);
+    }
+    println!("\nbench_rank OK (exact ranking ≤ 2× analytic per candidate)");
+}

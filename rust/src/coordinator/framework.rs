@@ -8,14 +8,36 @@ use crate::codegen::{self, CodeBundle};
 use crate::graph::builder::{build, MappedGraph};
 use crate::graph::packet::{merge_ports_with_budget, MergeStats};
 use crate::mapping::cost::{CostModel, PerfEstimate};
-use crate::mapping::dse::{explore_all, explore_all_parallel, DseConstraints};
+use crate::mapping::dse::{explore_all, explore_all_parallel, scoring_model, DseConstraints};
 use crate::mapping::MappingCandidate;
 use crate::place_route::compiler::{compile, CompileOutcome};
 use crate::recurrence::spec::UniformRecurrence;
 use crate::sim::engine::{simulate, SimConfig};
 use crate::sim::metrics::SimReport;
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 use std::sync::Arc;
+
+/// How many ranked candidates the framework back half will take through
+/// place & route before settling for the best-ranked failure.
+pub const FALLBACK_CANDIDATES: usize = 8;
+
+/// Typed error: the DSE produced no legal candidate (a tiny recurrence
+/// with no space loops, or [`DseConstraints`] too tight to fit a single
+/// core). Travels as the source of the returned [`anyhow::Error`], so
+/// callers can `err.downcast_ref::<NoLegalMapping>()` instead of matching
+/// message text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NoLegalMapping {
+    pub recurrence: String,
+}
+
+impl std::fmt::Display for NoLegalMapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "no legal mapping for {}", self.recurrence)
+    }
+}
+
+impl std::error::Error for NoLegalMapping {}
 
 /// Framework configuration.
 #[derive(Debug, Clone)]
@@ -26,9 +48,12 @@ pub struct WideSaConfig {
     pub mover_bits: u64,
     /// Simulate cold-DRAM end-to-end in the sim report.
     pub cold_dram: bool,
-    /// Threads to shard DSE candidate scoring across (1 = serial). The
-    /// parallel path returns bit-identical rankings — see
-    /// [`explore_all_parallel`].
+    /// Threads to shard DSE candidate scoring **and** the framework back
+    /// half (P&R per fallback candidate) across (1 = serial). Both
+    /// parallel paths are deterministic: scoring returns bit-identical
+    /// rankings ([`explore_all_parallel`]) and the back half picks the
+    /// same design as the serial first-success loop
+    /// ([`WideSa::select_design`]).
     pub dse_threads: usize,
 }
 
@@ -47,12 +72,18 @@ impl Default for WideSaConfig {
 /// Everything the framework produces for one recurrence.
 pub struct CompiledDesign {
     pub candidate: MappingCandidate,
-    /// Analytic performance estimate (the DSE's ranking view).
+    /// The DSE's ranking view of this design, re-priced under the
+    /// framework's mover configuration. Under the default
+    /// [`crate::mapping::cost::PortModel::Exact`] this already uses the
+    /// predicted merged port counts.
     pub estimate: PerfEstimate,
-    /// The same model evaluated with the *exact* merged PLIO port counts
-    /// of [`CompiledDesign::merge_stats`] — the estimate that agrees with
-    /// what place & route actually sees. For compute-bound designs this
-    /// matches [`CompiledDesign::estimate`]; it diverges exactly when
+    /// The same model evaluated with the merged PLIO port counts that
+    /// packet merging *actually realised* on the built graph
+    /// ([`CompiledDesign::merge_stats`]). Under
+    /// [`crate::mapping::cost::PortModel::Exact`] the
+    /// predictor is bit-identical to the merge, so this coincides with
+    /// [`CompiledDesign::estimate`]; under the legacy analytic ranking
+    /// ([`DseConstraints::analytic_ranking`]) it diverges exactly when
     /// port packing is the binding resource.
     pub estimate_exact: PerfEstimate,
     pub graph: MappedGraph,
@@ -145,68 +176,173 @@ impl WideSa {
         self.compile(rec).map(Arc::new)
     }
 
+    /// The cost model this framework prices with: the DSE's
+    /// [`scoring_model`] (exact merged counts unless
+    /// [`DseConstraints::analytic_ranking`] asks for the legacy A/B
+    /// ranking) under this framework's mover width — one construction
+    /// site, so the back half can never price with a different port
+    /// model than the ranking used. Shared with the serve layer's pooled
+    /// back half.
+    pub fn cost_model(&self) -> CostModel {
+        scoring_model(&self.config.board, &self.config.constraints)
+            .with_mover_bits(self.config.mover_bits)
+    }
+
+    /// Take one ranked candidate through the framework back half: graph
+    /// build, packet merge, exact re-pricing, place & route, simulation
+    /// and code generation. A pure function of its inputs — shardable
+    /// across threads or a worker pool with no ordering concerns.
+    pub fn evaluate_candidate(
+        &self,
+        model: &CostModel,
+        candidate: MappingCandidate,
+    ) -> CompiledDesign {
+        // re-estimate under this framework's mover configuration (the
+        // DSE ranking assumes the default 512-bit movers)
+        let estimate = model.estimate(&candidate);
+        let raw = build(&candidate, model);
+        let (graph, merge_stats) = merge_ports_with_budget(
+            &raw,
+            model.channel_bw(),
+            self.config.board.plio.in_channels as usize,
+            self.config.board.plio.out_channels as usize,
+        );
+        // post-merge re-pricing: same model, with the port counts the
+        // packet-switch merge actually realised (== `estimate` under the
+        // exact port model; diverges under the legacy analytic ranking)
+        let estimate_exact = model.estimate_with_ports(
+            &candidate,
+            merge_stats.in_ports_after as u64,
+            merge_stats.out_ports_after as u64,
+        );
+        let compile_out = compile(&graph, &self.config.board);
+        let (sim, _) = simulate(
+            &candidate,
+            model,
+            &SimConfig {
+                cold_dram: self.config.cold_dram,
+                keep_trace: false,
+            },
+        );
+        let code = codegen::generate(&candidate, &graph, &compile_out);
+        CompiledDesign {
+            candidate,
+            estimate,
+            estimate_exact,
+            graph,
+            merge_stats,
+            compile: compile_out,
+            sim,
+            code,
+        }
+    }
+
+    /// Deterministic first-success selection over rank-ordered evaluated
+    /// designs: the best-ranked candidate that passed place & route, else
+    /// the best-ranked failure as the diagnostic fallback. Shared by the
+    /// scoped-thread and serve-pool back halves so every driver returns
+    /// the same design the serial short-circuit loop would, regardless of
+    /// scheduling.
+    pub fn select_design(mut designs: Vec<CompiledDesign>) -> Option<CompiledDesign> {
+        if designs.is_empty() {
+            return None;
+        }
+        let pos = designs.iter().position(|d| d.compile.success).unwrap_or(0);
+        Some(designs.swap_remove(pos))
+    }
+
     /// The back half of [`WideSa::compile`]: take an already-ranked
     /// candidate list (from any `explore_all` variant — serial, scoped
     /// threads, or the serve layer's worker pool) through graph build,
     /// port merging, place & route, simulation and codegen.
+    ///
+    /// With `dse_threads > 1` the top candidate is evaluated eagerly
+    /// (the common first-success case costs exactly one evaluation, like
+    /// the serial loop); only when it fails P&R are the remaining
+    /// fallback candidates evaluated concurrently on scoped threads, and
+    /// [`WideSa::select_design`] picks the same design the serial
+    /// first-success loop would. Returns a typed [`NoLegalMapping`] error
+    /// when the DSE produced no candidates.
     pub fn compile_ranked(
         &self,
         rec: &UniformRecurrence,
         ranked: Vec<(MappingCandidate, PerfEstimate)>,
     ) -> Result<CompiledDesign> {
-        let model =
-            CostModel::new(self.config.board.clone()).with_mover_bits(self.config.mover_bits);
-        if ranked.is_empty() {
-            return Err(anyhow!("no legal mapping for {}", rec.name));
-        }
-        let mut fallback: Option<CompiledDesign> = None;
-        for (candidate, _) in ranked.into_iter().take(8) {
-            // re-estimate under this framework's mover configuration (the
-            // DSE ranking assumes the default 512-bit movers)
-            let estimate = model.estimate(&candidate);
-            let raw = build(&candidate, &model);
-            let (graph, merge_stats) = merge_ports_with_budget(
-                &raw,
-                model.channel_bw(),
-                self.config.board.plio.in_channels as usize,
-                self.config.board.plio.out_channels as usize,
-            );
-            // exact-port estimate: same model, but with the port counts
-            // the packet-switch merge actually realised
-            let estimate_exact = model.estimate_with_ports(
-                &candidate,
-                merge_stats.in_ports_after as u64,
-                merge_stats.out_ports_after as u64,
-            );
-            let compile_out = compile(&graph, &self.config.board);
-            let success = compile_out.success;
-            let (sim, _) = simulate(
-                &candidate,
-                &model,
-                &SimConfig {
-                    cold_dram: self.config.cold_dram,
-                    keep_trace: false,
-                },
-            );
-            let code = codegen::generate(&candidate, &graph, &compile_out);
-            let design = CompiledDesign {
-                candidate,
-                estimate,
-                estimate_exact,
-                graph,
-                merge_stats,
-                compile: compile_out,
-                sim,
-                code,
-            };
-            if success {
-                return Ok(design);
+        let model = self.cost_model();
+        let mut top: Vec<MappingCandidate> = ranked
+            .into_iter()
+            .take(FALLBACK_CANDIDATES)
+            .map(|(candidate, _)| candidate)
+            .collect();
+        if self.config.dse_threads <= 1 || top.len() <= 1 {
+            // serial path: short-circuits at the first success without
+            // evaluating lower-ranked candidates
+            let mut fallback: Option<CompiledDesign> = None;
+            for candidate in top {
+                let design = self.evaluate_candidate(&model, candidate);
+                if design.compile.success {
+                    return Ok(design);
+                }
+                if fallback.is_none() {
+                    fallback = Some(design);
+                }
             }
-            if fallback.is_none() {
-                fallback = Some(design);
-            }
+            return fallback.ok_or_else(|| {
+                NoLegalMapping {
+                    recurrence: rec.name.clone(),
+                }
+                .into()
+            });
         }
-        Ok(fallback.expect("at least one candidate evaluated"))
+        // Evaluate the top-ranked candidate first: in the common case it
+        // passes P&R and speculatively evaluating the fallbacks would be
+        // pure waste (slower than the serial short-circuit).
+        let first = self.evaluate_candidate(&model, top.remove(0));
+        if first.compile.success || top.is_empty() {
+            return Ok(first);
+        }
+        let mut designs = self.evaluate_all(&model, top);
+        designs.insert(0, first);
+        Self::select_design(designs).ok_or_else(|| {
+            NoLegalMapping {
+                recurrence: rec.name.clone(),
+            }
+            .into()
+        })
+    }
+
+    /// Evaluate every candidate's back half sharded over
+    /// `config.dse_threads` scoped threads, results in rank order.
+    fn evaluate_all(
+        &self,
+        model: &CostModel,
+        candidates: Vec<MappingCandidate>,
+    ) -> Vec<CompiledDesign> {
+        let threads = self.config.dse_threads.min(candidates.len()).max(1);
+        let indexed: Vec<(usize, MappingCandidate)> =
+            candidates.into_iter().enumerate().collect();
+        let chunk = indexed.len().div_ceil(threads);
+        let mut slots: Vec<Option<CompiledDesign>> = Vec::new();
+        slots.resize_with(indexed.len(), || None);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for shard in indexed.chunks(chunk) {
+                handles.push(s.spawn(move || {
+                    shard
+                        .iter()
+                        .map(|(i, candidate)| {
+                            (*i, self.evaluate_candidate(model, candidate.clone()))
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, design) in h.join().expect("P&R shard panicked") {
+                    slots[i] = Some(design);
+                }
+            }
+        });
+        slots.into_iter().flatten().collect()
     }
 }
 
@@ -292,6 +428,113 @@ mod tests {
         assert!(d.estimate_exact.tops > 0.0);
         let report = d.report();
         assert!(report.contains("exact"));
+    }
+
+    #[test]
+    fn empty_candidate_list_is_a_typed_error() {
+        // max_aies = 0 rejects every candidate (a single core already
+        // exceeds the budget), so the DSE hands the back half an empty
+        // ranking — previously a panic site, now a typed error.
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(0),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let err = ws
+            .compile(&library::mm(64, 64, 64, DType::F32))
+            .expect_err("no candidate fits a 0-AIE budget");
+        let typed = err
+            .downcast_ref::<NoLegalMapping>()
+            .expect("error should be typed NoLegalMapping");
+        assert!(typed.recurrence.starts_with("mm_64x64x64"));
+        assert!(err.to_string().contains("no legal mapping"));
+        // the sharded back half returns the same typed error
+        let ws_par = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(0),
+                ..Default::default()
+            },
+            dse_threads: 4,
+            ..Default::default()
+        });
+        let err = ws_par
+            .compile(&library::mm(64, 64, 64, DType::F32))
+            .expect_err("parallel path must error identically");
+        assert!(err.downcast_ref::<NoLegalMapping>().is_some());
+    }
+
+    #[test]
+    fn sharded_back_half_matches_serial_selection() {
+        // 512³ exercises the fallback (top-ranked candidate fails P&R);
+        // 2048³ exercises the first-success fast path. Both must pick the
+        // identical design with and without back-half sharding.
+        for rec in [
+            library::mm(512, 512, 512, DType::F32),
+            library::mm(2048, 2048, 2048, DType::F32),
+        ] {
+            let mk = |threads: usize| {
+                WideSa::new(WideSaConfig {
+                    constraints: DseConstraints {
+                        max_aies: Some(400),
+                        ..Default::default()
+                    },
+                    dse_threads: threads,
+                    ..Default::default()
+                })
+            };
+            let serial = mk(1).compile(&rec).unwrap();
+            for threads in [2, 4, 16] {
+                let sharded = mk(threads).compile(&rec).unwrap();
+                assert_eq!(
+                    serial.candidate.summary(),
+                    sharded.candidate.summary(),
+                    "{} × {threads} threads",
+                    rec.name
+                );
+                assert_eq!(serial.compile.success, sharded.compile.success);
+                assert_eq!(serial.merge_stats, sharded.merge_stats);
+                assert_eq!(serial.estimate.tops.to_bits(), sharded.estimate.tops.to_bits());
+                assert_eq!(
+                    serial.estimate_exact.tops.to_bits(),
+                    sharded.estimate_exact.tops.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ranking_estimate_coincides_with_post_merge_exact() {
+        // the one-port-model invariant at the framework level: under the
+        // default exact port model, the estimate the DSE ranked with IS
+        // the post-merge exact estimate
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        for rec in [
+            library::mm(8192, 8192, 8192, DType::F32),
+            library::conv2d(1024, 1024, 4, 4, DType::I16),
+            library::fir(65536, 15, DType::F32),
+        ] {
+            let d = ws.compile(&rec).unwrap();
+            assert_eq!(
+                d.estimate.plio_in_ports, d.estimate_exact.plio_in_ports,
+                "{}",
+                rec.name
+            );
+            assert_eq!(d.estimate.plio_out_ports, d.estimate_exact.plio_out_ports);
+            assert_eq!(
+                d.estimate.tops.to_bits(),
+                d.estimate_exact.tops.to_bits(),
+                "{}: ranked estimate must equal post-merge exact estimate",
+                rec.name
+            );
+        }
     }
 
     #[test]

@@ -68,6 +68,60 @@ impl MappedGraph {
     }
 }
 
+/// Per-stream sustained PLIO rates of `cand`'s mapped graph — exactly the
+/// rates [`build`] stamps on its stream edges, computed without the graph.
+/// Shared with [`crate::graph::packet::predict_ports`] so the incremental
+/// port predictor can never diverge from the built graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PortRates {
+    /// Systolic MM: row feeds (`a`), column feeds (`b`), per-core drains
+    /// (`c`).
+    Systolic { a: f64, b: f64, c: f64 },
+    /// Private-stream families (Conv2d / FIR / FFT): one input and one
+    /// output stream per core at the same sustained rate, plus one
+    /// zero-rate broadcast input per replica.
+    Private { rate: f64 },
+}
+
+/// Derive the per-stream rates for `cand` from the cost model's step time
+/// (the mover shape and kernel-level calibration both enter through
+/// `model`).
+pub fn stream_rates(cand: &MappingCandidate, model: &CostModel) -> PortRates {
+    let core = &model.board.array.core;
+    let eff = crate::mapping::cost::issue_efficiency(cand.kind, cand.rec.dtype)
+        * cand.latency.efficiency(core);
+    let step_s = cand.scope.core_macs.max(1) as f64
+        / (core.macs_per_cycle(cand.rec.dtype) as f64 * core.freq_hz * eff);
+    let b = cand.rec.dtype.bytes();
+    let t = &cand.scope.core_factors;
+    match cand.kind {
+        Kind::Mm => {
+            let a_rate = (t[0] * t[2] * b) as f64 / step_s;
+            let b_rate = (t[2] * t[1] * b) as f64 / step_s;
+            let steps = cand.time_steps_per_round().max(1);
+            let c_rate = (t[0] * t[1] * b) as f64 / (step_s * steps as f64);
+            PortRates::Systolic {
+                a: a_rate,
+                b: b_rate,
+                c: c_rate,
+            }
+        }
+        Kind::Conv2d | Kind::Fir | Kind::Fft2d => {
+            let unique_in = match cand.kind {
+                Kind::Conv2d => t[0] * t[1] * b,
+                Kind::Fir => t[0] * b,
+                _ => {
+                    let cols = cand.rec.domain.dims[3].extent * 2;
+                    cols * b
+                }
+            };
+            PortRates::Private {
+                rate: unique_in as f64 / step_s,
+            }
+        }
+    }
+}
+
 /// Build the mapped graph for `cand` (one round of the physical array,
 /// all threading replicas included).
 pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
@@ -79,14 +133,8 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
         ..Default::default()
     };
 
-    // Per-step stream rates from the cost model's step time.
-    let core = &model.board.array.core;
-    let eff = crate::mapping::cost::issue_efficiency(cand.kind, cand.rec.dtype)
-        * cand.latency.efficiency(core);
-    let step_s = cand.scope.core_macs.max(1) as f64
-        / (core.macs_per_cycle(cand.rec.dtype) as f64 * core.freq_hz * eff);
-    let b = cand.rec.dtype.bytes();
-    let t = &cand.scope.core_factors;
+    // Per-step stream rates shared with the port predictor.
+    let rates = stream_rates(cand, model);
 
     // 1D partitions fold serpentine into (r, c) but may not fill the last
     // row: build exactly `active` cores per replica.
@@ -113,12 +161,25 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
 
         match cand.kind {
             Kind::Mm => {
-                let a_rate = (t[0] * t[2] * b) as f64 / step_s;
-                let b_rate = (t[2] * t[1] * b) as f64 / step_s;
-                let steps = cand.time_steps_per_round().max(1);
-                let c_rate = (t[0] * t[1] * b) as f64 / (step_s * steps as f64);
+                let PortRates::Systolic {
+                    a: a_rate,
+                    b: b_rate,
+                    c: c_rate,
+                } = rates
+                else {
+                    unreachable!("MM candidates have systolic rates");
+                };
+                // The serpentine fold fills row-major, so a partially
+                // filled box (1D spaces whose extent is not a multiple of
+                // the column count) leaves absent slots only as a suffix
+                // of the last row: column 0 of every row and all of row 0
+                // always hold cores, and chain walks stop at the first
+                // absent slot.
                 // A flows east along rows; enters at column 0.
                 for i in 0..r as usize {
+                    if ids[i][0] == usize::MAX {
+                        continue;
+                    }
                     let p = g.add_node(
                         NodeKind::Plio { dir: PlioDir::In },
                         format!("A_in_r{rep}_{i}"),
@@ -126,6 +187,9 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                     g.edges
                         .push(Edge::new(p, ids[i][0], EdgeKind::Stream, "A", DepKind::Read, a_rate));
                     for j in 0..c as usize - 1 {
+                        if ids[i][j + 1] == usize::MAX {
+                            break;
+                        }
                         g.edges.push(Edge::new(
                             ids[i][j],
                             ids[i][j + 1],
@@ -138,6 +202,9 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                 }
                 // B flows south along columns; enters at row 0.
                 for j in 0..c as usize {
+                    if ids[0][j] == usize::MAX {
+                        continue;
+                    }
                     let p = g.add_node(
                         NodeKind::Plio { dir: PlioDir::In },
                         format!("B_in_r{rep}_{j}"),
@@ -145,6 +212,9 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                     g.edges
                         .push(Edge::new(p, ids[0][j], EdgeKind::Stream, "B", DepKind::Read, b_rate));
                     for i in 0..r as usize - 1 {
+                        if ids[i + 1][j] == usize::MAX {
+                            break;
+                        }
                         g.edges.push(Edge::new(
                             ids[i][j],
                             ids[i + 1][j],
@@ -159,6 +229,9 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                 // the output dependence terminates at a PLIO port).
                 for i in 0..r as usize {
                     for j in 0..c as usize {
+                        if ids[i][j] == usize::MAX {
+                            continue;
+                        }
                         let p = g.add_node(
                             NodeKind::Plio { dir: PlioDir::Out },
                             format!("C_out_r{rep}_{i}_{j}"),
@@ -182,15 +255,9 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                     Kind::Fir => ("x", "y", "h"),
                     _ => ("row", "row_out", "W"),
                 };
-                let unique_in = match cand.kind {
-                    Kind::Conv2d => t[0] * t[1] * b,
-                    Kind::Fir => t[0] * b,
-                    _ => {
-                        let cols = cand.rec.domain.dims[3].extent * 2;
-                        cols * b
-                    }
+                let PortRates::Private { rate } = rates else {
+                    unreachable!("private-stream candidates have private rates");
                 };
-                let rate = unique_in as f64 / step_s;
                 let bc = g.add_node(
                     NodeKind::Plio { dir: PlioDir::In },
                     format!("{bc_name}_bcast_r{rep}"),

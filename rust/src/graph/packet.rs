@@ -5,11 +5,22 @@
 //! ports via packet switching: streams whose combined sustained rate fits
 //! within a port's usable bandwidth share a `packet_group`, and the
 //! merged graph keeps one PLIO node per group.
+//!
+//! [`predict_ports`] is the *incremental* counterpart: it computes the
+//! [`MergeStats`] this pass would realise for a candidate directly from
+//! the candidate's space-time transform and mover shape — bit-identical
+//! to [`merge_ports_with_budget`] on the built graph, but without
+//! materializing any graph. The DSE ranks every candidate with it
+//! (see [`crate::mapping::cost::PortModel`]), which is what closes the
+//! analytic-vs-exact port gap the paper's §IV routing-aware assignment
+//! depends on.
 
-use super::builder::MappedGraph;
+use super::builder::{stream_rates, MappedGraph, PortRates};
 use super::edge::EdgeKind;
 use super::node::{NodeId, NodeKind};
 use crate::arch::plio::PlioDir;
+use crate::mapping::candidate::MappingCandidate;
+use crate::mapping::cost::CostModel;
 
 /// Usable fraction of a port's bandwidth when packet-switched (header +
 /// arbitration overhead).
@@ -174,6 +185,129 @@ pub fn merge_ports_with_budget(
     (out, stats)
 }
 
+/// Predict the exact [`MergeStats`] that [`merge_ports_with_budget`]
+/// produces for `cand`'s built graph, **without materializing the graph**
+/// — the cheap incremental port count the DSE ranks candidates with.
+///
+/// The prediction replays the packing loop over a synthesized port
+/// sequence in the builder's locality-sort order, using the same
+/// per-stream rates ([`stream_rates`]) the builder stamps on edges, so
+/// the result is bit-identical to merging the real graph (validated on
+/// every candidate of all 14 Table II recurrences — see
+/// `tests/divergence_corpus.rs`). Cost is O(ports) with no allocation
+/// beyond one small rate vector for the mixed-rate MM input side.
+pub fn predict_ports(
+    cand: &MappingCandidate,
+    model: &CostModel,
+    port_bw: f64,
+    in_budget: usize,
+    out_budget: usize,
+) -> MergeStats {
+    let (r, c) = cand.replica_shape();
+    let f = cand.threading.factor.max(1) as usize;
+    let active = cand.partition.active_aies() as usize;
+    let cap = port_bw * PACKET_UTIL;
+    match stream_rates(cand, model) {
+        PortRates::Systolic { a, b, c: c_rate } => {
+            let (r, c) = (r as usize, c as usize);
+            // Input side mixes two rate classes (A row feeds, B column
+            // feeds), so replay the packing over the exact sorted
+            // sequence. Locality keys are (col, row) of the fed core:
+            // A_i feeds (i, 0) → key (0, i); B_j feeds (0, j) → key
+            // (j, 0). Sorted stably, with node order breaking ties:
+            //   key (0,0): A_0, B_0 of each replica in replica order,
+            //   keys (0,i) i≥1: A_i per replica,
+            //   keys (j,0) j≥1: B_j per replica.
+            let n_in = (r + c) * f;
+            let mut rates = Vec::with_capacity(n_in);
+            for _ in 0..f {
+                rates.push(a);
+                rates.push(b);
+            }
+            for _ in 1..r {
+                for _ in 0..f {
+                    rates.push(a);
+                }
+            }
+            for _ in 1..c {
+                for _ in 0..f {
+                    rates.push(b);
+                }
+            }
+            let in_after = pack_count(&rates, forced_fanin(n_in, in_budget), cap);
+            // Output side: one C drain per core, all at one rate — the
+            // bin count is order-independent.
+            let n_out = active * f;
+            let out_after = equal_rate_bins(n_out, c_rate, forced_fanin(n_out, out_budget), cap);
+            MergeStats {
+                in_ports_before: n_in,
+                in_ports_after: in_after,
+                out_ports_before: n_out,
+                out_ports_after: out_after,
+            }
+        }
+        PortRates::Private { rate } => {
+            // One private in + out stream per core at one rate; the
+            // zero-rate broadcast port per replica is never merged and
+            // survives into the merged graph's input count.
+            let n = active * f;
+            let bcast = if active > 0 { f } else { 0 };
+            let in_after = equal_rate_bins(n, rate, forced_fanin(n, in_budget), cap) + bcast;
+            let out_after = equal_rate_bins(n, rate, forced_fanin(n, out_budget), cap);
+            MergeStats {
+                in_ports_before: n + bcast,
+                in_ports_after: in_after,
+                out_ports_before: n,
+                out_ports_after: out_after,
+            }
+        }
+    }
+}
+
+/// Minimum fan-in forced by the channel budget — the same expression
+/// [`merge_ports_with_budget`] applies to its sorted port list.
+fn forced_fanin(len: usize, budget: usize) -> usize {
+    len.div_ceil(budget.max(1)).clamp(1, MAX_FANIN)
+}
+
+/// Replay the merge's first-fit packing over a pre-sorted rate sequence,
+/// returning the bin (= merged port) count. Float accumulation order is
+/// identical to the merge loop's, so the counts cannot drift.
+fn pack_count(sorted: &[f64], forced_fanin: usize, cap: f64) -> usize {
+    let mut bins = 0usize;
+    let mut used = 0f64;
+    let mut members = 0usize;
+    for &rate in sorted {
+        let fits =
+            bins > 0 && members < MAX_FANIN && (members < forced_fanin || used + rate <= cap);
+        if fits {
+            used += rate;
+            members += 1;
+        } else {
+            bins += 1;
+            used = rate;
+            members = 1;
+        }
+    }
+    bins
+}
+
+/// Bin count when every stream has the same rate: each bin fills
+/// identically, so simulating one bin's fill (≤ [`MAX_FANIN`] additions,
+/// same accumulation as the merge loop) gives the uniform bin size.
+fn equal_rate_bins(n: usize, rate: f64, forced_fanin: usize, cap: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut used = rate;
+    let mut members = 1usize;
+    while members < MAX_FANIN && (members < forced_fanin || used + rate <= cap) {
+        used += rate;
+        members += 1;
+    }
+    n.div_ceil(members)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +377,63 @@ mod tests {
             assert!(e.src < g0.nodes.len());
             assert!(e.dst < g0.nodes.len());
             assert_eq!(g0.nodes[e.src].id, e.src);
+        }
+    }
+
+    #[test]
+    fn predictor_matches_merge_on_representative_designs() {
+        // bit-identical predictor vs real merge across workload families
+        // and budgets (the full Table II sweep lives in
+        // tests/divergence_corpus.rs)
+        let board = BoardConfig::vck5000();
+        for (rec, cap) in [
+            (library::mm(8192, 8192, 8192, DType::F32), 400u64),
+            (library::mm(2048, 2048, 2048, DType::I8), 400),
+            (library::conv2d(10240, 10240, 8, 8, DType::I8), 400),
+            (library::fir(1048576, 15, DType::F32), 256),
+            (library::fft2d(8192, 8192, DType::CF32), 320),
+        ] {
+            let cons = DseConstraints {
+                max_aies: Some(cap),
+                ..Default::default()
+            };
+            let (cand, _) = explore(&rec, &board, &cons).unwrap();
+            let model = CostModel::new(board.clone());
+            let g = build(&cand, &model);
+            for (in_b, out_b) in [(78usize, 78usize), (16, 16), (4, 4)] {
+                let (_, stats) = merge_ports_with_budget(&g, model.channel_bw(), in_b, out_b);
+                let predicted = predict_ports(&cand, &model, model.channel_bw(), in_b, out_b);
+                assert_eq!(
+                    predicted, stats,
+                    "{} budget {}x{}: predicted != merged",
+                    rec.name, in_b, out_b
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predictor_is_exact_for_every_candidate_shape() {
+        // sweep *all* DSE candidates of a small MM — this covers 1D
+        // serpentine folds (possibly with a partial last row) and
+        // threading replicas > 1, where the replica-interleaved sort
+        // order is hardest to get right
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let model = CostModel::new(board.clone());
+        for rec in [
+            library::mm(512, 512, 512, DType::F32),
+            library::conv2d(1024, 1024, 4, 4, DType::I16),
+        ] {
+            for (cand, _) in crate::mapping::dse::explore_all(&rec, &board, &cons) {
+                let g = build(&cand, &model);
+                let (_, stats) = merge_ports_with_budget(&g, model.channel_bw(), 78, 78);
+                let predicted = predict_ports(&cand, &model, model.channel_bw(), 78, 78);
+                assert_eq!(predicted, stats, "{}", cand.summary());
+            }
         }
     }
 

@@ -57,6 +57,12 @@
 //! [`ServeHandle`] caches designs by canonical key and deduplicates
 //! concurrent identical requests; `widesa serve --stdin` exposes the
 //! same thing as a JSON-lines process (see [`serve`]).
+//!
+//! The DSE ranks candidates on **exact merged-PLIO port counts**
+//! ([`PortModel::Exact`], via the incremental predictor in
+//! [`graph::packet`]) — the same counts packet merging realises and the
+//! simulator prices — so one consistent port model runs end to end; see
+//! the README's cost-model section.
 
 pub mod arch;
 pub mod baselines;
@@ -74,7 +80,8 @@ pub mod serve;
 pub mod sim;
 pub mod util;
 
-pub use coordinator::framework::{CompiledDesign, WideSa, WideSaConfig};
+pub use coordinator::framework::{CompiledDesign, NoLegalMapping, WideSa, WideSaConfig};
+pub use mapping::cost::PortModel;
 pub use mapping::dse::DseConstraints;
 pub use recurrence::{dtype::DType, library, spec::UniformRecurrence};
 pub use serve::{CacheOutcome, ServeConfig, ServeHandle, ServeResult, ServeStats};

@@ -30,6 +30,14 @@
 //! WideSA's DMA module constructor widens movers to 512 bit for
 //! bandwidth-hungry designs (the Table III operating points); the
 //! conservative 128-bit mover is what the Figure 6 sweeps exercise.
+//!
+//! **One port model.** By default ([`PortModel::Exact`]) the PLIO port
+//! counts entering the estimate are the *exact* packet-merge results,
+//! computed incrementally per candidate by
+//! [`crate::graph::packet::predict_ports`] — so the DSE ranking, the
+//! simulator and the framework's post-merge re-pricing all agree on one
+//! port model. The legacy analytic packing survives behind
+//! [`PortModel::Analytic`] for A/B comparison.
 
 use crate::arch::vck5000::BoardConfig;
 use crate::mapping::candidate::{Kind, MappingCandidate};
@@ -113,12 +121,33 @@ pub fn issue_efficiency(kind: Kind, dtype: DType) -> f64 {
 pub const MAX_PACKET_FANIN_EDGE: u64 = 4;
 pub const MAX_PACKET_FANIN_PRIVATE: u64 = 8;
 
+/// Which PLIO port-count model [`CostModel::estimate`] prices designs
+/// with — the **one-port-model invariant** knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PortModel {
+    /// Exact packet-merge counts from the incremental predictor
+    /// ([`crate::graph::packet::predict_ports`]), bit-identical to what
+    /// [`crate::graph::packet::merge_ports_with_budget`] realises on the
+    /// built graph. The default: the DSE ranking, the simulator and the
+    /// framework's published estimates all price one consistent port
+    /// model, so the ranking can never crown a design whose merged ports
+    /// blow the budget while a cheaper-ported rival existed.
+    #[default]
+    Exact,
+    /// The legacy analytic stream-class packing — the pre-unification
+    /// ranking, kept for A/B comparison
+    /// ([`crate::mapping::dse::DseConstraints::analytic_ranking`]).
+    Analytic,
+}
+
 #[derive(Debug, Clone)]
 pub struct CostModel {
     pub board: BoardConfig,
     /// PL-side DMA mover datapath width in bits (the DMA module
     /// constructor's choice): 512 for tuned designs, 128 conservative.
     pub mover_bits: u64,
+    /// Port-count model [`CostModel::estimate`] prices with.
+    pub ports: PortModel,
 }
 
 impl CostModel {
@@ -126,11 +155,17 @@ impl CostModel {
         Self {
             board,
             mover_bits: 512,
+            ports: PortModel::default(),
         }
     }
 
     pub fn with_mover_bits(mut self, bits: u64) -> Self {
         self.mover_bits = bits;
+        self
+    }
+
+    pub fn with_port_model(mut self, ports: PortModel) -> Self {
+        self.ports = ports;
         self
     }
 
@@ -142,9 +177,36 @@ impl CostModel {
         aie_side.min(pl_side)
     }
 
-    /// Score a candidate with the *analytic* port-packing estimate (the
-    /// DSE's view, where no mapped graph exists yet).
+    /// Score a candidate under the configured [`PortModel`].
+    ///
+    /// With [`PortModel::Exact`] (the default) the PLIO port counts come
+    /// from the incremental packet-merge predictor — the same counts
+    /// port merging will realise on the built graph — so no mapped graph
+    /// is needed and the estimate still agrees with what place & route
+    /// sees. [`PortModel::Analytic`] keeps the legacy stream-class
+    /// packing for A/B comparison.
     pub fn estimate(&self, cand: &MappingCandidate) -> PerfEstimate {
+        match self.ports {
+            PortModel::Exact => {
+                let stats = crate::graph::packet::predict_ports(
+                    cand,
+                    self,
+                    self.channel_bw(),
+                    self.board.plio.in_channels as usize,
+                    self.board.plio.out_channels as usize,
+                );
+                self.estimate_impl(
+                    cand,
+                    Some((stats.in_ports_after as u64, stats.out_ports_after as u64)),
+                )
+            }
+            PortModel::Analytic => self.estimate_impl(cand, None),
+        }
+    }
+
+    /// The legacy analytic port-packing estimate, regardless of the
+    /// configured [`PortModel`].
+    pub fn estimate_analytic(&self, cand: &MappingCandidate) -> PerfEstimate {
         self.estimate_impl(cand, None)
     }
 
@@ -588,6 +650,36 @@ mod tests {
         let clamped = model.estimate_with_ports(&cand, 10_000, 10_000);
         assert!(clamped.plio_in_ports <= 78);
         assert!(clamped.plio_out_ports <= 78);
+    }
+
+    #[test]
+    fn exact_is_default_and_flag_restores_analytic() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        let model = CostModel::new(board);
+        assert_eq!(model.ports, PortModel::Exact);
+        // the default estimate prices the predictor's merged counts
+        let exact = model.estimate(&cand);
+        let stats = crate::graph::packet::predict_ports(
+            &cand,
+            &model,
+            model.channel_bw(),
+            78,
+            78,
+        );
+        assert_eq!(exact.plio_in_ports as usize, stats.in_ports_after.clamp(1, 78));
+        assert_eq!(exact.plio_out_ports as usize, stats.out_ports_after.clamp(1, 78));
+        // the A/B flag reproduces the legacy analytic path bit-for-bit
+        let flagged = model.clone().with_port_model(PortModel::Analytic).estimate(&cand);
+        let legacy = model.estimate_analytic(&cand);
+        assert_eq!(flagged.tops.to_bits(), legacy.tops.to_bits());
+        assert_eq!(flagged.plio_in_ports, legacy.plio_in_ports);
+        assert_eq!(flagged.plio_out_ports, legacy.plio_out_ports);
     }
 
     #[test]

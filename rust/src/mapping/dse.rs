@@ -10,10 +10,17 @@
 //! [`explore_all`] (serial) and [`explore_all_parallel`] (scoped-thread
 //! sharding) are thin drivers over those three, as is the serve layer's
 //! worker-pool variant — all produce bit-identical rankings.
+//!
+//! Candidates are ranked on **exact merged-PLIO port counts** (the
+//! incremental predictor behind [`PortModel::Exact`], the
+//! [`scoring_model`] default), so the winner is priced exactly as packet
+//! merging and place & route will see it; set
+//! [`DseConstraints::analytic_ranking`] to A/B against the legacy
+//! analytic approximation.
 
 use crate::arch::vck5000::BoardConfig;
 use crate::mapping::candidate::{Kind, MappingCandidate};
-use crate::mapping::cost::{CostModel, PerfEstimate};
+use crate::mapping::cost::{CostModel, PerfEstimate, PortModel};
 use crate::mapping::latency::{self, LatencyHiding};
 use crate::mapping::partition::partition;
 use crate::mapping::spacetime::{self, SpaceTimeChoice};
@@ -31,6 +38,10 @@ pub struct DseConstraints {
     pub no_latency_hiding: bool,
     /// Disable multiple threading (ablation).
     pub no_threading: bool,
+    /// Rank with the legacy analytic port approximation instead of the
+    /// exact merged-port predictor (A/B comparison — see
+    /// [`PortModel`]).
+    pub analytic_ranking: bool,
 }
 
 impl DseConstraints {
@@ -45,6 +56,21 @@ impl DseConstraints {
         }
         h.write_bool(self.no_latency_hiding);
         h.write_bool(self.no_threading);
+        h.write_bool(self.analytic_ranking);
+    }
+}
+
+/// The cost model a DSE run scores with: exact merged-port pricing by
+/// default, the legacy analytic packing when
+/// [`DseConstraints::analytic_ranking`] is set. Every exploration driver
+/// (serial, scoped-thread, serve-pool) builds its model here, so the
+/// ranking port model cannot silently diverge between them.
+pub fn scoring_model(board: &BoardConfig, cons: &DseConstraints) -> CostModel {
+    let model = CostModel::new(board.clone());
+    if cons.analytic_ranking {
+        model.with_port_model(PortModel::Analytic)
+    } else {
+        model
     }
 }
 
@@ -156,7 +182,7 @@ pub fn score_serial(
     plan: &DsePlan,
     choices: Vec<SpaceTimeChoice>,
 ) -> Ranked {
-    let model = CostModel::new(board.clone());
+    let model = scoring_model(board, cons);
     let results = choices
         .into_iter()
         .filter_map(|choice| score_choice(rec, &model, cons, plan, choice))
@@ -197,7 +223,7 @@ pub fn explore_all_parallel(
     if choices.len() <= 1 {
         return score_serial(rec, board, cons, &p, choices);
     }
-    let model = CostModel::new(board.clone());
+    let model = scoring_model(board, cons);
     let indexed: Vec<(usize, SpaceTimeChoice)> = choices.into_iter().enumerate().collect();
     let chunk = indexed.len().div_ceil(threads);
     let mut slots: Vec<Option<(MappingCandidate, PerfEstimate)>> = Vec::new();
@@ -337,8 +363,16 @@ mod tests {
             ..Default::default()
         }
         .fingerprint(&mut ablated);
+        let mut analytic = Fnv64::new();
+        DseConstraints {
+            analytic_ranking: true,
+            ..Default::default()
+        }
+        .fingerprint(&mut analytic);
         assert_ne!(base.finish(), capped.finish());
         assert_ne!(base.finish(), ablated.finish());
         assert_ne!(capped.finish(), ablated.finish());
+        assert_ne!(base.finish(), analytic.finish());
+        assert_ne!(ablated.finish(), analytic.finish());
     }
 }

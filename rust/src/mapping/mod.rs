@@ -29,6 +29,6 @@ pub mod spacetime;
 pub mod threading;
 
 pub use candidate::MappingCandidate;
-pub use cost::{CostModel, PerfBound, PerfEstimate};
+pub use cost::{CostModel, PerfBound, PerfEstimate, PortModel};
 pub use dse::{explore, DseConstraints};
 pub use spacetime::SpaceTimeChoice;

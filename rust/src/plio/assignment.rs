@@ -75,14 +75,17 @@ pub fn assign(
     // (node, connected AIE columns) per PLIO, most-connected first.
     let mut ports: Vec<(NodeId, PlioDir, Vec<u32>)> = g
         .plio_nodes()
-        .map(|n| {
+        .filter_map(|n| {
+            // skip (don't panic on) anything that is not actually a PLIO
+            // port — same port-set invariant as `plio::sat`
+            let dir = n.plio_dir()?;
             let mut cols: Vec<u32> = g
                 .plio_neighbours(n.id)
                 .into_iter()
                 .filter_map(|a| placement.col(a))
                 .collect();
             cols.sort_unstable();
-            (n.id, n.plio_dir().unwrap(), cols)
+            Some((n.id, dir, cols))
         })
         .collect();
     ports.sort_by(|a, b| b.2.len().cmp(&a.2.len()).then(a.0.cmp(&b.0)));

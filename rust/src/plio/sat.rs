@@ -31,7 +31,13 @@ pub fn check(
         if !spec.columns.contains(&col) {
             return false;
         }
-        let dir = n.plio_dir().unwrap();
+        // a non-PLIO node in the port set constrains no channel — skip
+        // it rather than panic (unreachable from `plio_nodes`, but the
+        // port set invariant is worth asserting in debug builds)
+        let Some(dir) = n.plio_dir() else {
+            debug_assert!(false, "non-PLIO node {} in the PLIO port set", n.id);
+            continue;
+        };
         let u = used.entry((col, dir)).or_default();
         *u += 1;
         if *u > spec.channels_per_column {
@@ -43,6 +49,12 @@ pub fn check(
 }
 
 /// Backtracking search for a feasible assignment (small instances only).
+///
+/// Each port carries its direction from the moment the port set is built
+/// — the search never re-derives it by indexing `g.nodes`, so a graph
+/// whose node ids drifted from their indices (the historical vector for
+/// non-PLIO nodes leaking into the port set) degrades gracefully instead
+/// of panicking.
 pub fn exhaustive_assign(
     g: &MappedGraph,
     placement: &Placement,
@@ -50,11 +62,20 @@ pub fn exhaustive_assign(
     rc_west: u32,
     rc_east: u32,
 ) -> Option<HashMap<NodeId, u32>> {
-    let ports: Vec<NodeId> = g.plio_nodes().map(|n| n.id).collect();
+    let ports: Vec<(NodeId, PlioDir)> = g
+        .plio_nodes()
+        .filter_map(|n| match n.plio_dir() {
+            Some(dir) => Some((n.id, dir)),
+            None => {
+                debug_assert!(false, "non-PLIO node {} in the PLIO port set", n.id);
+                None
+            }
+        })
+        .collect();
     let mut columns = HashMap::new();
     fn bt(
         idx: usize,
-        ports: &[NodeId],
+        ports: &[(NodeId, PlioDir)],
         g: &MappedGraph,
         placement: &Placement,
         spec: &PlioSpec,
@@ -65,15 +86,14 @@ pub fn exhaustive_assign(
         if idx == ports.len() {
             return check(g, placement, columns, spec, rc_west, rc_east);
         }
+        let (id, dir) = ports[idx];
         for &col in &spec.columns {
-            columns.insert(ports[idx], col);
+            columns.insert(id, col);
             // prune: partial assignment must not already violate capacity
-            let dir = g.nodes[ports[idx]].plio_dir().unwrap();
-            let cap_ok = columns
+            // (only ports[..=idx] are assigned at this point)
+            let cap_ok = ports[..=idx]
                 .iter()
-                .filter(|(id, c)| {
-                    g.nodes[**id].plio_dir() == Some(dir) && **c == col
-                })
+                .filter(|(pid, pdir)| *pdir == dir && columns.get(pid) == Some(&col))
                 .count()
                 <= spec.channels_per_column as usize;
             if cap_ok
@@ -90,7 +110,7 @@ pub fn exhaustive_assign(
             {
                 return true;
             }
-            columns.remove(&ports[idx]);
+            columns.remove(&id);
         }
         false
     }
@@ -206,6 +226,25 @@ mod tests {
             cols.insert(n.id, 0u32); // all on column 0; capacity 1/dir
         }
         assert!(!check(&g, &p, &cols, &spec, 10, 10));
+    }
+
+    #[test]
+    fn stale_node_ids_do_not_panic_the_port_set() {
+        // Regression: a hand-built graph whose PLIO node id drifted from
+        // its index — the leak vector that used to surface a non-PLIO
+        // node in the port set and panic `plio_dir().unwrap()` when the
+        // search re-derived directions by indexing `g.nodes`. The search
+        // must terminate gracefully and stay consistent with its own
+        // checker; the greedy must not panic either.
+        let (mut g, p, spec) = toy();
+        g.nodes[4].id = 0; // "in0" now claims the id of an AIE node
+        if let Some(cols) = exhaustive_assign(&g, &p, &spec, 2, 2) {
+            assert!(check(&g, &p, &cols, &spec, 2, 2));
+        }
+        let greedy = assign(&g, &p, &spec, 2, 2);
+        // no panic is the contract; feasibility is whatever the corrupt
+        // topology implies
+        let _ = greedy.feasible;
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! A request travels: canonical key ([`crate::serve::cache::design_key`])
 //! → sharded LRU cache probe → single-flight registration (concurrent
 //! identical requests compile **once**; followers block until the leader
-//! publishes) → cold compile with DSE candidate scoring sharded over the
+//! publishes) → cold compile with DSE candidate scoring *and* the
+//! framework back half (P&R per fallback candidate) sharded over the
 //! handle's dedicated worker pool → cache fill → response.
 //!
 //! Request handling and DSE scoring never share an executor — stdin
@@ -13,7 +14,9 @@
 //! waiting on scoring can never deadlock behind other request jobs
 //! (see [`crate::serve::pool`]).
 
-use crate::coordinator::framework::{CompiledDesign, WideSa, WideSaConfig};
+use crate::coordinator::framework::{
+    CompiledDesign, NoLegalMapping, WideSa, WideSaConfig, FALLBACK_CANDIDATES,
+};
 use crate::mapping::cost::{CostModel, PerfEstimate};
 use crate::mapping::dse::{self, Ranked};
 use crate::mapping::MappingCandidate;
@@ -88,11 +91,37 @@ pub struct ServeStats {
     pub cache: CacheStats,
 }
 
+/// Clonable error image for single-flight followers: `anyhow::Error` is
+/// not `Clone`, but the typed [`NoLegalMapping`] case must survive
+/// deduplication so every requester of a doomed key sees the same error
+/// type as the leader, not a stringified copy.
+#[derive(Clone)]
+enum FlightError {
+    NoLegalMapping(NoLegalMapping),
+    Other(String),
+}
+
+impl FlightError {
+    fn of(e: &anyhow::Error) -> Self {
+        match e.downcast_ref::<NoLegalMapping>() {
+            Some(t) => FlightError::NoLegalMapping(t.clone()),
+            None => FlightError::Other(e.to_string()),
+        }
+    }
+
+    fn into_error(self) -> anyhow::Error {
+        match self {
+            FlightError::NoLegalMapping(t) => t.into(),
+            FlightError::Other(msg) => anyhow!(msg),
+        }
+    }
+}
+
 /// A single-flight slot: the leader publishes here, followers wait.
 struct Flight {
-    /// `None` until resolved; errors travel as strings because
-    /// `anyhow::Error` is not `Clone` and every follower needs a copy.
-    slot: Mutex<Option<Result<Arc<CompiledDesign>, String>>>,
+    /// `None` until resolved; errors travel as [`FlightError`] because
+    /// every follower needs its own copy.
+    slot: Mutex<Option<Result<Arc<CompiledDesign>, FlightError>>>,
     done: Condvar,
 }
 
@@ -104,7 +133,7 @@ impl Flight {
         }
     }
 
-    fn wait(&self) -> Result<Arc<CompiledDesign>, String> {
+    fn wait(&self) -> Result<Arc<CompiledDesign>, FlightError> {
         let mut slot = self.slot.lock().unwrap();
         while slot.is_none() {
             slot = self.done.wait(slot).unwrap();
@@ -134,7 +163,7 @@ struct FlightGuard<'a> {
 }
 
 impl FlightGuard<'_> {
-    fn resolve(&mut self, result: Result<Arc<CompiledDesign>, String>) {
+    fn resolve(&mut self, result: Result<Arc<CompiledDesign>, FlightError>) {
         *self.flight.slot.lock().unwrap() = Some(result);
         self.flight.done.notify_all();
         self.inner.flights.lock().unwrap().remove(&self.key);
@@ -145,7 +174,7 @@ impl FlightGuard<'_> {
 impl Drop for FlightGuard<'_> {
     fn drop(&mut self) {
         if !self.resolved {
-            self.resolve(Err("compile panicked".into()));
+            self.resolve(Err(FlightError::Other("compile panicked".into())));
         }
     }
 }
@@ -255,9 +284,9 @@ impl ServeHandle {
                     outcome: CacheOutcome::Deduped,
                     key,
                 }),
-                Err(msg) => {
+                Err(fe) => {
                     inner.errors.fetch_add(1, Ordering::Relaxed);
-                    Err(anyhow!(msg))
+                    Err(fe.into_error())
                 }
             };
         }
@@ -285,14 +314,14 @@ impl ServeHandle {
         }
         inner.misses.fetch_add(1, Ordering::Relaxed);
         let compiled = self.cold_compile(rec, cfg);
-        let published: Result<Arc<CompiledDesign>, String> = match &compiled {
+        let published: Result<Arc<CompiledDesign>, FlightError> = match &compiled {
             Ok(design) => {
                 inner.cache.insert(key, Arc::clone(design));
                 Ok(Arc::clone(design))
             }
             Err(e) => {
                 inner.errors.fetch_add(1, Ordering::Relaxed);
-                Err(e.to_string())
+                Err(FlightError::of(e))
             }
         };
         guard.resolve(published);
@@ -305,7 +334,10 @@ impl ServeHandle {
 
     /// The cold path: DSE with candidate scoring scattered over the
     /// handle's worker pool (deterministic merge — identical ranking to
-    /// the serial `explore_all`), then the framework back half.
+    /// the serial `explore_all`), then the framework back half — P&R per
+    /// fallback candidate scattered over the *same* pool, with the
+    /// deterministic first-success selection picking the design the
+    /// serial loop would.
     fn cold_compile(
         &self,
         rec: &UniformRecurrence,
@@ -313,7 +345,40 @@ impl ServeHandle {
     ) -> Result<Arc<CompiledDesign>> {
         let ranked = self.explore_all_pooled(rec, cfg);
         let ws = WideSa::new(cfg.clone());
-        ws.compile_ranked(rec, ranked).map(Arc::new)
+        if self.inner.dse_pool.workers() <= 1 || ranked.len() <= 1 {
+            return ws.compile_ranked(rec, ranked).map(Arc::new);
+        }
+        let model = ws.cost_model();
+        let mut top: Vec<_> = ranked
+            .into_iter()
+            .take(FALLBACK_CANDIDATES)
+            .map(|(candidate, _)| candidate)
+            .collect();
+        // Top candidate first: the common first-success case costs one
+        // evaluation (like the serial loop); only a P&R failure pays for
+        // the speculative fallback fan-out.
+        let first = ws.evaluate_candidate(&model, top.remove(0));
+        if first.compile.success || top.is_empty() {
+            return Ok(Arc::new(first));
+        }
+        let ws = Arc::new(ws);
+        let model = Arc::new(model);
+        type EvalJob = Box<dyn FnOnce() -> CompiledDesign + Send>;
+        let jobs: Vec<EvalJob> = top
+            .into_iter()
+            .map(|candidate| {
+                let (ws, model) = (Arc::clone(&ws), Arc::clone(&model));
+                Box::new(move || ws.evaluate_candidate(&model, candidate)) as EvalJob
+            })
+            .collect();
+        let mut designs = self.inner.dse_pool.scatter(jobs);
+        designs.insert(0, first);
+        WideSa::select_design(designs).map(Arc::new).ok_or_else(|| {
+            NoLegalMapping {
+                recurrence: rec.name.clone(),
+            }
+            .into()
+        })
     }
 
     /// `explore_all` with per-candidate scoring as pool jobs. Results
@@ -332,7 +397,7 @@ impl ServeHandle {
         // Pool jobs are 'static: share the invariants behind Arcs.
         type ScoreJob = Box<dyn FnOnce() -> Option<(MappingCandidate, PerfEstimate)> + Send>;
         let rec = Arc::new(rec.clone());
-        let model = Arc::new(CostModel::new(cfg.board.clone()));
+        let model: Arc<CostModel> = Arc::new(dse::scoring_model(&cfg.board, &cfg.constraints));
         let cons = Arc::new(cfg.constraints.clone());
         let plan = Arc::new(plan);
         let jobs: Vec<ScoreJob> = choices
@@ -507,6 +572,82 @@ mod tests {
                 assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn pooled_back_half_matches_framework_serial() {
+        // the serve pool's sharded P&R-over-fallbacks must return the
+        // exact design the serial framework loop picks — including the
+        // fallback case where the top-ranked candidate fails P&R
+        let handle = ServeHandle::new(ServeConfig {
+            base: WideSaConfig {
+                constraints: DseConstraints {
+                    max_aies: Some(400),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            dse_threads: 4,
+            ..Default::default()
+        });
+        for rec in [
+            library::mm(512, 512, 512, DType::F32),
+            library::mm(2048, 2048, 2048, DType::F32),
+        ] {
+            let served = handle.compile(&rec).unwrap();
+            let serial = WideSa::new(handle.config().base.clone()).compile(&rec).unwrap();
+            assert_eq!(
+                served.design.candidate.summary(),
+                serial.candidate.summary(),
+                "{}",
+                rec.name
+            );
+            assert_eq!(served.design.compile.success, serial.compile.success);
+            assert_eq!(served.design.merge_stats, serial.merge_stats);
+            assert_eq!(
+                served.design.estimate.tops.to_bits(),
+                serial.estimate.tops.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn typed_error_survives_single_flight_dedup() {
+        // whether a thread ends up the single-flight leader or a
+        // follower, an unmappable request must yield the same *typed*
+        // NoLegalMapping error (followers receive a clonable image, not
+        // a stringified copy)
+        let handle = ServeHandle::new(ServeConfig {
+            base: WideSaConfig {
+                constraints: DseConstraints {
+                    max_aies: Some(0),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let rec = library::mm(64, 64, 64, DType::F32);
+        std::thread::scope(|s| {
+            let workers: Vec<_> = (0..4)
+                .map(|_| {
+                    let handle = handle.clone();
+                    let rec = rec.clone();
+                    s.spawn(move || handle.compile(&rec))
+                })
+                .collect();
+            for w in workers {
+                let err = w
+                    .join()
+                    .unwrap()
+                    .expect_err("a 0-AIE budget cannot map anything");
+                assert!(
+                    err.downcast_ref::<NoLegalMapping>().is_some(),
+                    "typed error lost: {err}"
+                );
+            }
+        });
+        assert!(handle.inner.flights.lock().unwrap().is_empty());
     }
 
     #[test]

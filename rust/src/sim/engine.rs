@@ -9,6 +9,13 @@
 //! the analytic model uses — but *composed* temporally rather than
 //! bounded, so pipeline bubbles (cold start, prefetch misses, drain
 //! backpressure) appear naturally.
+//!
+//! Phase durations come from `model.estimate(..)`, so the simulator
+//! prices PLIO time with whatever port model the [`CostModel`] is
+//! configured with — by default the **exact merged port counts**
+//! ([`crate::mapping::cost::PortModel::Exact`]), the same counts the DSE
+//! ranked with and packet merging realises. The sim/analytic agreement
+//! tests therefore check one consistent port model end to end.
 
 use crate::mapping::candidate::MappingCandidate;
 use crate::mapping::cost::{issue_efficiency, CostModel, PerfBound};
@@ -192,6 +199,30 @@ mod tests {
         let (rep, est) = sim_for(library::conv2d(10240, 10240, 8, 8, DType::I8), 400, false);
         let rel = (rep.tops - est.tops).abs() / est.tops;
         assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.tops);
+    }
+
+    #[test]
+    fn sim_tracks_the_ranked_port_model_when_plio_bound() {
+        // a PLIO-starved design: the exact merged counts (not the
+        // analytic approximation) must be what the simulator's phase
+        // durations are built from, so sim agrees with the exact estimate
+        // of the *same* model instance
+        let board = BoardConfig::vck5000().with_plio_budget(8);
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&library::mm(10240, 10240, 10240, DType::I8), &board, &cons).unwrap();
+        let model = CostModel::new(board).with_mover_bits(128);
+        let est = model.estimate(&cand);
+        let (rep, _) = simulate(&cand, &model, &SimConfig::default());
+        let rel = (rep.tops - est.tops).abs() / est.tops;
+        assert!(
+            rel < 0.15,
+            "sim {} vs exact-port estimate {} (rel {rel:.3})",
+            rep.tops,
+            est.tops
+        );
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct Error {
     msg: String,
     /// Causes, outermost-but-one first (each entry one `Caused by:` line).
     chain: Vec<String>,
+    /// The typed error this value was converted from (when it came from a
+    /// concrete [`std::error::Error`]), kept so [`Error::downcast_ref`]
+    /// can recover it through any number of `context` wraps.
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
@@ -34,6 +38,7 @@ impl Error {
         Self {
             msg: msg.to_string(),
             chain: Vec::new(),
+            source: None,
         }
     }
 
@@ -45,7 +50,15 @@ impl Error {
         Self {
             msg: context.to_string(),
             chain,
+            source: self.source,
         }
+    }
+
+    /// A reference to the typed error this value was converted from, if
+    /// it is an `E` (API-compatible subset of the real crate's
+    /// `downcast_ref`; survives `context` wrapping).
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
     }
 
     /// The chain of messages, outermost first (for diagnostics).
@@ -92,6 +105,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
         Self {
             msg: e.to_string(),
             chain,
+            source: Some(Box::new(e)),
         }
     }
 }
@@ -244,6 +258,25 @@ mod tests {
         assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
         let e = anyhow!("code {}", 42);
         assert_eq!(e.to_string(), "code 42");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_typed_source() {
+        #[derive(Debug)]
+        struct My(u32);
+        impl fmt::Display for My {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "my error {}", self.0)
+            }
+        }
+        impl std::error::Error for My {}
+
+        let e: Error = My(7).into();
+        assert_eq!(e.downcast_ref::<My>().unwrap().0, 7);
+        let wrapped = e.context("outer");
+        assert_eq!(wrapped.downcast_ref::<My>().unwrap().0, 7);
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_none());
+        assert!(anyhow!("plain message").downcast_ref::<My>().is_none());
     }
 
     #[test]
