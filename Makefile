@@ -10,7 +10,7 @@
 ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 
-.PHONY: build test bench doc artifacts serve-smoke rank-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke rank-smoke pnr-smoke clean
 
 build:
 	cargo build --release
@@ -38,6 +38,15 @@ serve-smoke: build
 # non-zero above the bound).
 rank-smoke:
 	cargo bench --bench bench_rank
+
+# Gate the dense-index P&R hot path: the flat-array annealer must stay
+# bit-identical to the retained HashMap baseline (equivalence corpus)
+# and deliver ≥2× its iteration throughput on the E5 400-AIE workload
+# (bench_compile exits non-zero below the gate). Also refreshes
+# BENCH_compile.json at the repo root — the compile-latency trajectory.
+pnr-smoke:
+	cargo test -q --features legacy-hash-pnr --test pnr_equivalence
+	cargo bench --bench bench_compile --features legacy-hash-pnr
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

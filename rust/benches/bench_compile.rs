@@ -1,0 +1,169 @@
+//! Bench: cold-compile latency through the dense-index P&R hot path —
+//! the compile-time half of the paper's claim (§V, Table IV: constraint-
+//! guided P&R compiles 400-AIE designs where unconstrained solvers time
+//! out) and the serve layer's cold-miss tail-latency driver.
+//!
+//! Measures cold `WideSa::compile` wall time on MM-400, FIR and a conv
+//! point, per-stage place / assign / route latency on the MM-400 merged
+//! graph, and annealer iteration throughput on the E5 400-AIE workload —
+//! dense vs the retained HashMap baseline (`anneal::legacy`). **Gate:**
+//! the dense annealer must be ≥2× the legacy iterations/sec and remain
+//! bit-identical per seed, or this binary exits non-zero. Results are
+//! written to `BENCH_compile.json` at the repo root so every subsequent
+//! PR extends a perf trajectory.
+//!
+//! Run with `make pnr-smoke` (or
+//! `cargo bench --bench bench_compile --features legacy-hash-pnr`).
+
+use std::path::Path;
+use widesa::arch::vck5000::BoardConfig;
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::mapping::dse::DseConstraints;
+use widesa::place_route::anneal::{anneal, legacy::anneal_legacy};
+use widesa::place_route::placement::place;
+use widesa::place_route::router::route_all;
+use widesa::plio::assignment::assign;
+use widesa::recurrence::library;
+use widesa::recurrence::spec::UniformRecurrence;
+use widesa::util::bench::bench;
+use widesa::util::json::Json;
+use widesa::DType;
+
+/// Iteration budget for the annealer throughput measurement (the E5
+/// 400-AIE workload does not converge at this scale, so both
+/// implementations run the full budget).
+const ANNEAL_ITERS: u64 = 200_000;
+/// The speedup gate: dense iterations/sec ≥ GATE × legacy.
+const GATE: f64 = 2.0;
+
+fn framework(cap: u64) -> WideSa {
+    WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(cap),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+}
+
+fn cold_compile_ms(name: &str, rec: &UniformRecurrence, cap: u64) -> f64 {
+    let ws = framework(cap);
+    let r = bench(&format!("compile/cold/{name}"), 3, || {
+        std::hint::black_box(ws.compile(rec).expect("compile").compile.success);
+    });
+    r.median_s * 1e3
+}
+
+fn main() {
+    let board = BoardConfig::vck5000();
+
+    println!("== compile: cold end-to-end latency ==");
+    let workloads = [
+        ("mm-400", library::mm(8192, 8192, 8192, DType::F32), 400u64),
+        ("fir-256", library::fir(1048576, 15, DType::F32), 256),
+        ("conv-400", library::conv2d(1024, 1024, 4, 4, DType::I16), 400),
+    ];
+    let cold: Vec<(&str, f64)> = workloads
+        .iter()
+        .map(|(name, rec, cap)| (*name, cold_compile_ms(name, rec, *cap)))
+        .collect();
+
+    println!("== compile: per-stage latency (MM-400 merged graph) ==");
+    let d = framework(400)
+        .compile(&library::mm(8192, 8192, 8192, DType::F32))
+        .expect("MM-400 compile");
+    let g = &d.graph;
+    let place_ms = bench("compile/stage/place", 50, || {
+        std::hint::black_box(place(g, &board.array).is_some());
+    })
+    .median_s
+        * 1e3;
+    let pl = place(g, &board.array).expect("placement");
+    let assign_ms = bench("compile/stage/assign", 50, || {
+        std::hint::black_box(
+            assign(g, &pl, &board.plio, board.array.rc_west, board.array.rc_east).feasible,
+        );
+    })
+    .median_s
+        * 1e3;
+    let a = assign(g, &pl, &board.plio, board.array.rc_west, board.array.rc_east);
+    let route_ms = bench("compile/stage/route", 50, || {
+        std::hint::black_box(
+            route_all(
+                g,
+                &pl,
+                &a.columns,
+                board.array.cols,
+                board.array.rc_west,
+                board.array.rc_east,
+            )
+            .success,
+        );
+    })
+    .median_s
+        * 1e3;
+
+    println!("== anneal: dense vs legacy HashMap (E5 400-AIE workload) ==");
+    let dense_r = bench("anneal/dense 200k iters (400 AIEs)", 3, || {
+        std::hint::black_box(anneal(g, &board.array, 11, ANNEAL_ITERS).iterations);
+    });
+    let legacy_r = bench("anneal/legacy 200k iters (400 AIEs)", 3, || {
+        std::hint::black_box(anneal_legacy(g, &board.array, 11, ANNEAL_ITERS).iterations);
+    });
+    // equivalence spot-check doubles as a gate: same seed ⇒ same trace
+    let dv = anneal(g, &board.array, 11, ANNEAL_ITERS);
+    let lv = anneal_legacy(g, &board.array, 11, ANNEAL_ITERS);
+    assert_eq!(
+        (dv.iterations, dv.violations),
+        (lv.iterations, lv.violations),
+        "dense annealer diverged from the legacy baseline"
+    );
+    let dense_ips = dv.iterations as f64 / dense_r.median_s;
+    let legacy_ips = lv.iterations as f64 / legacy_r.median_s;
+    let speedup = dense_ips / legacy_ips.max(1e-9);
+    println!(
+        "anneal throughput: dense {:.0} iters/s vs legacy {:.0} iters/s → {speedup:.2}×",
+        dense_ips, legacy_ips
+    );
+
+    // BENCH_compile.json at the repo root: the compile-latency trajectory
+    let out = Json::obj(vec![
+        ("bench", Json::Str("compile".into())),
+        (
+            "cold_ms",
+            Json::obj(cold.iter().map(|(n, ms)| (*n, Json::Num(*ms))).collect()),
+        ),
+        (
+            "stages_ms",
+            Json::obj(vec![
+                ("place", Json::Num(place_ms)),
+                ("assign", Json::Num(assign_ms)),
+                ("route", Json::Num(route_ms)),
+            ]),
+        ),
+        (
+            "anneal",
+            Json::obj(vec![
+                ("iters", Json::Num(ANNEAL_ITERS as f64)),
+                ("dense_iters_per_sec", Json::Num(dense_ips)),
+                ("legacy_iters_per_sec", Json::Num(legacy_ips)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ),
+        ("gate_speedup_min", Json::Num(GATE)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_compile.json");
+    std::fs::write(&path, format!("{out}\n")).expect("write BENCH_compile.json");
+    println!("wrote {}", path.display());
+
+    if speedup < GATE {
+        eprintln!(
+            "FAIL: dense annealer is only {speedup:.2}× the legacy baseline (gate {GATE}×)"
+        );
+        std::process::exit(1);
+    }
+    println!("OK: dense annealer ≥{GATE}× legacy ({speedup:.2}×)");
+}

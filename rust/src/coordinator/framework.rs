@@ -110,7 +110,9 @@ impl CompiledDesign {
             self.merge_stats.in_ports_before,
             self.merge_stats.out_ports_before,
             self.compile.success,
-            self.compile.max_congestion,
+            self.compile
+                .max_congestion
+                .map_or_else(|| "-".to_string(), |c| c.to_string()),
             self.compile.wall_s,
         )
     }

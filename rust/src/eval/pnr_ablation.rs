@@ -20,6 +20,10 @@ pub struct Row {
     pub aies: u64,
     pub constrained_ok: bool,
     pub constrained_s: f64,
+    /// Peak routed channel occupancy of the constrained flow (`None` if
+    /// it failed before routing — the typed replacement for the old
+    /// `u32::MAX` sentinel, which a table could aggregate by accident).
+    pub constrained_congestion: Option<u32>,
     pub unconstrained_ok: bool,
     pub unconstrained_s: f64,
     pub unconstrained_iters: u64,
@@ -49,6 +53,7 @@ pub fn run() -> (Vec<Row>, String) {
             aies,
             constrained_ok: c.success,
             constrained_s: c.wall_s,
+            constrained_congestion: c.max_congestion,
             unconstrained_ok: u.success,
             unconstrained_s: u.wall_s,
             unconstrained_iters: u.iterations,
@@ -56,13 +61,15 @@ pub fn run() -> (Vec<Row>, String) {
     }
     let mut t = TextTable::new("E5 — Place & route: WideSA constraints vs unconstrained (anneal stand-in)");
     t.header(&[
-        "#AIEs", "constrained ok", "time (s)", "unconstrained ok", "time (s)", "iters",
+        "#AIEs", "constrained ok", "time (s)", "cong", "unconstrained ok", "time (s)", "iters",
     ]);
     for r in &rows {
         t.row(vec![
             r.aies.to_string(),
             r.constrained_ok.to_string(),
             format!("{:.4}", r.constrained_s),
+            r.constrained_congestion
+                .map_or_else(|| "-".to_string(), |c| c.to_string()),
             r.unconstrained_ok.to_string(),
             format!("{:.3}", r.unconstrained_s),
             r.unconstrained_iters.to_string(),
@@ -81,6 +88,8 @@ mod tests {
         for r in &rows {
             assert!(r.constrained_ok, "{} AIEs", r.aies);
             assert!(r.constrained_s < 2.0, "{} AIEs took {}s", r.aies, r.constrained_s);
+            // a successful flow always routed, so congestion is measured
+            assert!(r.constrained_congestion.is_some(), "{} AIEs", r.aies);
         }
     }
 

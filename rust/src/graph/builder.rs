@@ -17,6 +17,15 @@ use crate::mapping::cost::CostModel;
 use crate::polyhedral::dependence::DepKind;
 
 /// The mapped graph: nodes, edges and the replica grid layout.
+///
+/// **Dense-index invariant:** node ids are contiguous indices into
+/// `nodes` (`nodes[i].id == i`) — `MappedGraph::add_node` hands out
+/// `nodes.len()` and nothing may renumber afterwards. The whole P&R hot
+/// path (the annealer's flat coordinate/incidence arrays, the congestion
+/// model's pair bitset, [`crate::place_route::placement::Placement`],
+/// codegen's kernel-index table) indexes vectors by `NodeId` on the
+/// strength of this; check with [`MappedGraph::node_ids_are_dense`]
+/// when constructing graphs by hand.
 #[derive(Debug, Clone, Default)]
 pub struct MappedGraph {
     pub nodes: Vec<Node>,
@@ -59,6 +68,13 @@ impl MappedGraph {
             })
             .filter(|&n| self.nodes[n].is_aie())
             .collect()
+    }
+
+    /// Every node id equals its index — the dense-index invariant the
+    /// P&R hot path relies on (true for every builder-produced graph;
+    /// hand-built test graphs can drift and should assert this).
+    pub fn node_ids_are_dense(&self) -> bool {
+        self.nodes.iter().enumerate().all(|(i, n)| n.id == i)
     }
 
     fn add_node(&mut self, kind: NodeKind, name: String) -> NodeId {

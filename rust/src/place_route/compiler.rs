@@ -21,7 +21,11 @@ pub struct CompileOutcome {
     pub iterations: u64,
     pub placement: Option<Placement>,
     pub constraints: Option<ConstraintSet>,
-    pub max_congestion: u32,
+    /// Peak per-boundary channel occupancy from routing, `None` when the
+    /// flow failed before routing ran (the old `u32::MAX` failure
+    /// sentinel is gone — aggregating it into a table is now a type
+    /// error, not a silent overflow).
+    pub max_congestion: Option<u32>,
 }
 
 /// Compile with WideSA constraints: deterministic placement, Algorithm 1
@@ -36,7 +40,7 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
             iterations: 0,
             placement: None,
             constraints: None,
-            max_congestion: u32::MAX,
+            max_congestion: None,
         };
     };
     let a = assign(
@@ -61,7 +65,7 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
         iterations: 0,
         placement: Some(pl),
         constraints: Some(cs),
-        max_congestion: routing.max_west.max(routing.max_east),
+        max_congestion: Some(routing.max_west.max(routing.max_east)),
     }
 }
 
@@ -82,7 +86,7 @@ pub fn compile_unconstrained(
             iterations: r.iterations,
             placement: Some(r.placement),
             constraints: None,
-            max_congestion: u32::MAX,
+            max_congestion: None,
         };
     }
     let a = assign(
@@ -106,7 +110,7 @@ pub fn compile_unconstrained(
         iterations: r.iterations,
         placement: Some(r.placement),
         constraints: None,
-        max_congestion: routing.max_west.max(routing.max_east),
+        max_congestion: Some(routing.max_west.max(routing.max_east)),
     }
 }
 

@@ -16,6 +16,18 @@
 //! the location-constraint file WideSA hands `aiecompiler`;
 //! [`anneal::anneal`] ↔ the unconstrained solver whose degradation at
 //! scale motivates §II-A-2.
+//!
+//! **Hot path layout:** the whole post-ranking compile pipeline is
+//! dense-indexed. Node ids are contiguous vector indices (the builder
+//! contract, [`crate::graph::builder::MappedGraph::node_ids_are_dense`]),
+//! so [`placement::Placement`] is a flat coordinate vector mirrored by a
+//! `row * cols + col` occupancy grid, the annealer keeps edge incidence
+//! in a CSR and its violated edges in a bitset worklist, and the per-pair
+//! / per-column tallies in [`router`] and [`crate::plio`] are flat
+//! vectors. No `HashMap` is touched between ranking and codegen. The
+//! pre-dense annealer survives as `anneal::legacy` (feature
+//! `legacy-hash-pnr` or tests) purely as the bit-identity oracle and the
+//! baseline for `bench_compile`'s ≥2× throughput gate (`make pnr-smoke`).
 
 pub mod anneal;
 pub mod compiler;

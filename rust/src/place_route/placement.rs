@@ -2,22 +2,108 @@
 //! makes placement a deterministic tiling of replicas onto the grid
 //! (paper §III-C-2: "transformation of the kernels' placement into a
 //! regular duplicate pattern of a single kernel").
+//!
+//! [`Placement`] is stored densely: a coordinate vector indexed by
+//! `NodeId` (the builder guarantees node ids are contiguous indices —
+//! see [`MappedGraph::node_ids_are_dense`]) mirrored by a flat
+//! `row * cols + col` occupancy grid, so the P&R hot path (annealer,
+//! congestion model, router, codegen) does array indexing instead of
+//! hashing. The two views are kept in lockstep by construction; a
+//! property test sweeps random insert sequences asserting they can never
+//! disagree.
 
 use crate::arch::array::{AieArray, Coord};
 use crate::graph::builder::MappedGraph;
 use crate::graph::edge::EdgeKind;
 use crate::graph::node::NodeId;
-use std::collections::HashMap;
 
 /// A placement: physical coordinates for every AIE node.
-#[derive(Debug, Clone, Default)]
+///
+/// Dense by construction: `coord_of[node]` holds the node's coordinate
+/// and `slot_of[row * cols + col]` holds the slot's occupant. Inserting
+/// a node onto an occupied slot displaces the previous occupant (its
+/// coordinate is cleared), and re-inserting a node vacates its previous
+/// slot — the grid and the coordinate vector are exact mirrors at every
+/// step, which also makes double-occupancy structurally impossible.
+#[derive(Debug, Clone)]
 pub struct Placement {
-    pub coords: HashMap<NodeId, Coord>,
+    /// Coordinate per node, indexed by `NodeId`.
+    coord_of: Vec<Option<Coord>>,
+    /// Occupant per grid slot, keyed `row * cols + col`.
+    slot_of: Vec<Option<NodeId>>,
+    rows: u32,
+    cols: u32,
+    placed: usize,
+}
+
+impl Default for Placement {
+    /// An empty placement on the default VCK5000 grid (8 × 50); the grid
+    /// grows automatically if a coordinate beyond it is inserted.
+    fn default() -> Self {
+        let a = AieArray::default();
+        Self::with_grid(a.rows, a.cols)
+    }
 }
 
 impl Placement {
+    /// An empty placement over a `rows` × `cols` grid.
+    pub fn with_grid(rows: u32, cols: u32) -> Self {
+        Self {
+            coord_of: Vec::new(),
+            slot_of: vec![None; (rows as usize) * (cols as usize)],
+            rows,
+            cols,
+            placed: 0,
+        }
+    }
+
+    fn slot_index(&self, c: Coord) -> usize {
+        (c.row * self.cols + c.col) as usize
+    }
+
+    /// Grow the grid so `c` is addressable (rebuilds the occupancy grid
+    /// from the coordinate vector — rare, insert-time only).
+    fn ensure_grid(&mut self, c: Coord) {
+        if c.row < self.rows && c.col < self.cols {
+            return;
+        }
+        let rows = self.rows.max(c.row + 1);
+        let cols = self.cols.max(c.col + 1);
+        let mut slot_of = vec![None; (rows as usize) * (cols as usize)];
+        for (n, oc) in self.coord_of.iter().enumerate() {
+            if let Some(c) = oc {
+                slot_of[(c.row * cols + c.col) as usize] = Some(n);
+            }
+        }
+        self.slot_of = slot_of;
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Place node `n` at `c`. Vacates `n`'s previous slot; displaces any
+    /// previous occupant of `c` (its coordinate is cleared).
+    pub fn insert(&mut self, n: NodeId, c: Coord) {
+        self.ensure_grid(c);
+        if self.coord_of.len() <= n {
+            self.coord_of.resize(n + 1, None);
+        }
+        if let Some(old) = self.coord_of[n].take() {
+            let i = self.slot_index(old);
+            self.slot_of[i] = None;
+            self.placed -= 1;
+        }
+        let i = self.slot_index(c);
+        if let Some(prev) = self.slot_of[i].take() {
+            self.coord_of[prev] = None;
+            self.placed -= 1;
+        }
+        self.coord_of[n] = Some(c);
+        self.slot_of[i] = Some(n);
+        self.placed += 1;
+    }
+
     pub fn coord(&self, n: NodeId) -> Option<Coord> {
-        self.coords.get(&n).copied()
+        self.coord_of.get(n).copied().flatten()
     }
 
     /// Column of an AIE node (Algorithm 1's `x_col`).
@@ -25,12 +111,47 @@ impl Placement {
         self.coord(n).map(|c| c.col)
     }
 
-    /// All placements are within bounds and distinct.
+    /// Occupant of grid slot `c`, if any.
+    pub fn node_at(&self, c: Coord) -> Option<NodeId> {
+        if c.row < self.rows && c.col < self.cols {
+            self.slot_of[self.slot_index(c)]
+        } else {
+            None
+        }
+    }
+
+    /// Number of placed nodes.
+    pub fn len(&self) -> usize {
+        self.placed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placed == 0
+    }
+
+    /// Grid dimensions (rows, cols) currently addressable.
+    pub fn grid_dims(&self) -> (u32, u32) {
+        (self.rows, self.cols)
+    }
+
+    /// All placed `(node, coord)` pairs in ascending node order.
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, Coord)> + '_ {
+        self.coord_of
+            .iter()
+            .enumerate()
+            .filter_map(|(n, c)| c.map(|c| (n, c)))
+    }
+
+    /// Highest occupied column, if anything is placed (sizes the
+    /// congestion model's boundary vectors).
+    pub fn max_col(&self) -> Option<u32> {
+        self.iter().map(|(_, c)| c.col).max()
+    }
+
+    /// All placements are within bounds (distinctness is structural: the
+    /// occupancy grid cannot hold two nodes on one slot).
     pub fn is_valid(&self, array: &AieArray) -> bool {
-        let mut seen = std::collections::HashSet::new();
-        self.coords
-            .values()
-            .all(|&c| array.contains(c) && seen.insert(c))
+        self.iter().all(|(_, c)| array.contains(c))
     }
 
     /// Every shared-buffer edge must connect physical neighbours — the
@@ -57,8 +178,7 @@ pub fn place(g: &MappedGraph, array: &AieArray) -> Option<Placement> {
         return None;
     }
     let per_row = (array.cols / c).max(1); // replicas side by side
-    let mut out = Placement::default();
-    let mut rep_of_node: HashMap<NodeId, (u32, Coord)> = HashMap::new();
+    let mut out = Placement::with_grid(array.rows, array.cols);
     // Recover each AIE node's replica index and in-replica coordinate
     // from its name (k_r<rep>_<i>_<j>) — stable builder contract.
     for n in g.aie_nodes() {
@@ -66,16 +186,18 @@ pub fn place(g: &MappedGraph, array: &AieArray) -> Option<Placement> {
         let rep: u32 = parts[1][1..].parse().ok()?;
         let i: u32 = parts[2].parse().ok()?;
         let j: u32 = parts[3].parse().ok()?;
-        rep_of_node.insert(n.id, (rep, Coord::new(i, j)));
-    }
-    for (&id, &(rep, local)) in &rep_of_node {
         let block_row = rep / per_row;
         let block_col = rep % per_row;
-        let coord = Coord::new(block_row * r + local.row, block_col * c + local.col);
+        let coord = Coord::new(block_row * r + i, block_col * c + j);
         if !array.contains(coord) {
             return None;
         }
-        out.coords.insert(id, coord);
+        out.insert(n.id, coord);
+    }
+    // A coordinate collision would have displaced an earlier node (the
+    // dense grid cannot double-occupy) — detectable as a count mismatch.
+    if out.len() != g.num_aies() {
+        return None;
     }
     Some(out)
 }
@@ -107,7 +229,7 @@ mod tests {
         let p = place(&g, &array).expect("placement");
         assert!(p.is_valid(&array));
         assert!(p.shared_buffers_adjacent(&g, &array));
-        assert_eq!(p.coords.len(), 400);
+        assert_eq!(p.len(), 400);
     }
 
     #[test]
@@ -132,6 +254,47 @@ mod tests {
         let array = AieArray::default();
         let p = place(&g, &array).expect("placement");
         assert!(p.is_valid(&array));
-        assert_eq!(p.coords.len(), g.num_aies());
+        assert_eq!(p.len(), g.num_aies());
+    }
+
+    #[test]
+    fn grid_mirrors_coords_both_ways() {
+        let g = graph_for(library::mm(2048, 2048, 2048, DType::F32), 400);
+        let array = AieArray::default();
+        let p = place(&g, &array).expect("placement");
+        for (n, c) in p.iter() {
+            assert_eq!(p.node_at(c), Some(n));
+        }
+        let occupied = array.coords().filter(|&c| p.node_at(c).is_some()).count();
+        assert_eq!(occupied, p.len());
+    }
+
+    #[test]
+    fn insert_displaces_and_revacates() {
+        let mut p = Placement::default();
+        p.insert(0, Coord::new(1, 1));
+        p.insert(1, Coord::new(2, 2));
+        assert_eq!(p.len(), 2);
+        // node 1 steals node 0's slot: node 0 is displaced
+        p.insert(1, Coord::new(1, 1));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.coord(0), None);
+        assert_eq!(p.coord(1), Some(Coord::new(1, 1)));
+        assert_eq!(p.node_at(Coord::new(2, 2)), None);
+        // moving node 1 vacates its old slot
+        p.insert(1, Coord::new(3, 3));
+        assert_eq!(p.node_at(Coord::new(1, 1)), None);
+        assert_eq!(p.node_at(Coord::new(3, 3)), Some(1));
+    }
+
+    #[test]
+    fn grid_grows_past_default_dims() {
+        let mut p = Placement::default();
+        p.insert(0, Coord::new(0, 0));
+        p.insert(7, Coord::new(9, 60)); // beyond the 8×50 default
+        assert_eq!(p.grid_dims(), (10, 61));
+        assert_eq!(p.node_at(Coord::new(0, 0)), Some(0));
+        assert_eq!(p.node_at(Coord::new(9, 60)), Some(7));
+        assert_eq!(p.max_col(), Some(60));
     }
 }

@@ -2,6 +2,13 @@
 //! per-boundary channel capacities — the routing half of the Vitis
 //! stand-in. Inter-core shared-buffer edges need no NoC resources (that
 //! is exactly why the systolic placement constraints help the compiler).
+//!
+//! Per-pair deduplication and broadcast trunk extents use the same dense
+//! `NodeId`-indexed structures as the congestion model
+//! ([`crate::plio::congestion::PlioPairSet`],
+//! [`crate::plio::congestion::BcastExtents`]) — shared helpers, so the
+//! router and the analytic model cannot disagree on pair identity or
+//! trunk shape.
 
 use crate::arch::array::Coord;
 use crate::arch::noc::{ChannelOccupancy, StreamRoute};
@@ -9,6 +16,7 @@ use crate::graph::builder::MappedGraph;
 use crate::graph::edge::EdgeKind;
 use crate::graph::node::NodeId;
 use crate::place_route::placement::Placement;
+use crate::plio::congestion::{BcastExtents, PlioPairSet};
 use std::collections::HashMap;
 
 /// Routing outcome for a placed+assigned design.
@@ -38,11 +46,10 @@ pub fn route_all(
     let mut occ = ChannelOccupancy::new(cols);
     let mut routes = Vec::new();
     let mut total_hops = 0usize;
-    let mut seen = std::collections::HashSet::new();
+    let mut seen = PlioPairSet::new(g);
     // Broadcast multicast: route the horizontal trunk once per port (to
     // the extreme columns), not per destination.
-    let mut bcast_extent: std::collections::HashMap<NodeId, (u32, u32)> =
-        std::collections::HashMap::new();
+    let mut bcast = BcastExtents::new(g.nodes.len());
     let endpoint = |n: NodeId| -> Option<Coord> {
         if g.nodes[n].is_aie() {
             placement.coord(n)
@@ -58,12 +65,10 @@ pub fn route_all(
             continue;
         };
         if e.kind == EdgeKind::Broadcast {
-            let ext = bcast_extent.entry(e.src).or_insert((to.col, to.col));
-            ext.0 = ext.0.min(to.col);
-            ext.1 = ext.1.max(to.col);
+            bcast.note(e.src, to.col);
             continue;
         }
-        if !seen.insert((e.src, e.dst)) {
+        if !seen.insert_directed(e.src, e.dst) {
             continue; // packet-switched duplicates share the port route
         }
         let route = StreamRoute::xy(from, to);
@@ -71,7 +76,7 @@ pub fn route_all(
         occ.add_route(&route);
         routes.push((idx, route));
     }
-    for (p, (lo, hi)) in bcast_extent {
+    for (p, (lo, hi)) in bcast.iter() {
         if let Some(from) = endpoint(p) {
             for target in [lo, hi] {
                 if target != from.col {

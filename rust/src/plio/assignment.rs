@@ -23,17 +23,20 @@ pub struct PlioAssignment {
 }
 
 /// Per-column slot availability (each direction budgeted separately).
+/// The occupancy tally is a flat vector indexed by column — the interface
+/// row is a fixed, small strip, so there is nothing to hash.
 struct Slots {
     capacity: u32,
-    used: HashMap<u32, u32>,
+    used: Vec<u32>,
     columns: Vec<u32>,
 }
 
 impl Slots {
     fn new(spec: &PlioSpec) -> Self {
+        let width = spec.columns.iter().map(|&c| c as usize + 1).max().unwrap_or(0);
         Self {
             capacity: spec.channels_per_column,
-            used: HashMap::new(),
+            used: vec![0; width],
             columns: spec.columns.clone(),
         }
     }
@@ -43,8 +46,7 @@ impl Slots {
     fn claim_nearest(&mut self, want: u32) -> Option<u32> {
         let mut best: Option<(u32, u32)> = None; // (distance, col)
         for &col in &self.columns {
-            let used = self.used.get(&col).copied().unwrap_or(0);
-            if used >= self.capacity {
+            if self.used[col as usize] >= self.capacity {
                 continue;
             }
             let d = col.abs_diff(want);
@@ -53,7 +55,7 @@ impl Slots {
             }
         }
         let (_, col) = best?;
-        *self.used.entry(col).or_default() += 1;
+        self.used[col as usize] += 1;
         Some(col)
     }
 }

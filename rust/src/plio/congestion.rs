@@ -12,10 +12,17 @@
 //! ```
 //!
 //! (Westward traffic at boundary `i` flows from higher to lower columns.)
+//!
+//! Hot-path note: the per-pair stream deduplication ([`PlioPairSet`])
+//! and the broadcast trunk extents ([`BcastExtents`]) are dense
+//! structures keyed by PLIO ordinal / `NodeId` — no hashing on the
+//! compile path. Both are shared with the router so the two sides can
+//! never disagree on pair identity or trunk shape.
 
 use crate::graph::builder::MappedGraph;
 use crate::graph::node::NodeId;
 use crate::place_route::placement::Placement;
+use crate::util::bitset::DenseBitSet;
 use std::collections::HashMap;
 
 /// Congestion per column boundary (index i = boundary between col i and
@@ -40,6 +47,108 @@ impl CongestionProfile {
     }
 }
 
+/// Broadcast multicast trunks: per source port, the column extent
+/// `[lo, hi]` its horizontal trunk must span — one crossing per boundary
+/// regardless of fan-out. Dense by `NodeId`; the single accumulation
+/// helper shared by the congestion model and the router
+/// ([`crate::place_route::router::route_all`]), which used to duplicate
+/// this logic with separate `HashMap`s.
+#[derive(Debug, Clone)]
+pub struct BcastExtents {
+    ext: Vec<Option<(u32, u32)>>,
+}
+
+impl BcastExtents {
+    pub fn new(num_nodes: usize) -> Self {
+        Self {
+            ext: vec![None; num_nodes],
+        }
+    }
+
+    /// Widen port `p`'s trunk to reach `col`.
+    pub fn note(&mut self, p: NodeId, col: u32) {
+        match &mut self.ext[p] {
+            Some((lo, hi)) => {
+                *lo = (*lo).min(col);
+                *hi = (*hi).max(col);
+            }
+            slot @ None => *slot = Some((col, col)),
+        }
+    }
+
+    /// All `(port, (lo, hi))` extents, in ascending port order.
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, (u32, u32))> + '_ {
+        self.ext
+            .iter()
+            .enumerate()
+            .filter_map(|(p, e)| e.map(|e| (p, e)))
+    }
+}
+
+/// Per-(PLIO, node) stream deduplication — the one structure behind both
+/// the congestion model's W_i pair dedup and the router's
+/// packet-switched-sibling dedup, so the two key schemes cannot drift.
+///
+/// Keys are `plio_ordinal × direction × partner node` over a dense
+/// bitset: O(P·N) bits for P PLIO ports and N nodes, not O(N²). PLIO
+/// ordinals are assigned by node *index* (edge endpoints index `nodes`),
+/// so graphs whose ids drifted from their indices degrade gracefully. A
+/// pair with no PLIO endpoint (not producible by the builder) falls back
+/// to an exact hash set rather than panicking or double-counting.
+pub struct PlioPairSet {
+    /// PLIO ordinal by node index; `u32::MAX` = not a PLIO.
+    ord: Vec<u32>,
+    seen: DenseBitSet,
+    /// Exact fallback for pairs with no PLIO endpoint (normally empty).
+    other: std::collections::HashSet<(NodeId, NodeId)>,
+    nn: usize,
+}
+
+impl PlioPairSet {
+    pub fn new(g: &MappedGraph) -> Self {
+        let nn = g.nodes.len();
+        let mut ord = vec![u32::MAX; nn];
+        let mut n_plio = 0usize;
+        for (i, n) in g.nodes.iter().enumerate() {
+            if n.is_plio() {
+                ord[i] = n_plio as u32;
+                n_plio += 1;
+            }
+        }
+        Self {
+            ord,
+            seen: DenseBitSet::new(2 * n_plio * nn),
+            other: std::collections::HashSet::new(),
+            nn,
+        }
+    }
+
+    /// Insert an already-normalised `(plio, partner)` pair (the
+    /// congestion model's W_i identity, direction-blind). Returns true
+    /// when newly inserted.
+    pub fn insert(&mut self, plio: NodeId, partner: NodeId) -> bool {
+        if self.ord[plio] == u32::MAX {
+            return self.other.insert((plio, partner));
+        }
+        self.seen
+            .insert(2 * self.ord[plio] as usize * self.nn + partner)
+    }
+
+    /// Insert a directed `(src, dst)` pair (the router's route identity:
+    /// which endpoint is the PLIO encodes the direction). Returns true
+    /// when newly inserted.
+    pub fn insert_directed(&mut self, src: NodeId, dst: NodeId) -> bool {
+        if self.ord[src] != u32::MAX {
+            self.seen.insert(2 * self.ord[src] as usize * self.nn + dst)
+        } else if self.ord[dst] != u32::MAX {
+            self.seen
+                .insert((2 * self.ord[dst] as usize + 1) * self.nn + src)
+        } else {
+            self.other.insert((src, dst))
+        }
+    }
+}
+
 /// Compute congestion for a PLIO column assignment. `plio_cols` maps each
 /// PLIO node to its column; AIE columns come from the placement. Streams
 /// are deduplicated per (plio, aie) pair as in the paper's W_i.
@@ -52,9 +161,8 @@ pub fn congestion(
     // Size boundaries to the widest column actually used (guards against
     // callers passing a narrower nominal width).
     let max_col = placement
-        .coords
-        .values()
-        .map(|c| c.col)
+        .max_col()
+        .into_iter()
         .chain(plio_cols.values().copied())
         .max()
         .unwrap_or(0)
@@ -62,10 +170,9 @@ pub fn congestion(
     let nb = max_col as usize;
     let mut west = vec![0u32; nb];
     let mut east = vec![0u32; nb];
-    let mut seen = std::collections::HashSet::new();
-    // Broadcast multicast trunks: one horizontal crossing per boundary
-    // regardless of fan-out — collect extents per port.
-    let mut bcast_extent: HashMap<NodeId, (u32, u32)> = HashMap::new();
+    let nn = g.nodes.len();
+    let mut seen = PlioPairSet::new(g);
+    let mut bcast = BcastExtents::new(nn);
     for e in &g.edges {
         let (p, x) = if g.nodes[e.src].is_plio() && g.nodes[e.dst].is_aie() {
             (e.src, e.dst)
@@ -78,12 +185,10 @@ pub fn congestion(
             continue;
         };
         if e.kind == crate::graph::edge::EdgeKind::Broadcast {
-            let ext = bcast_extent.entry(p).or_insert((xc, xc));
-            ext.0 = ext.0.min(xc);
-            ext.1 = ext.1.max(xc);
+            bcast.note(p, xc);
             continue;
         }
-        if !seen.insert((p, x)) {
+        if !seen.insert(p, x) {
             continue;
         }
         if pc == xc {
@@ -107,7 +212,7 @@ pub fn congestion(
             }
         }
     }
-    for (p, (lo, hi)) in bcast_extent {
+    for (p, (lo, hi)) in bcast.iter() {
         let pc = plio_cols[&p];
         // trunk spans [min(lo, pc), max(hi, pc)]: eastward part from pc
         // to hi, westward part from pc down to lo
@@ -169,8 +274,8 @@ mod tests {
             Edge::new(2, 3, EdgeKind::Stream, "C", DepKind::Output, 1.0),
         ];
         let mut p = Placement::default();
-        p.coords.insert(1, Coord::new(2, 0));
-        p.coords.insert(2, Coord::new(2, 3));
+        p.insert(1, Coord::new(2, 0));
+        p.insert(2, Coord::new(2, 3));
         (g, p)
     }
 
@@ -220,5 +325,34 @@ mod tests {
         let prof = congestion(&g, &pl, &cols, 8);
         assert!(prof.within(6, 6));
         assert!(!prof.within(6, 0));
+    }
+
+    #[test]
+    fn bcast_extents_accumulate() {
+        let mut b = BcastExtents::new(4);
+        b.note(1, 5);
+        b.note(1, 2);
+        b.note(1, 9);
+        b.note(3, 4);
+        let v: Vec<_> = b.iter().collect();
+        assert_eq!(v, vec![(1, (2, 9)), (3, (4, 4))]);
+    }
+
+    #[test]
+    fn plio_pair_set_dedups_like_a_hash_set() {
+        let (g, _) = toy(); // PLIOs at indices 0 and 3, AIEs at 1 and 2
+        let mut s = PlioPairSet::new(&g);
+        assert!(s.insert(0, 1));
+        assert!(!s.insert(0, 1)); // duplicate pair
+        assert!(s.insert(0, 2)); // same port, other AIE
+        assert!(s.insert(3, 2)); // other port, same AIE
+        // directed: (plio→aie) and (aie→plio) are distinct route keys
+        let mut d = PlioPairSet::new(&g);
+        assert!(d.insert_directed(0, 1));
+        assert!(d.insert_directed(1, 0));
+        assert!(!d.insert_directed(0, 1));
+        // pairs with no PLIO endpoint fall back gracefully
+        assert!(d.insert_directed(1, 2));
+        assert!(!d.insert_directed(1, 2));
     }
 }

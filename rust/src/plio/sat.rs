@@ -22,8 +22,10 @@ pub fn check(
     rc_west: u32,
     rc_east: u32,
 ) -> bool {
-    // per-column, per-direction capacity
-    let mut used: HashMap<(u32, PlioDir), u32> = HashMap::new();
+    // per-column, per-direction capacity: a flat tally, two lanes per
+    // column (in / out are distinct hardware channels)
+    let num_cols = spec.columns.iter().copied().max().unwrap_or(0) + 1;
+    let mut used = vec![0u32; 2 * num_cols as usize];
     for n in g.plio_nodes() {
         let Some(&col) = columns.get(&n.id) else {
             return false;
@@ -38,13 +40,16 @@ pub fn check(
             debug_assert!(false, "non-PLIO node {} in the PLIO port set", n.id);
             continue;
         };
-        let u = used.entry((col, dir)).or_default();
+        let lane = match dir {
+            PlioDir::In => 0,
+            PlioDir::Out => 1,
+        };
+        let u = &mut used[2 * col as usize + lane];
         *u += 1;
         if *u > spec.channels_per_column {
             return false;
         }
     }
-    let num_cols = spec.columns.iter().copied().max().unwrap_or(0) + 1;
     congestion(g, placement, columns, num_cols).within(rc_west, rc_east)
 }
 
@@ -174,10 +179,10 @@ mod tests {
             Edge::new(3, 7, EdgeKind::Stream, "C", DepKind::Output, 1.0),
         ];
         let mut p = Placement::default();
-        p.coords.insert(0, Coord::new(0, 1));
-        p.coords.insert(1, Coord::new(0, 2));
-        p.coords.insert(2, Coord::new(1, 1));
-        p.coords.insert(3, Coord::new(1, 2));
+        p.insert(0, Coord::new(0, 1));
+        p.insert(1, Coord::new(0, 2));
+        p.insert(2, Coord::new(1, 1));
+        p.insert(3, Coord::new(1, 2));
         let spec = PlioSpec {
             in_channels: 4,
             out_channels: 4,

@@ -207,7 +207,13 @@ pub fn response_line(
         ("bound", Json::Str(est.bound.to_string())),
         ("sim_tops", Json::Num(design.sim.tops)),
         ("pnr", Json::Bool(design.compile.success)),
-        ("congestion", Json::Num(design.compile.max_congestion as f64)),
+        (
+            "congestion",
+            design
+                .compile
+                .max_congestion
+                .map_or(Json::Null, |c| Json::Num(c as f64)),
+        ),
         ("in_ports", Json::Num(design.merge_stats.in_ports_after as f64)),
         ("out_ports", Json::Num(design.merge_stats.out_ports_after as f64)),
         ("wall_us", Json::Num(wall_s * 1e6)),

@@ -1,0 +1,159 @@
+//! Dense fixed-capacity bitset over `u64` words.
+//!
+//! The membership structure behind the annealer's violated-edge worklist
+//! ([`crate::place_route::anneal`]) and the per-pair stream deduplication
+//! in the congestion model and router: O(1) set/clear/test, and a
+//! word-skipping circular "first set bit at or after" query that replaces
+//! an O(n) element-by-element scan with an O(n/64) word scan (with early
+//! exit on the first non-zero word).
+
+/// A fixed-capacity set of `usize` indices in `[0, len)`.
+#[derive(Debug, Clone)]
+pub struct DenseBitSet {
+    words: Vec<u64>,
+    len: usize,
+    count: usize,
+}
+
+impl DenseBitSet {
+    /// An empty set with capacity for indices `0..len`.
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+            count: 0,
+        }
+    }
+
+    /// Capacity (number of addressable indices).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no index is set.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Number of indices currently set.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Membership test.
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    /// Set or clear index `i`; returns the previous membership.
+    pub fn set(&mut self, i: usize, v: bool) -> bool {
+        debug_assert!(i < self.len);
+        let (w, m) = (i / 64, 1u64 << (i % 64));
+        let was = self.words[w] & m != 0;
+        if v {
+            self.words[w] |= m;
+            if !was {
+                self.count += 1;
+            }
+        } else {
+            self.words[w] &= !m;
+            if was {
+                self.count -= 1;
+            }
+        }
+        was
+    }
+
+    /// Insert index `i`; returns true when it was newly inserted (the
+    /// `HashSet::insert` contract, for deduplication loops).
+    pub fn insert(&mut self, i: usize) -> bool {
+        !self.set(i, true)
+    }
+
+    /// The first set index at or after `start`, wrapping circularly past
+    /// the end — exactly the element an element-by-element scan
+    /// `(start + k) % len` for `k = 0..len` would find first. `None` when
+    /// the set is empty.
+    pub fn first_set_circular(&self, start: usize) -> Option<usize> {
+        if self.count == 0 {
+            return None;
+        }
+        debug_assert!(start < self.len);
+        let nw = self.words.len();
+        let (sw, sb) = (start / 64, start % 64);
+        // partial first word: bits >= start
+        let w = self.words[sw] & (!0u64 << sb);
+        if w != 0 {
+            return Some(sw * 64 + w.trailing_zeros() as usize);
+        }
+        for k in 1..=nw {
+            let i = (sw + k) % nw;
+            let mut w = self.words[i];
+            if i == sw {
+                // wrapped all the way around: only bits < start remain
+                w &= (1u64 << sb) - 1;
+            }
+            if w != 0 {
+                return Some(i * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut s = DenseBitSet::new(200);
+        assert!(s.is_empty());
+        assert!(!s.set(3, true));
+        assert!(s.set(3, true)); // already present
+        assert!(s.insert(130));
+        assert!(!s.insert(130));
+        assert_eq!(s.count(), 2);
+        assert!(s.get(3) && s.get(130));
+        assert!(s.set(3, false));
+        assert!(!s.set(3, false));
+        assert_eq!(s.count(), 1);
+        assert!(!s.get(3));
+    }
+
+    #[test]
+    fn circular_first_matches_linear_scan() {
+        // sweep random memberships and starts against the reference scan
+        let mut rng = crate::util::rng::XorShift64::new(42);
+        for _ in 0..200 {
+            let len = 1 + rng.gen_range(300) as usize;
+            let mut s = DenseBitSet::new(len);
+            let mut member = vec![false; len];
+            for _ in 0..rng.gen_range(64) {
+                let i = rng.gen_range(len as u64) as usize;
+                let v = rng.gen_range(2) == 0;
+                s.set(i, v);
+                member[i] = v;
+            }
+            for _ in 0..8 {
+                let start = rng.gen_range(len as u64) as usize;
+                let reference = (0..len).map(|k| (start + k) % len).find(|&i| member[i]);
+                assert_eq!(s.first_set_circular(start), reference, "len {len} start {start}");
+            }
+        }
+    }
+
+    #[test]
+    fn circular_first_empty_and_exact_boundaries() {
+        let mut s = DenseBitSet::new(128);
+        assert_eq!(s.first_set_circular(0), None);
+        s.set(0, true);
+        assert_eq!(s.first_set_circular(0), Some(0));
+        assert_eq!(s.first_set_circular(1), Some(0)); // wraps
+        assert_eq!(s.first_set_circular(127), Some(0));
+        s.set(127, true);
+        assert_eq!(s.first_set_circular(1), Some(127));
+        assert_eq!(s.first_set_circular(127), Some(127));
+    }
+}

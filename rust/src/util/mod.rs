@@ -1,7 +1,9 @@
 //! Small shared utilities: deterministic PRNG, integer math, formatting,
-//! stable hashing and a dependency-free JSON reader/writer.
+//! stable hashing, a dense bitset and a dependency-free JSON
+//! reader/writer.
 
 pub mod bench;
+pub mod bitset;
 pub mod hash;
 pub mod json;
 pub mod math;

@@ -214,7 +214,7 @@ fn prop_algorithm1_sound_vs_exhaustive() {
                 },
                 name: format!("k_r0_0_{col}"),
             });
-            placement.coords.insert(i, Coord::new(1 + i as u32 % 4, col));
+            placement.insert(i, Coord::new(1 + i as u32 % 4, col));
         }
         for p in 0..n_plio {
             let id = n_aie + p;
@@ -280,7 +280,7 @@ fn prop_congestion_is_column_local() {
         });
         g.edges.push(Edge::new(1, 0, EdgeKind::Stream, "X", DepKind::Read, 1.0));
         let mut placement = Placement::default();
-        placement.coords.insert(0, Coord::new(3, aie_col));
+        placement.insert(0, Coord::new(3, aie_col));
         let mut cols = std::collections::HashMap::new();
         cols.insert(1usize, aie_col);
         let prof = congestion(&g, &placement, &cols, 50);
@@ -312,6 +312,59 @@ fn prop_placement_is_injective_and_in_bounds() {
         let g = build(&cand, &model);
         let p = place(&g, &AieArray::default()).expect("placement");
         assert!(p.is_valid(&AieArray::default()));
-        assert_eq!(p.coords.len(), g.num_aies());
+        assert_eq!(p.len(), g.num_aies());
+        assert!(g.node_ids_are_dense());
+    }
+}
+
+#[test]
+fn prop_placement_grid_and_coords_never_disagree() {
+    // The dense Placement keeps a NodeId→Coord vector mirrored by a flat
+    // row-major occupancy grid. Under arbitrary insert sequences — moves,
+    // re-inserts, slot steals, grid growth — the two views must stay
+    // exact mirrors, and the placed count must match both.
+    let mut rng = XorShift64::new(9000);
+    for case in 0..CASES {
+        let mut p = Placement::default();
+        // shadow model with the same displacement semantics
+        let mut model: std::collections::BTreeMap<usize, Coord> =
+            std::collections::BTreeMap::new();
+        for _ in 0..(1 + rng.gen_range(60)) {
+            let n = rng.gen_range(24) as usize;
+            // occasionally step past the default 8×50 grid to force growth
+            let c = Coord::new(rng.gen_range(10) as u32, rng.gen_range(56) as u32);
+            p.insert(n, c);
+            model.retain(|_, &mut mc| mc != c); // displaced occupant
+            model.insert(n, c);
+
+            let placed: Vec<(usize, Coord)> = p.iter().collect();
+            assert_eq!(placed.len(), p.len(), "case {case}: len drifted");
+            assert_eq!(
+                placed,
+                model.iter().map(|(&n, &c)| (n, c)).collect::<Vec<_>>(),
+                "case {case}: coords view diverged from model"
+            );
+            // coords → grid
+            for &(n, c) in &placed {
+                assert_eq!(p.node_at(c), Some(n), "case {case}: grid lost {n}");
+                assert_eq!(p.coord(n), Some(c), "case {case}");
+            }
+            // grid → coords (every occupied slot maps back)
+            let (rows, cols) = p.grid_dims();
+            let mut occupied = 0;
+            for r in 0..rows {
+                for col in 0..cols {
+                    if let Some(n) = p.node_at(Coord::new(r, col)) {
+                        occupied += 1;
+                        assert_eq!(
+                            p.coord(n),
+                            Some(Coord::new(r, col)),
+                            "case {case}: slot ({r},{col}) points at unplaced node"
+                        );
+                    }
+                }
+            }
+            assert_eq!(occupied, p.len(), "case {case}: grid occupancy drifted");
+        }
     }
 }
