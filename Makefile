@@ -10,7 +10,7 @@
 ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 
-.PHONY: build test bench doc artifacts serve-smoke rank-smoke pnr-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke rank-smoke pnr-smoke workloads-smoke clean
 
 build:
 	cargo build --release
@@ -47,6 +47,15 @@ rank-smoke:
 pnr-smoke:
 	cargo test -q --features legacy-hash-pnr --test pnr_equivalence
 	cargo bench --bench bench_compile --features legacy-hash-pnr
+
+# Gate the expanded workload catalog: every library workload (MM, Conv2D,
+# FIR, 2D-FFT, depthwise conv, triangular solve, stencil chain) must
+# compile to a legal design, stub-execute bit-correct against its
+# coordinator::verify oracle, and keep sim/analytic agreement ≤15 % —
+# then print the coverage table.
+workloads-smoke: build
+	cargo test -q --test integration_workloads
+	./target/release/widesa workloads
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -7,9 +7,11 @@ shapes and dtypes, and the rust-side functional executor is validated
 against the same semantics (coordinator/verify.rs re-implements them on the
 host side).
 
-The four computations are the paper's four uniform recurrences (Table II):
-matrix multiplication, 2D convolution, FIR filtering, and the radix-2 FFT
-stage that 2D-FFT decomposes into.
+The computations are the library's uniform recurrences: the paper's
+Table II four — matrix multiplication, 2D convolution, FIR filtering, and
+the radix-2 FFT stage that 2D-FFT decomposes into — plus the expanded
+catalog's depthwise convolution, triangular solve and 5-point stencil
+chain (see docs/WORKLOADS.md).
 """
 
 import jax.numpy as jnp
@@ -114,6 +116,49 @@ def fft1d_ref(re, im):
         tw_re, tw_im = twiddles(1 << s)
         re, im = fft_stage_ref(re, im, jnp.asarray(tw_re), jnp.asarray(tw_im), s)
     return re, im
+
+
+def dwconv2d_ref(x, w, acc):
+    """acc' = acc + per-channel valid 2D correlation (depthwise conv).
+
+    x: [C, H+P-1, W+Q-1], w: [C, P, Q] → out [C, H, W]; one independent
+    filter per channel group — the channel loop carries no reduction.
+    """
+    C, P, Q = w.shape
+    H = x.shape[1] - P + 1
+    W = x.shape[2] - Q + 1
+    out = jnp.zeros((C, H, W), dtype=acc.dtype)
+    for p in range(P):
+        for q in range(Q):
+            out = out + x[:, p : p + H, q : q + W].astype(acc.dtype) * w[:, p, q][:, None, None].astype(acc.dtype)
+    return acc + out
+
+
+def trsv_ref(l, b):
+    """Forward substitution x = L⁻¹ b (numpy loop; the strictly upper
+    part of ``l`` is ignored)."""
+    l = np.asarray(l, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = b.shape[0]
+    x = np.zeros(n)
+    for i in range(n):
+        x[i] = (b[i] - l[i, :i] @ x[:i]) / l[i, i]
+    return x.astype(np.float32)
+
+
+def stencil2d_ref(a, coef, stages):
+    """``stages`` Jacobi sweeps of the 5-point stencil, zero boundary;
+    coef = [centre, north, south, west, east]."""
+    a = np.asarray(a, dtype=np.float32)
+    coef = np.asarray(coef, dtype=np.float32)
+    for _ in range(stages):
+        out = coef[0] * a
+        out[1:, :] += coef[1] * a[:-1, :]
+        out[:-1, :] += coef[2] * a[1:, :]
+        out[:, 1:] += coef[3] * a[:, :-1]
+        out[:, :-1] += coef[4] * a[:, 1:]
+        a = out
+    return a
 
 
 def fft2d_ref(re, im):

@@ -1,7 +1,11 @@
-"""L2: graph-level computations for the paper's four uniform recurrences.
+"""L2: graph-level computations for the workload library — the paper's
+four Table II recurrences plus the expanded catalog (depthwise conv,
+triangular solve, stencil chains; see docs/WORKLOADS.md).
 
 Each function here is the computation one *graph-level tile* performs — one
-full round of the mapped AIE array — composed from the L1 Pallas kernels.
+full round of the mapped AIE array — composed from the L1 Pallas kernels
+(the Table II four) or written directly in jnp (the expanded-catalog
+tiles, pending dedicated Pallas kernels).
 ``aot.py`` lowers jitted instances of these to HLO text once at build time;
 the rust coordinator (L3) then drives the outer host-level loops (DRAM
 tiling, k-chaining, transposes between FFT passes) against the compiled
@@ -56,6 +60,53 @@ def fft1d_tile(re, im, *, bb=8):
     return fft.fft_stages(re, im, bb=bb)
 
 
+def dwconv2d_tile(x, w, acc):
+    """One depthwise-conv graph tile: per-channel valid correlation over a
+    halo-extended input block, accumulate form (``acc' = acc + dwconv``).
+
+    x: [C, H+P-1, W+Q-1], w: [C, P, Q], acc: [C, H, W]. Plain-jnp body
+    (no Pallas kernel yet): the shifted-window sum lowers to the same
+    HLO shape the rust stub mirrors.
+    """
+    C, P, Q = w.shape
+    H = x.shape[1] - P + 1
+    W = x.shape[2] - Q + 1
+    out = jnp.zeros((C, H, W), acc.dtype)
+    for p in range(P):
+        for q in range(Q):
+            out = out + x[:, p : p + H, q : q + W].astype(acc.dtype) * w[:, p, q][:, None, None].astype(acc.dtype)
+    return (acc + out,)
+
+
+def trsv_tile(l, b):
+    """One forward-substitution graph tile: x = L⁻¹ b for a lower-
+    triangular diagonal block (strictly upper entries of ``l`` are
+    ignored because the running solution is still zero there)."""
+    n = b.shape[0]
+
+    def body(i, x):
+        s = b[i] - jnp.dot(l[i], x)
+        return x.at[i].set(s / l[i, i])
+
+    return (jax.lax.fori_loop(0, n, body, jnp.zeros_like(b)),)
+
+
+def stencil2d_tile(a, coef, *, stages=2):
+    """``stages`` 5-point Jacobi sweeps over a grid tile with zero
+    boundary; coef = [centre, north, south, west, east]."""
+
+    def sweep(g):
+        north = jnp.pad(g[:-1, :], ((1, 0), (0, 0)))  # g[i-1, j]
+        south = jnp.pad(g[1:, :], ((0, 1), (0, 0)))   # g[i+1, j]
+        west = jnp.pad(g[:, :-1], ((0, 0), (1, 0)))   # g[i, j-1]
+        east = jnp.pad(g[:, 1:], ((0, 0), (0, 1)))    # g[i, j+1]
+        return coef[0] * g + coef[1] * north + coef[2] * south + coef[3] * west + coef[4] * east
+
+    for _ in range(stages):
+        a = sweep(a)
+    return (a,)
+
+
 # ---------------------------------------------------------------------------
 # Artifact variants (name → builder); shapes are the graph-tile sizes the
 # rust executor schedules over. Tile sizes respect the 32 KB/core budget.
@@ -95,6 +146,29 @@ def _fft_args(b, n, dtype):
     return (s, s)
 
 
+def _dwconv_args(c, h, w, p, q, dtype):
+    return (
+        jax.ShapeDtypeStruct((c, h + p - 1, w + q - 1), dtype),
+        jax.ShapeDtypeStruct((c, p, q), dtype),
+        jax.ShapeDtypeStruct((c, h, w), dtype),
+    )
+
+
+def _trsv_args(n, dtype):
+    return (
+        jax.ShapeDtypeStruct((n, n), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+    )
+
+
+def _stencil_args(stages, n, m, dtype):
+    del stages  # baked into the variant's sweep count, not its shapes
+    return (
+        jax.ShapeDtypeStruct((n, m), dtype),
+        jax.ShapeDtypeStruct((5,), dtype),
+    )
+
+
 VARIANTS = {
     # MM graph tiles: 256³ macro-tile of 32³ core tiles (f32 functional
     # path) and an i32 variant for the integer benchmark rows. A smaller
@@ -110,6 +184,12 @@ VARIANTS = {
     "fir_cf32_2048x15": (functools.partial(fir_complex_tile, bn=256), lambda: _fir_c_args(2048, 15, jnp.float32)),
     # FFT graph tile: 64 rows of length-256 FFTs (re/im planes).
     "fft1d_f32_64x256": (functools.partial(fft1d_tile, bb=8), lambda: _fft_args(64, 256, jnp.float32)),
+    # Depthwise-conv graph tile: 8 channel groups, 64×64 output, 3×3 kernels.
+    "dwconv2d_f32_8x64x3": (dwconv2d_tile, lambda: _dwconv_args(8, 64, 64, 3, 3, jnp.float32)),
+    # Triangular-solve graph tile: one 256-row forward-substitution block.
+    "trsv_f32_256": (trsv_tile, lambda: _trsv_args(256, jnp.float32)),
+    # Stencil-chain graph tile: 2 Jacobi sweeps over a 128×128 grid.
+    "stencil2d_f32_2x128": (functools.partial(stencil2d_tile, stages=2), lambda: _stencil_args(2, 128, 128, jnp.float32)),
 }
 
 

@@ -67,6 +67,38 @@ def test_fft_variant_matches_numpy():
     np.testing.assert_allclose(gim, want.imag, rtol=1e-3, atol=5e-3)
 
 
+def test_dwconv_variant_matches_oracle():
+    rng = np.random.default_rng(3)
+    fn, argf = model.VARIANTS["dwconv2d_f32_8x64x3"]
+    x, w, acc = _materialize(argf(), rng)
+    (got,) = fn(x, w, acc)
+    np.testing.assert_allclose(got, ref.dwconv2d_ref(x, w, acc), rtol=1e-4, atol=1e-4)
+
+
+def test_trsv_variant_matches_numpy_solve():
+    rng = np.random.default_rng(4)
+    fn, argf = model.VARIANTS["trsv_f32_256"]
+    n = 256
+    # diagonally dominant lower-triangular system
+    l = rng.standard_normal((n, n)).astype(np.float32) / n
+    l[np.diag_indices(n)] = 4.0 + np.abs(l[np.diag_indices(n)])
+    b = rng.standard_normal(n).astype(np.float32)
+    (got,) = fn(jnp.asarray(l), jnp.asarray(b))
+    np.testing.assert_allclose(got, ref.trsv_ref(l, b), rtol=1e-4, atol=1e-4)
+    # independent oracle: the dense solver on the lower triangle
+    want = np.linalg.solve(np.tril(l).astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_stencil_variant_matches_oracle():
+    rng = np.random.default_rng(5)
+    fn, argf = model.VARIANTS["stencil2d_f32_2x128"]
+    a, _ = _materialize(argf(), rng)
+    coef = jnp.asarray([0.5, 0.125, 0.125, 0.125, 0.125], jnp.float32)
+    (got,) = fn(a, coef)
+    np.testing.assert_allclose(got, ref.stencil2d_ref(a, coef, 2), rtol=1e-4, atol=1e-4)
+
+
 def test_lower_small_variant_to_hlo_text():
     lowered = model.lower_variant("fir_f32_4096x15")
     text = aot.to_hlo_text(lowered)

@@ -227,6 +227,153 @@ pub fn run_fft2d(
     Ok((ore, oim, stats))
 }
 
+/// Depthwise conv: tile over 8-channel groups and 64×64 spatial tiles of
+/// the `dwconv2d_f32_8x64x3` artifact. `x` is `[c, h+2, w+2]` row-major
+/// (2-pixel halo for the 3×3 kernels), `k` is `[c, 3, 3]`.
+pub fn run_dwconv2d(
+    rt: &mut Runtime,
+    x: &[f32],
+    k: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+) -> Result<(Vec<f32>, ExecStats)> {
+    const G: usize = 8;
+    const TILE: usize = 64;
+    const P: usize = 3;
+    if c % G != 0 || h % TILE != 0 || w % TILE != 0 {
+        bail!("dwconv sizes must divide by {G} channels / {TILE} pixels");
+    }
+    if k.len() != c * P * P || x.len() != c * (h + P - 1) * (w + P - 1) {
+        bail!("dwconv input shapes inconsistent with c={c} h={h} w={w}");
+    }
+    let (xh, xw) = (h + P - 1, w + P - 1);
+    let (bh, bw) = (TILE + P - 1, TILE + P - 1);
+    let t0 = std::time::Instant::now();
+    let mut y = vec![0f32; c * h * w];
+    let mut stats = ExecStats::default();
+    for g0 in (0..c).step_by(G) {
+        for i in (0..h).step_by(TILE) {
+            for j in (0..w).step_by(TILE) {
+                let mut xt = vec![0f32; G * bh * bw];
+                for g in 0..G {
+                    for r in 0..bh {
+                        let src = (g0 + g) * xh * xw + (i + r) * xw + j;
+                        xt[g * bh * bw + r * bw..g * bh * bw + (r + 1) * bw]
+                            .copy_from_slice(&x[src..src + bw]);
+                    }
+                }
+                let kt = k[g0 * P * P..(g0 + G) * P * P].to_vec();
+                let out = rt.run(
+                    "dwconv2d_f32_8x64x3",
+                    &[
+                        Tensor::f32(vec![G, bh, bw], xt),
+                        Tensor::f32(vec![G, P, P], kt),
+                        Tensor::f32(vec![G, TILE, TILE], vec![0.0; G * TILE * TILE]),
+                    ],
+                )?;
+                let data = out.into_iter().next().unwrap();
+                let data = data.data.as_f32().unwrap();
+                for g in 0..G {
+                    for r in 0..TILE {
+                        let dst = (g0 + g) * h * w + (i + r) * w + j;
+                        y[dst..dst + TILE].copy_from_slice(
+                            &data[g * TILE * TILE + r * TILE..g * TILE * TILE + (r + 1) * TILE],
+                        );
+                    }
+                }
+                stats.rounds += 1;
+            }
+        }
+    }
+    stats.elements = (c * h * w) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((y, stats))
+}
+
+/// Blocked forward substitution `x = L⁻¹ b` over the 256-row
+/// `trsv_f32_256` artifact: the host applies the off-diagonal updates
+/// (the PL mover's k-chain role), the artifact solves each diagonal
+/// block. `l` is row-major n×n; n must divide by 256.
+pub fn run_trsv(rt: &mut Runtime, l: &[f32], b: &[f32], n: usize) -> Result<(Vec<f32>, ExecStats)> {
+    const BLK: usize = 256;
+    if n % BLK != 0 {
+        bail!("trsv size must divide by {BLK}");
+    }
+    if l.len() != n * n || b.len() != n {
+        bail!("trsv input shapes inconsistent with n={n}");
+    }
+    let t0 = std::time::Instant::now();
+    let mut x = vec![0f32; n];
+    let mut stats = ExecStats::default();
+    for bi in (0..n).step_by(BLK) {
+        // rhs_I = b_I − Σ_{j < bi} L[I, j] · x[j]  (host-level chaining)
+        let mut rhs = b[bi..bi + BLK].to_vec();
+        for (i, r) in rhs.iter_mut().enumerate() {
+            let row = (bi + i) * n;
+            for (j, xj) in x[..bi].iter().enumerate() {
+                *r -= l[row + j] * xj;
+            }
+        }
+        // diagonal-block solve on the array
+        let mut lt = vec![0f32; BLK * BLK];
+        for r in 0..BLK {
+            lt[r * BLK..(r + 1) * BLK]
+                .copy_from_slice(&l[(bi + r) * n + bi..(bi + r) * n + bi + BLK]);
+        }
+        let out = rt.run(
+            "trsv_f32_256",
+            &[Tensor::f32(vec![BLK, BLK], lt), Tensor::f32(vec![BLK], rhs)],
+        )?;
+        x[bi..bi + BLK].copy_from_slice(out[0].data.as_f32().unwrap());
+        stats.rounds += 1;
+    }
+    stats.elements = n as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((x, stats))
+}
+
+/// Stencil chain: `stages` Jacobi sweeps over a 128×128 grid by chaining
+/// the 2-sweep `stencil2d_f32_2x128` artifact (stages must be even).
+/// Larger grids need halo-exchange tiling between sweeps — like the
+/// fft2d replay, this driver is specialised to the artifact's grid.
+pub fn run_stencil2d(
+    rt: &mut Runtime,
+    a: &[f32],
+    n: usize,
+    m: usize,
+    stages: usize,
+    coef: &[f32],
+) -> Result<(Vec<f32>, ExecStats)> {
+    const N: usize = 128;
+    if n != N || m != N {
+        bail!("stencil2d replay is specialised to {N}×{N} grids");
+    }
+    if stages == 0 || stages % 2 != 0 {
+        bail!("stages must be a positive multiple of the artifact's 2 sweeps");
+    }
+    if coef.len() != 5 {
+        bail!("stencil takes 5 coefficients [centre, n, s, w, e]");
+    }
+    let t0 = std::time::Instant::now();
+    let mut stats = ExecStats::default();
+    let mut cur = a.to_vec();
+    for _ in 0..stages / 2 {
+        let out = rt.run(
+            "stencil2d_f32_2x128",
+            &[
+                Tensor::f32(vec![N, N], cur),
+                Tensor::f32(vec![5], coef.to_vec()),
+            ],
+        )?;
+        cur = out.into_iter().next().unwrap().data.as_f32().unwrap().to_vec();
+        stats.rounds += 1;
+    }
+    stats.elements = (n * m) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((cur, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +444,66 @@ mod tests {
         assert!(verify::max_abs_diff(&c, &want) < 1e-2);
         // size validation fires on the stub path too
         assert!(run_mm(&mut rt, &[0.0; 100], &[0.0; 100], 10, 10, 10).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn dwconv_replay_on_stub_backend() {
+        let mut rt = Runtime::with_builtin();
+        let (c, h, w) = (16usize, 128usize, 64usize);
+        let mut rng = XorShift64::new(61);
+        let mut x = vec![0f32; c * (h + 2) * (w + 2)];
+        let mut k = vec![0f32; c * 9];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut k);
+        let (y, stats) = run_dwconv2d(&mut rt, &x, &k, c, h, w).unwrap();
+        // (16/8) groups × (128/64) × (64/64) spatial tiles
+        assert_eq!(stats.rounds, 4);
+        let want = verify::dw_conv2d_ref(&x, &k, c, h, w, 3, 3);
+        assert!(verify::max_abs_diff(&y, &want) < 1e-4);
+        // size validation
+        assert!(run_dwconv2d(&mut rt, &x, &k, 10, h, w).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn trsv_replay_on_stub_backend() {
+        let mut rt = Runtime::with_builtin();
+        let n = 512usize;
+        let mut rng = XorShift64::new(67);
+        let mut l = vec![0f32; n * n];
+        let mut b = vec![0f32; n];
+        rng.fill_f32(&mut l);
+        rng.fill_f32(&mut b);
+        for i in 0..n {
+            for j in 0..n {
+                l[i * n + j] /= n as f32;
+            }
+            l[i * n + i] = 4.0 + l[i * n + i].abs();
+        }
+        let (x, stats) = run_trsv(&mut rt, &l, &b, n).unwrap();
+        assert_eq!(stats.rounds, 2);
+        let want = verify::trsv_ref(&l, &b, n);
+        assert!(verify::max_abs_diff(&x, &want) < 1e-4);
+        assert!(run_trsv(&mut rt, &l, &b, 100).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stencil_replay_on_stub_backend() {
+        let mut rt = Runtime::with_builtin();
+        let n = 128usize;
+        let mut rng = XorShift64::new(71);
+        let mut a = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        let coef = [0.5f32, 0.125, 0.125, 0.125, 0.125];
+        let (out, stats) = run_stencil2d(&mut rt, &a, n, n, 4, &coef).unwrap();
+        assert_eq!(stats.rounds, 2); // two chained 2-sweep tiles
+        let want = verify::stencil2d_chain_ref(&a, n, n, 4, &coef);
+        assert!(verify::max_abs_diff(&out, &want) < 1e-4);
+        // odd sweep counts and foreign grids are rejected
+        assert!(run_stencil2d(&mut rt, &a, n, n, 3, &coef).is_err());
+        assert!(run_stencil2d(&mut rt, &a, 64, 64, 2, &coef).is_err());
     }
 
     #[cfg(not(feature = "pjrt"))]

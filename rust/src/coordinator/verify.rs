@@ -111,6 +111,88 @@ pub fn fft2d_ref(re: &mut [f32], im: &mut [f32], rows: usize, cols: usize) {
     }
 }
 
+/// Depthwise (grouped) 2D correlation: one independent p×q filter per
+/// channel. `x` is `[c, h+p-1, w+q-1]` row-major, `k` is `[c, p, q]`,
+/// output `[c, h, w]`.
+pub fn dw_conv2d_ref(
+    x: &[f32],
+    k: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    p: usize,
+    q: usize,
+) -> Vec<f32> {
+    let (xh, xw) = (h + p - 1, w + q - 1);
+    assert_eq!(x.len(), c * xh * xw);
+    assert_eq!(k.len(), c * p * q);
+    let mut out = vec![0f32; c * h * w];
+    for g in 0..c {
+        let xg = &x[g * xh * xw..(g + 1) * xh * xw];
+        let kg = &k[g * p * q..(g + 1) * p * q];
+        for i in 0..h {
+            for j in 0..w {
+                let mut acc = 0f32;
+                for a in 0..p {
+                    for b in 0..q {
+                        acc += xg[(i + a) * xw + (j + b)] * kg[a * q + b];
+                    }
+                }
+                out[g * h * w + i * w + j] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Forward substitution `x = L⁻¹ b`: `l` is row-major n×n with the
+/// strictly upper part ignored (the rectangular hull's dead half).
+pub fn trsv_ref(l: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(l.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut x = vec![0f32; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for (j, xj) in x.iter().enumerate().take(i) {
+            s -= l[i * n + j] * xj;
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// `stages` Jacobi sweeps of the 5-point stencil over a row-major n×m
+/// grid with coefficients `[centre, north, south, west, east]`; values
+/// beyond the boundary are zero.
+pub fn stencil2d_chain_ref(a: &[f32], n: usize, m: usize, stages: usize, coef: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), n * m);
+    assert_eq!(coef.len(), 5);
+    let mut cur = a.to_vec();
+    for _ in 0..stages {
+        let mut next = vec![0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                let mut s = coef[0] * cur[i * m + j];
+                if i > 0 {
+                    s += coef[1] * cur[(i - 1) * m + j];
+                }
+                if i + 1 < n {
+                    s += coef[2] * cur[(i + 1) * m + j];
+                }
+                if j > 0 {
+                    s += coef[3] * cur[i * m + j - 1];
+                }
+                if j + 1 < m {
+                    s += coef[4] * cur[i * m + j + 1];
+                }
+                next[i * m + j] = s;
+            }
+        }
+        cur = next;
+    }
+    cur
+}
+
 /// Max |a - b| over two buffers.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter()
@@ -187,6 +269,57 @@ mod tests {
         let freq_energy: f32 =
             re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f32>() / n as f32;
         assert!((time_energy - freq_energy).abs() / time_energy < 1e-4);
+    }
+
+    #[test]
+    fn dwconv_delta_kernel_is_per_channel_passthrough() {
+        let (c, h, w, p) = (3usize, 4usize, 4usize, 3usize);
+        let xw = w + p - 1;
+        let x: Vec<f32> = (0..c * (h + p - 1) * xw).map(|i| i as f32).collect();
+        // channel 1 gets a delta kernel at (0,0); others all-zero
+        let mut k = vec![0f32; c * p * p];
+        k[p * p] = 1.0;
+        let out = dw_conv2d_ref(&x, &k, c, h, w, p, p);
+        for i in 0..h {
+            for j in 0..w {
+                assert_eq!(out[h * w + i * w + j], x[(h + p - 1) * xw + i * xw + j]);
+                assert_eq!(out[i * w + j], 0.0, "zero kernel must give zero");
+            }
+        }
+    }
+
+    #[test]
+    fn trsv_identity_and_hand_case() {
+        // L = I: x = b
+        let n = 4;
+        let mut l = vec![0f32; n * n];
+        for i in 0..n {
+            l[i * n + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        assert_eq!(trsv_ref(&l, &b, n), b);
+        // hand case: [[2,0],[1,4]] x = [2, 9] → x = [1, 2]
+        let l2 = vec![2.0, 0.0, 1.0, 4.0];
+        let x = trsv_ref(&l2, &[2.0, 9.0], 2);
+        assert!((x[0] - 1.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6);
+        // the strictly upper half is ignored
+        let l3 = vec![2.0, 77.0, 1.0, 4.0];
+        assert_eq!(trsv_ref(&l3, &[2.0, 9.0], 2), x);
+    }
+
+    #[test]
+    fn stencil_identity_and_averaging() {
+        let (n, m) = (4usize, 5usize);
+        let a: Vec<f32> = (0..n * m).map(|i| i as f32).collect();
+        // centre-only kernel is the identity for any number of sweeps
+        let id = stencil2d_chain_ref(&a, n, m, 3, &[1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(id, a);
+        // one averaging sweep on a constant interior keeps the value
+        let ones = vec![1f32; n * m];
+        let avg = stencil2d_chain_ref(&ones, n, m, 1, &[0.2, 0.2, 0.2, 0.2, 0.2]);
+        assert!((avg[m + 2] - 1.0).abs() < 1e-6);
+        // boundary cells lose mass to the zero halo
+        assert!(avg[0] < 1.0);
     }
 
     #[test]

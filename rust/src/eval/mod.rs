@@ -9,18 +9,21 @@ pub mod pnr_ablation;
 pub mod table1;
 pub mod table3;
 pub mod table4;
+pub mod workloads;
 
 /// Experiment index (mirrors the paper's evaluation section):
 /// E1 = [`table3`], E2 = [`table4`], E3 = [`figure6`], E4 = [`table1`],
-/// E5 = [`pnr_ablation`], E7 = [`ablations`]. Each `run()` returns the
-/// structured rows plus a rendered text table; the `widesa` CLI prints
-/// them (`widesa table3`, `widesa figure6`, ...).
+/// E5 = [`pnr_ablation`], E7 = [`ablations`]; [`workloads`] is the
+/// repo's own workload-coverage table over the expanded catalog. Each
+/// `run()` returns the structured rows plus a rendered text table; the
+/// `widesa` CLI prints them (`widesa table3`, `widesa workloads`, ...).
 pub use ablations::run as run_ablations;
 pub use figure6::run as run_figure6;
 pub use pnr_ablation::run as run_pnr_ablation;
 pub use table1::run as run_table1;
 pub use table3::run as run_table3;
 pub use table4::run as run_table4;
+pub use workloads::run as run_workloads;
 
 /// Paper-vs-ours comparison cell.
 #[derive(Debug, Clone, Copy)]

@@ -1,0 +1,114 @@
+//! Workload-coverage table (`widesa workloads`, `make workloads-smoke`):
+//! every library constructor — the Table II four plus the expanded
+//! catalog families — through the full framework at a small size, with
+//! the mapping shape the DSE selected, the resources it uses, and the
+//! sim-vs-analytic agreement. This is the scenario-diversity ledger the
+//! `docs/WORKLOADS.md` cookbook references: a new workload is "open" once
+//! it shows up here with a compiling design and an agreement within the
+//! simulator's ±15 % tolerance.
+
+use crate::coordinator::framework::{WideSa, WideSaConfig};
+use crate::mapping::cost::PerfBound;
+use crate::mapping::dse::DseConstraints;
+use crate::recurrence::library;
+use crate::util::table::{fmt3, TextTable};
+
+/// One evaluated catalog row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    /// `"2D serpentine"`, `"1D"` or `"skewed"` — the selected space-time
+    /// transform shape.
+    pub mapping: &'static str,
+    pub aies: u64,
+    pub tops: f64,
+    pub sim_tops: f64,
+    /// |sim − analytic| / analytic.
+    pub sim_rel_err: f64,
+    pub bound: PerfBound,
+    pub pnr_success: bool,
+    pub in_ports: usize,
+    pub out_ports: usize,
+}
+
+/// Compile every [`library::catalog_small`] workload and tabulate it.
+pub fn run() -> (Vec<Row>, String) {
+    let mut rows = Vec::new();
+    let mut table = TextTable::new("Workload coverage — expanded catalog (small sizes, 400-AIE budget)");
+    table.header(&[
+        "workload", "mapping", "AIEs", "TOPS", "sim", "Δ%", "bound", "P&R", "in", "out",
+    ]);
+    for rec in library::catalog_small() {
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let d = ws
+            .compile(&rec)
+            .unwrap_or_else(|e| panic!("{}: no legal mapping: {e}", rec.name));
+        let mapping = if d.candidate.choice.is_skewed() {
+            "skewed"
+        } else if d.candidate.choice.dims() == 1 {
+            "1D"
+        } else {
+            "2D serpentine"
+        };
+        let rel = (d.sim.tops - d.estimate.tops).abs() / d.estimate.tops;
+        let row = Row {
+            name: d.candidate.rec.name.clone(),
+            mapping,
+            aies: d.candidate.aies_used(),
+            tops: d.estimate.tops,
+            sim_tops: d.sim.tops,
+            sim_rel_err: rel,
+            bound: d.estimate.bound,
+            pnr_success: d.compile.success,
+            in_ports: d.merge_stats.in_ports_after,
+            out_ports: d.merge_stats.out_ports_after,
+        };
+        table.row(vec![
+            row.name.clone(),
+            row.mapping.to_string(),
+            row.aies.to_string(),
+            fmt3(row.tops),
+            fmt3(row.sim_tops),
+            format!("{:.1}", row.sim_rel_err * 100.0),
+            row.bound.to_string(),
+            if row.pnr_success { "ok" } else { "FAIL" }.to_string(),
+            row.in_ports.to_string(),
+            row.out_ports.to_string(),
+        ]);
+        rows.push(row);
+    }
+    (rows, table.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_table_spans_the_catalog_and_agrees_with_sim() {
+        let (rows, rendered) = run();
+        assert_eq!(rows.len(), library::catalog_small().len());
+        for row in &rows {
+            assert!(row.pnr_success, "{} failed P&R", row.name);
+            assert!(
+                row.sim_rel_err < 0.15,
+                "{}: sim diverges {:.1}% from the analytic estimate",
+                row.name,
+                row.sim_rel_err * 100.0
+            );
+            assert!(row.in_ports <= 78 && row.out_ports <= 78, "{}", row.name);
+        }
+        // the catalog exercises more than the 2D-serpentine arm
+        assert!(
+            rows.iter().any(|r| r.mapping != "2D serpentine"),
+            "every workload mapped 2D serpentine:\n{rendered}"
+        );
+        assert!(rendered.contains("Workload coverage"));
+    }
+}

@@ -122,10 +122,16 @@ pub fn stream_rates(cand: &MappingCandidate, model: &CostModel) -> PortRates {
                 c: c_rate,
             }
         }
-        Kind::Conv2d | Kind::Fir | Kind::Fft2d => {
+        Kind::Conv2d | Kind::Fir | Kind::Fft2d | Kind::DwConv2d | Kind::Trsv | Kind::Stencil => {
             let unique_in = match cand.kind {
                 Kind::Conv2d => t[0] * t[1] * b,
                 Kind::Fir => t[0] * b,
+                // per-group spatial tile (halo via DMA, kernels broadcast)
+                Kind::DwConv2d => t[0] * t[1] * t[2] * b,
+                // the L tile dominates; x rides along
+                Kind::Trsv => (t[0] * t[1] + t[1]) * b,
+                // grid tile per sweep (±1 halo via DMA)
+                Kind::Stencil => t[1] * t[2] * b,
                 _ => {
                     let cols = cand.rec.domain.dims[3].extent * 2;
                     cols * b
@@ -263,12 +269,16 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                     }
                 }
             }
-            Kind::Conv2d | Kind::Fir | Kind::Fft2d => {
+            Kind::Conv2d | Kind::Fir | Kind::Fft2d | Kind::DwConv2d | Kind::Trsv
+            | Kind::Stencil => {
                 // Private in/out per core + one broadcast input (weights /
-                // taps / twiddles).
+                // taps / twiddles / stencil coefficients / rhs vector).
                 let (in_name, out_name, bc_name) = match cand.kind {
                     Kind::Conv2d => ("X", "Y", "K"),
                     Kind::Fir => ("x", "y", "h"),
+                    Kind::DwConv2d => ("X", "Y", "K"),
+                    Kind::Trsv => ("L", "x", "b"),
+                    Kind::Stencil => ("A", "A_next", "coef"),
                     _ => ("row", "row_out", "W"),
                 };
                 let PortRates::Private { rate } = rates else {
@@ -385,6 +395,27 @@ mod tests {
         let g = build_for(library::fir(1048576, 15, DType::F32), 256);
         for e in &g.edges {
             assert!(e.rate > 0.0);
+        }
+    }
+
+    #[test]
+    fn new_families_build_private_stream_graphs() {
+        for rec in [
+            library::dw_conv2d(64, 256, 256, 3, 3, DType::F32),
+            library::trsv(8192, DType::F32),
+            library::stencil2d_chain(2, 1024, 1024, DType::F32),
+        ] {
+            let name = rec.name.clone();
+            let g = build_for(rec, 400);
+            let aies = g.num_aies();
+            assert!(aies > 0, "{name}");
+            // per-core private in/out + one broadcast per replica
+            assert_eq!(g.plio_count(PlioDir::In), aies + g.replicas as usize, "{name}");
+            assert_eq!(g.plio_count(PlioDir::Out), aies, "{name}");
+            assert!(g.node_ids_are_dense(), "{name}");
+            for e in &g.edges {
+                assert!(e.rate > 0.0, "{name}");
+            }
         }
     }
 }

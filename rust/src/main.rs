@@ -28,6 +28,8 @@ COMMANDS (evaluation):
   figure6                regenerate Figure 6 (AIE / PLIO / buffer scalability sweeps)
   pnr-ablation           E5: constrained vs unconstrained place & route
   ablations              E7: technique ablations (latency hiding, threading, merge, movers)
+  workloads              workload-coverage table: every library workload end to end
+                         (mapping shape, AIEs, TOPS, sim agreement, P&R, ports)
 
 COMMANDS (framework):
   map <bench> <dtype> [--aies N]    run the mapping pipeline, print the design report
@@ -44,7 +46,8 @@ COMMANDS (service):
     request:  {\"id\":1,\"bench\":\"mm\",\"dtype\":\"f32\",\"dims\":[8192,8192,8192],\"max_aies\":400}
     response: {\"id\":1,\"ok\":true,\"cached\":false,\"key\":\"…\",\"tops\":4.13,…}
 
-  <bench>: mm | conv2d | fft2d | fir    <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
+  <bench>: mm | conv2d | fft2d | fir | dwconv2d | trsv | stencil2d
+  <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
 
 The functional replay runs on the in-process stub executor by default;
 build with `--features pjrt` (plus `make artifacts`) to execute the real
@@ -69,7 +72,10 @@ fn parse_bench(bench: &str, dtype: DType) -> Result<UniformRecurrence> {
         "conv2d" => library::conv2d(10240, 10240, 4, 4, dtype),
         "fft2d" => library::fft2d(8192, 8192, dtype),
         "fir" => library::fir(1048576, 15, dtype),
-        _ => bail!("unknown benchmark {bench} (mm|conv2d|fft2d|fir)"),
+        "dwconv2d" => library::dw_conv2d(64, 2048, 2048, 3, 3, dtype),
+        "trsv" => library::trsv(8192, dtype),
+        "stencil2d" => library::stencil2d_chain(2, 4096, 4096, dtype),
+        _ => bail!("unknown benchmark {bench} (mm|conv2d|fft2d|fir|dwconv2d|trsv|stencil2d)"),
     })
 }
 
@@ -241,6 +247,10 @@ fn main() -> Result<()> {
         }
         Some("ablations") => {
             let (_, table) = eval::ablations::run();
+            println!("{table}");
+        }
+        Some("workloads") => {
+            let (_, table) = eval::workloads::run();
             println!("{table}");
         }
         Some("map") => cmd_map(&args[1..])?,

@@ -16,6 +16,15 @@ pub enum Kind {
     Conv2d,
     Fir,
     Fft2d,
+    /// Depthwise / grouped 2D convolution: one independent filter per
+    /// channel group ([`crate::recurrence::library::dw_conv2d`]).
+    DwConv2d,
+    /// Triangular solve (forward substitution) over the rectangular hull
+    /// ([`crate::recurrence::library::trsv`]).
+    Trsv,
+    /// 2D stencil chain: pipelined Jacobi/advection sweeps
+    /// ([`crate::recurrence::library::stencil2d_chain`]).
+    Stencil,
 }
 
 impl Kind {
@@ -23,12 +32,18 @@ impl Kind {
         let n = rec.name.as_str();
         if n.starts_with("mm") {
             Kind::Mm
+        } else if n.starts_with("dwconv2d") {
+            Kind::DwConv2d
         } else if n.starts_with("conv2d") {
             Kind::Conv2d
         } else if n.starts_with("fir") {
             Kind::Fir
         } else if n.starts_with("fft2d") {
             Kind::Fft2d
+        } else if n.starts_with("trsv") {
+            Kind::Trsv
+        } else if n.starts_with("stencil2d") {
+            Kind::Stencil
         } else {
             // default to the most generic systolic family
             Kind::Mm
@@ -88,11 +103,44 @@ impl MappingCandidate {
         steps
     }
 
+    /// Is the design *edge-fed* — inputs enter at the array boundary and
+    /// propagate core-to-core systolically (MM's A/B feeds) — rather than
+    /// landing a private stream on every core? Edge-fed designs pay a
+    /// pipeline fill of one array diameter before their first result; the
+    /// private-stream families start computing as soon as the first tile
+    /// lands. Must agree with the graph shape
+    /// [`crate::graph::builder::stream_rates`] assigns.
+    pub fn edge_fed(&self) -> bool {
+        matches!(self.kind, Kind::Mm)
+    }
+
+    /// Systolic pipeline-fill steps before the first round's value
+    /// completes: the array diameter for edge-fed designs, zero for
+    /// private-stream designs. This is the **one** fill model — both the
+    /// analytic cost model ([`crate::mapping::cost::CostModel::estimate`])
+    /// and the simulator ([`crate::sim::engine::simulate`]) price fill
+    /// through this method, so the ≤15 % sim/analytic agreement holds by
+    /// construction for every workload family instead of being an MM
+    /// special case.
+    pub fn fill_steps(&self) -> u64 {
+        if self.edge_fed() {
+            let (r, c) = self.replica_shape();
+            r + c
+        } else {
+            0
+        }
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let (r, c) = self.replica_shape();
+        let skew = if self.choice.is_skewed() {
+            format!(" skew{:?}", self.choice.skews)
+        } else {
+            String::new()
+        };
         format!(
-            "{}: space {:?} → {}×{} phys ×{} threads = {} AIEs, {} rounds × {} steps, core tile {:?} ({} B)",
+            "{}: space {:?}{skew} → {}×{} phys ×{} threads = {} AIEs, {} rounds × {} steps, core tile {:?} ({} B)",
             self.rec.name,
             self.choice.space,
             r,
@@ -127,6 +175,16 @@ mod tests {
         assert_eq!(
             Kind::of(&library::fft2d(64, 64, DType::CF32)),
             Kind::Fft2d
+        );
+        // the dwconv2d prefix must not be swallowed by the conv2d arm
+        assert_eq!(
+            Kind::of(&library::dw_conv2d(8, 64, 64, 3, 3, DType::F32)),
+            Kind::DwConv2d
+        );
+        assert_eq!(Kind::of(&library::trsv(256, DType::F32)), Kind::Trsv);
+        assert_eq!(
+            Kind::of(&library::stencil2d_chain(2, 64, 64, DType::F32)),
+            Kind::Stencil
         );
     }
 }

@@ -113,6 +113,26 @@ pub fn issue_efficiency(kind: Kind, dtype: DType) -> f64 {
         (Kind::Fft2d, DType::CF32) => 0.1719,
         (Kind::Fft2d, DType::CI16) => 0.1496,
         (Kind::Fft2d, _) => 0.15,
+        // Depthwise conv sustains slightly below dense conv: the same MAC
+        // pattern but less register-level reuse per loaded operand
+        // (per-group kernels; cf. the XVDPU depthwise path).
+        (Kind::DwConv2d, DType::F32) => 0.54,
+        (Kind::DwConv2d, DType::I8) => 0.27,
+        (Kind::DwConv2d, DType::I16) => 0.31,
+        (Kind::DwConv2d, DType::I32) => 0.53,
+        (Kind::DwConv2d, _) => 0.38,
+        // Triangular solve: MM-shaped MACs interrupted by the per-row
+        // divide and short accumulation runs near the diagonal.
+        (Kind::Trsv, DType::F32) => 0.41,
+        (Kind::Trsv, DType::I32) => 0.39,
+        (Kind::Trsv, _) => 0.33,
+        // Stencil sweeps: 5 short MACs per point with neighbour loads —
+        // below conv, above FFT (cf. Brown's Versal advection study,
+        // arXiv:2301.13016, which sustains ~half of dense-conv issue).
+        (Kind::Stencil, DType::F32) => 0.47,
+        (Kind::Stencil, DType::I16) => 0.33,
+        (Kind::Stencil, DType::I32) => 0.45,
+        (Kind::Stencil, _) => 0.30,
     }
 }
 
@@ -290,12 +310,10 @@ impl CostModel {
         // ---- on-chip execution (double-buffered overlap) -------------------
         // Systolic pipeline fill (array diameter × step) is paid once and
         // only by edge-fed systolic designs; private-stream designs start
-        // computing as soon as their first tile lands.
-        let (r, c) = cand.replica_shape();
-        let fill_s = match cand.kind {
-            Kind::Mm => (r + c) as f64 * step_compute_s,
-            _ => 0.0,
-        };
+        // computing as soon as their first tile lands. The simulator
+        // prices fill through the same `fill_steps()` method, so the two
+        // models cannot disagree on it.
+        let fill_s = cand.fill_steps() as f64 * step_compute_s;
         let exec_s = compute_total_s.max(plio_in_s).max(plio_out_s) + fill_s;
 
         // ---- DRAM (end-to-end) ---------------------------------------------
@@ -406,6 +424,59 @@ impl CostModel {
                 let total = (passes * rows * cols * b) as f64;
                 Traffic::private(cores, total, total, 1)
             }
+            Kind::DwConv2d => {
+                // Per-core unique input bytes equal the output tile (the
+                // spatial halo travels over the shared-buffer DMA links,
+                // as for dense conv); per-group kernels ride the
+                // broadcast port.
+                let tile = t[0] * t[1] * t[2] * b;
+                let cores = active;
+                let in_total = total_steps * (cores * tile) as f64;
+                let out_total = total_steps * (cores * tile) as f64;
+                Traffic::private(cores, in_total, out_total, 1)
+            }
+            Kind::Trsv => {
+                // L has no reuse: every matrix element crosses a PLIO
+                // exactly once, so the L byte stream dominates and the
+                // workload is PLIO-bound at any interesting array size.
+                // x values ride along with each tile; row results drain
+                // once per round.
+                //
+                // The solve's concurrency is bounded by its wavefront:
+                // x(j) transitively depends on x(j−1), so at any instant
+                // only one block-column of the triangle is computable —
+                // at most `V_i` row-blocks, shrinking to 1 as the solve
+                // descends (average V_i/2). A design that instantiates
+                // more concurrent tiles than that wavefront stalls its
+                // streams proportionally. 1D chains (the Kung–Leiserson
+                // linear-array family) sit near the bound; 2D hull
+                // mappings instantiate the whole rectangle and idle
+                // hardest — which is why the DSE ranks a 1D array first
+                // (see docs/WORKLOADS.md).
+                let l_tile = t[0] * t[1] * b;
+                let x_tile = t[1] * b;
+                let y_tile = t[0] * b;
+                let cores = active;
+                let v_i = cand.rec.domain.dims[0].extent / t[0].max(1);
+                let wavefront = (v_i as f64 / 2.0).max(1.0);
+                let stall = (cores as f64 / wavefront).max(1.0);
+                let in_total = total_steps * (cores * (l_tile + x_tile)) as f64 * stall;
+                let out_total = (rounds * cores * y_tile) as f64 * stall;
+                Traffic::private(cores, in_total, out_total, 1)
+            }
+            Kind::Stencil => {
+                // One sweep per graph step: each core loads its grid tile
+                // (the ±1 halo travels over the shared-buffer DMA links)
+                // and stores the updated tile; the 5 coefficients ride
+                // the broadcast port. t is never core-tiled (see
+                // `tiling_preserves_order`), so core factors are
+                // [1, i0, j0].
+                let tile = t[1] * t[2] * b;
+                let cores = active;
+                let in_total = total_steps * (cores * tile) as f64;
+                let out_total = total_steps * (cores * tile) as f64;
+                Traffic::private(cores, in_total, out_total, 1)
+            }
         }
     }
 
@@ -448,6 +519,28 @@ impl CostModel {
                 let (rows, bfly) = (dims[1].extent, dims[3].extent);
                 let cols = bfly * 2;
                 6 * rows * cols * b // 2 passes r/w + transpose r/w
+            }
+            Kind::DwConv2d => {
+                let (g, h, w, p, q) = (
+                    dims[0].extent,
+                    dims[1].extent,
+                    dims[2].extent,
+                    dims[3].extent,
+                    dims[4].extent,
+                );
+                g * ((h + p - 1) * (w + q - 1) + p * q + h * w) * b
+            }
+            Kind::Trsv => {
+                // the real triangular footprint: the hull's strictly
+                // upper half never moves; b in, x out
+                let n = dims[0].extent;
+                n * (n + 1) / 2 * b + 2 * n * b
+            }
+            Kind::Stencil => {
+                // grid in + grid out; intermediate sweeps stay on-chip
+                // (the PL buffer ping-pongs the chain)
+                let (n, m) = (dims[1].extent, dims[2].extent);
+                2 * n * m * b + 5 * b
             }
         }
     }
@@ -688,10 +781,57 @@ mod tests {
             library::mm(8192, 8192, 8192, DType::F32),
             library::conv2d(10240, 10240, 4, 4, DType::F32),
             library::fir(1048576, 15, DType::I16),
+            library::dw_conv2d(64, 256, 256, 3, 3, DType::F32),
+            library::trsv(8192, DType::F32),
+            library::stencil2d_chain(2, 1024, 1024, DType::F32),
         ] {
             let est = estimate_best(rec, Some(400));
             assert!(est.plio_in_ports <= 78);
             assert!(est.plio_out_ports <= 78);
+        }
+    }
+
+    #[test]
+    fn new_families_have_positive_estimates() {
+        for rec in [
+            library::dw_conv2d(64, 256, 256, 3, 3, DType::F32),
+            library::trsv(8192, DType::F32),
+            library::stencil2d_chain(2, 1024, 1024, DType::F32),
+        ] {
+            let est = estimate_best(rec, Some(400));
+            assert!(est.tops > 0.0);
+            assert!(est.tops_e2e <= est.tops * (1.0 + 1e-9));
+            assert!(est.dram_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn trsv_wavefront_bound_crowns_the_1d_linear_array() {
+        // the solve's block-column wavefront caps usable concurrency, so
+        // the ranking must put the classic Kung–Leiserson 1D array (the
+        // accumulation loop j spatial, rows streaming through time) above
+        // every hull mapping that instantiates more tiles than the wave
+        let rec = library::trsv(8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let all = crate::mapping::dse::explore_all(&rec, &board, &cons);
+        assert!(all.len() >= 3, "hull candidates missing");
+        let winner = &all[0].0;
+        assert_eq!(winner.choice.dims(), 1, "{}", winner.summary());
+        // L streams are the bound: the design is PLIO-in limited
+        assert_eq!(all[0].1.bound, PerfBound::PlioIn, "{}", winner.summary());
+        // every 2D hull mapping ranks strictly below the linear array
+        for (cand, est) in &all[1..] {
+            if cand.choice.dims() == 2 {
+                assert!(
+                    est.tops < all[0].1.tops,
+                    "2D hull {} must trail the 1D array",
+                    cand.summary()
+                );
+            }
         }
     }
 }

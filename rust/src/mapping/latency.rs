@@ -29,7 +29,12 @@ impl LatencyHiding {
 
 /// Loops (by index) eligible for latency hiding inside the kernel scope:
 /// parallel w.r.t. every *flow* dependence (read reuse does not stall the
-/// accumulator).
+/// accumulator). A flow dependence constrains the loop that **carries**
+/// it — the first non-zero component in loop order — not inner loops the
+/// same vector merely touches: a stencil halo `(1, −1, 0)` is carried by
+/// the sweep loop `t`, so within one sweep the grid loops stay parallel
+/// and can still interleave accumulation chains. (For unit-vector flow
+/// deps — every Table II workload — both readings coincide.)
 pub fn parallel_kernel_loops(nest: &LoopNest) -> Vec<usize> {
     use crate::polyhedral::dependence::DepKind;
     (0..nest.rank())
@@ -39,7 +44,7 @@ pub fn parallel_kernel_loops(nest: &LoopNest) -> Vec<usize> {
                     .deps
                     .iter()
                     .filter(|dep| dep.kind == DepKind::Flow)
-                    .all(|dep| dep.vector[d] == 0)
+                    .all(|dep| dep.vector.iter().position(|&c| c != 0) != Some(d))
         })
         .collect()
 }
@@ -128,6 +133,25 @@ mod tests {
             assert_eq!(out.roles[out.rank() - 1 - extra], LoopRole::Latency);
         }
         assert_eq!(out.cardinality(), nest.cardinality());
+    }
+
+    #[test]
+    fn stencil_halo_deps_constrain_only_their_carrying_loop() {
+        // (1, -1, 0): carried by t; the grid loops remain parallel and
+        // can interleave accumulation chains within one sweep
+        let nest = LoopNest::new(
+            IterationDomain::new(vec![
+                LoopDim::new("t", 4),
+                LoopDim::new("i", 32),
+                LoopDim::new("j", 32),
+            ]),
+            vec![
+                Dependence::new("A", DepKind::Flow, vec![1, 0, 0]),
+                Dependence::new("A", DepKind::Flow, vec![1, -1, 0]),
+                Dependence::new("A", DepKind::Flow, vec![1, 0, 1]),
+            ],
+        );
+        assert_eq!(parallel_kernel_loops(&nest), vec![1, 2]);
     }
 
     #[test]

@@ -6,8 +6,17 @@
 //! 2-element subsets of the candidate pool (the AIE array is physically
 //! 2D), permutes the chosen loops outermost, marks the rest as time
 //! loops, and keeps only schedules that remain legal.
+//!
+//! Legality is the two-clause check of
+//! [`crate::polyhedral::legality::is_legal_mapping`]: the classic
+//! sequential-order clause (everything Table II needs) plus the
+//! neighbour-transfer clause that admits the negative spatial offsets of
+//! stencil chains. When even that fails — a transfer that regresses in
+//! time — the enumerator falls back to a **wavefront skew** of the
+//! outermost time loop by the space loops ([`Transform::Skew`], recorded
+//! in [`SpaceTimeChoice::skews`]) before giving up on the choice.
 
-use crate::polyhedral::legality::is_legal_order;
+use crate::polyhedral::legality::is_legal_mapping;
 use crate::polyhedral::schedule::{LoopNest, LoopRole};
 use crate::polyhedral::transform::Transform;
 
@@ -17,13 +26,26 @@ pub struct SpaceTimeChoice {
     /// Indices (into the *original* graph nest) of the space loops,
     /// ordered (array-row dim first, array-column dim second).
     pub space: Vec<usize>,
-    /// The transformed nest: space loops outermost, roles assigned.
+    /// Wavefront skews that legalised this choice, applied *after* the
+    /// space permutation: `(target, source, factor)` positions in the
+    /// permuted nest (`target` is always the outermost time loop,
+    /// `source` a space loop). Empty for permute-only choices — every
+    /// Table II workload — so summaries and cache behaviour of the
+    /// existing corpus are untouched.
+    pub skews: Vec<(usize, usize, i64)>,
+    /// The transformed nest: space loops outermost, roles assigned,
+    /// skews (if any) already applied.
     pub nest: LoopNest,
 }
 
 impl SpaceTimeChoice {
     pub fn dims(&self) -> usize {
         self.space.len()
+    }
+
+    /// Did legalising this choice require a wavefront skew?
+    pub fn is_skewed(&self) -> bool {
+        !self.skews.is_empty()
     }
 }
 
@@ -91,17 +113,63 @@ fn build_choice(
             LoopRole::Time
         };
     }
-    // Legality: the sequential order must respect all dependences. Space
-    // loop components of read dependences are realised as pipelined
-    // neighbour forwards (unit time step), so for the order check we only
-    // require lexicographic non-negativity.
-    if !is_legal_order(&permuted.deps) {
+    // Legality: sequential order (clause 1 — how chained designs are
+    // realised) or neighbour transfer with advancing time (clause 2 —
+    // stencil halos). See `is_legal_mapping`.
+    if is_legal_mapping(&permuted.deps, space.len()) {
+        return Some(SpaceTimeChoice {
+            space: space.to_vec(),
+            skews: vec![],
+            nest: permuted,
+        });
+    }
+    legalise_by_skewing(permuted, space)
+}
+
+/// Wavefront fallback: skew the outermost time loop by the space loops so
+/// transfers that regress in time advance instead (the classic systolic
+/// schedule `t' = t + Σ ±s`). Candidate factor sets are tried smallest
+/// first and validated by re-running the full legality check — a skew
+/// that fixes one dependence but breaks another is rejected wholesale.
+/// Returns `None` when no unit-factor wavefront legalises the choice.
+fn legalise_by_skewing(permuted: LoopNest, space: &[usize]) -> Option<SpaceTimeChoice> {
+    let n_space = space.len();
+    let lead = n_space; // position of the outermost time loop
+    if n_space == 0 || lead >= permuted.rank() {
         return None;
     }
-    Some(SpaceTimeChoice {
-        space: space.to_vec(),
-        nest: permuted,
-    })
+    let mut plans: Vec<Vec<(usize, usize, i64)>> = Vec::new();
+    for s in 0..n_space {
+        for f in [1i64, -1] {
+            plans.push(vec![(lead, s, f)]);
+        }
+    }
+    if n_space == 2 {
+        for f0 in [1i64, -1] {
+            for f1 in [1i64, -1] {
+                plans.push(vec![(lead, 0, f0), (lead, 1, f1)]);
+            }
+        }
+    }
+    for plan in plans {
+        let mut nest = permuted.clone();
+        for &(target, source, factor) in &plan {
+            nest = Transform::Skew {
+                target,
+                source,
+                factor,
+            }
+            .apply(&nest);
+        }
+        if is_legal_mapping(&nest.deps, n_space) {
+            return Some(SpaceTimeChoice {
+                space: space.to_vec(),
+                skews: plan,
+                nest,
+            });
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -162,6 +230,66 @@ mod tests {
         for c in &choices {
             assert!(c.dims() <= 2);
         }
+    }
+
+    #[test]
+    fn stencil_chain_enumerates_via_neighbour_realisation() {
+        // The stencil's (1, ±1, 0) / (1, 0, ±1) deps are lex-negative
+        // with a grid loop permuted outermost — the old sequential-order
+        // check alone would yield an empty choice set. The neighbour
+        // clause must admit them, without any skew.
+        let rec = library::stencil2d_chain(2, 1024, 1024, DType::F32);
+        let scope = demarcate(&rec);
+        let loops = scope.graph_loops();
+        let choices = enumerate(&scope.graph_nest, &loops);
+        assert!(!choices.is_empty(), "stencil must have space-time choices");
+        // the 2D grid choice (it, jt) is present and permute-only
+        let grid_2d = choices
+            .iter()
+            .find(|c| c.space == vec![loops[1], loops[2]])
+            .expect("(i, j) grid choice must be legal");
+        assert!(!grid_2d.is_skewed());
+        // and it genuinely relies on the neighbour clause: the permuted
+        // dep set is NOT sequentially legal
+        assert!(!crate::polyhedral::legality::is_legal_order(&grid_2d.nest.deps));
+        assert!(grid_2d
+            .nest
+            .deps
+            .iter()
+            .any(|d| d.vector.iter().any(|&c| c < 0)));
+    }
+
+    #[test]
+    fn wavefront_skew_fallback_legalises_time_regressing_transfers() {
+        use crate::polyhedral::dependence::{DepKind, Dependence};
+        use crate::polyhedral::domain::{IterationDomain, LoopDim};
+        // dep (0, -1, 0) over [a, b, c]: choosing b as space gives a pure
+        // backward space hop with zero time advance — illegal under both
+        // legality clauses. Skewing the lead time loop a by b (factor −1)
+        // yields the wavefront schedule a' = a − b under which the
+        // transfer advances in time.
+        let nest = LoopNest::new(
+            IterationDomain::new(vec![
+                LoopDim::new("a", 8),
+                LoopDim::new("b", 8),
+                LoopDim::new("c", 8),
+            ]),
+            vec![Dependence::new("X", DepKind::Flow, vec![0, -1, 0])],
+        );
+        let choices = enumerate(&nest, &[0, 1, 2]);
+        let b_space = choices
+            .iter()
+            .find(|ch| ch.space == vec![1])
+            .expect("space=[b] must be legalised by the skew fallback");
+        assert!(b_space.is_skewed());
+        assert_eq!(b_space.skews, vec![(1, 0, -1)]);
+        // post-skew, the dep advances in time
+        assert!(crate::polyhedral::legality::is_legal_mapping(
+            &b_space.nest.deps,
+            1
+        ));
+        // the skewed time loop's rectangular hull grew
+        assert!(b_space.nest.domain.dims[1].extent > 8);
     }
 
     #[test]

@@ -34,7 +34,13 @@ impl Threading {
 
 /// Time loops eligible for threading: every dependence with a non-zero
 /// component on the loop is a Flow/Output *reduction* dependence (partial
-/// sums can be recombined associatively) or none at all.
+/// sums can be recombined associatively) or none at all — and the chain
+/// must be confined to the loop itself plus kernel-scope point loops (the
+/// intra-tile half of the same strip-mined chain). A carried dependence
+/// that also moves along another graph loop — a stencil halo like
+/// `(1, ±1, 0)` — is *not* an associative reduction: splitting its loop
+/// across replicas would compute sweeps against stale neighbours, so
+/// such loops are excluded.
 pub fn threadable_time_loops(nest: &LoopNest) -> Vec<(usize, bool)> {
     nest.loops_with_role(LoopRole::Time)
         .into_iter()
@@ -49,11 +55,13 @@ pub fn threadable_time_loops(nest: &LoopNest) -> Vec<(usize, bool)> {
                 .collect();
             if carried.is_empty() {
                 Some((d, false))
-            } else if carried
-                .iter()
-                .all(|dep| matches!(dep.kind, DepKind::Flow | DepKind::Output))
-            {
-                // reduction chain: threadable with a recombine pass
+            } else if carried.iter().all(|dep| {
+                matches!(dep.kind, DepKind::Flow | DepKind::Output)
+                    && dep.vector.iter().enumerate().all(|(o, &c)| {
+                        o == d || c == 0 || nest.roles[o] == LoopRole::Kernel
+                    })
+            }) {
+                // pure reduction chain: threadable with a recombine pass
                 Some((d, true))
             } else {
                 None
@@ -127,6 +135,34 @@ mod tests {
         // reuse only, but our conservative rule requires all carried deps
         // to be Flow/Output. The added Read blocks threading.
         assert!(threadable_time_loops(&nest).is_empty());
+    }
+
+    #[test]
+    fn stencil_sweep_loop_is_not_a_reduction() {
+        // a t-carried dep that also moves along a non-kernel loop (the
+        // stencil halo (1, -1, 0)) must block threading of t: sweeps are
+        // sequential, not an associative reduction
+        let mut nest = LoopNest::new(
+            IterationDomain::new(vec![
+                LoopDim::new("t", 8),
+                LoopDim::new("it", 16),
+                LoopDim::new("jt", 16),
+            ]),
+            vec![
+                Dependence::new("A", DepKind::Flow, vec![1, 0, 0]),
+                Dependence::new("A", DepKind::Flow, vec![1, -1, 0]),
+            ],
+        );
+        nest.roles = vec![LoopRole::Time, LoopRole::Space, LoopRole::Space];
+        assert!(threadable_time_loops(&nest).is_empty());
+        // …while an intra-tile (kernel-role) spill of the same chain is
+        // still a pure reduction (the MM k-tile shape)
+        let mut mm = LoopNest::new(
+            IterationDomain::new(vec![LoopDim::new("kt", 64), LoopDim::new("kp", 4)]),
+            vec![Dependence::new("C", DepKind::Flow, vec![1, -3])],
+        );
+        mm.roles = vec![LoopRole::Time, LoopRole::Kernel];
+        assert_eq!(threadable_time_loops(&mm), vec![(0, true)]);
     }
 
     #[test]

@@ -33,6 +33,45 @@ pub fn is_legal_order(deps: &[Dependence]) -> bool {
     deps.iter().all(|d| lex_nonnegative(&d.vector))
 }
 
+/// Legality of a space-time *mapping* whose first `n_space` loops are the
+/// space loops (the orientation [`crate::mapping::spacetime::enumerate`]
+/// produces). A dependence is realisable iff either
+///
+/// * its full vector is lexicographically non-negative — the sequential
+///   realisation: the linearised (space-outermost) order executes it in
+///   program order, which is how MM's k-chaining and every componentwise
+///   non-negative dependence has always been realised here; or
+/// * it is a **neighbour transfer**: every space component has
+///   |component| ≤ 1 (adjacent-core NoC/DMA links only) and the time
+///   projection advances — strictly (lex-positive) for flow/output
+///   dependences, which move a computed value between cores, and
+///   non-negatively for read dependences, whose forwarding inserts the
+///   unit pipeline step itself (see `graph::builder`).
+///
+/// The first clause alone is the pre-stencil behaviour, so nothing that
+/// was legal becomes illegal. The second clause admits the negative
+/// spatial offsets of stencil chains (`A[t−1, i±1, j±1]` ⇒ vectors like
+/// `(−1, 0, 1, …)` after the space permutation) that *no* permutation can
+/// make lexicographically non-negative: the value hops one core against
+/// the iteration order while the sweep index advances in time — a plain
+/// pipelined neighbour transfer on the array.
+pub fn is_legal_mapping(deps: &[Dependence], n_space: usize) -> bool {
+    deps.iter().all(|d| {
+        if lex_nonnegative(&d.vector) {
+            return true;
+        }
+        let n_space = n_space.min(d.vector.len());
+        let (sp, tp) = d.vector.split_at(n_space);
+        if sp.iter().any(|&c| c.abs() > 1) {
+            return false; // non-neighbour space hop
+        }
+        match d.kind {
+            super::dependence::DepKind::Read => lex_nonnegative(tp),
+            _ => lex_positive(tp),
+        }
+    })
+}
+
 /// Space-time legality for a systolic mapping (paper §III-B-1):
 /// * every dependence space projection must have |component| ≤ 1 on each
 ///   space loop (neighbour-to-neighbour NoC/DMA links only);
@@ -130,6 +169,25 @@ mod tests {
             vec![vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 1]],
         );
         assert!(is_legal_spacetime(&realised));
+    }
+
+    #[test]
+    fn mapping_check_grandfathers_sequential_legality_and_adds_neighbour_transfers() {
+        use DepKind::{Flow, Read};
+        let d = |k, v: Vec<i64>| Dependence::new("X", k, v);
+        // clause 1: anything lex-nonnegative stays legal (MM k-chaining)
+        assert!(is_legal_mapping(&[d(Flow, vec![1, 0, -3])], 1));
+        // clause 2: stencil halo — space −1, time advances strictly
+        assert!(is_legal_mapping(&[d(Flow, vec![-1, 1, 0])], 1));
+        // flow that moves in space with no time advance is unrealisable
+        assert!(!is_legal_mapping(&[d(Flow, vec![-1, 0, 0])], 1));
+        // …but a *read* forward is (the builder adds the unit step)
+        assert!(is_legal_mapping(&[d(Read, vec![-1, 0, 0])], 1));
+        // far hops stay illegal regardless of time
+        assert!(!is_legal_mapping(&[d(Flow, vec![-2, 1, 0])], 1));
+        // time regression with zero space is illegal for every kind
+        assert!(!is_legal_mapping(&[d(Read, vec![0, -1, 0])], 1));
+        assert!(!is_legal_mapping(&[d(Flow, vec![0, 0, -1])], 2));
     }
 
     #[test]

@@ -28,6 +28,6 @@ pub mod transform;
 pub use affine::{AffineExpr, AffineMap};
 pub use dependence::{DepKind, Dependence};
 pub use domain::{IterationDomain, LoopDim};
-pub use legality::{is_legal_order, lex_positive};
+pub use legality::{is_legal_mapping, is_legal_order, lex_nonnegative, lex_positive};
 pub use schedule::{LoopNest, LoopRole};
 pub use transform::Transform;

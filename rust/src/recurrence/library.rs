@@ -1,4 +1,10 @@
-//! The paper's benchmark recurrences (Table II) as [`UniformRecurrence`]s.
+//! The workload library: the paper's Table II recurrences plus the
+//! expanded catalog (depthwise/grouped conv, triangular solve, stencil
+//! chains) as [`UniformRecurrence`]s.
+//!
+//! Every constructor is documented in `docs/WORKLOADS.md` (the recurrence
+//! cookbook): equations, dependence vectors, which mapping shapes the DSE
+//! selects, and the 5-step recipe for adding a new workload.
 //!
 //! ```
 //! use widesa::{library, DType};
@@ -10,7 +16,8 @@
 //! assert_eq!(rec.total_ops(), 1024.0);
 //! ```
 
-use crate::polyhedral::affine::AffineMap;
+use crate::polyhedral::affine::{AffineExpr, AffineMap};
+use crate::polyhedral::dependence::{DepKind, Dependence};
 use crate::polyhedral::domain::{IterationDomain, LoopDim};
 use crate::recurrence::dtype::DType;
 use crate::recurrence::spec::{Access, AccessKind, UniformRecurrence};
@@ -36,6 +43,7 @@ pub fn mm(n: u64, m: u64, k: u64, dtype: DType) -> UniformRecurrence {
         ],
         dtype,
         macs_per_iter: 1,
+        carried: vec![],
     }
 }
 
@@ -75,6 +83,7 @@ pub fn conv2d(h: u64, w: u64, p: u64, q: u64, dtype: DType) -> UniformRecurrence
         ],
         dtype,
         macs_per_iter: 1,
+        carried: vec![],
     }
 }
 
@@ -98,6 +107,7 @@ pub fn fir(n: u64, taps: u64, dtype: DType) -> UniformRecurrence {
         ],
         dtype,
         macs_per_iter: 1,
+        carried: vec![],
     }
 }
 
@@ -131,6 +141,180 @@ pub fn fft2d(rows: u64, cols: u64, dtype: DType) -> UniformRecurrence {
         ],
         dtype,
         macs_per_iter: 1,
+        carried: vec![],
+    }
+}
+
+/// Depthwise (grouped) 2D convolution
+/// `Y[g,h,w] += X[g, h+p, w+q] · K[g,p,q]` over `[g, h, w, p, q]` —
+/// one independent p×q filter per channel group, the MobileNet-style
+/// workload whose channel loop carries *no* reduction.
+///
+/// Compared with [`conv2d`], the kernel is not shared across the whole
+/// array: `K[g,·,·]` is reused only along `h` and `w`, and the group loop
+/// `g` is embarrassingly parallel (no dependence touches it), so the DSE
+/// can spend it as a space dimension or as threading replicas — the
+/// scenario the Table II corpus never exercises.
+///
+/// ```
+/// use widesa::{library, DType};
+/// use widesa::polyhedral::dependence::DepKind;
+///
+/// let rec = library::dw_conv2d(64, 256, 256, 3, 3, DType::F32);
+/// assert_eq!(rec.rank(), 5);
+/// assert_eq!(rec.total_macs(), 64 * 256 * 256 * 9);
+/// // the group loop is dependence-free: every vector is 0 on g
+/// assert!(rec.dependences().iter().all(|d| d.vector[0] == 0));
+/// assert!(rec.dependences().iter().any(|d| d.array == "Y"
+///     && d.kind == DepKind::Flow && d.vector == vec![0, 0, 0, 1, 0]));
+/// ```
+pub fn dw_conv2d(groups: u64, h: u64, w: u64, p: u64, q: u64, dtype: DType) -> UniformRecurrence {
+    let domain = IterationDomain::new(vec![
+        LoopDim::new("g", groups),
+        LoopDim::new("h", h),
+        LoopDim::new("w", w),
+        LoopDim::new("p", p),
+        LoopDim::new("q", q),
+    ]);
+    UniformRecurrence {
+        name: format!("dwconv2d_{groups}x{h}x{w}_{p}x{q}_{dtype}"),
+        domain,
+        accesses: vec![
+            // X[g, h+p, w+q]: per-group halo-extended input plane.
+            Access::new(
+                "X",
+                AccessKind::Read,
+                AffineMap::new(vec![
+                    AffineExpr::var(0, 5),
+                    AffineExpr::new(vec![0, 1, 0, 1, 0], 0),
+                    AffineExpr::new(vec![0, 0, 1, 0, 1], 0),
+                ]),
+            ),
+            // K[g, p, q]: reused along h, w only (not across groups).
+            Access::new("K", AccessKind::Read, AffineMap::select(&[0, 3, 4], &[0, 0, 0], 5)),
+            Access::new(
+                "Y",
+                AccessKind::Accumulate,
+                AffineMap::select(&[0, 1, 2], &[0, 0, 0], 5),
+            ),
+        ],
+        dtype,
+        macs_per_iter: 1,
+        carried: vec![],
+    }
+}
+
+/// Triangular solve (forward substitution) `x = L⁻¹ b` as a uniform
+/// recurrence over the rectangular hull `[i: n, j: n]` — the classic
+/// Kung–Leiserson linear-solver systolization:
+///
+/// ```text
+/// y(i,j) = y(i,j−1) + L[i,j] · x[j]        (j < i)
+/// x(i)   = (b[i] − y(i,i−1)) / L[i,i]
+/// ```
+///
+/// Dependences: the partial sum `y` is carried along `j` (flow `(0,1)`)
+/// and each solved `x[j]` propagates down the rows (read `(1,0)`). The
+/// rectangular hull over-approximates the triangular domain by 2× —
+/// mapping and scheduling see the hull; the functional references
+/// ([`crate::coordinator::verify::trsv_ref`]) and the stub kernel compute
+/// the real triangular solve. `L` has *no* reuse (every element is
+/// consumed exactly once), so the workload is PLIO-bound, and the solve's
+/// wavefront (x(j) depends on x(j−1)) caps usable concurrency at one
+/// block-column — which is why the DSE's 1D arm wins, as in the classic
+/// Kung–Leiserson linear solver arrays: a 1D chain sits near the
+/// wavefront bound, while 2D hull mappings instantiate far more tiles
+/// than the wave and idle against it (the Trsv stall term in
+/// [`crate::mapping::cost`]).
+///
+/// ```
+/// use widesa::{library, DType};
+/// use widesa::polyhedral::dependence::DepKind;
+///
+/// let rec = library::trsv(4096, DType::F32);
+/// assert_eq!(rec.rank(), 2);
+/// assert_eq!(rec.total_macs(), 4096 * 4096); // rectangular hull
+/// let deps = rec.dependences();
+/// assert!(deps.iter().any(|d| d.array == "x"
+///     && d.kind == DepKind::Read && d.vector == vec![1, 0]));
+/// assert!(deps.iter().any(|d| d.array == "y"
+///     && d.kind == DepKind::Flow && d.vector == vec![0, 1]));
+/// ```
+pub fn trsv(n: u64, dtype: DType) -> UniformRecurrence {
+    let domain = IterationDomain::new(vec![LoopDim::new("i", n), LoopDim::new("j", n)]);
+    UniformRecurrence {
+        name: format!("trsv_{n}_{dtype}"),
+        domain,
+        accesses: vec![
+            // L[i,j]: fully indexed, no reuse — n² unique bytes.
+            Access::new("L", AccessKind::Read, AffineMap::select(&[0, 1], &[0, 0], 2)),
+            // x[j]: the solved prefix, propagated down the rows.
+            Access::new("x", AccessKind::Read, AffineMap::select(&[1], &[0], 2)),
+            // y[i]: the row's partial sum, carried along j.
+            Access::new("y", AccessKind::Accumulate, AffineMap::select(&[0], &[0], 2)),
+        ],
+        dtype,
+        macs_per_iter: 1,
+        carried: vec![],
+    }
+}
+
+/// 2D stencil chain: `stages` Jacobi/advection sweeps of a 5-point
+/// stencil over an `n × m` grid, pipelined as one recurrence over
+/// `[t, i, j]` (the workload class of Brown's Versal advection study,
+/// arXiv:2301.13016, and EA4RCA's regular communication-avoiding
+/// kernels, arXiv:2407.05621):
+///
+/// ```text
+/// A(t,i,j) = c₀·A(t−1,i,j) + c₁·A(t−1,i−1,j) + c₂·A(t−1,i+1,j)
+///          + c₃·A(t−1,i,j−1) + c₄·A(t−1,i,j+1)
+/// ```
+///
+/// The neighbour reads carry the *negative-offset* dependence vectors
+/// `(1,±1,0)` / `(1,0,±1)` — stated explicitly via
+/// [`UniformRecurrence::carried`], since access reuse can only derive
+/// positive unit vectors. No loop permutation makes `(1,−1,0)`
+/// lexicographically positive with `i` outermost, so these deps are
+/// mappable only through the space-time enumerator's neighbour-transfer
+/// realisation (and, where that fails, its wavefront skew fallback) —
+/// exactly the machinery the Table II corpus never stressed.
+///
+/// ```
+/// use widesa::{library, DType};
+///
+/// let rec = library::stencil2d_chain(2, 1024, 1024, DType::F32);
+/// assert_eq!(rec.rank(), 3);
+/// assert_eq!(rec.total_macs(), 2 * 1024 * 1024 * 5); // 5 MACs per point
+/// assert!(rec.dependences().iter().any(|d| d.vector == vec![1, -1, 0]));
+/// assert!(rec.dependences().iter().any(|d| d.vector == vec![1, 0, 1]));
+/// ```
+pub fn stencil2d_chain(stages: u64, n: u64, m: u64, dtype: DType) -> UniformRecurrence {
+    assert!(stages >= 1, "a stencil chain needs at least one sweep");
+    let domain = IterationDomain::new(vec![
+        LoopDim::new("t", stages),
+        LoopDim::new("i", n),
+        LoopDim::new("j", m),
+    ]);
+    let carried = [[1i64, 1, 0], [1, -1, 0], [1, 0, 1], [1, 0, -1]]
+        .iter()
+        .map(|v| Dependence::new("A", DepKind::Flow, v.to_vec()))
+        .collect();
+    UniformRecurrence {
+        name: format!("stencil2d_{stages}x{n}x{m}_{dtype}"),
+        domain,
+        accesses: vec![
+            // A[i,j] in-place across sweeps: centre-point flow along t.
+            Access::new(
+                "A",
+                AccessKind::Accumulate,
+                AffineMap::select(&[1, 2], &[0, 0], 3),
+            ),
+            // the 5 stencil coefficients: loop-invariant broadcast.
+            Access::new("c", AccessKind::Read, AffineMap::new(vec![])),
+        ],
+        dtype,
+        macs_per_iter: 5,
+        carried,
     }
 }
 
@@ -151,6 +335,23 @@ pub fn table2_benchmarks() -> Vec<UniformRecurrence> {
         fir(1048576, 15, DType::I8),
         fir(1048576, 15, DType::I16),
         fir(1048576, 15, DType::CF32),
+    ]
+}
+
+/// One instance of every library constructor at a small, fast-to-compile
+/// size — the workload-coverage corpus behind `widesa workloads`,
+/// `make workloads-smoke` and the `docs/WORKLOADS.md` cookbook. Sizes are
+/// chosen so every family finds a legal mapping on the full 400-AIE board
+/// within a test-friendly compile budget.
+pub fn catalog_small() -> Vec<UniformRecurrence> {
+    vec![
+        mm(1024, 1024, 1024, DType::F32),
+        conv2d(512, 512, 4, 4, DType::I16),
+        fir(65536, 15, DType::F32),
+        fft2d(512, 512, DType::CF32),
+        dw_conv2d(64, 256, 256, 3, 3, DType::F32),
+        trsv(8192, DType::F32),
+        stencil2d_chain(2, 1024, 1024, DType::F32),
     ]
 }
 
@@ -212,5 +413,77 @@ mod tests {
     #[test]
     fn table2_has_14_rows() {
         assert_eq!(table2_benchmarks().len(), 14);
+    }
+
+    #[test]
+    fn dwconv_group_loop_is_dependence_free() {
+        let r = dw_conv2d(16, 64, 64, 3, 3, DType::F32);
+        let deps = r.dependences();
+        assert!(deps.iter().all(|d| d.vector[0] == 0), "{deps:?}");
+        // K reused along h and w only
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "K" && d.vector == vec![0, 1, 0, 0, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "K" && d.vector == vec![0, 0, 1, 0, 0]));
+        // Y accumulated along p and q
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "Y" && d.kind == DepKind::Flow && d.vector == vec![0, 0, 0, 1, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "Y" && d.kind == DepKind::Flow && d.vector == vec![0, 0, 0, 0, 1]));
+    }
+
+    #[test]
+    fn trsv_has_fir_shaped_dependences_and_no_l_reuse() {
+        let r = trsv(1024, DType::F32);
+        let deps = r.dependences();
+        assert!(!deps.iter().any(|d| d.array == "L"), "L must have no reuse");
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "x" && d.kind == DepKind::Read && d.vector == vec![1, 0]));
+        assert!(deps
+            .iter()
+            .any(|d| d.array == "y" && d.kind == DepKind::Flow && d.vector == vec![0, 1]));
+    }
+
+    #[test]
+    fn stencil_carried_vectors_are_the_four_neighbours() {
+        let r = stencil2d_chain(4, 256, 256, DType::F32);
+        let deps = r.dependences();
+        for v in [
+            vec![1i64, 0, 0], // centre (from the Accumulate reuse)
+            vec![1, 1, 0],
+            vec![1, -1, 0],
+            vec![1, 0, 1],
+            vec![1, 0, -1],
+        ] {
+            assert!(
+                deps.iter().any(|d| d.array == "A" && d.kind == DepKind::Flow && d.vector == v),
+                "missing stencil dep {v:?} in {deps:?}"
+            );
+        }
+        // 5 MACs per point in the TOPS accounting
+        assert_eq!(r.total_macs(), 4 * 256 * 256 * 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one sweep")]
+    fn stencil_rejects_zero_stages() {
+        stencil2d_chain(0, 64, 64, DType::F32);
+    }
+
+    #[test]
+    fn catalog_covers_every_constructor_once() {
+        let names: Vec<String> = catalog_small().into_iter().map(|r| r.name).collect();
+        for prefix in ["mm_", "conv2d_", "fir_", "fft2d_", "dwconv2d_", "trsv_", "stencil2d_"] {
+            assert_eq!(
+                names.iter().filter(|n| n.starts_with(prefix)).count(),
+                1,
+                "catalog must hold exactly one {prefix} workload: {names:?}"
+            );
+        }
     }
 }

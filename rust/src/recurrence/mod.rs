@@ -1,6 +1,8 @@
-//! Uniform-recurrence specifications: the paper's four benchmarks
-//! (Table II) expressed as loop nests with typed accesses, plus the
-//! kernel-scope tiling of §III-A.
+//! Uniform-recurrence specifications: the workload library — the paper's
+//! four Table II benchmarks plus the expanded catalog (depthwise conv,
+//! triangular solve, stencil chains; see `docs/WORKLOADS.md`) — expressed
+//! as loop nests with typed accesses and explicitly carried dependence
+//! vectors, plus the dependence-aware kernel-scope tiling of §III-A.
 
 pub mod dtype;
 pub mod library;

@@ -65,8 +65,21 @@ pub struct UniformRecurrence {
     pub accesses: Vec<Access>,
     pub dtype: DType,
     /// MACs per iteration point (1 for MM/Conv/FIR; FFT butterflies carry
-    /// one complex MAC + adds).
+    /// one complex MAC + adds; a 5-point stencil sweep carries 5).
     pub macs_per_iter: u64,
+    /// Explicitly carried uniform dependences, appended verbatim to the
+    /// access-derived set by [`UniformRecurrence::dependences`].
+    ///
+    /// Access reuse (the null space of a selection map) can only express
+    /// dependences whose vector is a positive unit direction. Stencil
+    /// chains need more: the value read at `A[t-1, i±1, j±1]` induces the
+    /// constant vectors `(1, ∓1, 0)` / `(1, 0, ∓1)`, which no
+    /// unit-coefficient access map produces. Such recurrences state those
+    /// vectors here — the classic Karp–Miller–Winograd presentation of a
+    /// URE *is* its dependence-vector set, so this is the input language
+    /// catching up with the paper's program class, not an escape hatch.
+    /// Empty for every purely access-derived recurrence (all of Table II).
+    pub carried: Vec<Dependence>,
 }
 
 impl UniformRecurrence {
@@ -89,7 +102,9 @@ impl UniformRecurrence {
     /// * each `Accumulate` access contributes reuse directions as flow
     ///   deps (the carried partial sums) and the same directions as
     ///   output deps (last write wins),
-    /// * `Write` accesses with reuse contribute output deps.
+    /// * `Write` accesses with reuse contribute output deps,
+    /// * the explicitly [`carried`](UniformRecurrence::carried) vectors
+    ///   (stencil neighbour reads) are appended verbatim.
     pub fn dependences(&self) -> Vec<Dependence> {
         let rank = self.rank();
         let mut out = Vec::new();
@@ -113,6 +128,7 @@ impl UniformRecurrence {
                 }
             }
         }
+        out.extend(self.carried.iter().cloned());
         out
     }
 
@@ -128,13 +144,21 @@ impl UniformRecurrence {
 
     /// Stable canonical 64-bit fingerprint of the recurrence: the name,
     /// every loop dimension (name + extent), every access (array, kind,
-    /// full affine map), the dtype and `macs_per_iter`.
+    /// full affine map), the dtype, `macs_per_iter`, and — only when
+    /// present — the explicitly carried dependence vectors.
     ///
     /// Two `UniformRecurrence` values hash equal iff they describe the
     /// same computation, and the value is reproducible across processes
     /// and machines (FNV-1a, no randomized hasher state) — this is the
     /// recurrence half of the serve layer's design-cache key and the
     /// memoization key for [`crate::recurrence::tiling::demarcate_cached`].
+    ///
+    /// **Key-stability contract:** the `carried` block is folded in only
+    /// when non-empty, so every pre-existing (access-derived) recurrence
+    /// keeps the exact key it had before the field existed — serve caches
+    /// and persisted keys for the Table II workloads must never shift when
+    /// the input language grows (asserted against a frozen re-computation
+    /// of the original layout in `tests/proptest_invariants.rs`).
     pub fn canonical_u64(&self) -> u64 {
         let mut h = Fnv64::new();
         h.write_str(&self.name);
@@ -162,6 +186,21 @@ impl UniformRecurrence {
         }
         h.write_str(self.dtype.name());
         h.write_u64(self.macs_per_iter);
+        if !self.carried.is_empty() {
+            h.write_usize(self.carried.len());
+            for d in &self.carried {
+                h.write_str(&d.array);
+                h.write_u8(match d.kind {
+                    DepKind::Read => 0,
+                    DepKind::Flow => 1,
+                    DepKind::Output => 2,
+                });
+                h.write_usize(d.vector.len());
+                for &c in &d.vector {
+                    h.write_i64(c);
+                }
+            }
+        }
         h.finish()
     }
 
@@ -211,6 +250,7 @@ mod tests {
             ],
             dtype: DType::F32,
             macs_per_iter: 1,
+            carried: vec![],
         }
     }
 
@@ -277,5 +317,28 @@ mod tests {
         let mut rekind = mm();
         rekind.accesses[2].kind = AccessKind::Write;
         assert_ne!(a.canonical_u64(), rekind.canonical_u64());
+    }
+
+    #[test]
+    fn carried_deps_enter_dependences_and_key() {
+        let base = mm();
+        let mut stencil = mm();
+        stencil
+            .carried
+            .push(Dependence::new("C", DepKind::Flow, vec![1, -1, 0]));
+        // appended verbatim to the access-derived set
+        let deps = stencil.dependences();
+        assert_eq!(deps.len(), base.dependences().len() + 1);
+        assert!(deps
+            .iter()
+            .any(|d| d.kind == DepKind::Flow && d.vector == vec![1, -1, 0]));
+        // a carried vector is a semantic difference → the key moves
+        assert_ne!(base.canonical_u64(), stencil.canonical_u64());
+        // and differing carried sets hash apart
+        let mut other = mm();
+        other
+            .carried
+            .push(Dependence::new("C", DepKind::Flow, vec![1, 1, 0]));
+        assert_ne!(stencil.canonical_u64(), other.canonical_u64());
     }
 }

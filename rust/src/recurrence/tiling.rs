@@ -8,6 +8,8 @@
 //! start-up — after this demarcation, graph-level and kernel-level
 //! mapping are independent problems (as the paper observes).
 
+use crate::polyhedral::dependence::Dependence;
+use crate::polyhedral::legality::lex_nonnegative;
 use crate::polyhedral::schedule::{LoopNest, LoopRole};
 use crate::polyhedral::transform::Transform;
 use crate::recurrence::spec::UniformRecurrence;
@@ -36,6 +38,14 @@ pub const DOUBLE_BUFFER_FACTOR: u64 = 2;
 
 /// Bytes of the core tile's working set for a recurrence, given per-loop
 /// tile factors: sum over arrays of the tile footprint of each access.
+///
+/// Two halo sources are counted: conv-style accesses that put two loops
+/// on one subscript (`X[h+p]` → extents − 1), and explicitly
+/// [`carried`](UniformRecurrence::carried) neighbour offsets — a 5-point
+/// stencil tile of `(fi, fj)` must stage `(fi+2)(fj+2)` inputs, and
+/// pricing that perimeter is what steers demarcation towards square-ish
+/// stencil tiles instead of degenerate 1×N strips (the greedy ascent's
+/// density tie-break would otherwise elongate freely).
 pub fn core_tile_bytes(rec: &UniformRecurrence, factors: &[u64]) -> u64 {
     let mut total = 0u64;
     for acc in &rec.accesses {
@@ -44,13 +54,19 @@ pub fn core_tile_bytes(rec: &UniformRecurrence, factors: &[u64]) -> u64 {
             let mut ext = 1u64;
             for (d, &c) in e.coeffs.iter().enumerate() {
                 if c != 0 {
-                    // halo: stencil accesses (two loops on one subscript)
-                    // add extents − 1
-                    ext = if ext == 1 {
-                        factors[d]
-                    } else {
-                        ext + factors[d] - 1
-                    };
+                    // carried-dep halo on this array along this loop:
+                    // widen the tile by the offset bound on both sides
+                    let halo: u64 = rec
+                        .carried
+                        .iter()
+                        .filter(|dep| dep.array == acc.array)
+                        .map(|dep| dep.vector[d].unsigned_abs())
+                        .max()
+                        .unwrap_or(0);
+                    let dim_ext = factors[d] + 2 * halo;
+                    // conv-style halo: two loops on one subscript add
+                    // extents − 1
+                    ext = if ext == 1 { dim_ext } else { ext + dim_ext - 1 };
                 }
             }
             elems = elems.saturating_mul(ext.max(1));
@@ -68,10 +84,64 @@ pub fn core_tile_macs(rec: &UniformRecurrence, factors: &[u64]) -> u64 {
         .saturating_mul(rec.macs_per_iter)
 }
 
+/// May the loops be strip-mined by `factors` without creating a backward
+/// tile-level dependence?
+///
+/// Rectangular tiling of a band is only legal when every dependence's
+/// possible *tile projections* stay lexicographically non-negative: a
+/// component `c` on a loop tiled by `f` splits into tile-component `0`
+/// (same tile) and `sign(c)` (crossing a boundary), and every combination
+/// across dims must survive. Componentwise non-negative dependence sets —
+/// all of Table II — pass trivially, so demarcation is unchanged for
+/// them. Stencil chains (`(1, −1, 0)` etc.) reject core-tiling of the
+/// sweep loop `t`: splitting `t` into the tile would make neighbouring
+/// `(i, j)` tiles at the same `t`-tile depend on each other *mutually*
+/// (the halo of sweep `s` needs sweep `s−1` of both neighbours), which no
+/// atomic kernel schedule can honour. Distances larger than the factor
+/// are rejected outright (strip-mining cannot express them).
+pub fn tiling_preserves_order(deps: &[Dependence], factors: &[u64]) -> bool {
+    for d in deps {
+        // Enumerate the tile-level projections this dep can take.
+        let mut combos: Vec<Vec<i64>> = vec![Vec::with_capacity(d.vector.len())];
+        for (dim, &c) in d.vector.iter().enumerate() {
+            let f = factors.get(dim).copied().unwrap_or(1);
+            let opts: Vec<i64> = if f <= 1 {
+                vec![c] // untiled: the component survives verbatim
+            } else if c == 0 {
+                vec![0]
+            } else if c.unsigned_abs() > f {
+                return false; // distance exceeds the tile edge
+            } else if c.unsigned_abs() == f {
+                vec![c.signum()] // exactly one boundary crossing
+            } else {
+                vec![0, c.signum()]
+            };
+            combos = combos
+                .into_iter()
+                .flat_map(|v| {
+                    opts.iter().map(move |&o| {
+                        let mut v2 = v.clone();
+                        v2.push(o);
+                        v2
+                    })
+                })
+                .collect();
+        }
+        if combos.iter().any(|v| !lex_nonnegative(v)) {
+            return false;
+        }
+    }
+    true
+}
+
 /// Choose core-tile factors maximising MACs per tile subject to the
 /// double-buffered local-memory budget, preferring square-ish tiles
 /// (better reuse per byte moved). Factors are divisors of the extents so
-/// the graph nest stays rectangular.
+/// the graph nest stays rectangular, and a bump is only taken when the
+/// resulting tiling keeps every dependence's tile projection
+/// lexicographically non-negative ([`tiling_preserves_order`]) — the
+/// guard that stops stencil chains from tiling their sweep loop into the
+/// core.
 pub fn demarcate(rec: &UniformRecurrence) -> KernelScope {
     let nest = rec.loop_nest();
     let rank = nest.rank();
@@ -103,6 +173,9 @@ pub fn demarcate(rec: &UniformRecurrence) -> KernelScope {
             trial[d] = cands[d][idx[d] + 1];
             let bytes = core_tile_bytes(rec, &trial);
             if bytes > budget {
+                continue;
+            }
+            if !tiling_preserves_order(&nest.deps, &trial) {
                 continue;
             }
             let macs = core_tile_macs(rec, &trial) as f64;
@@ -250,6 +323,38 @@ mod tests {
         let rec = library::fir(1048576, 15, DType::F32);
         let scope = demarcate(&rec);
         assert!(scope.core_peak_cycles(&rec) > 0);
+    }
+
+    #[test]
+    fn stencil_sweep_loop_is_never_core_tiled() {
+        // Tiling t would make same-sweep neighbour tiles mutually
+        // dependent; the order guard must pin its core factor at 1 while
+        // still tiling the grid loops.
+        let rec = library::stencil2d_chain(4, 1024, 1024, DType::F32);
+        let scope = demarcate(&rec);
+        assert_eq!(scope.core_factors[0], 1, "{:?}", scope.core_factors);
+        assert!(scope.core_factors[1] > 1 && scope.core_factors[2] > 1);
+        assert!(scope.core_bytes <= CORE_USABLE_BYTES / DOUBLE_BUFFER_FACTOR);
+    }
+
+    #[test]
+    fn order_guard_semantics() {
+        use crate::polyhedral::dependence::{DepKind, Dependence};
+        let stencil = vec![
+            Dependence::new("A", DepKind::Flow, vec![1, -1, 0]),
+            Dependence::new("A", DepKind::Flow, vec![1, 1, 0]),
+        ];
+        // tiling only the grid loop keeps t leading every projection
+        assert!(tiling_preserves_order(&stencil, &[1, 8, 8]));
+        // tiling t exposes the (0, -1, 0) projection → rejected
+        assert!(!tiling_preserves_order(&stencil, &[2, 8, 8]));
+        // componentwise non-negative sets always pass (Table II shape)
+        let mm = vec![Dependence::new("C", DepKind::Flow, vec![0, 0, 1])];
+        assert!(tiling_preserves_order(&mm, &[8, 8, 8]));
+        // distances beyond the tile edge cannot be strip-mined
+        let far = vec![Dependence::new("X", DepKind::Flow, vec![4, 0])];
+        assert!(!tiling_preserves_order(&far, &[2, 2]));
+        assert!(tiling_preserves_order(&far, &[4, 2]));
     }
 
     #[test]

@@ -173,6 +173,31 @@ impl Manifest {
             vec![ts(&[64, 256], "float32"), ts(&[64, 256], "float32")],
             vec![ts(&[64, 256], "float32"), ts(&[64, 256], "float32")],
         );
+        // Depthwise-conv graph tile: 8 channel groups of 64×64 output,
+        // 3×3 per-group kernels over a halo-extended input block.
+        add(
+            "dwconv2d_f32_8x64x3",
+            vec![
+                ts(&[8, 66, 66], "float32"),
+                ts(&[8, 3, 3], "float32"),
+                ts(&[8, 64, 64], "float32"),
+            ],
+            vec![ts(&[8, 64, 64], "float32")],
+        );
+        // Triangular-solve graph tile: one 256-row forward-substitution
+        // block (host k-chains the off-diagonal updates).
+        add(
+            "trsv_f32_256",
+            vec![ts(&[256, 256], "float32"), ts(&[256], "float32")],
+            vec![ts(&[256], "float32")],
+        );
+        // Stencil-chain graph tile: 2 Jacobi sweeps over a 128×128 grid
+        // with 5 coefficients [centre, n, s, w, e].
+        add(
+            "stencil2d_f32_2x128",
+            vec![ts(&[128, 128], "float32"), ts(&[5], "float32")],
+            vec![ts(&[128, 128], "float32")],
+        );
         Self { artifacts, dir }
     }
 
@@ -222,7 +247,7 @@ mod tests {
     #[test]
     fn builtin_mirrors_python_variant_registry() {
         let m = Manifest::builtin();
-        assert_eq!(m.artifacts.len(), 8);
+        assert_eq!(m.artifacts.len(), 11);
         for name in [
             "mm_f32_256",
             "mm_f32_128",
@@ -232,6 +257,9 @@ mod tests {
             "fir_f32_4096x15",
             "fir_cf32_2048x15",
             "fft1d_f32_64x256",
+            "dwconv2d_f32_8x64x3",
+            "trsv_f32_256",
+            "stencil2d_f32_2x128",
         ] {
             assert!(m.artifacts.contains_key(name), "{name} missing");
         }

@@ -36,6 +36,12 @@ enum Kind {
     FirCf32,
     /// Radix-2 DIT butterfly stages over bit-reversed-order rows.
     Fft1dF32,
+    /// `acc' = acc + depthwise_conv(x, k)`: one filter per channel group.
+    DwConv2dF32,
+    /// Forward-substitution triangular solve `x = L⁻¹ b`.
+    TrsvF32,
+    /// 5-point Jacobi sweeps (stage count baked into the artifact name).
+    Stencil2dF32,
 }
 
 /// A "compiled" stub kernel: the artifact's signature plus its dispatch.
@@ -76,6 +82,12 @@ impl StubExecutable {
             Kind::FirCf32
         } else if spec.name.starts_with("fft1d_f32") {
             Kind::Fft1dF32
+        } else if spec.name.starts_with("dwconv2d_f32") {
+            Kind::DwConv2dF32
+        } else if spec.name.starts_with("trsv_f32") {
+            Kind::TrsvF32
+        } else if spec.name.starts_with("stencil2d_f32") {
+            Kind::Stencil2dF32
         } else {
             bail!(
                 "stub executor has no builtin kernel for artifact {:?}; \
@@ -223,8 +235,65 @@ impl StubExecutable {
                     Tensor::f32(vec![rows, n], im),
                 ])
             }
+            Kind::DwConv2dF32 => {
+                let (c, p, q) = (inputs[1].shape[0], inputs[1].shape[1], inputs[1].shape[2]);
+                let (h, w) = (inputs[2].shape[1], inputs[2].shape[2]);
+                let (xh, xw) = (h + p - 1, w + q - 1);
+                let x = f32_of(&inputs[0], name, "X")?;
+                let k = f32_of(&inputs[1], name, "K")?;
+                let acc = f32_of(&inputs[2], name, "acc")?;
+                let mut out = acc.to_vec();
+                for g in 0..c {
+                    let xg = &x[g * xh * xw..(g + 1) * xh * xw];
+                    let kg = &k[g * p * q..(g + 1) * p * q];
+                    for i in 0..h {
+                        for j in 0..w {
+                            let mut s = 0f32;
+                            for a in 0..p {
+                                for b in 0..q {
+                                    s += xg[(i + a) * xw + (j + b)] * kg[a * q + b];
+                                }
+                            }
+                            out[g * h * w + i * w + j] += s;
+                        }
+                    }
+                }
+                Ok(vec![Tensor::f32(vec![c, h, w], out)])
+            }
+            Kind::TrsvF32 => {
+                let n = inputs[1].shape[0];
+                let l = f32_of(&inputs[0], name, "L")?;
+                let b = f32_of(&inputs[1], name, "b")?;
+                // one maths definition in rust: the stub runs the verify
+                // oracle itself (the artifact it stands in for computes a
+                // plain forward substitution, nothing to specialise)
+                let x = crate::coordinator::verify::trsv_ref(l, b, n);
+                Ok(vec![Tensor::f32(vec![n], x)])
+            }
+            Kind::Stencil2dF32 => {
+                let (n, m) = (inputs[0].shape[0], inputs[0].shape[1]);
+                let a = f32_of(&inputs[0], name, "A")?;
+                let coef = f32_of(&inputs[1], name, "coef")?;
+                if coef.len() != 5 {
+                    bail!("{name}: stencil takes 5 coefficients, got {}", coef.len());
+                }
+                let stages = stencil_stages(name);
+                let cur =
+                    crate::coordinator::verify::stencil2d_chain_ref(a, n, m, stages, coef);
+                Ok(vec![Tensor::f32(vec![n, m], cur)])
+            }
         }
     }
+}
+
+/// Sweep count baked into a stencil artifact's name
+/// (`stencil2d_f32_<stages>x<n>`); defaults to 2 if unparseable.
+fn stencil_stages(name: &str) -> usize {
+    name.rsplit('_')
+        .next()
+        .and_then(|s| s.split('x').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2)
 }
 
 /// y[i] = Σ_t h[t] · x[i + t] (the artifact's correlation convention).
@@ -405,6 +474,70 @@ mod tests {
         let yre: Vec<f32> = rr.iter().zip(&ii).map(|(a, b)| a - b).collect();
         assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &yre) < 1e-4);
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn dwconv_matches_oracle() {
+        let (c, h, p) = (8usize, 64usize, 3usize);
+        let mut rng = XorShift64::new(29);
+        let mut x = vec![0f32; c * (h + p - 1) * (h + p - 1)];
+        let mut k = vec![0f32; c * p * p];
+        rng.fill_f32(&mut x);
+        rng.fill_f32(&mut k);
+        let out = exe("dwconv2d_f32_8x64x3")
+            .execute(&[
+                Tensor::f32(vec![c, h + p - 1, h + p - 1], x.clone()),
+                Tensor::f32(vec![c, p, p], k.clone()),
+                Tensor::f32(vec![c, h, h], vec![0.0; c * h * h]),
+            ])
+            .unwrap();
+        let want = verify::dw_conv2d_ref(&x, &k, c, h, h, p, p);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-4);
+    }
+
+    #[test]
+    fn trsv_matches_oracle() {
+        let n = 256usize;
+        let mut rng = XorShift64::new(31);
+        let mut l = vec![0f32; n * n];
+        let mut b = vec![0f32; n];
+        rng.fill_f32(&mut l);
+        rng.fill_f32(&mut b);
+        // diagonally dominant system: keep the solve well-conditioned
+        for i in 0..n {
+            for j in 0..n {
+                l[i * n + j] /= n as f32;
+            }
+            l[i * n + i] = 4.0 + l[i * n + i].abs();
+        }
+        let out = exe("trsv_f32_256")
+            .execute(&[
+                Tensor::f32(vec![n, n], l.clone()),
+                Tensor::f32(vec![n], b.clone()),
+            ])
+            .unwrap();
+        let want = verify::trsv_ref(&l, &b, n);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-4);
+    }
+
+    #[test]
+    fn stencil_matches_oracle_and_bakes_two_sweeps() {
+        let n = 128usize;
+        let mut rng = XorShift64::new(37);
+        let mut a = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        let coef = [0.5f32, 0.125, 0.125, 0.125, 0.125];
+        let out = exe("stencil2d_f32_2x128")
+            .execute(&[
+                Tensor::f32(vec![n, n], a.clone()),
+                Tensor::f32(vec![5], coef.to_vec()),
+            ])
+            .unwrap();
+        let want = verify::stencil2d_chain_ref(&a, n, n, 2, &coef);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-4);
+        assert_eq!(super::stencil_stages("stencil2d_f32_2x128"), 2);
+        assert_eq!(super::stencil_stages("stencil2d_f32_4x64"), 4);
+        assert_eq!(super::stencil_stages("weird"), 2);
     }
 
     #[test]

@@ -11,10 +11,12 @@
 //!  "max_aies": 400, "mover_bits": 512, "cold_dram": false}
 //! ```
 //!
-//! * `bench` — `mm` | `conv2d` | `fir` | `fft2d` (required).
+//! * `bench` — `mm` | `conv2d` | `fir` | `fft2d` | `dwconv2d` | `trsv` |
+//!   `stencil2d` (required).
 //! * `dims` — loop extents: `mm` `[n, m, k]`, `conv2d` `[h, w, p, q]`,
-//!   `fir` `[n, taps]`, `fft2d` `[rows, cols]`. Optional; each benchmark
-//!   has a paper-shaped default.
+//!   `fir` `[n, taps]`, `fft2d` `[rows, cols]`, `dwconv2d`
+//!   `[groups, h, w, p, q]`, `trsv` `[n]`, `stencil2d`
+//!   `[stages, n, m]`. Optional; each benchmark has a sensible default.
 //! * `dtype` — `f32|i8|i16|i32|cf32|ci16`; defaults to `f32` (`cf32` for
 //!   `fft2d`, which requires a complex type).
 //! * `id` — any JSON value, echoed verbatim in the response.
@@ -92,7 +94,9 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
     let bench = root
         .get("bench")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing required field \"bench\" (mm|conv2d|fir|fft2d)"))?
+        .ok_or_else(|| {
+            anyhow!("missing required field \"bench\" (mm|conv2d|fir|fft2d|dwconv2d|trsv|stencil2d)")
+        })?
         .to_string();
     let dtype = match root.get("dtype").and_then(Json::as_str) {
         Some(s) => parse_dtype(s)?,
@@ -181,7 +185,33 @@ pub fn request_recurrence(req: &CompileRequest) -> Result<UniformRecurrence> {
             }
             library::fft2d(d[0], d[1], req.dtype)
         }
-        other => bail!("unknown bench {other:?} (mm|conv2d|fir|fft2d)"),
+        "dwconv2d" => {
+            let d = dims(5, &[64, 2048, 2048, 3, 3])?;
+            if d[3] > d[1] || d[4] > d[2] {
+                bail!(
+                    "dwconv2d kernel ({}x{}) larger than image ({}x{})",
+                    d[3],
+                    d[4],
+                    d[1],
+                    d[2]
+                );
+            }
+            library::dw_conv2d(d[0], d[1], d[2], d[3], d[4], req.dtype)
+        }
+        "trsv" => {
+            let d = dims(1, &[8192])?;
+            library::trsv(d[0], req.dtype)
+        }
+        "stencil2d" => {
+            let d = dims(3, &[2, 4096, 4096])?;
+            // parse_request already rejects dims < 1, but this fn is pub:
+            // keep the constructor's stages assert unreachable from here
+            if d[0] == 0 {
+                bail!("stencil2d needs at least one sweep, got stages=0");
+            }
+            library::stencil2d_chain(d[0], d[1], d[2], req.dtype)
+        }
+        other => bail!("unknown bench {other:?} (mm|conv2d|fir|fft2d|dwconv2d|trsv|stencil2d)"),
     })
 }
 
@@ -264,6 +294,42 @@ mod tests {
         let req = parse_request(r#"{"bench": "fir"}"#).unwrap();
         assert_eq!(req.dtype, DType::F32);
         assert_eq!(request_recurrence(&req).unwrap().name, "fir_1048576x15_Float");
+    }
+
+    #[test]
+    fn expanded_catalog_benches_parse() {
+        let req = parse_request(r#"{"bench": "trsv", "dims": [4096]}"#).unwrap();
+        assert_eq!(request_recurrence(&req).unwrap().name, "trsv_4096_Float");
+
+        let req = parse_request(r#"{"bench": "dwconv2d"}"#).unwrap();
+        assert!(request_recurrence(&req)
+            .unwrap()
+            .name
+            .starts_with("dwconv2d_64x2048x2048"));
+
+        let req =
+            parse_request(r#"{"bench": "stencil2d", "dims": [4, 1024, 1024]}"#).unwrap();
+        let rec = request_recurrence(&req).unwrap();
+        assert_eq!(rec.name, "stencil2d_4x1024x1024_Float");
+        assert!(!rec.carried.is_empty());
+
+        // arity and geometry validation still bites
+        let bad = parse_request(r#"{"bench": "trsv", "dims": [8, 8]}"#).unwrap();
+        assert!(request_recurrence(&bad).is_err());
+        let bad = parse_request(r#"{"bench": "dwconv2d", "dims": [8, 4, 4, 9, 9]}"#).unwrap();
+        assert!(request_recurrence(&bad).is_err());
+        // a hand-built zero-stage request errors instead of panicking
+        // (parse_request rejects dims < 1, but request_recurrence is pub)
+        let zero = CompileRequest {
+            id: Json::Null,
+            bench: "stencil2d".into(),
+            dtype: DType::F32,
+            dims: vec![0, 64, 64],
+            max_aies: None,
+            mover_bits: None,
+            cold_dram: None,
+        };
+        assert!(request_recurrence(&zero).is_err());
     }
 
     #[test]

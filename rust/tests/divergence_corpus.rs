@@ -59,6 +59,41 @@ fn predictor_is_bit_identical_to_merge_on_all_table2_candidates() {
 }
 
 #[test]
+fn predictor_is_bit_identical_on_the_expanded_catalog() {
+    // the new workload families (depthwise conv, triangular solve,
+    // stencil chain) flow through the private-stream predictor arm —
+    // keep it bit-identical to real merging there too
+    for budget in [78u32, 16] {
+        let board = BoardConfig::vck5000().with_plio_budget(budget);
+        let constraints = cons(false);
+        let model = dse::scoring_model(&board, &constraints);
+        for rec in library::catalog_small() {
+            let plan = dse::plan(&rec, &board, &constraints);
+            for choice in plan.choices.clone() {
+                let Some((cand, _)) =
+                    dse::score_choice(&rec, &model, &constraints, &plan, choice)
+                else {
+                    continue;
+                };
+                let g = build(&cand, &model);
+                let (in_b, out_b) = (
+                    board.plio.in_channels as usize,
+                    board.plio.out_channels as usize,
+                );
+                let (_, stats) = merge_ports_with_budget(&g, model.channel_bw(), in_b, out_b);
+                let predicted = predict_ports(&cand, &model, model.channel_bw(), in_b, out_b);
+                assert_eq!(
+                    predicted, stats,
+                    "{} @ {budget} channels: predictor diverged on {}",
+                    rec.name,
+                    cand.summary()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn exact_winner_fits_budget_wherever_rankings_diverge() {
     let mut divergences: Vec<String> = Vec::new();
     for budget in [78u32, 32, 8] {

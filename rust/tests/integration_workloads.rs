@@ -1,0 +1,171 @@
+//! End-to-end coverage of the expanded workload catalog (`make
+//! workloads-smoke`): every library constructor — the Table II four plus
+//! depthwise conv, triangular solve and the stencil chain — must
+//!
+//! 1. find a legal mapping and survive the full framework back half
+//!    (graph build, port merge, place & route, simulation, codegen);
+//! 2. stub-execute bit-correct against its `coordinator::verify` oracle
+//!    through the artifact replay drivers;
+//! 3. exercise the space-time transforms the Table II corpus never
+//!    picked: the triangular solve selects a **1D** (non-2D-serpentine)
+//!    transform, and the stencil chain's choices exist only through the
+//!    neighbour-transfer legality clause (negative dependence offsets).
+
+use widesa::arch::vck5000::BoardConfig;
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::coordinator::{exec, verify};
+use widesa::mapping::dse::{self, explore, DseConstraints};
+use widesa::polyhedral::legality::is_legal_order;
+use widesa::recurrence::{dtype::DType, library};
+use widesa::runtime::client::Runtime;
+use widesa::util::rng::XorShift64;
+
+fn framework(max_aies: u64) -> WideSa {
+    WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(max_aies),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+}
+
+#[test]
+fn every_catalog_workload_compiles_to_a_legal_design() {
+    for rec in library::catalog_small() {
+        let name = rec.name.clone();
+        let d = framework(400)
+            .compile(&rec)
+            .unwrap_or_else(|e| panic!("{name}: no legal mapping: {e}"));
+        assert!(d.compile.success, "{name}: place & route failed");
+        assert!(d.merge_stats.in_ports_after <= 78, "{name}");
+        assert!(d.merge_stats.out_ports_after <= 78, "{name}");
+        assert!(d.estimate.tops > 0.0, "{name}");
+        assert!(d.sim.tops > 0.0, "{name}");
+        assert!(!d.code.aie_kernel.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn trsv_selects_a_non_2d_serpentine_transform() {
+    // the acceptance assertion for the expanded catalog: at least one new
+    // family must leave the 2D-serpentine comfort zone. The triangular
+    // solve's wavefront bound makes its 1D linear-array mapping win (see
+    // the Trsv stall model in mapping::cost), and the compiled design —
+    // not just the ranking — must carry it through place & route.
+    let rec = library::trsv(8192, DType::F32);
+    let d = framework(400).compile(&rec).expect("trsv must compile");
+    assert!(d.compile.success);
+    assert_eq!(
+        d.candidate.choice.dims(),
+        1,
+        "trsv should map to a linear array, got {}",
+        d.candidate.summary()
+    );
+}
+
+#[test]
+fn catalog_covers_1d_and_skewed_arms_beyond_2d_serpentine() {
+    // across the three new families, at least one winner is 1D or skewed
+    let board = BoardConfig::vck5000();
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    let mut non_2d = 0;
+    for rec in [
+        library::dw_conv2d(64, 256, 256, 3, 3, DType::F32),
+        library::trsv(8192, DType::F32),
+        library::stencil2d_chain(2, 1024, 1024, DType::F32),
+    ] {
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        if cand.choice.dims() == 1 || cand.choice.is_skewed() {
+            non_2d += 1;
+        }
+    }
+    assert!(non_2d >= 1, "no new family left the 2D-serpentine arm");
+}
+
+#[test]
+fn stencil_mapping_relies_on_neighbour_transfer_legality() {
+    // the stencil's legal choices carry negative dependence components
+    // that the pre-expansion sequential-order check rejects outright —
+    // i.e. this workload genuinely exercises the new legality clause
+    let rec = library::stencil2d_chain(2, 1024, 1024, DType::F32);
+    let board = BoardConfig::vck5000();
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    let plan = dse::plan(&rec, &board, &cons);
+    assert!(!plan.choices.is_empty(), "stencil has no space-time choices");
+    let loops = plan.scope.graph_loops();
+    let grid_2d = plan
+        .choices
+        .iter()
+        .find(|c| c.space == vec![loops[1], loops[2]])
+        .expect("the (i, j) grid choice must be legal");
+    assert!(
+        !is_legal_order(&grid_2d.nest.deps),
+        "the grid choice must NOT be sequentially legal — it exists only \
+         through the neighbour-transfer clause"
+    );
+    assert!(grid_2d
+        .nest
+        .deps
+        .iter()
+        .any(|d| d.vector.iter().any(|&c| c < 0)));
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn dwconv_replay_matches_oracle_end_to_end() {
+    let mut rt = Runtime::with_builtin();
+    let (c, h, w) = (8usize, 64usize, 128usize);
+    let mut rng = XorShift64::new(101);
+    let mut x = vec![0f32; c * (h + 2) * (w + 2)];
+    let mut k = vec![0f32; c * 9];
+    rng.fill_f32(&mut x);
+    rng.fill_f32(&mut k);
+    let (y, stats) = exec::run_dwconv2d(&mut rt, &x, &k, c, h, w).unwrap();
+    assert_eq!(stats.rounds, 2);
+    let want = verify::dw_conv2d_ref(&x, &k, c, h, w, 3, 3);
+    assert!(verify::max_abs_diff(&y, &want) < 1e-4);
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn trsv_replay_matches_oracle_end_to_end() {
+    let mut rt = Runtime::with_builtin();
+    let n = 1024usize;
+    let mut rng = XorShift64::new(103);
+    let mut l = vec![0f32; n * n];
+    let mut b = vec![0f32; n];
+    rng.fill_f32(&mut l);
+    rng.fill_f32(&mut b);
+    for i in 0..n {
+        for j in 0..n {
+            l[i * n + j] /= n as f32;
+        }
+        l[i * n + i] = 4.0 + l[i * n + i].abs();
+    }
+    let (x, stats) = exec::run_trsv(&mut rt, &l, &b, n).unwrap();
+    assert_eq!(stats.rounds, 4);
+    let want = verify::trsv_ref(&l, &b, n);
+    assert!(verify::max_abs_diff(&x, &want) < 1e-4);
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn stencil_replay_matches_oracle_end_to_end() {
+    let mut rt = Runtime::with_builtin();
+    let n = 128usize;
+    let mut rng = XorShift64::new(107);
+    let mut a = vec![0f32; n * n];
+    rng.fill_f32(&mut a);
+    let coef = [0.4f32, 0.15, 0.15, 0.15, 0.15];
+    let (out, stats) = exec::run_stencil2d(&mut rt, &a, n, n, 6, &coef).unwrap();
+    assert_eq!(stats.rounds, 3);
+    let want = verify::stencil2d_chain_ref(&a, n, n, 6, &coef);
+    assert!(verify::max_abs_diff(&out, &want) < 1e-4);
+}

@@ -317,6 +317,129 @@ fn prop_placement_is_injective_and_in_bounds() {
     }
 }
 
+/// The serve design cache and the demarcation memo key on
+/// `UniformRecurrence::canonical_u64`. Growing the input language (the
+/// `carried` dependence field) must not shift the key of any pre-existing
+/// workload, or every deployed cache entry silently goes cold. This
+/// re-computes the pre-expansion key layout field by field and asserts it
+/// still matches for every access-derived recurrence.
+fn legacy_canonical_key(rec: &widesa::UniformRecurrence) -> u64 {
+    use widesa::recurrence::AccessKind;
+    use widesa::util::hash::Fnv64;
+    let mut h = Fnv64::new();
+    h.write_str(&rec.name);
+    h.write_usize(rec.rank());
+    for d in &rec.domain.dims {
+        h.write_str(&d.name);
+        h.write_u64(d.extent);
+    }
+    h.write_usize(rec.accesses.len());
+    for acc in &rec.accesses {
+        h.write_str(&acc.array);
+        h.write_u8(match acc.kind {
+            AccessKind::Read => 0,
+            AccessKind::Accumulate => 1,
+            AccessKind::Write => 2,
+        });
+        h.write_usize(acc.map.exprs.len());
+        for e in &acc.map.exprs {
+            h.write_usize(e.coeffs.len());
+            for &c in &e.coeffs {
+                h.write_i64(c);
+            }
+            h.write_i64(e.constant);
+        }
+    }
+    h.write_str(rec.dtype.name());
+    h.write_u64(rec.macs_per_iter);
+    h.finish()
+}
+
+#[test]
+fn prop_canonical_keys_stable_for_access_derived_recurrences() {
+    // every Table II workload — the serve cache population that must not
+    // shift — plus the carried-free members of the expanded catalog
+    for rec in library::table2_benchmarks() {
+        assert_eq!(
+            rec.canonical_u64(),
+            legacy_canonical_key(&rec),
+            "{}: cache key shifted",
+            rec.name
+        );
+    }
+    for rec in library::catalog_small() {
+        if rec.carried.is_empty() {
+            assert_eq!(rec.canonical_u64(), legacy_canonical_key(&rec), "{}", rec.name);
+        } else {
+            // carried vectors are semantic: the key must move off the
+            // legacy layout (they'd collide with a carried-free twin)
+            assert_ne!(rec.canonical_u64(), legacy_canonical_key(&rec), "{}", rec.name);
+        }
+    }
+}
+
+#[test]
+fn prop_library_dependences_track_canonical_keys() {
+    // every library constructor, random sizes: rebuilding with the same
+    // parameters reproduces both the key and the exact dependence-vector
+    // list; perturbing any extent moves the key
+    let mut rng = XorShift64::new(11_000);
+    for _ in 0..CASES {
+        let pick = rng.gen_range(7);
+        let d2 = |r: &mut XorShift64| 4 + r.gen_range(60);
+        let (a, b): (widesa::UniformRecurrence, widesa::UniformRecurrence) = match pick {
+            0 => {
+                let (n, m, k) = (d2(&mut rng), d2(&mut rng), d2(&mut rng));
+                (library::mm(n, m, k, DType::F32), library::mm(n, m, k, DType::F32))
+            }
+            1 => {
+                let (h, w) = (8 + rng.gen_range(56), 8 + rng.gen_range(56));
+                (
+                    library::conv2d(h, w, 4, 4, DType::I8),
+                    library::conv2d(h, w, 4, 4, DType::I8),
+                )
+            }
+            2 => {
+                let n = 64 + rng.gen_range(4096);
+                (library::fir(n, 15, DType::F32), library::fir(n, 15, DType::F32))
+            }
+            3 => {
+                let rows = 8 + rng.gen_range(120);
+                (
+                    library::fft2d(rows, 64, DType::CF32),
+                    library::fft2d(rows, 64, DType::CF32),
+                )
+            }
+            4 => {
+                let (c, h) = (1 + rng.gen_range(32), 8 + rng.gen_range(56));
+                (
+                    library::dw_conv2d(c, h, h, 3, 3, DType::F32),
+                    library::dw_conv2d(c, h, h, 3, 3, DType::F32),
+                )
+            }
+            5 => {
+                let n = d2(&mut rng);
+                (library::trsv(n, DType::F32), library::trsv(n, DType::F32))
+            }
+            _ => {
+                let (t, n) = (1 + rng.gen_range(8), 8 + rng.gen_range(120));
+                (
+                    library::stencil2d_chain(t, n, n, DType::F32),
+                    library::stencil2d_chain(t, n, n, DType::F32),
+                )
+            }
+        };
+        assert_eq!(a.canonical_u64(), b.canonical_u64(), "{}", a.name);
+        assert_eq!(a.dependences(), b.dependences(), "{}", a.name);
+        // perturb one extent: key must move even though the name-embedded
+        // sizes are the only other discriminator
+        let mut bigger = a.clone();
+        let dim = rng.gen_range(bigger.rank() as u64) as usize;
+        bigger.domain.dims[dim].extent += 1;
+        assert_ne!(a.canonical_u64(), bigger.canonical_u64(), "{}", a.name);
+    }
+}
+
 #[test]
 fn prop_placement_grid_and_coords_never_disagree() {
     // The dense Placement keeps a NodeId→Coord vector mirrored by a flat

@@ -100,6 +100,20 @@ fn expected_inputs(func: &str, ints: &[usize]) -> Vec<Vec<usize>> {
             let (b, n) = (ints[0], ints[1]);
             vec![vec![b, n], vec![b, n]]
         }
+        "_dwconv_args" => {
+            let (c, h, w, p, q) = (ints[0], ints[1], ints[2], ints[3], ints[4]);
+            vec![vec![c, h + p - 1, w + q - 1], vec![c, p, q], vec![c, h, w]]
+        }
+        "_trsv_args" => {
+            let n = ints[0];
+            vec![vec![n, n], vec![n]]
+        }
+        "_stencil_args" => {
+            // ints = [stages, n, m]; stages is baked into the variant's
+            // sweep count, not its shapes
+            let (n, m) = (ints[1], ints[2]);
+            vec![vec![n, m], vec![5]]
+        }
         other => panic!("unknown factory {other} — extend this test"),
     }
 }
