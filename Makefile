@@ -10,7 +10,7 @@
 ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 
-.PHONY: build test bench doc artifacts serve-smoke rank-smoke pnr-smoke workloads-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke clean
 
 build:
 	cargo build --release
@@ -32,6 +32,27 @@ serve-smoke: build
 	@grep -Eq '"(cached|deduped)":true' $(SERVE_SMOKE_OUT) \
 	  || { echo "serve-smoke FAILED: duplicate request was neither cached nor deduplicated"; cat $(SERVE_SMOKE_OUT); exit 1; }
 	@echo "serve-smoke OK (3 responses, duplicate amortized)"
+
+# Gate the production-serve layer under open-loop load: replay a
+# deterministic 400 req/s arrival schedule (90 % hot keys, cold-compile
+# queue capped at 2) against a pre-warmed service. Every request must
+# resolve as ok or a typed shed (no errors), hot p50 must stay under the
+# latency gate, and BENCH_serve.json at the repo root is refreshed with
+# p50/p99/p999 latency and the shed rate.
+serve-load-smoke:
+	cargo bench --bench bench_serve_load
+
+# Mutation-style suite smoke: prove the tests would notice. Positive
+# controls first (each guard passes unmutated), then each WIDESA_MUTATE
+# seam must make its guard FAIL — a suite that still passes under a
+# halved cost-model peak or a disabled admission quota is not testing
+# what it claims to.
+mutation-smoke:
+	cargo test -q --lib mm_f32_lands_near_paper
+	cargo test -q --lib quota_admission_is_per_tenant
+	! WIDESA_MUTATE=cost-peak cargo test -q --lib mm_f32_lands_near_paper
+	! WIDESA_MUTATE=quota-grant cargo test -q --lib quota_admission_is_per_tenant
+	@echo "mutation-smoke OK (both seams detected)"
 
 # Gate the exact-port ranking: scoring a candidate with exact merged
 # port counts must cost ≤ 2× the legacy analytic score (bench_rank exits

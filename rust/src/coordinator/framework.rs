@@ -96,7 +96,7 @@ pub struct CompiledDesign {
 impl CompiledDesign {
     pub fn report(&self) -> String {
         format!(
-            "{}\n  mapping : {}\n  est     : {:.3} TOPS ({:.4}/AIE), bound {}\n  exact   : {:.3} TOPS with merged ports, bound {}\n  sim     : {}\n  ports   : {} in / {} out (merged from {} / {})\n  compile : success={} congestion={} in {:.3}s\n",
+            "{}\n  mapping : {}\n  est     : {:.3} TOPS ({:.4}/AIE), bound {}\n  exact   : {:.3} TOPS with merged ports, bound {}\n  sim     : {}\n  ports   : {} in / {} out (merged from {} / {})\n  compile : success={} congestion={} in {:.3}s (place {:.1} ms, assign {:.1} ms, route {:.1} ms)\n",
             self.candidate.rec.name,
             self.candidate.summary(),
             self.estimate.tops,
@@ -114,6 +114,9 @@ impl CompiledDesign {
                 .max_congestion
                 .map_or_else(|| "-".to_string(), |c| c.to_string()),
             self.compile.wall_s,
+            self.compile.stages.place_ms,
+            self.compile.stages.assign_ms,
+            self.compile.stages.route_ms,
         )
     }
 }

@@ -84,4 +84,4 @@ pub use coordinator::framework::{CompiledDesign, NoLegalMapping, WideSa, WideSaC
 pub use mapping::cost::PortModel;
 pub use mapping::dse::DseConstraints;
 pub use recurrence::{dtype::DType, library, spec::UniformRecurrence};
-pub use serve::{CacheOutcome, ServeConfig, ServeHandle, ServeResult, ServeStats};
+pub use serve::{CacheOutcome, Overloaded, ServeConfig, ServeHandle, ServeResult, ServeStats};

@@ -43,6 +43,11 @@ COMMANDS (service):
     options: --cache N (design-cache entries, default 64)
              --workers N (concurrent requests), --dse-threads N (scoring shards),
              --aies N / --mover-bits N / --cold-dram (base compile config)
+             --snapshot PATH (warm-start the cache from PATH; stdin mode
+                              writes the cache back to PATH at EOF)
+             --max-inflight N (shed cold compiles beyond N in flight)
+             --quota-rps X --quota-burst X (per-tenant token-bucket quota;
+                              burst <= 0 disables admission)
     request:  {\"id\":1,\"bench\":\"mm\",\"dtype\":\"f32\",\"dims\":[8192,8192,8192],\"max_aies\":400}
     response: {\"id\":1,\"ok\":true,\"cached\":false,\"key\":\"…\",\"tops\":4.13,…}
 
@@ -183,6 +188,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 i += 1;
             }
             "--cold-dram" => cfg.base.cold_dram = true,
+            "--snapshot" => {
+                cfg.snapshot = Some(flag_val(args, i, "--snapshot")?.into());
+                i += 1;
+            }
+            "--max-inflight" => {
+                cfg.max_inflight = flag_val(args, i, "--max-inflight")?.parse()?;
+                i += 1;
+            }
+            "--quota-rps" => {
+                cfg.quota_rps = flag_val(args, i, "--quota-rps")?.parse()?;
+                i += 1;
+            }
+            "--quota-burst" => {
+                cfg.quota_burst = flag_val(args, i, "--quota-burst")?.parse()?;
+                i += 1;
+            }
             other => bail!("unknown serve option {other:?} (see `widesa help`)"),
         }
         i += 1;
@@ -198,9 +219,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         serve_stdin(&handle)?;
         let s = handle.stats();
         eprintln!(
-            "widesa serve: done — {} hits, {} misses, {} deduped, {} errors, {} cached designs",
-            s.hits, s.misses, s.deduped, s.errors, s.cache.len
+            "widesa serve: done — {} hits, {} misses, {} deduped, {} errors, {} shed, {} cached designs",
+            s.hits, s.misses, s.deduped, s.errors, s.shed, s.cache.len
         );
+        if let Some(path) = handle.config().snapshot.clone() {
+            let n = handle.save_snapshot(&path)?;
+            eprintln!("widesa serve: snapshot — {n} designs to {}", path.display());
+        }
     }
     Ok(())
 }

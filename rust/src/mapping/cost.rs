@@ -88,12 +88,25 @@ pub struct PerfEstimate {
     pub occupancy: f64,
 }
 
+/// Mutation seam for `make mutation-smoke`: `WIDESA_MUTATE=cost-peak`
+/// halves every sustained issue efficiency. A vacuous ranking/throughput
+/// test suite would keep passing under that perturbation; the smoke
+/// target asserts the Table III tolerances and framework throughput
+/// gates actually fail. Read once (the DSE calls this in a hot loop).
+fn mutation_scale() -> f64 {
+    static SCALE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *SCALE.get_or_init(|| match std::env::var("WIDESA_MUTATE").as_deref() {
+        Ok("cost-peak") => 0.5,
+        _ => 1.0,
+    })
+}
+
 /// Sustained issue efficiency of the generated AIE microkernel
 /// (kernel-level calibration — see module docs). Values assume latency
 /// hiding has filled the accumulation pipeline; [`CostModel::estimate`]
 /// multiplies by the latency plan's efficiency.
 pub fn issue_efficiency(kind: Kind, dtype: DType) -> f64 {
-    match (kind, dtype) {
+    let base = match (kind, dtype) {
         (Kind::Mm, DType::F32) => 0.52,
         (Kind::Mm, DType::I8) => 0.254,
         (Kind::Mm, DType::I16) => 0.253,
@@ -133,7 +146,8 @@ pub fn issue_efficiency(kind: Kind, dtype: DType) -> f64 {
         (Kind::Stencil, DType::I16) => 0.33,
         (Kind::Stencil, DType::I32) => 0.45,
         (Kind::Stencil, _) => 0.30,
-    }
+    };
+    base * mutation_scale()
 }
 
 /// Packet-switch aggregation limits: one switch stage merges 4 packet

@@ -79,7 +79,9 @@ pub fn scoring_model(board: &BoardConfig, cons: &DseConstraints) -> CostModel {
 pub type Ranked = Vec<(MappingCandidate, PerfEstimate)>;
 
 /// The loop-invariant part of one DSE run: everything [`score_choice`]
-/// needs besides the choice itself.
+/// needs besides the choice itself. `Clone` so the serve layer can cache
+/// plans across requests (near-key requests share the enumeration).
+#[derive(Debug, Clone)]
 pub struct DsePlan {
     pub scope: KernelScope,
     /// Latency-hiding plan (identical for every candidate of a run: it

@@ -13,6 +13,18 @@ use crate::place_route::router::route_all;
 use crate::plio::assignment::assign;
 use std::time::Instant;
 
+/// Per-stage wall times of one P&R run, in milliseconds. The serve
+/// layer threads these into every response (`stage_ms`) so tail-latency
+/// regressions can be attributed to a stage without rerunning
+/// `bench_compile`; on the annealing path the anneal is the "place"
+/// stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageTimings {
+    pub place_ms: f64,
+    pub assign_ms: f64,
+    pub route_ms: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct CompileOutcome {
     pub success: bool,
@@ -26,6 +38,8 @@ pub struct CompileOutcome {
     /// sentinel is gone — aggregating it into a table is now a type
     /// error, not a silent overflow).
     pub max_congestion: Option<u32>,
+    /// Where the wall time went (stages that never ran stay 0).
+    pub stages: StageTimings,
 }
 
 /// Compile with WideSA constraints: deterministic placement, Algorithm 1
@@ -34,15 +48,22 @@ pub struct CompileOutcome {
 pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
     let t0 = Instant::now();
     let Some(pl) = place(g, &board.array) else {
+        let wall_s = t0.elapsed().as_secs_f64();
         return CompileOutcome {
             success: false,
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s,
             iterations: 0,
             placement: None,
             constraints: None,
             max_congestion: None,
+            stages: StageTimings {
+                place_ms: wall_s * 1e3,
+                ..Default::default()
+            },
         };
     };
+    let place_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
     let a = assign(
         g,
         &pl,
@@ -50,6 +71,8 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
         board.array.rc_west,
         board.array.rc_east,
     );
+    let assign_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let t2 = Instant::now();
     let routing = route_all(
         g,
         &pl,
@@ -58,6 +81,7 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
         board.array.rc_west,
         board.array.rc_east,
     );
+    let route_ms = t2.elapsed().as_secs_f64() * 1e3;
     let cs = ConstraintSet::from_design(g, &pl, &a.columns);
     CompileOutcome {
         success: a.feasible && routing.success && pl.shared_buffers_adjacent(g, &board.array),
@@ -66,6 +90,11 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
         placement: Some(pl),
         constraints: Some(cs),
         max_congestion: Some(routing.max_west.max(routing.max_east)),
+        stages: StageTimings {
+            place_ms,
+            assign_ms,
+            route_ms,
+        },
     }
 }
 
@@ -79,6 +108,7 @@ pub fn compile_unconstrained(
 ) -> CompileOutcome {
     let t0 = Instant::now();
     let r = anneal(g, &board.array, seed, max_iters);
+    let place_ms = t0.elapsed().as_secs_f64() * 1e3;
     if !r.converged {
         return CompileOutcome {
             success: false,
@@ -87,8 +117,13 @@ pub fn compile_unconstrained(
             placement: Some(r.placement),
             constraints: None,
             max_congestion: None,
+            stages: StageTimings {
+                place_ms,
+                ..Default::default()
+            },
         };
     }
+    let t1 = Instant::now();
     let a = assign(
         g,
         &r.placement,
@@ -96,6 +131,8 @@ pub fn compile_unconstrained(
         board.array.rc_west,
         board.array.rc_east,
     );
+    let assign_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let t2 = Instant::now();
     let routing = route_all(
         g,
         &r.placement,
@@ -104,6 +141,7 @@ pub fn compile_unconstrained(
         board.array.rc_west,
         board.array.rc_east,
     );
+    let route_ms = t2.elapsed().as_secs_f64() * 1e3;
     CompileOutcome {
         success: a.feasible && routing.success,
         wall_s: t0.elapsed().as_secs_f64(),
@@ -111,6 +149,11 @@ pub fn compile_unconstrained(
         placement: Some(r.placement),
         constraints: None,
         max_congestion: Some(routing.max_west.max(routing.max_east)),
+        stages: StageTimings {
+            place_ms,
+            assign_ms,
+            route_ms,
+        },
     }
 }
 
@@ -150,6 +193,21 @@ mod tests {
         let (g, board) = graph(400);
         let out = compile(&g, &board);
         assert!(out.wall_s < 5.0, "constrained compile took {}s", out.wall_s);
+    }
+
+    #[test]
+    fn stage_timings_partition_the_wall() {
+        let (g, board) = graph(400);
+        let out = compile(&g, &board);
+        let s = out.stages;
+        assert!(s.place_ms >= 0.0 && s.assign_ms >= 0.0 && s.route_ms >= 0.0);
+        // the three stages (plus constraint extraction) make up the wall
+        let sum_s = (s.place_ms + s.assign_ms + s.route_ms) / 1e3;
+        assert!(
+            sum_s <= out.wall_s + 1e-3,
+            "stage sum {sum_s}s exceeds wall {}s",
+            out.wall_s
+        );
     }
 
     #[test]

@@ -83,6 +83,32 @@ impl DType {
             DType::CI16 => "Cint16",
         }
     }
+
+    /// Short wire code — the spelling the serve protocol and cache
+    /// snapshots use (`f32|i8|i16|i32|cf32|ci16`).
+    pub fn code(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
+            DType::CF32 => "cf32",
+            DType::CI16 => "ci16",
+        }
+    }
+
+    /// Inverse of [`DType::code`].
+    pub fn from_code(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i16" => DType::I16,
+            "i32" => DType::I32,
+            "cf32" => DType::CF32,
+            "ci16" => DType::CI16,
+            _ => return None,
+        })
+    }
 }
 
 impl fmt::Display for DType {
@@ -109,6 +135,14 @@ mod tests {
         // headroom against which the paper's 32.49 TOPS is ~25 %.
         let peak: f64 = 400.0 * 128.0 * 2.0 * 1.25e9 / 1e12;
         assert!((peak - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wire_codes_round_trip() {
+        for d in [DType::F32, DType::I8, DType::I16, DType::I32, DType::CF32, DType::CI16] {
+            assert_eq!(DType::from_code(d.code()), Some(d));
+        }
+        assert_eq!(DType::from_code("f16"), None);
     }
 
     #[test]

@@ -65,6 +65,19 @@ pub fn design_key(rec: &UniformRecurrence, cfg: &WideSaConfig) -> u64 {
     h.finish()
 }
 
+/// Key for the DSE *plan* cache: [`design_key`] minus the mover width
+/// and DRAM mode. The plan (demarcation, space-time enumeration, the
+/// latency plan, the AIE budget) depends on neither, so near-key
+/// requests — same recurrence/board/constraints, different `mover_bits`
+/// or `cold_dram` — share one plan instead of redoing the enumeration.
+pub fn plan_key(rec: &UniformRecurrence, cfg: &WideSaConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(rec.canonical_u64());
+    board_fingerprint(&mut h, &cfg.board);
+    cfg.constraints.fingerprint(&mut h);
+    h.finish()
+}
+
 struct Entry<V> {
     value: V,
     last_used: u64,
@@ -173,6 +186,20 @@ impl<V: Clone> ShardedCache<V> {
         self.insertions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Snapshot every live entry (the persistence path). Shards are
+    /// locked one at a time — consistent per shard, not globally — and
+    /// the result is key-sorted so snapshot files are deterministic for
+    /// a given cache state.
+    pub fn entries(&self) -> Vec<(u64, V)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let shard = s.lock().unwrap();
+            out.extend(shard.map.iter().map(|(&k, e)| (k, e.value.clone())));
+        }
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
@@ -259,6 +286,34 @@ mod tests {
         }
         assert!(c.len() <= c.capacity(), "{} > {}", c.len(), c.capacity());
         assert!(c.stats().evictions >= 1000 - c.capacity() as u64);
+    }
+
+    #[test]
+    fn entries_snapshot_is_sorted_and_complete() {
+        let c: ShardedCache<u32> = ShardedCache::new(8, 3);
+        for k in [9u64, 2, 5, 7] {
+            c.insert(k, k as u32 * 10);
+        }
+        let e = c.entries();
+        assert_eq!(e, vec![(2, 20), (5, 50), (7, 70), (9, 90)]);
+    }
+
+    #[test]
+    fn plan_key_ignores_mover_and_dram_only() {
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let cfg = WideSaConfig::default();
+        let base = plan_key(&rec, &cfg);
+        // mover width and DRAM mode share a plan…
+        let mut c = cfg.clone();
+        c.mover_bits = 128;
+        c.cold_dram = true;
+        assert_eq!(base, plan_key(&rec, &c));
+        // …but constraints and recurrence do not
+        let mut c = cfg.clone();
+        c.constraints.max_aies = Some(64);
+        assert_ne!(base, plan_key(&rec, &c));
+        let other = library::mm(2048, 1024, 1024, DType::F32);
+        assert_ne!(base, plan_key(&other, &cfg));
     }
 
     #[test]

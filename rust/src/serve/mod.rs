@@ -24,24 +24,49 @@
 //!   **bit-identical ranking** of the serial `explore_all`.
 //! * [`protocol`] — the JSON-lines request/response format (see its
 //!   module docs for the full schema).
+//! * [`persist`] — **snapshot persistence**: the design cache serializes
+//!   to a JSON-lines file and warm-starts a restarted server, with
+//!   schema-versioned, canonically-stamped entries that self-evict when
+//!   stale ([`persist::SNAPSHOT_SCHEMA`]).
+//!
+//! Production admission control wraps the whole path: per-tenant
+//! token-bucket quotas and cold-compile queue-depth shedding reject with
+//! the typed [`server::Overloaded`] error (a structured protocol
+//! response, not a stringified failure), and
+//! [`server::ServeHandle::compile_batch`] coalesces identical-key
+//! requests while a plan cache ([`cache::plan_key`]) shares DSE plan
+//! work between near-identical ones. `bench_serve_load` drives the
+//! whole stack open-loop and reports p50/p99/p999 + shed rate into
+//! `BENCH_serve.json`.
 //!
 //! ```text
-//!   request line ──parse──▶ design_key ──▶ cache? ──hit──▶ response
+//!   request line ──parse──▶ quota? ──shed──▶ overloaded response
+//!                             │admit
+//!                         design_key ──▶ cache? ──hit──▶ response
 //!                                            │miss
 //!                                     single-flight leader?
 //!                                      │yes          │no
-//!                               DSE over pool     wait for leader
-//!                               P&R + sim + codegen     │
-//!                                      ▼                ▼
-//!                                 cache fill ──────▶ response
+//!                               inflight slot?    wait for leader
+//!                               │free    │full        │
+//!                          DSE over pool └▶ overloaded │
+//!                          P&R + sim + codegen         │
+//!                                      ▼               ▼
+//!                                 cache fill ─────▶ response
+//!                                      │
+//!                                  snapshot (save/warm-start)
 //! ```
 
 pub mod cache;
+pub mod persist;
 pub mod pool;
 pub mod protocol;
 pub mod server;
 
-pub use cache::{design_key, CacheStats, ShardedCache};
+pub use cache::{design_key, plan_key, CacheStats, ShardedCache};
+pub use persist::SNAPSHOT_SCHEMA;
 pub use pool::WorkerPool;
 pub use protocol::CompileRequest;
-pub use server::{serve_stdin, serve_tcp, CacheOutcome, ServeConfig, ServeHandle, ServeResult, ServeStats};
+pub use server::{
+    serve_stdin, serve_tcp, CacheOutcome, Overloaded, ServeConfig, ServeHandle, ServeResult,
+    ServeStats,
+};

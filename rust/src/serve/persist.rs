@@ -1,0 +1,1042 @@
+//! Cross-process snapshot persistence for the design cache.
+//!
+//! The compile pipeline is pure, so a served design is exactly
+//! reconstructible from its serialized form — which makes the sharded
+//! LRU cache portable across server restarts. A snapshot is a JSON-lines
+//! file, one self-contained entry per line:
+//!
+//! ```json
+//! {"schema":1,"key":"91ab…16hex","rec":"34cd…16hex","design":{…}}
+//! ```
+//!
+//! * `schema` — [`SNAPSHOT_SCHEMA`]; bumping it on any layout change
+//!   makes every older entry self-evict on load.
+//! * `key` — the [`crate::serve::cache::design_key`] the entry was
+//!   cached under, as 16 hex digits (full 64 bits; JSON numbers only
+//!   carry 53).
+//! * `rec` — the recurrence's [`canonical_u64`]
+//!   [`crate::recurrence::spec::UniformRecurrence::canonical_u64`]
+//!   stamp. On load the recurrence is deserialized and its canonical
+//!   key recomputed; a mismatch (bit-rot, a hand-edited file, or a
+//!   canonicalization change) evicts the entry.
+//!
+//! Every validation failure — parse error, truncated line, schema bump,
+//! stamp mismatch — skips **that entry only** and never panics: a
+//! corrupt snapshot degrades to a colder start, not a dead server.
+
+use crate::arch::array::Coord;
+use crate::arch::plio::PlioDir;
+use crate::codegen::CodeBundle;
+use crate::coordinator::framework::CompiledDesign;
+use crate::graph::builder::MappedGraph;
+use crate::graph::edge::{Edge, EdgeKind};
+use crate::graph::node::{Node, NodeKind};
+use crate::graph::packet::MergeStats;
+use crate::mapping::candidate::{Kind, MappingCandidate};
+use crate::mapping::cost::{PerfBound, PerfEstimate};
+use crate::mapping::latency::LatencyHiding;
+use crate::mapping::partition::ArrayPartition;
+use crate::mapping::spacetime::SpaceTimeChoice;
+use crate::mapping::threading::Threading;
+use crate::place_route::compiler::{CompileOutcome, StageTimings};
+use crate::place_route::constraints::ConstraintSet;
+use crate::place_route::placement::Placement;
+use crate::polyhedral::affine::{AffineExpr, AffineMap};
+use crate::polyhedral::dependence::{DepKind, Dependence};
+use crate::polyhedral::domain::{IterationDomain, LoopDim};
+use crate::polyhedral::schedule::{LoopNest, LoopRole};
+use crate::recurrence::dtype::DType;
+use crate::recurrence::spec::{Access, AccessKind, UniformRecurrence};
+use crate::recurrence::tiling::KernelScope;
+use crate::sim::metrics::SimReport;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Bump on any change to the serialized design layout; older entries
+/// then self-evict on load instead of deserializing garbage.
+pub const SNAPSHOT_SCHEMA: u64 = 1;
+
+// ---------------------------------------------------------------------
+// typed field access (all failures become per-entry skips in the loader)
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key)
+        .ok_or_else(|| anyhow!("snapshot entry missing field {key:?}"))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    Ok(field(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field {key:?} must be a string"))?
+        .to_string())
+}
+
+fn f64_field(v: &Json, key: &str) -> Result<f64> {
+    field(v, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field {key:?} must be a number"))
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    Ok(f64_field(v, key)? as u64)
+}
+
+fn u32_field(v: &Json, key: &str) -> Result<u32> {
+    Ok(f64_field(v, key)? as u32)
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    Ok(f64_field(v, key)? as usize)
+}
+
+fn i64_field(v: &Json, key: &str) -> Result<i64> {
+    Ok(f64_field(v, key)? as i64)
+}
+
+fn bool_field(v: &Json, key: &str) -> Result<bool> {
+    field(v, key)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("field {key:?} must be a boolean"))
+}
+
+fn arr_field<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    field(v, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("field {key:?} must be an array"))
+}
+
+fn i64_vec(v: &Json, key: &str) -> Result<Vec<i64>> {
+    arr_field(v, key)?
+        .iter()
+        .map(|x| x.as_i64().ok_or_else(|| anyhow!("field {key:?} must hold integers")))
+        .collect()
+}
+
+fn u64_vec(v: &Json, key: &str) -> Result<Vec<u64>> {
+    arr_field(v, key)?
+        .iter()
+        .map(|x| x.as_u64().ok_or_else(|| anyhow!("field {key:?} must hold integers")))
+        .collect()
+}
+
+fn usize_vec(v: &Json, key: &str) -> Result<Vec<usize>> {
+    arr_field(v, key)?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("field {key:?} must hold integers")))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// polyhedral layer
+
+fn domain_to_json(d: &IterationDomain) -> Json {
+    Json::Arr(
+        d.dims
+            .iter()
+            .map(|dim| {
+                Json::obj(vec![
+                    ("name", Json::str(dim.name.clone())),
+                    ("extent", Json::num_u64(dim.extent)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn domain_from_json(v: &Json) -> Result<IterationDomain> {
+    let dims = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("domain must be an array"))?
+        .iter()
+        .map(|d| Ok(LoopDim::new(str_field(d, "name")?, u64_field(d, "extent")?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IterationDomain::new(dims))
+}
+
+fn dep_kind_str(k: DepKind) -> &'static str {
+    match k {
+        DepKind::Read => "read",
+        DepKind::Flow => "flow",
+        DepKind::Output => "output",
+    }
+}
+
+fn dep_kind_from(s: &str) -> Result<DepKind> {
+    Ok(match s {
+        "read" => DepKind::Read,
+        "flow" => DepKind::Flow,
+        "output" => DepKind::Output,
+        _ => bail!("unknown dependence kind {s:?}"),
+    })
+}
+
+fn dep_to_json(d: &Dependence) -> Json {
+    Json::obj(vec![
+        ("array", Json::str(d.array.clone())),
+        ("kind", Json::str(dep_kind_str(d.kind))),
+        ("vector", Json::Arr(d.vector.iter().map(|&c| Json::num_i64(c)).collect())),
+    ])
+}
+
+fn dep_from_json(v: &Json) -> Result<Dependence> {
+    Ok(Dependence::new(
+        str_field(v, "array")?,
+        dep_kind_from(&str_field(v, "kind")?)?,
+        i64_vec(v, "vector")?,
+    ))
+}
+
+fn map_to_json(m: &AffineMap) -> Json {
+    Json::Arr(
+        m.exprs
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("coeffs", Json::Arr(e.coeffs.iter().map(|&c| Json::num_i64(c)).collect())),
+                    ("constant", Json::num_i64(e.constant)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn map_from_json(v: &Json) -> Result<AffineMap> {
+    let exprs = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("affine map must be an array"))?
+        .iter()
+        .map(|e| Ok(AffineExpr::new(i64_vec(e, "coeffs")?, i64_field(e, "constant")?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(AffineMap { exprs })
+}
+
+fn role_from(s: &str) -> Result<LoopRole> {
+    Ok(match s {
+        "unassigned" => LoopRole::Unassigned,
+        "space" => LoopRole::Space,
+        "partition" => LoopRole::Partition,
+        "time" => LoopRole::Time,
+        "latency" => LoopRole::Latency,
+        "thread" => LoopRole::Thread,
+        "kernel" => LoopRole::Kernel,
+        _ => bail!("unknown loop role {s:?}"),
+    })
+}
+
+fn nest_to_json(n: &LoopNest) -> Json {
+    Json::obj(vec![
+        ("domain", domain_to_json(&n.domain)),
+        ("deps", Json::Arr(n.deps.iter().map(dep_to_json).collect())),
+        (
+            "roles",
+            Json::Arr(n.roles.iter().map(|r| Json::str(r.to_string())).collect()),
+        ),
+    ])
+}
+
+fn nest_from_json(v: &Json) -> Result<LoopNest> {
+    let domain = domain_from_json(field(v, "domain")?)?;
+    let deps = arr_field(v, "deps")?
+        .iter()
+        .map(dep_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let roles = arr_field(v, "roles")?
+        .iter()
+        .map(|r| role_from(r.as_str().ok_or_else(|| anyhow!("role must be a string"))?))
+        .collect::<Result<Vec<_>>>()?;
+    let rank = domain.rank();
+    if roles.len() != rank {
+        bail!("nest has {} roles for rank {rank}", roles.len());
+    }
+    if let Some(d) = deps.iter().find(|d| d.rank() != rank) {
+        bail!("dependence on {:?} has rank {} in a rank-{rank} nest", d.array, d.rank());
+    }
+    Ok(LoopNest { domain, deps, roles })
+}
+
+// ---------------------------------------------------------------------
+// recurrence layer
+
+fn access_kind_str(k: AccessKind) -> &'static str {
+    match k {
+        AccessKind::Read => "read",
+        AccessKind::Accumulate => "accumulate",
+        AccessKind::Write => "write",
+    }
+}
+
+fn access_kind_from(s: &str) -> Result<AccessKind> {
+    Ok(match s {
+        "read" => AccessKind::Read,
+        "accumulate" => AccessKind::Accumulate,
+        "write" => AccessKind::Write,
+        _ => bail!("unknown access kind {s:?}"),
+    })
+}
+
+/// Serialize a recurrence (the snapshot's innermost identity: its
+/// canonical key is recomputed from exactly this on load).
+pub fn rec_to_json(r: &UniformRecurrence) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("domain", domain_to_json(&r.domain)),
+        (
+            "accesses",
+            Json::Arr(
+                r.accesses
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("array", Json::str(a.array.clone())),
+                            ("kind", Json::str(access_kind_str(a.kind))),
+                            ("map", map_to_json(&a.map)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("dtype", Json::str(r.dtype.code())),
+        ("macs_per_iter", Json::num_u64(r.macs_per_iter)),
+        ("carried", Json::Arr(r.carried.iter().map(dep_to_json).collect())),
+    ])
+}
+
+/// Inverse of [`rec_to_json`].
+pub fn rec_from_json(v: &Json) -> Result<UniformRecurrence> {
+    let accesses = arr_field(v, "accesses")?
+        .iter()
+        .map(|a| {
+            Ok(Access::new(
+                str_field(a, "array")?,
+                access_kind_from(&str_field(a, "kind")?)?,
+                map_from_json(field(a, "map")?)?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let dtype_code = str_field(v, "dtype")?;
+    let dtype = DType::from_code(&dtype_code)
+        .ok_or_else(|| anyhow!("unknown dtype code {dtype_code:?}"))?;
+    Ok(UniformRecurrence {
+        name: str_field(v, "name")?,
+        domain: domain_from_json(field(v, "domain")?)?,
+        accesses,
+        dtype,
+        macs_per_iter: u64_field(v, "macs_per_iter")?,
+        carried: arr_field(v, "carried")?
+            .iter()
+            .map(dep_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn scope_to_json(s: &KernelScope) -> Json {
+    Json::obj(vec![
+        ("core_factors", Json::Arr(s.core_factors.iter().map(|&f| Json::num_u64(f)).collect())),
+        ("graph_nest", nest_to_json(&s.graph_nest)),
+        ("core_bytes", Json::num_u64(s.core_bytes)),
+        ("core_macs", Json::num_u64(s.core_macs)),
+    ])
+}
+
+fn scope_from_json(v: &Json) -> Result<KernelScope> {
+    Ok(KernelScope {
+        core_factors: u64_vec(v, "core_factors")?,
+        graph_nest: nest_from_json(field(v, "graph_nest")?)?,
+        core_bytes: u64_field(v, "core_bytes")?,
+        core_macs: u64_field(v, "core_macs")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// mapping layer
+
+fn choice_to_json(c: &SpaceTimeChoice) -> Json {
+    Json::obj(vec![
+        ("space", Json::Arr(c.space.iter().map(|&i| Json::num_usize(i)).collect())),
+        (
+            "skews",
+            Json::Arr(
+                c.skews
+                    .iter()
+                    .map(|&(t, s, f)| {
+                        Json::Arr(vec![Json::num_usize(t), Json::num_usize(s), Json::num_i64(f)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("nest", nest_to_json(&c.nest)),
+    ])
+}
+
+fn choice_from_json(v: &Json) -> Result<SpaceTimeChoice> {
+    let skews = arr_field(v, "skews")?
+        .iter()
+        .map(|s| {
+            let t = s.as_arr().ok_or_else(|| anyhow!("skew must be [t, s, f]"))?;
+            if t.len() != 3 {
+                bail!("skew must be [t, s, f], got {} elements", t.len());
+            }
+            let get = |i: usize| t[i].as_f64().ok_or_else(|| anyhow!("skew holds numbers"));
+            Ok((get(0)? as usize, get(1)? as usize, get(2)? as i64))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SpaceTimeChoice {
+        space: usize_vec(v, "space")?,
+        skews,
+        nest: nest_from_json(field(v, "nest")?)?,
+    })
+}
+
+fn candidate_to_json(c: &MappingCandidate) -> Json {
+    Json::obj(vec![
+        ("rec", rec_to_json(&c.rec)),
+        // `kind` is derived (Kind::of) — recomputed on load, not stored
+        ("scope", scope_to_json(&c.scope)),
+        ("choice", choice_to_json(&c.choice)),
+        (
+            "partition",
+            Json::obj(vec![
+                ("virt", Json::Arr(c.partition.virt.iter().map(|&x| Json::num_u64(x)).collect())),
+                ("phys", Json::Arr(c.partition.phys.iter().map(|&x| Json::num_u64(x)).collect())),
+                ("rounds", Json::num_u64(c.partition.rounds)),
+            ]),
+        ),
+        (
+            "latency",
+            Json::obj(vec![
+                (
+                    "factors",
+                    Json::Arr(
+                        c.latency
+                            .factors
+                            .iter()
+                            .map(|&(i, f)| Json::Arr(vec![Json::num_usize(i), Json::num_u64(f)]))
+                            .collect(),
+                    ),
+                ),
+                ("chains", Json::num_u64(c.latency.chains)),
+            ]),
+        ),
+        (
+            "threading",
+            Json::obj(vec![
+                ("dim", c.threading.dim.map_or(Json::Null, Json::num_usize)),
+                ("factor", Json::num_u64(c.threading.factor)),
+                ("is_reduction", Json::Bool(c.threading.is_reduction)),
+            ]),
+        ),
+    ])
+}
+
+fn candidate_from_json(v: &Json) -> Result<MappingCandidate> {
+    let rec = rec_from_json(field(v, "rec")?)?;
+    let kind = Kind::of(&rec);
+    let p = field(v, "partition")?;
+    let l = field(v, "latency")?;
+    let factors = arr_field(l, "factors")?
+        .iter()
+        .map(|f| {
+            let t = f.as_arr().ok_or_else(|| anyhow!("latency factor must be [i, f]"))?;
+            if t.len() != 2 {
+                bail!("latency factor must be [i, f]");
+            }
+            let i = t[0].as_usize().ok_or_else(|| anyhow!("factor index"))?;
+            let f = t[1].as_u64().ok_or_else(|| anyhow!("factor value"))?;
+            Ok((i, f))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let t = field(v, "threading")?;
+    let dim = match field(t, "dim")? {
+        Json::Null => None,
+        d => Some(d.as_usize().ok_or_else(|| anyhow!("threading dim must be a number"))?),
+    };
+    Ok(MappingCandidate {
+        scope: scope_from_json(field(v, "scope")?)?,
+        choice: choice_from_json(field(v, "choice")?)?,
+        partition: ArrayPartition {
+            virt: u64_vec(p, "virt")?,
+            phys: u64_vec(p, "phys")?,
+            rounds: u64_field(p, "rounds")?,
+        },
+        latency: LatencyHiding {
+            factors,
+            chains: u64_field(l, "chains")?,
+        },
+        threading: Threading {
+            dim,
+            factor: u64_field(t, "factor")?,
+            is_reduction: bool_field(t, "is_reduction")?,
+        },
+        rec,
+        kind,
+    })
+}
+
+fn bound_str(b: PerfBound) -> String {
+    b.to_string()
+}
+
+fn bound_from(s: &str) -> Result<PerfBound> {
+    Ok(match s {
+        "compute" => PerfBound::Compute,
+        "plio-in" => PerfBound::PlioIn,
+        "plio-out" => PerfBound::PlioOut,
+        "dram" => PerfBound::Dram,
+        _ => bail!("unknown perf bound {s:?}"),
+    })
+}
+
+fn estimate_to_json(e: &PerfEstimate) -> Json {
+    Json::obj(vec![
+        ("tops", Json::Num(e.tops)),
+        ("tops_e2e", Json::Num(e.tops_e2e)),
+        ("seconds", Json::Num(e.seconds)),
+        ("aies", Json::num_u64(e.aies)),
+        ("tops_per_aie", Json::Num(e.tops_per_aie)),
+        ("bound", Json::str(bound_str(e.bound))),
+        ("compute_s", Json::Num(e.compute_s)),
+        ("plio_in_s", Json::Num(e.plio_in_s)),
+        ("plio_out_s", Json::Num(e.plio_out_s)),
+        ("dram_s", Json::Num(e.dram_s)),
+        ("plio_in_ports", Json::num_u64(e.plio_in_ports as u64)),
+        ("plio_out_ports", Json::num_u64(e.plio_out_ports as u64)),
+        ("dram_bytes", Json::num_u64(e.dram_bytes)),
+        ("occupancy", Json::Num(e.occupancy)),
+    ])
+}
+
+fn estimate_from_json(v: &Json) -> Result<PerfEstimate> {
+    Ok(PerfEstimate {
+        tops: f64_field(v, "tops")?,
+        tops_e2e: f64_field(v, "tops_e2e")?,
+        seconds: f64_field(v, "seconds")?,
+        aies: u64_field(v, "aies")?,
+        tops_per_aie: f64_field(v, "tops_per_aie")?,
+        bound: bound_from(&str_field(v, "bound")?)?,
+        compute_s: f64_field(v, "compute_s")?,
+        plio_in_s: f64_field(v, "plio_in_s")?,
+        plio_out_s: f64_field(v, "plio_out_s")?,
+        dram_s: f64_field(v, "dram_s")?,
+        plio_in_ports: u32_field(v, "plio_in_ports")?,
+        plio_out_ports: u32_field(v, "plio_out_ports")?,
+        dram_bytes: u64_field(v, "dram_bytes")?,
+        occupancy: f64_field(v, "occupancy")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// graph layer
+
+fn node_to_json(n: &Node) -> Json {
+    let mut pairs = vec![("id", Json::num_usize(n.id)), ("name", Json::str(n.name.clone()))];
+    match n.kind {
+        NodeKind::Aie { virt } => {
+            pairs.push(("kind", Json::str("aie")));
+            pairs.push(("row", Json::num_u64(virt.row as u64)));
+            pairs.push(("col", Json::num_u64(virt.col as u64)));
+        }
+        NodeKind::Plio { dir } => {
+            pairs.push(("kind", Json::str("plio")));
+            pairs.push(("dir", Json::str(if dir == PlioDir::In { "in" } else { "out" })));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn node_from_json(v: &Json) -> Result<Node> {
+    let kind = match str_field(v, "kind")?.as_str() {
+        "aie" => NodeKind::Aie {
+            virt: Coord::new(u32_field(v, "row")?, u32_field(v, "col")?),
+        },
+        "plio" => NodeKind::Plio {
+            dir: match str_field(v, "dir")?.as_str() {
+                "in" => PlioDir::In,
+                "out" => PlioDir::Out,
+                d => bail!("unknown plio dir {d:?}"),
+            },
+        },
+        k => bail!("unknown node kind {k:?}"),
+    };
+    Ok(Node {
+        id: usize_field(v, "id")?,
+        kind,
+        name: str_field(v, "name")?,
+    })
+}
+
+fn edge_kind_str(k: EdgeKind) -> &'static str {
+    match k {
+        EdgeKind::SharedBuffer => "buffer",
+        EdgeKind::Stream => "stream",
+        EdgeKind::Broadcast => "broadcast",
+    }
+}
+
+fn edge_kind_from(s: &str) -> Result<EdgeKind> {
+    Ok(match s {
+        "buffer" => EdgeKind::SharedBuffer,
+        "stream" => EdgeKind::Stream,
+        "broadcast" => EdgeKind::Broadcast,
+        _ => bail!("unknown edge kind {s:?}"),
+    })
+}
+
+fn edge_to_json(e: &Edge) -> Json {
+    Json::obj(vec![
+        ("src", Json::num_usize(e.src)),
+        ("dst", Json::num_usize(e.dst)),
+        ("kind", Json::str(edge_kind_str(e.kind))),
+        ("array", Json::str(e.array.clone())),
+        ("dep", Json::str(dep_kind_str(e.dep))),
+        ("rate", Json::Num(e.rate)),
+        ("group", e.packet_group.map_or(Json::Null, |g| Json::num_u64(g as u64))),
+    ])
+}
+
+fn edge_from_json(v: &Json) -> Result<Edge> {
+    let group = match field(v, "group")? {
+        Json::Null => None,
+        g => Some(g.as_u64().ok_or_else(|| anyhow!("packet group must be a number"))? as u32),
+    };
+    let mut e = Edge::new(
+        usize_field(v, "src")?,
+        usize_field(v, "dst")?,
+        edge_kind_from(&str_field(v, "kind")?)?,
+        str_field(v, "array")?,
+        dep_kind_from(&str_field(v, "dep")?)?,
+        f64_field(v, "rate")?,
+    );
+    e.packet_group = group;
+    Ok(e)
+}
+
+fn graph_to_json(g: &MappedGraph) -> Json {
+    Json::obj(vec![
+        ("nodes", Json::Arr(g.nodes.iter().map(node_to_json).collect())),
+        ("edges", Json::Arr(g.edges.iter().map(edge_to_json).collect())),
+        ("replica_rows", Json::num_u64(g.replica.0 as u64)),
+        ("replica_cols", Json::num_u64(g.replica.1 as u64)),
+        ("replicas", Json::num_u64(g.replicas as u64)),
+    ])
+}
+
+fn graph_from_json(v: &Json) -> Result<MappedGraph> {
+    let g = MappedGraph {
+        nodes: arr_field(v, "nodes")?.iter().map(node_from_json).collect::<Result<Vec<_>>>()?,
+        edges: arr_field(v, "edges")?.iter().map(edge_from_json).collect::<Result<Vec<_>>>()?,
+        replica: (u32_field(v, "replica_rows")?, u32_field(v, "replica_cols")?),
+        replicas: u32_field(v, "replicas")?,
+    };
+    if !g.node_ids_are_dense() {
+        bail!("graph node ids are not dense");
+    }
+    if let Some(e) = g.edges.iter().find(|e| e.src >= g.nodes.len() || e.dst >= g.nodes.len()) {
+        bail!("edge {} → {} references a missing node", e.src, e.dst);
+    }
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------
+// place & route / sim / codegen layer
+
+fn placement_to_json(p: &Placement) -> Json {
+    let (rows, cols) = p.grid_dims();
+    let mut nodes: Vec<(usize, Coord)> = p.iter().collect();
+    nodes.sort_unstable_by_key(|&(n, _)| n);
+    Json::obj(vec![
+        ("rows", Json::num_u64(rows as u64)),
+        ("cols", Json::num_u64(cols as u64)),
+        (
+            "nodes",
+            Json::Arr(
+                nodes
+                    .into_iter()
+                    .map(|(n, c)| {
+                        Json::Arr(vec![
+                            Json::num_usize(n),
+                            Json::num_u64(c.row as u64),
+                            Json::num_u64(c.col as u64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn placement_from_json(v: &Json) -> Result<Placement> {
+    let mut p = Placement::with_grid(u32_field(v, "rows")?, u32_field(v, "cols")?);
+    for entry in arr_field(v, "nodes")? {
+        let t = entry.as_arr().ok_or_else(|| anyhow!("placement entry must be [n, row, col]"))?;
+        if t.len() != 3 {
+            bail!("placement entry must be [n, row, col]");
+        }
+        let n = t[0].as_usize().ok_or_else(|| anyhow!("placement node id"))?;
+        let row = t[1].as_u64().ok_or_else(|| anyhow!("placement row"))? as u32;
+        let col = t[2].as_u64().ok_or_else(|| anyhow!("placement col"))? as u32;
+        p.insert(n, Coord::new(row, col));
+    }
+    Ok(p)
+}
+
+fn constraints_to_json(c: &ConstraintSet) -> Json {
+    Json::obj(vec![
+        (
+            "kernels",
+            Json::Arr(
+                c.kernel_locations
+                    .iter()
+                    .map(|(name, r, col)| {
+                        Json::Arr(vec![
+                            Json::str(name.clone()),
+                            Json::num_u64(*r as u64),
+                            Json::num_u64(*col as u64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "plios",
+            Json::Arr(
+                c.plio_columns
+                    .iter()
+                    .map(|(name, col)| {
+                        Json::Arr(vec![Json::str(name.clone()), Json::num_u64(*col as u64)])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "buffers",
+            Json::Arr(
+                c.buffer_bindings
+                    .iter()
+                    .map(|(s, d)| Json::Arr(vec![Json::str(s.clone()), Json::str(d.clone())]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn constraints_from_json(v: &Json) -> Result<ConstraintSet> {
+    let tuple3 = |e: &Json| -> Result<(String, u32, u32)> {
+        let t = e.as_arr().ok_or_else(|| anyhow!("kernel location must be [name, row, col]"))?;
+        if t.len() != 3 {
+            bail!("kernel location must be [name, row, col]");
+        }
+        Ok((
+            t[0].as_str().ok_or_else(|| anyhow!("kernel name"))?.to_string(),
+            t[1].as_u64().ok_or_else(|| anyhow!("kernel row"))? as u32,
+            t[2].as_u64().ok_or_else(|| anyhow!("kernel col"))? as u32,
+        ))
+    };
+    let tuple2 = |e: &Json| -> Result<(String, u32)> {
+        let t = e.as_arr().ok_or_else(|| anyhow!("plio column must be [name, col]"))?;
+        if t.len() != 2 {
+            bail!("plio column must be [name, col]");
+        }
+        Ok((
+            t[0].as_str().ok_or_else(|| anyhow!("plio name"))?.to_string(),
+            t[1].as_u64().ok_or_else(|| anyhow!("plio col"))? as u32,
+        ))
+    };
+    let pair = |e: &Json| -> Result<(String, String)> {
+        let t = e.as_arr().ok_or_else(|| anyhow!("buffer binding must be [src, dst]"))?;
+        if t.len() != 2 {
+            bail!("buffer binding must be [src, dst]");
+        }
+        Ok((
+            t[0].as_str().ok_or_else(|| anyhow!("buffer src"))?.to_string(),
+            t[1].as_str().ok_or_else(|| anyhow!("buffer dst"))?.to_string(),
+        ))
+    };
+    Ok(ConstraintSet {
+        kernel_locations: arr_field(v, "kernels")?.iter().map(tuple3).collect::<Result<Vec<_>>>()?,
+        plio_columns: arr_field(v, "plios")?.iter().map(tuple2).collect::<Result<Vec<_>>>()?,
+        buffer_bindings: arr_field(v, "buffers")?.iter().map(pair).collect::<Result<Vec<_>>>()?,
+    })
+}
+
+fn compile_to_json(c: &CompileOutcome) -> Json {
+    Json::obj(vec![
+        ("success", Json::Bool(c.success)),
+        ("wall_s", Json::Num(c.wall_s)),
+        ("iterations", Json::num_u64(c.iterations)),
+        ("placement", c.placement.as_ref().map_or(Json::Null, placement_to_json)),
+        ("constraints", c.constraints.as_ref().map_or(Json::Null, constraints_to_json)),
+        ("max_congestion", c.max_congestion.map_or(Json::Null, |x| Json::num_u64(x as u64))),
+        (
+            "stages",
+            Json::obj(vec![
+                ("place_ms", Json::Num(c.stages.place_ms)),
+                ("assign_ms", Json::Num(c.stages.assign_ms)),
+                ("route_ms", Json::Num(c.stages.route_ms)),
+            ]),
+        ),
+    ])
+}
+
+fn compile_from_json(v: &Json) -> Result<CompileOutcome> {
+    let placement = match field(v, "placement")? {
+        Json::Null => None,
+        p => Some(placement_from_json(p)?),
+    };
+    let constraints = match field(v, "constraints")? {
+        Json::Null => None,
+        c => Some(constraints_from_json(c)?),
+    };
+    let max_congestion = match field(v, "max_congestion")? {
+        Json::Null => None,
+        x => Some(x.as_u64().ok_or_else(|| anyhow!("max_congestion must be a number"))? as u32),
+    };
+    let s = field(v, "stages")?;
+    Ok(CompileOutcome {
+        success: bool_field(v, "success")?,
+        wall_s: f64_field(v, "wall_s")?,
+        iterations: u64_field(v, "iterations")?,
+        placement,
+        constraints,
+        max_congestion,
+        stages: StageTimings {
+            place_ms: f64_field(s, "place_ms")?,
+            assign_ms: f64_field(s, "assign_ms")?,
+            route_ms: f64_field(s, "route_ms")?,
+        },
+    })
+}
+
+fn sim_to_json(s: &SimReport) -> Json {
+    Json::obj(vec![
+        ("seconds", Json::Num(s.seconds)),
+        ("cycles", Json::num_u64(s.cycles)),
+        ("tops", Json::Num(s.tops)),
+        ("aies", Json::num_u64(s.aies)),
+        ("tops_per_aie", Json::Num(s.tops_per_aie)),
+        ("stall_fraction", Json::Num(s.stall_fraction)),
+        ("bound", Json::str(bound_str(s.bound))),
+        ("rounds", Json::num_u64(s.rounds)),
+    ])
+}
+
+fn sim_from_json(v: &Json) -> Result<SimReport> {
+    Ok(SimReport {
+        seconds: f64_field(v, "seconds")?,
+        cycles: u64_field(v, "cycles")?,
+        tops: f64_field(v, "tops")?,
+        aies: u64_field(v, "aies")?,
+        tops_per_aie: f64_field(v, "tops_per_aie")?,
+        stall_fraction: f64_field(v, "stall_fraction")?,
+        bound: bound_from(&str_field(v, "bound")?)?,
+        rounds: u64_field(v, "rounds")?,
+    })
+}
+
+fn code_to_json(c: &CodeBundle) -> Json {
+    Json::obj(vec![
+        ("aie_kernel", Json::str(c.aie_kernel.clone())),
+        ("adf_graph", Json::str(c.adf_graph.clone())),
+        ("pl_dma", Json::str(c.pl_dma.clone())),
+        ("host", Json::str(c.host.clone())),
+        ("constraints_json", Json::str(c.constraints_json.clone())),
+    ])
+}
+
+fn code_from_json(v: &Json) -> Result<CodeBundle> {
+    Ok(CodeBundle {
+        aie_kernel: str_field(v, "aie_kernel")?,
+        adf_graph: str_field(v, "adf_graph")?,
+        pl_dma: str_field(v, "pl_dma")?,
+        host: str_field(v, "host")?,
+        constraints_json: str_field(v, "constraints_json")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// whole designs and snapshot files
+
+/// Serialize a complete compiled design. `parse(to_string())` of the
+/// result round-trips bit-identically (Rust's shortest-decimal f64
+/// rendering is exact), so a restored design answers protocol requests
+/// with the same bytes the original produced.
+pub fn design_to_json(d: &CompiledDesign) -> Json {
+    Json::obj(vec![
+        ("candidate", candidate_to_json(&d.candidate)),
+        ("estimate", estimate_to_json(&d.estimate)),
+        ("estimate_exact", estimate_to_json(&d.estimate_exact)),
+        ("graph", graph_to_json(&d.graph)),
+        (
+            "merge_stats",
+            Json::obj(vec![
+                ("in_before", Json::num_usize(d.merge_stats.in_ports_before)),
+                ("in_after", Json::num_usize(d.merge_stats.in_ports_after)),
+                ("out_before", Json::num_usize(d.merge_stats.out_ports_before)),
+                ("out_after", Json::num_usize(d.merge_stats.out_ports_after)),
+            ]),
+        ),
+        ("compile", compile_to_json(&d.compile)),
+        ("sim", sim_to_json(&d.sim)),
+        ("code", code_to_json(&d.code)),
+    ])
+}
+
+/// Inverse of [`design_to_json`].
+pub fn design_from_json(v: &Json) -> Result<CompiledDesign> {
+    let m = field(v, "merge_stats")?;
+    Ok(CompiledDesign {
+        candidate: candidate_from_json(field(v, "candidate")?)?,
+        estimate: estimate_from_json(field(v, "estimate")?)?,
+        estimate_exact: estimate_from_json(field(v, "estimate_exact")?)?,
+        graph: graph_from_json(field(v, "graph")?)?,
+        merge_stats: MergeStats {
+            in_ports_before: usize_field(m, "in_before")?,
+            in_ports_after: usize_field(m, "in_after")?,
+            out_ports_before: usize_field(m, "out_before")?,
+            out_ports_after: usize_field(m, "out_after")?,
+        },
+        compile: compile_from_json(field(v, "compile")?)?,
+        sim: sim_from_json(field(v, "sim")?)?,
+        code: code_from_json(field(v, "code")?)?,
+    })
+}
+
+/// One snapshot line: schema + key + canonical-recurrence stamp + design.
+pub fn entry_line(key: u64, design: &CompiledDesign) -> String {
+    Json::obj(vec![
+        ("schema", Json::num_u64(SNAPSHOT_SCHEMA)),
+        ("key", Json::str(format!("{key:016x}"))),
+        ("rec", Json::str(format!("{:016x}", design.candidate.rec.canonical_u64()))),
+        ("design", design_to_json(design)),
+    ])
+    .to_string()
+}
+
+/// Parse and validate one snapshot line. Errors mean "skip this entry":
+/// bad JSON, wrong schema version, or a canonical-key stamp that the
+/// deserialized recurrence no longer hashes to.
+pub fn parse_entry(line: &str) -> Result<(u64, CompiledDesign)> {
+    let v = parse(line).map_err(|e| anyhow!("bad snapshot JSON: {e}"))?;
+    let schema = u64_field(&v, "schema")?;
+    if schema != SNAPSHOT_SCHEMA {
+        bail!("snapshot schema {schema} != {SNAPSHOT_SCHEMA}; entry evicted");
+    }
+    let key = u64::from_str_radix(&str_field(&v, "key")?, 16)?;
+    let stamp = u64::from_str_radix(&str_field(&v, "rec")?, 16)?;
+    let design = design_from_json(field(&v, "design")?)?;
+    let actual = design.candidate.rec.canonical_u64();
+    if actual != stamp {
+        bail!("canonical key mismatch: stamped {stamp:016x}, recomputed {actual:016x}");
+    }
+    Ok((key, design))
+}
+
+/// Write a snapshot of `entries` (atomically: temp file + rename, so a
+/// crash mid-write leaves the previous snapshot intact).
+pub fn save_snapshot(path: &Path, entries: &[(u64, Arc<CompiledDesign>)]) -> Result<usize> {
+    let mut out = String::new();
+    for (key, design) in entries {
+        out.push_str(&entry_line(*key, design));
+        out.push('\n');
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, out)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(entries.len())
+}
+
+/// Load a snapshot: `(valid entries, skipped count)`. A missing or
+/// unreadable file is an empty snapshot (cold start), not an error, and
+/// invalid entries are skipped one by one — this function never panics
+/// on file content.
+pub fn load_snapshot(path: &Path) -> (Vec<(u64, CompiledDesign)>, usize) {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return (Vec::new(), 0);
+    };
+    let mut out = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_entry(line) {
+            Ok(entry) => out.push(entry),
+            Err(_) => skipped += 1,
+        }
+    }
+    (out, skipped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::dse::DseConstraints;
+    use crate::recurrence::{dtype::DType, library};
+    use crate::{WideSa, WideSaConfig};
+
+    fn small_design() -> CompiledDesign {
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(32),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        ws.compile(&library::fir(65536, 15, DType::F32)).unwrap()
+    }
+
+    #[test]
+    fn recurrence_round_trips_with_canonical_key() {
+        for rec in library::table2_benchmarks() {
+            let j = rec_to_json(&rec);
+            let back = rec_from_json(&parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back.name, rec.name);
+            assert_eq!(back.canonical_u64(), rec.canonical_u64(), "{}", rec.name);
+        }
+        // carried dependences survive too
+        let rec = library::stencil2d_chain(2, 128, 128, DType::F32);
+        let back = rec_from_json(&parse(&rec_to_json(&rec).to_string()).unwrap()).unwrap();
+        assert_eq!(back.carried, rec.carried);
+        assert_eq!(back.canonical_u64(), rec.canonical_u64());
+    }
+
+    #[test]
+    fn design_round_trips_bit_identically() {
+        let d = small_design();
+        let line = entry_line(7, &d);
+        let (key, back) = parse_entry(&line).unwrap();
+        assert_eq!(key, 7);
+        assert_eq!(back.candidate.summary(), d.candidate.summary());
+        assert_eq!(back.candidate.kind, d.candidate.kind, "kind recomputed via Kind::of");
+        assert_eq!(back.estimate.tops.to_bits(), d.estimate.tops.to_bits());
+        assert_eq!(back.estimate_exact.tops.to_bits(), d.estimate_exact.tops.to_bits());
+        assert_eq!(back.graph.nodes.len(), d.graph.nodes.len());
+        assert_eq!(back.graph.edges.len(), d.graph.edges.len());
+        assert_eq!(back.merge_stats, d.merge_stats);
+        assert_eq!(back.compile.success, d.compile.success);
+        assert_eq!(back.sim.cycles, d.sim.cycles);
+        assert_eq!(back.code.aie_kernel, d.code.aie_kernel);
+        // serializing the restored design reproduces the exact bytes
+        assert_eq!(entry_line(7, &back), line);
+    }
+
+    #[test]
+    fn invalid_entries_are_skipped_never_panic() {
+        let d = small_design();
+        let good = entry_line(1, &d);
+        // schema bump
+        let bumped = good.replacen("\"schema\":1", "\"schema\":999", 1);
+        assert!(parse_entry(&bumped).is_err());
+        // stamp mismatch
+        let restamped = {
+            let stamp = format!("{:016x}", d.candidate.rec.canonical_u64());
+            good.replacen(&stamp, "0000000000000000", 1)
+        };
+        assert!(parse_entry(&restamped).is_err());
+        // truncation and garbage
+        assert!(parse_entry(&good[..good.len() / 2]).is_err());
+        assert!(parse_entry("not json").is_err());
+        assert!(parse_entry("{}").is_err());
+    }
+}

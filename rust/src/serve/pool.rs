@@ -5,7 +5,10 @@
 //! is deliberately generic — a job is any `FnOnce`). Keeping them
 //! separate is what makes the system deadlock-free by construction: a
 //! request job may *wait* on scoring jobs, so scoring must never queue
-//! behind requests on the same executor.
+//! behind requests on the same executor. Admission control bounds how
+//! many cold compiles can occupy the scoring pool at once
+//! (`ServeConfig::max_inflight`) — the pool itself never rejects work,
+//! it only queues, so shedding happens above it in the serve layer.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -20,6 +20,8 @@
 //! * `dtype` — `f32|i8|i16|i32|cf32|ci16`; defaults to `f32` (`cf32` for
 //!   `fft2d`, which requires a complex type).
 //! * `id` — any JSON value, echoed verbatim in the response.
+//! * `tenant` — quota-accounting identity for admission control
+//!   (optional; absent means the anonymous tenant `""`).
 //! * `max_aies`, `mover_bits`, `cold_dram` — per-request overrides of the
 //!   server's base [`crate::WideSaConfig`].
 //!
@@ -29,18 +31,25 @@
 //! {"id":1,"ok":true,"cached":false,"deduped":false,"key":"91ab…",
 //!  "name":"mm_8192x8192x8192_Float","aies":400,"tops":4.13,
 //!  "sim_tops":4.3,"bound":"compute","pnr":true,"congestion":2,
-//!  "in_ports":10,"out_ports":50,"wall_us":812345.2}
+//!  "in_ports":10,"out_ports":50,
+//!  "stage_ms":{"assign":0.4,"place":1.3,"route":2.0},"wall_us":812345.2}
 //! ```
 //!
 //! `tops`/`bound`/port counts come from the exact-port estimate
 //! ([`crate::CompiledDesign::estimate_exact`]) — the numbers that agree
-//! with what place & route saw. Errors come back as
-//! `{"id":…,"ok":false,"error":"…"}`; the connection stays usable.
+//! with what place & route saw; `stage_ms` breaks the P&R wall time into
+//! its place/assign/route stages so tail-latency regressions can be
+//! attributed without rerunning benches. Errors come back as
+//! `{"id":…,"ok":false,"error":"…"}`; admission-control rejections as
+//! `{"id":…,"ok":false,"overloaded":true,"reason":"quota"|"queue",
+//! "retry_after_ms":…}` ([`overloaded_line`]) so clients can back off
+//! instead of treating shed load as failure. The connection stays usable
+//! after either.
 
 use crate::recurrence::dtype::DType;
 use crate::recurrence::library;
 use crate::recurrence::spec::UniformRecurrence;
-use crate::serve::server::CacheOutcome;
+use crate::serve::server::{CacheOutcome, Overloaded};
 use crate::util::json::{parse, Json};
 use crate::CompiledDesign;
 use anyhow::{anyhow, bail, Result};
@@ -53,6 +62,8 @@ pub struct CompileRequest {
     pub bench: String,
     pub dtype: DType,
     pub dims: Vec<u64>,
+    /// Quota-accounting identity (`None` = the anonymous tenant).
+    pub tenant: Option<String>,
     pub max_aies: Option<u64>,
     pub mover_bits: Option<u64>,
     pub cold_dram: Option<bool>,
@@ -127,11 +138,20 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
                 .ok_or_else(|| anyhow!("field \"cold_dram\" must be a boolean"))?,
         ),
     };
+    let tenant = match root.get("tenant") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| anyhow!("field \"tenant\" must be a string"))?
+                .to_string(),
+        ),
+    };
     Ok(CompileRequest {
         id: root.get("id").cloned().unwrap_or(Json::Null),
         bench,
         dtype,
         dims,
+        tenant,
         max_aies: get_u64(&root, "max_aies")?,
         mover_bits: get_u64(&root, "mover_bits")?,
         cold_dram,
@@ -246,6 +266,14 @@ pub fn response_line(
         ),
         ("in_ports", Json::Num(design.merge_stats.in_ports_after as f64)),
         ("out_ports", Json::Num(design.merge_stats.out_ports_after as f64)),
+        (
+            "stage_ms",
+            Json::obj(vec![
+                ("place", Json::Num(design.compile.stages.place_ms)),
+                ("assign", Json::Num(design.compile.stages.assign_ms)),
+                ("route", Json::Num(design.compile.stages.route_ms)),
+            ]),
+        ),
         ("wall_us", Json::Num(wall_s * 1e6)),
     ])
     .to_string()
@@ -257,6 +285,21 @@ pub fn error_line(id: &Json, msg: &str) -> String {
         ("id", id.clone()),
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+/// Render an admission-control rejection line (no trailing newline).
+/// Distinguished from compile errors by `"overloaded": true` plus a
+/// machine-readable back-off hint.
+pub fn overloaded_line(id: &Json, o: &Overloaded) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("overloaded", Json::Bool(true)),
+        ("reason", Json::Str(o.reason.clone())),
+        ("retry_after_ms", Json::num_u64(o.retry_after_ms)),
+        ("error", Json::Str(o.to_string())),
     ])
     .to_string()
 }
@@ -325,6 +368,7 @@ mod tests {
             bench: "stencil2d".into(),
             dtype: DType::F32,
             dims: vec![0, 64, 64],
+            tenant: None,
             max_aies: None,
             mover_bits: None,
             cold_dram: None,
@@ -349,6 +393,32 @@ mod tests {
         assert!(request_recurrence(&real_fft).is_err());
         let odd_fft = parse_request(r#"{"bench":"fft2d","dims":[64,100]}"#).unwrap();
         assert!(request_recurrence(&odd_fft).is_err());
+    }
+
+    #[test]
+    fn tenant_field_parses_and_validates() {
+        let req = parse_request(r#"{"bench":"mm","tenant":"team-a"}"#).unwrap();
+        assert_eq!(req.tenant.as_deref(), Some("team-a"));
+        let req = parse_request(r#"{"bench":"mm"}"#).unwrap();
+        assert_eq!(req.tenant, None);
+        assert!(parse_request(r#"{"bench":"mm","tenant":7}"#).is_err());
+    }
+
+    #[test]
+    fn overloaded_line_round_trips() {
+        let line = overloaded_line(
+            &Json::Num(9.0),
+            &Overloaded {
+                reason: "quota".into(),
+                retry_after_ms: 250,
+            },
+        );
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(9.0));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("overloaded").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("reason").unwrap().as_str(), Some("quota"));
+        assert_eq!(v.get("retry_after_ms").unwrap().as_u64(), Some(250));
     }
 
     #[test]

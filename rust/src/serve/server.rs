@@ -1,12 +1,31 @@
 //! The long-lived compile service: [`ServeHandle`] (programmatic API)
 //! plus the stdin / TCP front-ends behind `widesa serve`.
 //!
-//! A request travels: canonical key ([`crate::serve::cache::design_key`])
-//! → sharded LRU cache probe → single-flight registration (concurrent
-//! identical requests compile **once**; followers block until the leader
-//! publishes) → cold compile with DSE candidate scoring *and* the
-//! framework back half (P&R per fallback candidate) sharded over the
-//! handle's dedicated worker pool → cache fill → response.
+//! An admitted request travels: canonical key
+//! ([`crate::serve::cache::design_key`]) → sharded LRU cache probe →
+//! single-flight registration (concurrent identical requests compile
+//! **once**; followers block until the leader publishes) → cold compile
+//! with DSE candidate scoring *and* the framework back half (P&R per
+//! fallback candidate) sharded over the handle's dedicated worker pool →
+//! cache fill → response.
+//!
+//! Production-serve extensions around that path:
+//!
+//! * **Admission control** — per-tenant token-bucket quotas
+//!   (`quota_rps`/`quota_burst`, checked before any work) and
+//!   queue-depth load-shedding on the cold path (`max_inflight`). Both
+//!   reject with the typed [`Overloaded`] error, which survives
+//!   single-flight deduplication and renders as a structured protocol
+//!   response (`overloaded: true` + `retry_after_ms`) on both front-ends.
+//! * **Persistence** — the design cache snapshots to a JSON-lines file
+//!   ([`crate::serve::persist`]); a new handle warm-starts from
+//!   `ServeConfig::snapshot` so a restarted server answers previously
+//!   cached keys without recompiling. Invalid entries self-evict.
+//! * **Batching** — [`ServeHandle::compile_batch`] coalesces
+//!   identical-key requests (N followers cost one evaluation), and
+//!   near-key requests (same recurrence/board/constraints, different
+//!   mover or DRAM flags) share memoized DSE plan work via a second
+//!   plan cache keyed on [`crate::serve::cache::plan_key`].
 //!
 //! Request handling and DSE scoring never share an executor — stdin
 //! requests run on their own [`WorkerPool`], TCP connections each get a
@@ -21,15 +40,17 @@ use crate::mapping::cost::{CostModel, PerfEstimate};
 use crate::mapping::dse::{self, Ranked};
 use crate::mapping::MappingCandidate;
 use crate::recurrence::spec::UniformRecurrence;
-use crate::serve::cache::{design_key, CacheStats, ShardedCache};
+use crate::serve::cache::{self, design_key, CacheStats, ShardedCache};
+use crate::serve::persist;
 use crate::serve::pool::WorkerPool;
 use crate::serve::protocol::{self, CompileRequest};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 /// How a request was satisfied.
@@ -52,6 +73,46 @@ pub struct ServeResult {
     pub key: u64,
 }
 
+// Manual impl: `CompiledDesign` (intentionally) has no Debug, and tests
+// want `Result<ServeResult>::expect_err` — identify the design by name
+// and key rather than dumping it.
+impl std::fmt::Debug for ServeResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeResult")
+            .field("name", &self.design.candidate.rec.name)
+            .field("outcome", &self.outcome)
+            .field("key", &format_args!("{:016x}", self.key))
+            .finish()
+    }
+}
+
+/// Typed admission-control rejection. Travels through single-flight
+/// deduplication intact (every shed follower sees this type, not a
+/// string) and renders as `{"ok": false, "overloaded": true, …}` on the
+/// protocol front-ends so clients can back off instead of treating shed
+/// load as a compile failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Overloaded {
+    /// What rejected the request: `"quota"` (per-tenant token bucket) or
+    /// `"queue"` (cold-compile queue depth at `max_inflight`).
+    pub reason: String,
+    /// Client back-off hint. For quota sheds this is the time until the
+    /// bucket refills one token; for queue sheds a fixed nominal delay.
+    pub retry_after_ms: u64,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "overloaded ({}): retry in {} ms",
+            self.reason, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -66,6 +127,19 @@ pub struct ServeConfig {
     pub dse_threads: usize,
     /// Worker threads running protocol requests (stdin / TCP loops).
     pub request_workers: usize,
+    /// Snapshot file to warm-start the design cache from on construction
+    /// (and for `widesa serve --snapshot` to write back on shutdown).
+    /// `None` disables persistence.
+    pub snapshot: Option<PathBuf>,
+    /// Cold compiles allowed in flight at once before further misses are
+    /// shed with [`Overloaded`] (`reason: "queue"`). Cache hits and
+    /// single-flight followers are never queue-shed. 0 = unbounded.
+    pub max_inflight: usize,
+    /// Per-tenant steady-state request rate (tokens/second refill).
+    pub quota_rps: f64,
+    /// Per-tenant burst capacity (token-bucket depth). <= 0 disables
+    /// quota admission entirely.
+    pub quota_burst: f64,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +151,10 @@ impl Default for ServeConfig {
             cache_shards: 8,
             dse_threads: cores.clamp(1, 8),
             request_workers: cores.clamp(1, 8),
+            snapshot: None,
+            max_inflight: 0,
+            quota_rps: 0.0,
+            quota_burst: 0.0,
         }
     }
 }
@@ -88,30 +166,58 @@ pub struct ServeStats {
     pub misses: u64,
     pub deduped: u64,
     pub errors: u64,
+    /// Requests rejected by admission control (quota or queue depth).
+    pub shed: u64,
+    /// DSE plans reused from the plan cache by near-key requests.
+    pub plan_hits: u64,
     pub cache: CacheStats,
 }
 
+/// Token bucket state for one tenant (guarded by the tenants map lock).
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Tokens a bucket must hold to admit one request. Nominally 1.0; the
+/// `WIDESA_MUTATE=quota-grant` mutation seam drops it to 0.0 so
+/// `make mutation-smoke` can prove the quota tests actually bite (a
+/// zero threshold admits everything — tokens drift negative — and the
+/// shed assertions must fail).
+fn grant_threshold() -> f64 {
+    static CACHE: OnceLock<f64> = OnceLock::new();
+    *CACHE.get_or_init(|| match std::env::var("WIDESA_MUTATE") {
+        Ok(v) if v == "quota-grant" => 0.0,
+        _ => 1.0,
+    })
+}
+
 /// Clonable error image for single-flight followers: `anyhow::Error` is
-/// not `Clone`, but the typed [`NoLegalMapping`] case must survive
-/// deduplication so every requester of a doomed key sees the same error
-/// type as the leader, not a stringified copy.
+/// not `Clone`, but the typed [`NoLegalMapping`] and [`Overloaded`]
+/// cases must survive deduplication so every requester of a doomed key
+/// sees the same error type as the leader, not a stringified copy.
 #[derive(Clone)]
 enum FlightError {
     NoLegalMapping(NoLegalMapping),
+    Overloaded(Overloaded),
     Other(String),
 }
 
 impl FlightError {
     fn of(e: &anyhow::Error) -> Self {
-        match e.downcast_ref::<NoLegalMapping>() {
-            Some(t) => FlightError::NoLegalMapping(t.clone()),
-            None => FlightError::Other(e.to_string()),
+        if let Some(t) = e.downcast_ref::<NoLegalMapping>() {
+            return FlightError::NoLegalMapping(t.clone());
         }
+        if let Some(o) = e.downcast_ref::<Overloaded>() {
+            return FlightError::Overloaded(o.clone());
+        }
+        FlightError::Other(e.to_string())
     }
 
     fn into_error(self) -> anyhow::Error {
         match self {
             FlightError::NoLegalMapping(t) => t.into(),
+            FlightError::Overloaded(o) => o.into(),
             FlightError::Other(msg) => anyhow!(msg),
         }
     }
@@ -145,12 +251,84 @@ impl Flight {
 struct Inner {
     cfg: ServeConfig,
     cache: ShardedCache<Arc<CompiledDesign>>,
+    /// Memoized DSE plans keyed on [`cache::plan_key`]: near-key
+    /// requests (same recurrence/board/constraints, different mover or
+    /// DRAM flags) share demarcation + space-time enumeration work.
+    plans: ShardedCache<Arc<dse::DsePlan>>,
     flights: Mutex<HashMap<u64, Arc<Flight>>>,
     dse_pool: WorkerPool,
+    tenants: Mutex<HashMap<String, TokenBucket>>,
+    inflight: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     deduped: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
+    plan_hits: AtomicU64,
+}
+
+/// Occupies one cold-compile slot; releases it on drop (any exit path).
+struct InflightSlot<'a> {
+    inner: &'a Inner,
+}
+
+impl Drop for InflightSlot<'_> {
+    fn drop(&mut self) {
+        self.inner.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Inner {
+    /// Token-bucket admission for one tenant. Disabled (always admits)
+    /// when `quota_burst <= 0`.
+    fn admit_quota(&self, tenant: &str) -> Result<(), Overloaded> {
+        let burst = self.cfg.quota_burst;
+        if burst <= 0.0 {
+            return Ok(());
+        }
+        let rps = self.cfg.quota_rps;
+        let now = Instant::now();
+        let mut tenants = self.tenants.lock().unwrap();
+        let bucket = tenants.entry(tenant.to_string()).or_insert(TokenBucket {
+            tokens: burst,
+            last: now,
+        });
+        let elapsed = now.duration_since(bucket.last).as_secs_f64();
+        bucket.last = now;
+        bucket.tokens = (bucket.tokens + elapsed * rps).min(burst);
+        let need = grant_threshold();
+        if bucket.tokens >= need {
+            bucket.tokens -= 1.0;
+            return Ok(());
+        }
+        let retry_after_ms = if rps > 0.0 {
+            ((need - bucket.tokens) / rps * 1e3).ceil() as u64
+        } else {
+            1000
+        };
+        Err(Overloaded {
+            reason: "quota".into(),
+            retry_after_ms,
+        })
+    }
+
+    /// Claim a cold-compile slot, or shed if `max_inflight` are already
+    /// running. `Ok(None)` means shedding is disabled.
+    fn acquire_inflight(&self) -> Result<Option<InflightSlot<'_>>, Overloaded> {
+        let max = self.cfg.max_inflight;
+        if max == 0 {
+            return Ok(None);
+        }
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev as usize >= max {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(Overloaded {
+                reason: "queue".into(),
+                retry_after_ms: 100,
+            });
+        }
+        Ok(Some(InflightSlot { inner: self }))
+    }
 }
 
 /// Resolves a flight on drop so follower requests can never hang, even
@@ -215,19 +393,35 @@ pub struct ServeHandle {
 impl ServeHandle {
     pub fn new(cfg: ServeConfig) -> Self {
         let cache = ShardedCache::new(cfg.cache_capacity, cfg.cache_shards);
+        let plans = ShardedCache::new(cfg.cache_capacity.max(8), 4);
         let dse_pool = WorkerPool::new(cfg.dse_threads);
-        Self {
+        let handle = Self {
             inner: Arc::new(Inner {
                 cfg,
                 cache,
+                plans,
                 flights: Mutex::new(HashMap::new()),
                 dse_pool,
+                tenants: Mutex::new(HashMap::new()),
+                inflight: AtomicU64::new(0),
                 hits: AtomicU64::new(0),
                 misses: AtomicU64::new(0),
                 deduped: AtomicU64::new(0),
                 errors: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                plan_hits: AtomicU64::new(0),
             }),
+        };
+        if let Some(path) = handle.inner.cfg.snapshot.clone() {
+            let (loaded, skipped) = handle.load_snapshot(&path);
+            if loaded > 0 || skipped > 0 {
+                eprintln!(
+                    "widesa serve: warm start — {loaded} designs from {} ({skipped} skipped)",
+                    path.display()
+                );
+            }
         }
+        handle
     }
 
     pub fn config(&self) -> &ServeConfig {
@@ -240,19 +434,57 @@ impl ServeHandle {
             misses: self.inner.misses.load(Ordering::Relaxed),
             deduped: self.inner.deduped.load(Ordering::Relaxed),
             errors: self.inner.errors.load(Ordering::Relaxed),
+            shed: self.inner.shed.load(Ordering::Relaxed),
+            plan_hits: self.inner.plan_hits.load(Ordering::Relaxed),
             cache: self.inner.cache.stats(),
         }
     }
 
+    /// Warm-start the design cache from a snapshot file. Returns
+    /// `(loaded, skipped)`; a missing file loads nothing. Entries that
+    /// fail to parse or validate are skipped one by one
+    /// (see [`crate::serve::persist`]).
+    pub fn load_snapshot(&self, path: &Path) -> (usize, usize) {
+        let (entries, skipped) = persist::load_snapshot(path);
+        let loaded = entries.len();
+        for (key, design) in entries {
+            self.inner.cache.insert(key, Arc::new(design));
+        }
+        (loaded, skipped)
+    }
+
+    /// Persist the current design cache to `path` (atomic
+    /// write-then-rename). Returns the number of entries written.
+    pub fn save_snapshot(&self, path: &Path) -> Result<usize> {
+        persist::save_snapshot(path, &self.inner.cache.entries())
+    }
+
     /// Compile under the service's base configuration.
     pub fn compile(&self, rec: &UniformRecurrence) -> Result<ServeResult> {
-        self.compile_with(rec, &self.inner.cfg.base)
+        self.compile_as("", rec, &self.inner.cfg.base)
     }
 
     /// Compile under an explicit configuration (cache-keyed on it).
     pub fn compile_with(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Result<ServeResult> {
-        let key = design_key(rec, cfg);
+        self.compile_as("", rec, cfg)
+    }
+
+    /// Compile on behalf of a tenant: quota admission first (before any
+    /// cache or compile work), then the cached single-flight path, with
+    /// queue-depth shedding guarding the cold compile. The anonymous
+    /// tenant `""` is a tenant like any other.
+    pub fn compile_as(
+        &self,
+        tenant: &str,
+        rec: &UniformRecurrence,
+        cfg: &WideSaConfig,
+    ) -> Result<ServeResult> {
         let inner = &*self.inner;
+        if let Err(o) = inner.admit_quota(tenant) {
+            inner.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(o.into());
+        }
+        let key = design_key(rec, cfg);
 
         if let Some(design) = inner.cache.get(key) {
             inner.hits.fetch_add(1, Ordering::Relaxed);
@@ -285,7 +517,12 @@ impl ServeHandle {
                     key,
                 }),
                 Err(fe) => {
-                    inner.errors.fetch_add(1, Ordering::Relaxed);
+                    // Sheds propagate typed to followers but count as
+                    // shed load, not compile errors.
+                    match &fe {
+                        FlightError::Overloaded(_) => inner.shed.fetch_add(1, Ordering::Relaxed),
+                        _ => inner.errors.fetch_add(1, Ordering::Relaxed),
+                    };
                     Err(fe.into_error())
                 }
             };
@@ -312,6 +549,18 @@ impl ServeHandle {
                 key,
             });
         }
+        // Queue-depth shedding guards the cold compile only: hits and
+        // followers above never consume a slot. The shed resolves the
+        // flight so every follower of this key receives the same typed
+        // Overloaded instead of hanging.
+        let _slot = match inner.acquire_inflight() {
+            Ok(slot) => slot,
+            Err(o) => {
+                inner.shed.fetch_add(1, Ordering::Relaxed);
+                guard.resolve(Err(FlightError::Overloaded(o.clone())));
+                return Err(o.into());
+            }
+        };
         inner.misses.fetch_add(1, Ordering::Relaxed);
         let compiled = self.cold_compile(rec, cfg);
         let published: Result<Arc<CompiledDesign>, FlightError> = match &compiled {
@@ -330,6 +579,53 @@ impl ServeHandle {
             outcome: CacheOutcome::Miss,
             key,
         })
+    }
+
+    /// Compile a batch, coalescing duplicate keys: the first occurrence
+    /// of each key compiles (or hits the cache) and every later
+    /// duplicate reuses its design (or its error) as
+    /// [`CacheOutcome::Deduped`] without touching the compile path.
+    /// Results come back in request order.
+    pub fn compile_batch(
+        &self,
+        reqs: &[(UniformRecurrence, WideSaConfig)],
+    ) -> Vec<Result<ServeResult>> {
+        let mut first: HashMap<u64, Result<Arc<CompiledDesign>, FlightError>> = HashMap::new();
+        let mut out = Vec::with_capacity(reqs.len());
+        for (rec, cfg) in reqs {
+            let key = design_key(rec, cfg);
+            if let Some(prev) = first.get(&key) {
+                self.inner.deduped.fetch_add(1, Ordering::Relaxed);
+                out.push(match prev {
+                    Ok(design) => Ok(ServeResult {
+                        design: Arc::clone(design),
+                        outcome: CacheOutcome::Deduped,
+                        key,
+                    }),
+                    Err(fe) => Err(fe.clone().into_error()),
+                });
+                continue;
+            }
+            let res = self.compile_with(rec, cfg);
+            match &res {
+                Ok(r) => {
+                    first.insert(key, Ok(Arc::clone(&r.design)));
+                }
+                Err(e) => {
+                    first.insert(key, Err(FlightError::of(e)));
+                }
+            }
+            out.push(res);
+        }
+        out
+    }
+
+    /// Test hook: claim one cold-compile slot (and hold it until the
+    /// returned value drops). Admission-control tests use this to force
+    /// deterministic queue-full shedding without racing real compiles.
+    #[doc(hidden)]
+    pub fn debug_inflight_slot(&self) -> Option<impl Drop + '_> {
+        self.inner.acquire_inflight().ok().flatten()
     }
 
     /// The cold path: DSE with candidate scoring scattered over the
@@ -381,17 +677,30 @@ impl ServeHandle {
         })
     }
 
-    /// `explore_all` with per-candidate scoring as pool jobs. Results
-    /// come back in submission (= enumeration) order via
-    /// [`WorkerPool::scatter`], then go through the canonical
-    /// [`dse::rank`] — bit-identical to the serial path.
-    fn explore_all_pooled(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Ranked {
-        if self.inner.dse_pool.workers() <= 1 {
-            return dse::explore_all(rec, &cfg.board, &cfg.constraints);
+    /// The memoized DSE plan for a request's (recurrence, board,
+    /// constraints) triple. Mover width and DRAM flags don't enter plan
+    /// construction, so near-key requests reuse the cached plan
+    /// ([`cache::plan_key`] deliberately ignores those fields).
+    fn plan_for(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Arc<dse::DsePlan> {
+        let key = cache::plan_key(rec, cfg);
+        if let Some(plan) = self.inner.plans.get(key) {
+            self.inner.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return plan;
         }
-        let mut plan = dse::plan(rec, &cfg.board, &cfg.constraints);
-        let choices = std::mem::take(&mut plan.choices);
-        if choices.len() <= 1 {
+        let plan = Arc::new(dse::plan(rec, &cfg.board, &cfg.constraints));
+        self.inner.plans.insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    /// `explore_all` with the plan memoized across requests and
+    /// per-candidate scoring as pool jobs. Results come back in
+    /// submission (= enumeration) order via [`WorkerPool::scatter`],
+    /// then go through the canonical [`dse::rank`] — bit-identical to
+    /// the serial path.
+    fn explore_all_pooled(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Ranked {
+        let plan = self.plan_for(rec, cfg);
+        let choices = plan.choices.clone();
+        if self.inner.dse_pool.workers() <= 1 || choices.len() <= 1 {
             return dse::score_serial(rec, &cfg.board, &cfg.constraints, &plan, choices);
         }
         // Pool jobs are 'static: share the invariants behind Arcs.
@@ -399,7 +708,6 @@ impl ServeHandle {
         let rec = Arc::new(rec.clone());
         let model: Arc<CostModel> = Arc::new(dse::scoring_model(&cfg.board, &cfg.constraints));
         let cons = Arc::new(cfg.constraints.clone());
-        let plan = Arc::new(plan);
         let jobs: Vec<ScoreJob> = choices
             .into_iter()
             .map(|choice| {
@@ -430,11 +738,11 @@ impl ServeHandle {
     }
 
     /// Handle one protocol line end-to-end; always returns a response
-    /// line (success, protocol error, or — if the compile itself
-    /// panicked — an error carrying the request's own id), never panics
-    /// outward. The one-response-per-request contract holds even for the
-    /// single-flight leader whose compile dies: followers get the
-    /// `FlightGuard` error, the leader's requester gets this one.
+    /// line (success, overloaded, protocol error, or — if the compile
+    /// itself panicked — an error carrying the request's own id), never
+    /// panics outward. The one-response-per-request contract holds even
+    /// for the single-flight leader whose compile dies: followers get
+    /// the `FlightGuard` error, the leader's requester gets this one.
     pub fn handle_line(&self, line: &str) -> String {
         let req = match protocol::parse_request(line) {
             Ok(req) => req,
@@ -445,9 +753,10 @@ impl ServeHandle {
             Err(e) => return protocol::error_line(&req.id, &e.to_string()),
         };
         let cfg = self.effective_config(&req);
+        let tenant = req.tenant.clone().unwrap_or_default();
         let t0 = Instant::now();
         let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.compile_with(&rec, &cfg)
+            self.compile_as(&tenant, &rec, &cfg)
         }));
         match compiled {
             Ok(Ok(res)) => protocol::response_line(
@@ -457,7 +766,10 @@ impl ServeHandle {
                 &res.design,
                 t0.elapsed().as_secs_f64(),
             ),
-            Ok(Err(e)) => protocol::error_line(&req.id, &e.to_string()),
+            Ok(Err(e)) => match e.downcast_ref::<Overloaded>() {
+                Some(o) => protocol::overloaded_line(&req.id, o),
+                None => protocol::error_line(&req.id, &e.to_string()),
+            },
             Err(_) => protocol::error_line(&req.id, "internal error: compile panicked"),
         }
     }
@@ -572,6 +884,14 @@ mod tests {
                 assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
             }
         }
+        // rescoring the same recurrences hit the memoized plan cache
+        for rec in [
+            library::mm(2048, 2048, 2048, DType::F32),
+            library::fir(65536, 15, DType::I16),
+        ] {
+            handle.explore_all_pooled(&rec, &cfg);
+        }
+        assert_eq!(handle.stats().plan_hits, 2);
     }
 
     #[test]
@@ -665,5 +985,68 @@ mod tests {
             assert_eq!(handle.stats().errors, 1);
         }
         assert!(handle.inner.flights.lock().unwrap().is_empty(), "no leaked flights");
+    }
+
+    #[test]
+    fn quota_admission_is_per_tenant() {
+        // burst 1, refill 0: each tenant gets exactly one admission, the
+        // second request sheds with a typed quota error — independently
+        // per tenant.
+        let handle = ServeHandle::new(ServeConfig {
+            base: small_cfg(),
+            quota_rps: 0.0,
+            quota_burst: 1.0,
+            ..Default::default()
+        });
+        let rec = library::fir(65536, 15, DType::F32);
+        assert!(handle.compile_as("a", &rec, &handle.config().base.clone()).is_ok());
+        let err = handle
+            .compile_as("a", &rec, &handle.config().base.clone())
+            .expect_err("tenant a's bucket is empty");
+        let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+        assert_eq!(o.reason, "quota");
+        assert!(o.retry_after_ms > 0);
+        // tenant b is unaffected by a's exhaustion
+        assert!(handle.compile_as("b", &rec, &handle.config().base.clone()).is_ok());
+        assert_eq!(handle.stats().shed, 1);
+    }
+
+    #[test]
+    fn batch_coalesces_duplicate_keys() {
+        let handle = ServeHandle::new(ServeConfig {
+            base: small_cfg(),
+            ..Default::default()
+        });
+        let cfg = handle.config().base.clone();
+        let rec = library::fir(65536, 15, DType::F32);
+        let other = library::fir(32768, 15, DType::F32);
+        let reqs = vec![
+            (rec.clone(), cfg.clone()),
+            (rec.clone(), cfg.clone()),
+            (other.clone(), cfg.clone()),
+            (rec.clone(), cfg.clone()),
+        ];
+        let results = handle.compile_batch(&reqs);
+        let outcomes: Vec<_> = results
+            .iter()
+            .map(|r| r.as_ref().unwrap().outcome)
+            .collect();
+        assert_eq!(
+            outcomes,
+            vec![
+                CacheOutcome::Miss,
+                CacheOutcome::Deduped,
+                CacheOutcome::Miss,
+                CacheOutcome::Deduped,
+            ]
+        );
+        // duplicates share the leader's design, order is preserved
+        assert!(Arc::ptr_eq(
+            &results[0].as_ref().unwrap().design,
+            &results[1].as_ref().unwrap().design
+        ));
+        assert_eq!(results[2].as_ref().unwrap().key, design_key(&other, &cfg));
+        assert_eq!(handle.stats().misses, 2);
+        assert_eq!(handle.stats().deduped, 2);
     }
 }

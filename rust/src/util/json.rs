@@ -63,10 +63,40 @@ impl Json {
         }
     }
 
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
     /// Build an object from key/value pairs (keys sort alphabetically —
     /// `BTreeMap` — so rendered output is canonical).
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Build a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Integer-valued number. Exact for `|n| < 2⁵³` (the f64 mantissa);
+    /// full-width 64-bit hashes must travel as 16-hex strings instead
+    /// (the convention `design_key` responses and snapshots use).
+    pub fn num_u64(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+
+    /// Integer-valued number (same 2⁵³ caveat as [`Json::num_u64`]).
+    pub fn num_i64(n: i64) -> Json {
+        Json::Num(n as f64)
+    }
+
+    /// Integer-valued number (same 2⁵³ caveat as [`Json::num_u64`]).
+    pub fn num_usize(n: usize) -> Json {
+        Json::Num(n as f64)
     }
 }
 
@@ -375,6 +405,23 @@ mod tests {
     fn render_nonfinite_as_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
         assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn typed_constructors_and_accessors() {
+        assert_eq!(Json::str("x"), Json::Str("x".into()));
+        assert_eq!(Json::num_u64(7), Json::Num(7.0));
+        assert_eq!(Json::num_i64(-3), Json::Num(-3.0));
+        assert_eq!(Json::num_usize(12), Json::Num(12.0));
+        assert_eq!(Json::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::Num(12.0).as_usize(), Some(12));
+        assert_eq!(Json::Null.as_i64(), None);
+        // f64 round-trips its shortest decimal rendering exactly, which
+        // is what snapshot bit-identity relies on
+        for x in [0.1, 1.0 / 3.0, 1e300, -2.5e-7, f64::MIN_POSITIVE] {
+            let s = Json::Num(x).to_string();
+            assert_eq!(parse(&s).unwrap().as_f64().unwrap().to_bits(), x.to_bits());
+        }
     }
 
     #[test]

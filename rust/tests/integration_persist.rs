@@ -1,0 +1,145 @@
+//! Integration tests for cross-process cache persistence: a restart
+//! simulation (snapshot on shutdown, warm-start on boot, bit-identical
+//! protocol responses), a deterministic-PRNG property sweep over the
+//! recurrence serializer, and corrupted-snapshot recovery (truncation,
+//! garbage, schema bumps — skipped entry-by-entry, never a panic).
+
+mod testkit;
+
+use std::path::PathBuf;
+use testkit::{cases, random_recurrence};
+use widesa::recurrence::library;
+use widesa::serve::{persist, protocol};
+use widesa::serve::{CacheOutcome, ServeConfig, ServeHandle};
+use widesa::util::json::{parse, Json};
+use widesa::util::rng::XorShift64;
+use widesa::{DType, DseConstraints as Cons, WideSaConfig};
+
+fn capped(max_aies: u64) -> WideSaConfig {
+    WideSaConfig {
+        constraints: Cons {
+            max_aies: Some(max_aies),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Per-process temp path so parallel test binaries never collide.
+fn snap_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("widesa_snap_{}_{name}.jsonl", std::process::id()))
+}
+
+#[test]
+fn restart_simulation_warm_starts_from_snapshot() {
+    let path = snap_path("restart");
+    let recs = [
+        library::fir(65536, 15, DType::F32),
+        library::mm(1024, 1024, 1024, DType::F32),
+    ];
+
+    // First server lifetime: compile cold, snapshot on the way out.
+    let first = ServeHandle::new(ServeConfig {
+        base: capped(64),
+        ..Default::default()
+    });
+    let mut before = Vec::new();
+    for rec in &recs {
+        let r = first.compile(rec).unwrap();
+        assert_eq!(r.outcome, CacheOutcome::Miss);
+        before.push(r);
+    }
+    let saved = first.save_snapshot(&path).unwrap();
+    assert_eq!(saved, recs.len());
+
+    // "Restart": a fresh handle warm-started from the snapshot answers
+    // every previously-cached key without a single cold compile.
+    let second = ServeHandle::new(ServeConfig {
+        base: capped(64),
+        snapshot: Some(path.clone()),
+        ..Default::default()
+    });
+    for (rec, old) in recs.iter().zip(&before) {
+        let new = second.compile(rec).unwrap();
+        assert_eq!(new.outcome, CacheOutcome::Hit, "{}", rec.name);
+        assert_eq!(new.key, old.key);
+        // Bit-identity end to end: the warm-started design renders the
+        // exact same protocol response bytes as the original.
+        let a = protocol::response_line(&Json::Null, old.key, CacheOutcome::Hit, &old.design, 0.0);
+        let b = protocol::response_line(&Json::Null, new.key, CacheOutcome::Hit, &new.design, 0.0);
+        assert_eq!(a, b, "{}", rec.name);
+    }
+    let stats = second.stats();
+    assert_eq!(stats.misses, 0, "warm start must not cold-compile");
+    assert_eq!(stats.hits, recs.len() as u64);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn prop_recurrence_serialization_preserves_canonical_key() {
+    let mut rng = XorShift64::new(0xC0FFEE);
+    for case in 0..cases(40) {
+        let rec = random_recurrence(&mut rng);
+        // through the renderer and a real parse, like a snapshot line
+        let text = persist::rec_to_json(&rec).to_string();
+        let back = persist::rec_from_json(&parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("case {case} ({}): {e}", rec.name));
+        assert_eq!(
+            back.canonical_u64(),
+            rec.canonical_u64(),
+            "case {case}: {}",
+            rec.name
+        );
+        assert_eq!(persist::rec_to_json(&back).to_string(), text, "case {case}");
+    }
+}
+
+#[test]
+fn corrupted_snapshots_are_skipped_entry_by_entry() {
+    let path = snap_path("corrupt");
+    let handle = ServeHandle::new(ServeConfig {
+        base: capped(64),
+        ..Default::default()
+    });
+    handle.compile(&library::fir(65536, 15, DType::F32)).unwrap();
+    handle.compile(&library::fir(32768, 15, DType::F32)).unwrap();
+    handle.save_snapshot(&path).unwrap();
+    let clean = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = clean.lines().collect();
+    assert_eq!(lines.len(), 2);
+
+    // Truncation mid-line: the partial entry is skipped, the intact one
+    // still loads.
+    let truncated = format!("{}\n{}\n", lines[0], &lines[1][..lines[1].len() / 2]);
+    std::fs::write(&path, truncated).unwrap();
+    let (loaded, skipped) = persist::load_snapshot(&path);
+    assert_eq!((loaded.len(), skipped), (1, 1));
+
+    // Garbage interleaved with valid entries: every valid entry
+    // survives, every bad line is counted, nothing panics.
+    let garbage = format!(
+        "not json at all\n{}\n{{\"schema\": 1}}\n\n{}\n\u{0}\u{1}\u{2}\n",
+        lines[0], lines[1]
+    );
+    std::fs::write(&path, garbage).unwrap();
+    let (loaded, skipped) = persist::load_snapshot(&path);
+    assert_eq!(loaded.len(), 2, "valid entries load around garbage");
+    assert_eq!(skipped, 3, "blank lines are not errors; garbage is");
+
+    // A future schema version is not ours to guess at: bumped entries
+    // self-evict (skip), current-schema entries load.
+    let bumped = format!(
+        "{}\n{}\n",
+        lines[0].replacen("\"schema\":1", "\"schema\":2", 1),
+        lines[1]
+    );
+    std::fs::write(&path, bumped).unwrap();
+    let (loaded, skipped) = persist::load_snapshot(&path);
+    assert_eq!((loaded.len(), skipped), (1, 1));
+
+    // A missing snapshot is a cold boot, not an error.
+    let _ = std::fs::remove_file(&path);
+    let (loaded, skipped) = persist::load_snapshot(&path);
+    assert_eq!((loaded.len(), skipped), (0, 0));
+}

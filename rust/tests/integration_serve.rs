@@ -1,13 +1,14 @@
 //! Integration tests for the `widesa::serve` subsystem: cache behaviour,
 //! single-flight deduplication under concurrent requests, determinism of
-//! the parallel DSE against the serial reference, and protocol
-//! round-trips through the real service.
+//! the parallel DSE against the serial reference, admission control
+//! (typed `Overloaded` over both front-ends), plan-cache sharing, and
+//! protocol round-trips through the real service.
 
 use std::sync::Arc;
 use widesa::mapping::dse::{explore_all, explore_all_parallel, DseConstraints};
 use widesa::recurrence::library;
 use widesa::serve::cache::design_key;
-use widesa::serve::{CacheOutcome, ServeConfig, ServeHandle};
+use widesa::serve::{CacheOutcome, Overloaded, ServeConfig, ServeHandle};
 use widesa::util::json::{parse, Json};
 use widesa::{DType, DseConstraints as Cons, WideSaConfig};
 
@@ -28,6 +29,7 @@ fn small_handle() -> ServeHandle {
         cache_shards: 4,
         dse_threads: 4,
         request_workers: 4,
+        ..Default::default()
     })
 }
 
@@ -75,6 +77,7 @@ fn cache_eviction_recompiles_evicted_key() {
         cache_shards: 1,
         dse_threads: 2,
         request_workers: 2,
+        ..Default::default()
     });
     let rec_a = library::fir(65536, 15, DType::F32);
     let rec_b = library::fir(131072, 15, DType::F32);
@@ -205,4 +208,138 @@ fn tcp_front_end_serves_requests() {
     assert_eq!(v.get("id").unwrap().as_str(), Some("tcp-1"));
     assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
     assert_eq!(v.get("ok").unwrap(), &Json::Bool(true));
+    // per-stage timings travel with every success response
+    let stages = v.get("stage_ms").expect("stage_ms present");
+    for stage in ["place", "assign", "route"] {
+        assert!(stages.get(stage).unwrap().as_f64().unwrap() >= 0.0, "{stage}");
+    }
+}
+
+#[test]
+fn queue_shed_followers_get_typed_error_then_retry_compiles_once() {
+    // Force the queue full deterministically: max_inflight 1 with the
+    // single slot held by the test. Every concurrent requester of one
+    // cold key — whichever becomes the single-flight leader, and every
+    // follower waiting on its flight — must get the *typed* Overloaded
+    // error (not a hang, not a stringified copy).
+    let handle = ServeHandle::new(ServeConfig {
+        base: capped(32),
+        max_inflight: 1,
+        ..Default::default()
+    });
+    let rec = library::fir(65536, 15, DType::F32);
+    let slot = handle.debug_inflight_slot().expect("slot claimed");
+    const N: usize = 6;
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..N)
+            .map(|_| {
+                let handle = handle.clone();
+                let rec = rec.clone();
+                s.spawn(move || handle.compile(&rec))
+            })
+            .collect();
+        for j in joins {
+            let err = j.join().unwrap().expect_err("queue is full");
+            let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+            assert_eq!(o.reason, "queue");
+            assert!(o.retry_after_ms > 0);
+        }
+    });
+    let stats = handle.stats();
+    assert_eq!(stats.shed, N as u64, "every shed request counted");
+    assert_eq!(stats.misses, 0, "nothing compiled while the queue was full");
+
+    // Uncongested retry: the key compiles exactly once, then hits.
+    drop(slot);
+    assert_eq!(handle.compile(&rec).unwrap().outcome, CacheOutcome::Miss);
+    assert_eq!(handle.compile(&rec).unwrap().outcome, CacheOutcome::Hit);
+    assert_eq!(handle.stats().misses, 1);
+}
+
+#[test]
+fn overloaded_response_round_trips_stdin_path() {
+    // Queue shedding through handle_line (the stdin front-end's unit of
+    // work): the response must be the structured overloaded line.
+    let handle = ServeHandle::new(ServeConfig {
+        base: capped(32),
+        max_inflight: 1,
+        ..Default::default()
+    });
+    let _slot = handle.debug_inflight_slot().expect("slot claimed");
+    let resp =
+        handle.handle_line(r#"{"id": 5, "bench": "fir", "dims": [65536, 15], "max_aies": 32}"#);
+    let v = parse(&resp).unwrap();
+    assert_eq!(v.get("id").unwrap().as_f64(), Some(5.0));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("overloaded").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("reason").unwrap().as_str(), Some("queue"));
+    assert!(v.get("retry_after_ms").unwrap().as_u64().unwrap() > 0);
+}
+
+#[test]
+fn overloaded_response_round_trips_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+
+    // Per-tenant quota (burst 1, no refill) over a real socket: first
+    // request admits, second sheds with reason "quota", and the
+    // connection stays usable for a differently-quota'd tenant.
+    let handle = ServeHandle::new(ServeConfig {
+        base: capped(32),
+        quota_rps: 0.0,
+        quota_burst: 1.0,
+        ..Default::default()
+    });
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            let _ = widesa::serve::serve_tcp(&handle, listener);
+        });
+    }
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut send = |req: &str| -> Json {
+        writeln!(stream, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        parse(line.trim()).unwrap()
+    };
+    let req_a = r#"{"id": 1, "bench": "fir", "dims": [65536, 15], "max_aies": 32, "tenant": "a"}"#;
+    let ok = send(req_a);
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
+    let shed = send(req_a);
+    assert_eq!(shed.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(shed.get("overloaded").unwrap().as_bool(), Some(true));
+    assert_eq!(shed.get("reason").unwrap().as_str(), Some("quota"));
+    assert!(shed.get("retry_after_ms").unwrap().as_u64().unwrap() > 0);
+    // tenant b's bucket is untouched — and the key is already cached
+    let other = send(
+        r#"{"id": 3, "bench": "fir", "dims": [65536, 15], "max_aies": 32, "tenant": "b"}"#,
+    );
+    assert_eq!(other.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(other.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(handle.stats().shed, 1);
+}
+
+#[test]
+fn near_key_requests_share_dse_plan_work() {
+    // mover_bits changes the design key (different merged graph) but not
+    // the DSE plan (demarcation + space-time enumeration ignore it): the
+    // second compile must be a design-cache miss yet a plan-cache hit.
+    let handle = small_handle();
+    let rec = library::fir(65536, 15, DType::F32);
+    let mut wide = capped(32);
+    wide.mover_bits = 512;
+    let mut narrow = capped(32);
+    narrow.mover_bits = 128;
+    let a = handle.compile_with(&rec, &wide).unwrap();
+    let b = handle.compile_with(&rec, &narrow).unwrap();
+    assert_ne!(a.key, b.key, "mover width is part of the design key");
+    assert_eq!(a.outcome, CacheOutcome::Miss);
+    assert_eq!(b.outcome, CacheOutcome::Miss);
+    assert!(
+        handle.stats().plan_hits >= 1,
+        "near-key compile must reuse the memoized plan"
+    );
 }

@@ -1,7 +1,12 @@
 //! Property-based tests over coordinator invariants (routing, batching,
 //! scheduling state). The vendored offline crate set has no proptest, so
 //! properties are swept with the crate's deterministic PRNG — hundreds of
-//! random cases per property, fully reproducible.
+//! random cases per property, fully reproducible. Generators live in the
+//! shared [`testkit`]; the per-property case count defaults to 200 and
+//! scales with `PROPTEST_CASES` (the nightly CI lane runs 512).
+
+mod testkit;
+use testkit::{cases, random_nest};
 
 use widesa::arch::array::{AieArray, Coord};
 use widesa::arch::plio::{PlioDir, PlioSpec};
@@ -17,7 +22,7 @@ use widesa::place_route::placement::{place, Placement};
 use widesa::plio::assignment::assign;
 use widesa::plio::congestion::congestion;
 use widesa::plio::sat::{check, exhaustive_assign};
-use widesa::polyhedral::dependence::{DepKind, Dependence};
+use widesa::polyhedral::dependence::DepKind;
 use widesa::polyhedral::domain::{IterationDomain, LoopDim};
 use widesa::polyhedral::legality::{is_legal_order, lex_positive};
 use widesa::polyhedral::schedule::LoopNest;
@@ -25,34 +30,10 @@ use widesa::polyhedral::transform::{apply_all, Transform};
 use widesa::recurrence::{dtype::DType, library};
 use widesa::util::rng::XorShift64;
 
-const CASES: usize = 200;
-
-fn random_nest(rng: &mut XorShift64) -> LoopNest {
-    let rank = 2 + rng.gen_range(3) as usize;
-    let dims: Vec<LoopDim> = (0..rank)
-        .map(|i| LoopDim::new(format!("l{i}"), 4 + rng.gen_range(60)))
-        .collect();
-    let ndeps = 1 + rng.gen_range(3) as usize;
-    let deps: Vec<Dependence> = (0..ndeps)
-        .map(|_| {
-            // lexicographically non-negative by construction: first
-            // non-zero entry positive
-            let mut v = vec![0i64; rank];
-            let lead = rng.gen_range(rank as u64) as usize;
-            v[lead] = 1;
-            for c in v.iter_mut().skip(lead + 1) {
-                *c = rng.gen_range(3) as i64 - 1;
-            }
-            Dependence::new("X", DepKind::Flow, v)
-        })
-        .collect();
-    LoopNest::new(IterationDomain::new(dims), deps)
-}
-
 #[test]
 fn prop_tiling_preserves_cardinality_and_legality() {
     let mut rng = XorShift64::new(1000);
-    for _ in 0..CASES {
+    for _ in 0..cases(200) {
         let nest = random_nest(&mut rng);
         let dim = rng.gen_range(nest.rank() as u64) as usize;
         let extent = nest.domain.dims[dim].extent;
@@ -75,7 +56,7 @@ fn prop_tiling_preserves_cardinality_and_legality() {
 #[test]
 fn prop_permutation_roundtrip_is_identity() {
     let mut rng = XorShift64::new(2000);
-    for _ in 0..CASES {
+    for _ in 0..cases(200) {
         let nest = random_nest(&mut rng);
         let rank = nest.rank();
         // random permutation
@@ -100,7 +81,7 @@ fn prop_permutation_roundtrip_is_identity() {
 #[test]
 fn prop_lex_positive_total_on_nonzero() {
     let mut rng = XorShift64::new(3000);
-    for _ in 0..CASES {
+    for _ in 0..cases(200) {
         let v: Vec<i64> = (0..4).map(|_| rng.gen_range(5) as i64 - 2).collect();
         let neg: Vec<i64> = v.iter().map(|c| -c).collect();
         if v.iter().any(|&c| c != 0) {
@@ -115,7 +96,7 @@ fn prop_lex_positive_total_on_nonzero() {
 fn prop_partition_respects_budget_and_covers_tiles() {
     let mut rng = XorShift64::new(4000);
     let array = AieArray::default();
-    for _ in 0..CASES {
+    for _ in 0..cases(200) {
         let vi = 1 + rng.gen_range(300);
         let vj = 1 + rng.gen_range(300);
         let budget = 1 + rng.gen_range(400);
@@ -143,7 +124,7 @@ fn prop_packet_merge_invariants() {
     let mut rng = XorShift64::new(5000);
     let board = BoardConfig::vck5000();
     let model = CostModel::new(board.clone());
-    for _ in 0..24 {
+    for _ in 0..cases(24) {
         let budget = 16 + rng.gen_range(384);
         let recs = [
             library::mm(2048, 2048, 2048, DType::F32),
@@ -195,7 +176,7 @@ fn prop_packet_merge_invariants() {
 #[test]
 fn prop_algorithm1_sound_vs_exhaustive() {
     let mut rng = XorShift64::new(6000);
-    for case in 0..60 {
+    for case in 0..cases(60) {
         // 2-4 AIEs on a 4-wide strip, 2-4 PLIOs, tight budgets
         let n_aie = 2 + rng.gen_range(3) as usize;
         let n_plio = 2 + rng.gen_range(3) as usize;
@@ -263,7 +244,7 @@ fn prop_congestion_is_column_local() {
     // moving a PLIO to the column of its only neighbour zeroes its
     // contribution
     let mut rng = XorShift64::new(7000);
-    for _ in 0..CASES {
+    for _ in 0..cases(200) {
         let aie_col = rng.gen_range(50) as u32;
         let mut g = MappedGraph::default();
         g.nodes.push(Node {
@@ -299,7 +280,7 @@ fn prop_placement_is_injective_and_in_bounds() {
     let mut rng = XorShift64::new(8000);
     let board = BoardConfig::vck5000();
     let model = CostModel::new(board.clone());
-    for _ in 0..24 {
+    for _ in 0..cases(24) {
         let budget = 8 + rng.gen_range(392);
         let cons = DseConstraints {
             max_aies: Some(budget),
@@ -384,7 +365,7 @@ fn prop_library_dependences_track_canonical_keys() {
     // parameters reproduces both the key and the exact dependence-vector
     // list; perturbing any extent moves the key
     let mut rng = XorShift64::new(11_000);
-    for _ in 0..CASES {
+    for _ in 0..cases(200) {
         let pick = rng.gen_range(7);
         let d2 = |r: &mut XorShift64| 4 + r.gen_range(60);
         let (a, b): (widesa::UniformRecurrence, widesa::UniformRecurrence) = match pick {
@@ -447,7 +428,7 @@ fn prop_placement_grid_and_coords_never_disagree() {
     // re-inserts, slot steals, grid growth — the two views must stay
     // exact mirrors, and the placed count must match both.
     let mut rng = XorShift64::new(9000);
-    for case in 0..CASES {
+    for case in 0..cases(200) {
         let mut p = Placement::default();
         // shadow model with the same displacement semantics
         let mut model: std::collections::BTreeMap<usize, Coord> =

@@ -1,0 +1,93 @@
+//! Shared property-test generators for integration tests.
+//!
+//! The vendored offline crate set has no proptest, so properties sweep
+//! deterministic-PRNG cases instead. This module is the single home for
+//! the generators those sweeps share (random loop nests, random library
+//! recurrences, random constraint sets) plus [`cases`], the knob that
+//! lets CI run a cheap PR lane and an exhaustive nightly lane
+//! (`PROPTEST_CASES=512`) from the same tests.
+//!
+//! Each test crate pulls this in with `mod testkit;` — not every crate
+//! uses every generator, hence the file-wide `dead_code` allow.
+#![allow(dead_code)]
+
+use widesa::mapping::dse::DseConstraints;
+use widesa::polyhedral::dependence::{DepKind, Dependence};
+use widesa::polyhedral::domain::{IterationDomain, LoopDim};
+use widesa::polyhedral::schedule::LoopNest;
+use widesa::recurrence::{dtype::DType, library};
+use widesa::util::rng::XorShift64;
+use widesa::UniformRecurrence;
+
+/// Cases to sweep per property: `default` unless the `PROPTEST_CASES`
+/// environment variable overrides it (the nightly CI lane sets 512; a
+/// local `PROPTEST_CASES=10 cargo test` gives a quick smoke).
+pub fn cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// A random legal loop nest: rank 2–4, modest extents, 1–3 flow
+/// dependences that are lexicographically positive by construction
+/// (first non-zero entry +1), so every generated nest admits a legal
+/// schedule.
+pub fn random_nest(rng: &mut XorShift64) -> LoopNest {
+    let rank = 2 + rng.gen_range(3) as usize;
+    let dims: Vec<LoopDim> = (0..rank)
+        .map(|i| LoopDim::new(format!("l{i}"), 4 + rng.gen_range(60)))
+        .collect();
+    let ndeps = 1 + rng.gen_range(3) as usize;
+    let deps: Vec<Dependence> = (0..ndeps)
+        .map(|_| {
+            let mut v = vec![0i64; rank];
+            let lead = rng.gen_range(rank as u64) as usize;
+            v[lead] = 1;
+            for c in v.iter_mut().skip(lead + 1) {
+                *c = rng.gen_range(3) as i64 - 1;
+            }
+            Dependence::new("X", DepKind::Flow, v)
+        })
+        .collect();
+    LoopNest::new(IterationDomain::new(dims), deps)
+}
+
+/// A random library recurrence: one of the seven benchmark constructors
+/// with random (constructor-legal) sizes. Covers both access-derived
+/// and carried-dependence workloads.
+pub fn random_recurrence(rng: &mut XorShift64) -> UniformRecurrence {
+    let small = |r: &mut XorShift64| 4 + r.gen_range(60);
+    match rng.gen_range(7) {
+        0 => {
+            let (n, m, k) = (small(rng), small(rng), small(rng));
+            library::mm(n, m, k, DType::F32)
+        }
+        1 => {
+            let (h, w) = (8 + rng.gen_range(56), 8 + rng.gen_range(56));
+            library::conv2d(h, w, 4, 4, DType::I8)
+        }
+        2 => library::fir(64 + rng.gen_range(4096), 15, DType::F32),
+        // fft2d requires power-of-two columns and a complex dtype
+        3 => library::fft2d(8 + rng.gen_range(120), 64, DType::CF32),
+        4 => {
+            let (c, h) = (1 + rng.gen_range(32), 8 + rng.gen_range(56));
+            library::dw_conv2d(c, h, h, 3, 3, DType::F32)
+        }
+        5 => library::trsv(small(rng), DType::F32),
+        _ => {
+            let (t, n) = (1 + rng.gen_range(8), 8 + rng.gen_range(120));
+            library::stencil2d_chain(t, n, n, DType::F32)
+        }
+    }
+}
+
+/// A random DSE constraint set: an AIE budget somewhere between a
+/// handful of cores and the full VCK5000 array.
+pub fn random_constraints(rng: &mut XorShift64) -> DseConstraints {
+    DseConstraints {
+        max_aies: Some(8 + rng.gen_range(392)),
+        ..Default::default()
+    }
+}
