@@ -9,8 +9,9 @@
 
 ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
+OBS_SMOKE_DIR := target/obs-smoke
 
-.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke clean
 
 build:
 	cargo build --release
@@ -35,24 +36,52 @@ serve-smoke: build
 
 # Gate the production-serve layer under open-loop load: replay a
 # deterministic 400 req/s arrival schedule (90 % hot keys, cold-compile
-# queue capped at 2) against a pre-warmed service. Every request must
-# resolve as ok or a typed shed (no errors), hot p50 must stay under the
-# latency gate, and BENCH_serve.json at the repo root is refreshed with
-# p50/p99/p999 latency and the shed rate.
+# queue capped at 2) against a pre-warmed service — twice, span recording
+# off then on. Every request must resolve as ok or a typed shed (no
+# errors), hot p50 must stay under the latency gate, instrumented p50
+# must stay within 5 % of uninstrumented (+ a 250 µs noise floor), and
+# BENCH_serve.json at the repo root is refreshed with p50/p99/p999
+# latency, the shed rate, and the obs_overhead comparison.
 serve-load-smoke:
 	cargo bench --bench bench_serve_load
+
+# Gate the observability exports end-to-end: serve 20 requests (plus an
+# in-band stats command) through the stdin front-end with --trace-out
+# and --metrics-out, then validate both files with `widesa obs-check`
+# (well-formed Chrome trace, span nesting, trace IDs, root coverage,
+# both metric registries present), then run the overhead gate.
+obs-smoke: build
+	mkdir -p $(OBS_SMOKE_DIR)
+	for i in $$(seq 1 20); do \
+	  echo "{\"id\":$$i,\"bench\":\"fir\",\"dims\":[$$((65536 + (i % 5) * 1024)),15],\"max_aies\":32}"; \
+	done > $(OBS_SMOKE_DIR)/requests.jsonl
+	echo '{"cmd":"stats","id":99}' >> $(OBS_SMOKE_DIR)/requests.jsonl
+	./target/release/widesa serve --stdin --workers 2 \
+	  --trace-out $(OBS_SMOKE_DIR)/trace.json \
+	  --metrics-out $(OBS_SMOKE_DIR)/metrics.json \
+	  < $(OBS_SMOKE_DIR)/requests.jsonl > $(OBS_SMOKE_DIR)/responses.jsonl
+	@test "$$(grep -c '"ok":true' $(OBS_SMOKE_DIR)/responses.jsonl)" -eq 21 \
+	  || { echo "obs-smoke FAILED: expected 21 ok responses:"; cat $(OBS_SMOKE_DIR)/responses.jsonl; exit 1; }
+	@grep -q '"serve.request_us"' $(OBS_SMOKE_DIR)/metrics.json \
+	  || { echo "obs-smoke FAILED: request histogram missing from metrics export"; exit 1; }
+	./target/release/widesa obs-check \
+	  --trace $(OBS_SMOKE_DIR)/trace.json --metrics $(OBS_SMOKE_DIR)/metrics.json
+	$(MAKE) serve-load-smoke
+	@echo "obs-smoke OK (trace + metrics validated, overhead gate passed)"
 
 # Mutation-style suite smoke: prove the tests would notice. Positive
 # controls first (each guard passes unmutated), then each WIDESA_MUTATE
 # seam must make its guard FAIL — a suite that still passes under a
-# halved cost-model peak or a disabled admission quota is not testing
-# what it claims to.
+# halved cost-model peak, a disabled admission quota, or an off-by-one
+# histogram bucketing is not testing what it claims to.
 mutation-smoke:
 	cargo test -q --lib mm_f32_lands_near_paper
 	cargo test -q --lib quota_admission_is_per_tenant
+	cargo test -q --lib histogram_bucketing_is_exact
 	! WIDESA_MUTATE=cost-peak cargo test -q --lib mm_f32_lands_near_paper
 	! WIDESA_MUTATE=quota-grant cargo test -q --lib quota_admission_is_per_tenant
-	@echo "mutation-smoke OK (both seams detected)"
+	! WIDESA_MUTATE=obs-bucket cargo test -q --lib histogram_bucketing_is_exact
+	@echo "mutation-smoke OK (all three seams detected)"
 
 # Gate the exact-port ranking: scoring a candidate with exact merged
 # port counts must cost ≤ 2× the legacy analytic score (bench_rank exits

@@ -10,6 +10,7 @@ use crate::graph::packet::{merge_ports_with_budget, MergeStats};
 use crate::mapping::cost::{CostModel, PerfEstimate};
 use crate::mapping::dse::{explore_all, explore_all_parallel, scoring_model, DseConstraints};
 use crate::mapping::MappingCandidate;
+use crate::obs::trace::{self, Span, TraceCtx};
 use crate::place_route::compiler::{compile, CompileOutcome};
 use crate::recurrence::spec::UniformRecurrence;
 use crate::sim::engine::{simulate, SimConfig};
@@ -205,13 +206,17 @@ impl WideSa {
         // re-estimate under this framework's mover configuration (the
         // DSE ranking assumes the default 512-bit movers)
         let estimate = model.estimate(&candidate);
+        let build_span = Span::begin("graph.build", "graph");
         let raw = build(&candidate, model);
+        drop(build_span);
+        let merge_span = Span::begin("graph.merge", "graph");
         let (graph, merge_stats) = merge_ports_with_budget(
             &raw,
             model.channel_bw(),
             self.config.board.plio.in_channels as usize,
             self.config.board.plio.out_channels as usize,
         );
+        drop(merge_span);
         // post-merge re-pricing: same model, with the port counts the
         // packet-switch merge actually realised (== `estimate` under the
         // exact port model; diverges under the legacy analytic ranking)
@@ -220,7 +225,10 @@ impl WideSa {
             merge_stats.in_ports_after as u64,
             merge_stats.out_ports_after as u64,
         );
+        // the compile runs under its own "pnr" span (see
+        // `place_route::compiler`), which also feeds `StageTimings`
         let compile_out = compile(&graph, &self.config.board);
+        let sim_span = Span::begin("sim", "sim");
         let (sim, _) = simulate(
             &candidate,
             model,
@@ -229,7 +237,10 @@ impl WideSa {
                 keep_trace: false,
             },
         );
+        drop(sim_span);
+        let codegen_span = Span::begin("codegen", "codegen");
         let code = codegen::generate(&candidate, &graph, &compile_out);
+        drop(codegen_span);
         CompiledDesign {
             candidate,
             estimate,
@@ -329,10 +340,14 @@ impl WideSa {
         let chunk = indexed.len().div_ceil(threads);
         let mut slots: Vec<Option<CompiledDesign>> = Vec::new();
         slots.resize_with(indexed.len(), || None);
+        // propagate the request's trace ID into the P&R shards so their
+        // spans correlate with the caller's trace
+        let trace_id = trace::current_trace();
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             for shard in indexed.chunks(chunk) {
                 handles.push(s.spawn(move || {
+                    let _ctx = TraceCtx::set(trace_id);
                     shard
                         .iter()
                         .map(|(i, candidate)| {

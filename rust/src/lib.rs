@@ -17,7 +17,9 @@
 //!   evaluation harness that regenerates every table and figure
 //!   ([`eval`]), and a long-lived compile service with a sharded design
 //!   cache, single-flight deduplication and pool-sharded DSE ([`serve`],
-//!   the ROADMAP's serving layer).
+//!   the ROADMAP's serving layer), all instrumented end-to-end by a
+//!   dependency-free metrics + tracing layer with Chrome-trace export
+//!   and per-commit bench trending ([`obs`]).
 //! * **L2/L1 (`python/`, build-time only)** — the recurrences' compute as
 //!   JAX graphs calling Pallas tile kernels, AOT-lowered to HLO text.
 //! * **Runtime bridge** — [`runtime`] functionally replays mapped designs
@@ -71,6 +73,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod graph;
 pub mod mapping;
+pub mod obs;
 pub mod place_route;
 pub mod plio;
 pub mod polyhedral;

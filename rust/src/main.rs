@@ -4,16 +4,20 @@
 //! pipeline on any benchmark, emit backend code bundles, and functionally
 //! replay designs through the PJRT runtime. `widesa help` lists them.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use widesa::coordinator::framework::{WideSa, WideSaConfig};
 use widesa::coordinator::{exec, verify};
 use widesa::eval;
 use widesa::mapping::dse::DseConstraints;
+use widesa::obs::trace::{self, Span, TraceCtx};
+use widesa::obs::trend;
 use widesa::recurrence::dtype::DType;
 use widesa::recurrence::library;
 use widesa::recurrence::spec::UniformRecurrence;
 use widesa::runtime::client::Runtime;
+use widesa::serve::lifecycle::{self, LifecycleConfig};
 use widesa::serve::{serve_stdin, serve_tcp, ServeConfig, ServeHandle};
+use widesa::util::json::Json;
 use widesa::util::rng::XorShift64;
 
 const HELP: &str = "\
@@ -32,7 +36,9 @@ COMMANDS (evaluation):
                          (mapping shape, AIEs, TOPS, sim agreement, P&R, ports)
 
 COMMANDS (framework):
-  map <bench> <dtype> [--aies N]    run the mapping pipeline, print the design report
+  map <bench> <dtype> [--aies N] [--trace-out PATH]
+                                    run the mapping pipeline, print the design report
+                                    (--trace-out writes Chrome trace-event JSON)
   codegen <bench> <dtype> <outdir>  emit AIE kernel / ADF graph / PL movers / host code
   run-mm [n m k]                    functional replay of MM (default 512³)
   selftest                          quick end-to-end smoke test
@@ -45,11 +51,26 @@ COMMANDS (service):
              --aies N / --mover-bits N / --cold-dram (base compile config)
              --snapshot PATH (warm-start the cache from PATH; stdin mode
                               writes the cache back to PATH at EOF)
+             --snapshot-interval-s N (periodic background snapshots; also
+                              written on SIGTERM/SIGINT)
              --max-inflight N (shed cold compiles beyond N in flight)
              --quota-rps X --quota-burst X (per-tenant token-bucket quota;
                               burst <= 0 disables admission)
+             --metrics-out PATH (dump the metric registries as JSON at shutdown)
+             --trace-out PATH (record spans; write Chrome trace JSON at shutdown)
     request:  {\"id\":1,\"bench\":\"mm\",\"dtype\":\"f32\",\"dims\":[8192,8192,8192],\"max_aies\":400}
     response: {\"id\":1,\"ok\":true,\"cached\":false,\"key\":\"…\",\"tops\":4.13,…}
+    stats:    {\"cmd\":\"stats\"} returns counters + registry snapshots in-band
+
+COMMANDS (observability):
+  obs-check --trace PATH [--metrics PATH] [--min-coverage F]
+                                    validate a --trace-out file (well-formed events,
+                                    span nesting, trace IDs, root coverage >= F,
+                                    default 0.95) and optionally a --metrics-out file
+  trend [--commit SHA] [--serve PATH] [--compile PATH] [--out PATH]
+                                    append one per-commit trend line (p50/p99/p999,
+                                    stage ms, overhead) from the BENCH_*.json files
+                                    to BENCH_trend.jsonl; SHA defaults to $GITHUB_SHA
 
   <bench>: mm | conv2d | fft2d | fir | dwconv2d | trsv | stencil2d
   <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
@@ -97,15 +118,33 @@ fn framework(max_aies: Option<u64>) -> WideSa {
 fn cmd_map(args: &[String]) -> Result<()> {
     let (bench, dtype) = (args.first(), args.get(1));
     let (Some(bench), Some(dtype)) = (bench, dtype) else {
-        bail!("usage: widesa map <bench> <dtype> [--aies N]");
+        bail!("usage: widesa map <bench> <dtype> [--aies N] [--trace-out PATH]");
     };
     let mut aies = None;
     if let Some(i) = args.iter().position(|a| a == "--aies") {
         aies = Some(args.get(i + 1).map(|v| v.parse()).transpose()?.unwrap_or(400));
     }
+    let mut trace_out: Option<std::path::PathBuf> = None;
+    if let Some(i) = args.iter().position(|a| a == "--trace-out") {
+        let path = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--trace-out needs a path"))?;
+        trace_out = Some(path.into());
+        trace::set_enabled(true);
+    }
     let rec = parse_bench(bench, parse_dtype(dtype)?)?;
+    // The whole compile runs under one root span with its own trace ID,
+    // so the exported trace attributes wall time the way a serve request
+    // would (dse under map; dse.score fan-out correlated by the ID).
+    let _ctx = TraceCtx::set(trace::next_trace_id());
+    let root = Span::begin("map", "cli");
     let d = framework(aies).compile(&rec)?;
+    drop(root);
     println!("{}", d.report());
+    if let Some(path) = trace_out {
+        let doc = trace::export_chrome(&trace::drain_events());
+        std::fs::write(&path, format!("{doc}\n"))
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        eprintln!("widesa map: trace written to {}", path.display());
+    }
     Ok(())
 }
 
@@ -152,6 +191,7 @@ fn cmd_run_mm(args: &[String]) -> Result<()> {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     let mut cfg = ServeConfig::default();
+    let mut lc = LifecycleConfig::default();
     let mut stdin_mode = false;
     let mut tcp_addr: Option<String> = None;
     let flag_val = |args: &[String], i: usize, flag: &str| -> Result<String> {
@@ -204,6 +244,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 cfg.quota_burst = flag_val(args, i, "--quota-burst")?.parse()?;
                 i += 1;
             }
+            "--snapshot-interval-s" => {
+                let secs: f64 = flag_val(args, i, "--snapshot-interval-s")?.parse()?;
+                if secs.is_finite() && secs >= 0.0 {
+                    lc.snapshot_interval = Some(std::time::Duration::from_secs_f64(secs));
+                } else {
+                    bail!("--snapshot-interval-s must be a non-negative number");
+                }
+                i += 1;
+            }
+            "--metrics-out" => {
+                lc.metrics_out = Some(flag_val(args, i, "--metrics-out")?.into());
+                i += 1;
+            }
+            "--trace-out" => {
+                lc.trace_out = Some(flag_val(args, i, "--trace-out")?.into());
+                i += 1;
+            }
             other => bail!("unknown serve option {other:?} (see `widesa help`)"),
         }
         i += 1;
@@ -211,7 +268,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if stdin_mode == tcp_addr.is_some() {
         bail!("serve needs exactly one of --stdin or --tcp ADDR");
     }
+    if lc.trace_out.is_some() {
+        trace::set_enabled(true);
+    }
     let handle = ServeHandle::new(cfg);
+    // SIGTERM/SIGINT → watchdog writes snapshot + metrics + trace and
+    // exits; the same watchdog writes periodic snapshots in between.
+    lifecycle::install_signal_handlers();
+    lifecycle::spawn_watchdog(handle.clone(), lc.clone(), true);
     if let Some(addr) = tcp_addr {
         let listener = std::net::TcpListener::bind(&addr)?;
         serve_tcp(&handle, listener)?;
@@ -222,11 +286,91 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "widesa serve: done — {} hits, {} misses, {} deduped, {} errors, {} shed, {} cached designs",
             s.hits, s.misses, s.deduped, s.errors, s.shed, s.cache.len
         );
-        if let Some(path) = handle.config().snapshot.clone() {
-            let n = handle.save_snapshot(&path)?;
-            eprintln!("widesa serve: snapshot — {n} designs to {}", path.display());
-        }
     }
+    // EOF path (and TCP loop exit): same artifacts as the signal path.
+    lifecycle::final_export(&handle, &lc)?;
+    Ok(())
+}
+
+fn cmd_trend(args: &[String]) -> Result<()> {
+    let flag = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let commit = flag("--commit")
+        .or_else(|| std::env::var("GITHUB_SHA").ok())
+        .unwrap_or_else(|| "local".to_string());
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .to_path_buf();
+    let serve_path = flag("--serve").map_or_else(|| root.join("BENCH_serve.json"), Into::into);
+    let compile_path =
+        flag("--compile").map_or_else(|| root.join("BENCH_compile.json"), Into::into);
+    let out = flag("--out").map_or_else(|| root.join("BENCH_trend.jsonl"), Into::into);
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let serve = trend::read_bench(&serve_path);
+    let compile = trend::read_bench(&compile_path);
+    let line = trend::trend_line(&commit, ts, serve.as_ref(), compile.as_ref());
+    trend::append_trend(&out, &line)?;
+    println!("{line}");
+    eprintln!("widesa trend: appended to {}", out.display());
+    Ok(())
+}
+
+fn cmd_obs_check(args: &[String]) -> Result<()> {
+    let flag = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let Some(trace_path) = flag("--trace") else {
+        bail!("usage: widesa obs-check --trace PATH [--metrics PATH] [--min-coverage F]");
+    };
+    let min_coverage: f64 = flag("--min-coverage").map(|v| v.parse()).transpose()?.unwrap_or(0.95);
+    let text = std::fs::read_to_string(&trace_path)
+        .with_context(|| format!("reading trace {trace_path}"))?;
+    let doc = widesa::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("trace {trace_path}: {e}"))?;
+    let report = trace::validate_chrome(&doc)?;
+    println!(
+        "trace ok: {} events, {} trace ids, root {:?} ({:.1} ms) {:.1}% covered by children",
+        report.events,
+        report.trace_ids,
+        report.root_name,
+        report.root_dur_us as f64 / 1e3,
+        report.root_coverage * 100.0
+    );
+    if report.root_coverage < min_coverage {
+        bail!(
+            "root span {:?} only {:.1}% covered by child spans (need >= {:.1}%)",
+            report.root_name,
+            report.root_coverage * 100.0,
+            min_coverage * 100.0
+        );
+    }
+    if let Some(metrics_path) = flag("--metrics") {
+        let text = std::fs::read_to_string(&metrics_path)
+            .with_context(|| format!("reading metrics {metrics_path}"))?;
+        let doc = widesa::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("metrics {metrics_path}: {e}"))?;
+        for section in ["serve", "pipeline"] {
+            let s = doc
+                .get(section)
+                .ok_or_else(|| anyhow::anyhow!("metrics missing {section:?} registry"))?;
+            for kind in ["counters", "gauges", "histograms"] {
+                if s.get(kind).and_then(Json::as_obj).is_none() {
+                    bail!("metrics {section:?} registry missing {kind:?} object");
+                }
+            }
+        }
+        println!("metrics ok: serve + pipeline registries present");
+    }
+    println!("obs-check OK");
     Ok(())
 }
 
@@ -282,6 +426,8 @@ fn main() -> Result<()> {
         Some("codegen") => cmd_codegen(&args[1..])?,
         Some("run-mm") => cmd_run_mm(&args[1..])?,
         Some("serve") => cmd_serve(&args[1..])?,
+        Some("trend") => cmd_trend(&args[1..])?,
+        Some("obs-check") => cmd_obs_check(&args[1..])?,
         Some("selftest") => cmd_selftest()?,
         Some("help") | None => print!("{HELP}"),
         Some(other) => {

@@ -25,9 +25,35 @@ use crate::mapping::latency::{self, LatencyHiding};
 use crate::mapping::partition::partition;
 use crate::mapping::spacetime::{self, SpaceTimeChoice};
 use crate::mapping::threading;
+use crate::obs::metrics::{self, Counter};
+use crate::obs::trace::{self, Span, TraceCtx};
 use crate::recurrence::spec::UniformRecurrence;
 use crate::recurrence::tiling::{demarcate_cached, KernelScope};
 use crate::util::hash::Fnv64;
+use std::sync::{Arc, OnceLock};
+
+/// Global-registry counters for DSE volume (`dse.plans`,
+/// `dse.candidates_scored`, `dse.candidates_over_budget`): handles are
+/// resolved once and cached, so the per-candidate cost is one relaxed
+/// `fetch_add`. Counters don't perturb results — scoring stays pure and
+/// bit-identical across the serial/scoped/pooled drivers.
+struct DseCounters {
+    plans: Arc<Counter>,
+    scored: Arc<Counter>,
+    over_budget: Arc<Counter>,
+}
+
+fn counters() -> &'static DseCounters {
+    static C: OnceLock<DseCounters> = OnceLock::new();
+    C.get_or_init(|| {
+        let r = metrics::global();
+        DseCounters {
+            plans: r.counter("dse.plans"),
+            scored: r.counter("dse.candidates_scored"),
+            over_budget: r.counter("dse.candidates_over_budget"),
+        }
+    })
+}
 
 /// Resource constraints for a DSE run (Figure 6 sweeps these).
 #[derive(Debug, Clone, Default)]
@@ -96,6 +122,8 @@ pub struct DsePlan {
 /// Per-recurrence setup: memoized demarcation, space-time enumeration and
 /// the shared latency plan.
 pub fn plan(rec: &UniformRecurrence, board: &BoardConfig, cons: &DseConstraints) -> DsePlan {
+    let _span = Span::begin("dse.plan", "dse");
+    counters().plans.inc();
     let scope = demarcate_cached(rec);
     let graph_loops = scope.graph_loops();
     let choices = spacetime::enumerate(&scope.graph_nest, &graph_loops);
@@ -149,8 +177,10 @@ pub fn score_choice(
         threading: thr,
     };
     if cand.aies_used() > plan.budget {
+        counters().over_budget.inc();
         return None;
     }
+    counters().scored.inc();
     let est = model.estimate(&cand);
     Some((cand, est))
 }
@@ -160,6 +190,7 @@ pub fn score_choice(
 pub fn rank(
     mut results: Vec<(MappingCandidate, PerfEstimate)>,
 ) -> Vec<(MappingCandidate, PerfEstimate)> {
+    let _span = Span::begin("dse.rank", "dse");
     results.sort_by(|a, b| b.1.tops.partial_cmp(&a.1.tops).unwrap());
     results
 }
@@ -185,10 +216,12 @@ pub fn score_serial(
     choices: Vec<SpaceTimeChoice>,
 ) -> Ranked {
     let model = scoring_model(board, cons);
+    let score_span = Span::begin("dse.score", "dse");
     let results = choices
         .into_iter()
         .filter_map(|choice| score_choice(rec, &model, cons, plan, choice))
         .collect();
+    drop(score_span); // close before rank so dse.rank is a sibling
     rank(results)
 }
 
@@ -198,6 +231,7 @@ pub fn explore_all(
     board: &BoardConfig,
     cons: &DseConstraints,
 ) -> Vec<(MappingCandidate, PerfEstimate)> {
+    let _dse = Span::begin("dse", "dse");
     let mut p = plan(rec, board, cons);
     let choices = std::mem::take(&mut p.choices);
     score_serial(rec, board, cons, &p, choices)
@@ -220,6 +254,7 @@ pub fn explore_all_parallel(
     if threads <= 1 {
         return explore_all(rec, board, cons);
     }
+    let _dse = Span::begin("dse", "dse");
     let mut p = plan(rec, board, cons);
     let choices = std::mem::take(&mut p.choices);
     if choices.len() <= 1 {
@@ -230,11 +265,16 @@ pub fn explore_all_parallel(
     let chunk = indexed.len().div_ceil(threads);
     let mut slots: Vec<Option<(MappingCandidate, PerfEstimate)>> = Vec::new();
     slots.resize_with(indexed.len(), || None);
+    // propagate the request's trace ID into the scoring shards so their
+    // dse.score spans correlate with the caller's trace
+    let trace_id = trace::current_trace();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for shard in indexed.chunks(chunk) {
             let (p, model) = (&p, &model);
             handles.push(s.spawn(move || {
+                let _ctx = TraceCtx::set(trace_id);
+                let _span = Span::begin("dse.score", "dse");
                 shard
                     .iter()
                     .map(|(i, choice)| (*i, score_choice(rec, model, cons, p, choice.clone())))

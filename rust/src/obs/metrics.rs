@@ -1,0 +1,389 @@
+//! Atomic metrics: counters, gauges and log2-bucketed latency
+//! histograms, grouped in a [`Registry`].
+//!
+//! Built for the serve hot path: recording is one `fetch_add` on an
+//! `Arc`-shared cell (no lock, no allocation, no syscall); the only lock
+//! in the module guards name → handle registration, which callers do
+//! once and cache. Snapshots ([`Registry::snapshot`]) render as
+//! canonical JSON (names sort via `BTreeMap`), so two snapshots of the
+//! same state are byte-identical — the property the deterministic
+//! concurrent-recording test pins.
+//!
+//! Histograms bucket by `floor(log2(v)) + 1` (bucket 0 holds exact
+//! zeros; bucket *i* ≥ 1 holds `[2^(i-1), 2^i)`), the classic
+//! HdrHistogram-lite shape: 65 buckets cover the whole `u64` range and
+//! a quantile read costs one pass over them. The
+//! `WIDESA_MUTATE=obs-bucket` seam shifts every bucket index up by one
+//! so `make mutation-smoke` can prove the bucketing tests bite.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of histogram buckets: one for exact zeros plus one per power
+/// of two up to `2^63` (so any `u64` value lands somewhere).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Index of the bucket holding `v`: 0 for 0, else `floor(log2 v) + 1`.
+/// The `WIDESA_MUTATE=obs-bucket` mutation seam shifts the result up by
+/// one (clamped), which mis-files every recorded value — the bucketing
+/// guard tests must fail under it or they are not testing the bucketing.
+fn bucket_index(v: u64) -> usize {
+    let idx = (64 - v.leading_zeros()) as usize;
+    idx + mutate_bucket_shift()
+}
+
+fn mutate_bucket_shift() -> usize {
+    static SHIFT: OnceLock<usize> = OnceLock::new();
+    *SHIFT.get_or_init(|| match std::env::var("WIDESA_MUTATE") {
+        Ok(v) if v == "obs-bucket" => 1,
+        _ => 0,
+    })
+}
+
+/// Inclusive upper bound of bucket `i` (what quantile reads report —
+/// conservative: a quantile is never under-reported).
+fn bucket_upper(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1..=63 => (1u64 << i) - 1,
+        _ => u64::MAX,
+    }
+}
+
+/// Log2-bucketed histogram of `u64` samples (latencies in µs, sizes in
+/// bytes — unit is the caller's convention, the registry names carry a
+/// `_us`/`_bytes` suffix).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        let idx = bucket_index(v).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in whole microseconds.
+    pub fn record_us(&self, d: std::time::Duration) {
+        self.record(d.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts (index, count) for non-empty buckets.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect()
+    }
+
+    /// Quantile estimate `q ∈ [0, 1]`: the inclusive upper bound of the
+    /// bucket where the cumulative count crosses `ceil(q · total)`.
+    /// Conservative by construction (never under-reports) and exact
+    /// whenever all samples in the crossing bucket share a value. NaN on
+    /// an empty histogram (renders as JSON `null`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_upper(i) as f64;
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let buckets = self
+            .nonzero_buckets()
+            .into_iter()
+            .map(|(i, n)| Json::Arr(vec![Json::num_usize(i), Json::num_u64(n)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num_u64(self.count())),
+            ("sum", Json::num_u64(self.sum())),
+            ("p50", Json::Num(self.quantile(0.50))),
+            ("p99", Json::Num(self.quantile(0.99))),
+            ("p999", Json::Num(self.quantile(0.999))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// A named set of metrics. Handles are `Arc`-shared: register once
+/// (get-or-create under a short lock), then record lock-free forever.
+///
+/// The serve layer owns one registry per [`crate::ServeHandle`] (so
+/// tests see deterministic counts) and pipeline-level modules share the
+/// process-global [`global`] registry.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Get or create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Get or create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Canonical JSON snapshot: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {...}}`, names sorted, byte-identical for identical
+    /// state.
+    pub fn snapshot(&self) -> Json {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num_u64(v.get())))
+            .collect::<BTreeMap<_, _>>();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(v.get())))
+            .collect::<BTreeMap<_, _>>();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect::<BTreeMap<_, _>>();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(histograms)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// The process-global registry for code that has no handle to thread one
+/// through (DSE, P&R, persistence). Serve-layer metrics live in the
+/// per-handle registry instead — see [`crate::ServeHandle::metrics`].
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("a.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name → same cell
+        assert_eq!(r.counter("a.count").get(), 5);
+        let g = r.gauge("a.level");
+        g.set(2.5);
+        assert_eq!(r.gauge("a.level").get(), 2.5);
+    }
+
+    /// Mutation-smoke guard (`WIDESA_MUTATE=obs-bucket` must flip this):
+    /// values land in the exact log2 bucket the scheme defines, and the
+    /// quantile read reports the bucket's inclusive upper bound.
+    #[test]
+    fn histogram_bucketing_is_exact() {
+        let h = Histogram::new();
+        for v in [1u64, 1, 1, 1000] {
+            h.record(v);
+        }
+        // 1 → bucket 1 (upper bound 1); 1000 → bucket 10 ([512, 1024))
+        assert_eq!(h.nonzero_buckets(), vec![(1, 3), (10, 1)]);
+        assert_eq!(h.quantile(0.5), 1.0, "p50 of {{1,1,1,1000}} is exactly 1");
+        assert_eq!(h.quantile(1.0), 1023.0, "p100 reports bucket 10's upper bound");
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1003);
+
+        // zero gets its own bucket; boundaries fall on powers of two
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 4] {
+            h.record(v);
+        }
+        assert_eq!(h.nonzero_buckets(), vec![(0, 1), (1, 1), (2, 2), (3, 1)]);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_conservative() {
+        let h = Histogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        let (p50, p99, p999) = (h.quantile(0.5), h.quantile(0.99), h.quantile(0.999));
+        assert!(p50 <= p99 && p99 <= p999);
+        // conservative: the true p50 (499) is ≤ the reported bound, and
+        // the bound is the enclosing bucket's top, not a wild number
+        assert!((499.0..=1023.0).contains(&p50), "p50 = {p50}");
+        assert!(p999 <= 1023.0);
+        // empty histogram → NaN → JSON null
+        let empty = Histogram::new();
+        assert!(empty.quantile(0.5).is_nan());
+        assert_eq!(Json::Num(empty.quantile(0.5)).to_string(), "null");
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_under_concurrent_recording() {
+        // N threads × M ops against shared handles: every op must land
+        // (atomics lose nothing), and two snapshots of the settled state
+        // must be byte-identical.
+        let r = Registry::new();
+        let c = r.counter("work.total");
+        let h = r.histogram("work.us");
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let (c, h) = (Arc::clone(&c), Arc::clone(&h));
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        c.inc();
+                        h.record(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+        assert_eq!(h.count(), 8000);
+        let total: u64 = h.nonzero_buckets().iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 8000, "bucket counts cover every sample");
+        let a = r.snapshot().to_string();
+        let b = r.snapshot().to_string();
+        assert_eq!(a, b, "settled snapshots are byte-identical");
+        // snapshot parses and exposes the canonical sections
+        let v = crate::util::json::parse(&a).unwrap();
+        assert_eq!(
+            v.get("counters").unwrap().get("work.total").unwrap().as_u64(),
+            Some(8000)
+        );
+        assert!(v.get("histograms").unwrap().get("work.us").is_some());
+        assert!(v.get("gauges").is_some());
+    }
+
+    #[test]
+    fn bucket_upper_bounds_tile_the_range() {
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(10), 1023);
+        assert_eq!(bucket_upper(64), u64::MAX);
+        // every value's bucket upper bound is ≥ the value, and the
+        // previous bucket's bound is < the value (the buckets tile)
+        for v in [1u64, 2, 3, 7, 8, 1000, u64::MAX / 2, u64::MAX] {
+            let i = (64 - v.leading_zeros()) as usize;
+            assert!(bucket_upper(i) >= v);
+            assert!(bucket_upper(i - 1) < v);
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! `widesa::obs` — the observability layer: metrics, spans, trending.
+//!
+//! The ROADMAP's north star is a production serve stack, and a
+//! production stack needs to answer "where did the time go" without
+//! ad-hoc prints: which stage dominates a cold compile per workload
+//! family, whether the DSE or the annealer is the tail, whether a
+//! refactor moved the p99. Until this module the only visibility was the
+//! single `StageTimings {place, assign, route}` triple and one-snapshot
+//! `BENCH_*.json` files with no trajectory. Like everything else in the
+//! crate, the layer is hand-rolled and dependency-free (the offline
+//! vendor set has no `tracing`/`prometheus`), and cheap enough for the
+//! serve hot path:
+//!
+//! * [`metrics`] — [`metrics::Registry`]: atomic counters and gauges
+//!   plus **log2-bucketed latency histograms** (one `fetch_add` per
+//!   record, p50/p99/p999 read out of the buckets). The serve layer owns
+//!   a per-handle registry (its `ServeStats` counters *are* registry
+//!   counters — one source of truth), and pipeline-level code (DSE,
+//!   persistence) records into the process-global [`metrics::global`].
+//! * [`trace`] — [`trace::Span`] RAII timers recording into a bounded
+//!   per-thread event buffer that flushes to a shared sink whenever a
+//!   thread's outermost span closes. Spans carry a **trace ID**
+//!   propagated across the serve worker pools
+//!   ([`trace::current_trace`] / [`trace::TraceCtx`]), so one request's
+//!   spans correlate across threads. [`trace::export_chrome`] renders
+//!   the sink as Chrome trace-event JSON — loadable in
+//!   `chrome://tracing` or <https://ui.perfetto.dev>.
+//! * [`trend`] — appends each CI run's p50/p99/p999 + per-stage ms to
+//!   `BENCH_trend.jsonl` keyed by commit (`widesa trend`), turning the
+//!   one-snapshot bench files into a per-commit trajectory.
+//!
+//! Span durations are also the **single source of truth for
+//! `StageTimings`**: `place_route::compiler` builds its per-stage
+//! timings from the values the spans measured, so the `stage_ms`
+//! protocol field and a Chrome trace can never disagree.
+//!
+//! Tracing is off by default ([`trace::enabled`] is one relaxed atomic
+//! load; a disabled [`trace::Span`] still measures time — callers that
+//! feed `StageTimings` need the number — but records nothing).
+//! `bench_serve_load` gates the instrumented-vs-uninstrumented p50 gap
+//! at ≤5 %. See `docs/OBSERVABILITY.md` for the metric catalog, the
+//! span hierarchy and the trend-file schema.
+
+pub mod metrics;
+pub mod trace;
+pub mod trend;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::{Span, TraceCtx};

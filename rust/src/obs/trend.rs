@@ -1,0 +1,168 @@
+//! Per-commit bench trending: fold the one-snapshot `BENCH_serve.json` /
+//! `BENCH_compile.json` files into an append-only `BENCH_trend.jsonl`
+//! trajectory, one line per CI run keyed by commit.
+//!
+//! The snapshot files answer "how fast is it now"; the trend file
+//! answers "which commit moved the p99" — the ROADMAP item this closes.
+//! CI runs `widesa trend --commit $GITHUB_SHA` after the bench smokes so
+//! every run appends exactly one line. The line shape (schema 1):
+//!
+//! ```json
+//! {"schema":1,"commit":"<sha>","ts":<unix-s>,
+//!  "serve":{"p50_us":…,"p99_us":…,"p999_us":…,"shed_rate":…,
+//!           "overhead_p50_pct":…,"stage_ms":{"place":…,"assign":…,"route":…}},
+//!  "compile":{"cold_ms":{…},"anneal_speedup":…}}
+//! ```
+//!
+//! Missing inputs (file absent, or a seed schema full of `null`s) render
+//! as `null` fields rather than failing: a trend line that says "no
+//! measurement this run" is itself information, and CI must not go red
+//! because one bench lane was skipped.
+
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Version stamp on every trend line; bump on shape changes so readers
+/// can split the file by era.
+pub const TREND_SCHEMA: u32 = 1;
+
+/// Copy `key` out of `src` (or `Json::Null` when absent/`src` is None).
+fn lift(src: Option<&Json>, key: &str) -> Json {
+    src.and_then(|v| v.get(key)).cloned().unwrap_or(Json::Null)
+}
+
+/// Build one trend line from the two bench snapshots. Pure — callers
+/// supply the commit and timestamp, so tests are byte-exact.
+pub fn trend_line(commit: &str, unix_ts: u64, serve: Option<&Json>, compile: Option<&Json>) -> Json {
+    let serve_part = Json::obj(vec![
+        ("p50_us", lift(serve, "p50_us")),
+        ("p99_us", lift(serve, "p99_us")),
+        ("p999_us", lift(serve, "p999_us")),
+        ("shed_rate", lift(serve, "shed_rate")),
+        (
+            "overhead_p50_pct",
+            serve
+                .and_then(|v| v.get("obs_overhead"))
+                .map(|o| lift(Some(o), "p50_pct"))
+                .unwrap_or(Json::Null),
+        ),
+        ("stage_ms", lift(serve, "stage_ms")),
+    ]);
+    let compile_part = Json::obj(vec![
+        ("cold_ms", lift(compile, "cold_ms")),
+        (
+            "anneal_speedup",
+            compile
+                .and_then(|v| v.get("anneal"))
+                .map(|a| lift(Some(a), "speedup"))
+                .unwrap_or(Json::Null),
+        ),
+    ]);
+    Json::obj(vec![
+        ("schema", Json::num_u64(u64::from(TREND_SCHEMA))),
+        ("commit", Json::str(commit)),
+        ("ts", Json::num_u64(unix_ts)),
+        ("serve", serve_part),
+        ("compile", compile_part),
+    ])
+}
+
+/// Read a bench snapshot if it exists and parses; `None` otherwise
+/// (trend lines degrade to nulls, they don't fail the run).
+pub fn read_bench(path: &Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    parse(text.trim()).ok()
+}
+
+/// Append `line` to the JSONL trend file at `path` (created if absent).
+pub fn append_trend(path: &Path, line: &Json) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open trend file {}", path.display()))?;
+    writeln!(f, "{line}").with_context(|| format!("append trend line to {}", path.display()))?;
+    Ok(())
+}
+
+/// Parse every line of a trend file, skipping blanks and the
+/// seed-schema comment convention (lines whose `commit` is `"seed"` are
+/// kept — they are valid lines — but unparseable lines are errors: an
+/// append-only file that rots silently is worse than none).
+pub fn parse_trend(text: &str) -> Result<Vec<Json>> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(|l| parse(l).map_err(|e| anyhow::anyhow!("bad trend line: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_snapshot() -> Json {
+        parse(
+            r#"{"p50_us":1200.0,"p99_us":9000.0,"p999_us":21000.0,"shed_rate":0.01,
+                "obs_overhead":{"p50_pct":1.7},
+                "stage_ms":{"place":3.0,"assign":1.0,"route":2.0}}"#,
+        )
+        .unwrap()
+    }
+
+    fn compile_snapshot() -> Json {
+        parse(r#"{"cold_ms":{"mm-400":45.0},"anneal":{"speedup":2.4}}"#).unwrap()
+    }
+
+    #[test]
+    fn trend_line_is_deterministic_and_complete() {
+        let a = trend_line("abc123", 1_700_000_000, Some(&serve_snapshot()), Some(&compile_snapshot()));
+        let b = trend_line("abc123", 1_700_000_000, Some(&serve_snapshot()), Some(&compile_snapshot()));
+        assert_eq!(a.to_string(), b.to_string(), "same inputs → byte-identical line");
+        assert_eq!(a.get("schema").unwrap().as_u64(), Some(u64::from(TREND_SCHEMA)));
+        assert_eq!(a.get("commit").unwrap().as_str(), Some("abc123"));
+        let serve = a.get("serve").unwrap();
+        assert_eq!(serve.get("p50_us").unwrap().as_f64(), Some(1200.0));
+        assert_eq!(serve.get("overhead_p50_pct").unwrap().as_f64(), Some(1.7));
+        assert_eq!(
+            serve.get("stage_ms").unwrap().get("route").unwrap().as_f64(),
+            Some(2.0)
+        );
+        let compile = a.get("compile").unwrap();
+        assert_eq!(
+            compile.get("cold_ms").unwrap().get("mm-400").unwrap().as_f64(),
+            Some(45.0)
+        );
+        assert_eq!(compile.get("anneal_speedup").unwrap().as_f64(), Some(2.4));
+    }
+
+    #[test]
+    fn missing_inputs_degrade_to_nulls() {
+        let line = trend_line("seed", 0, None, None);
+        assert_eq!(line.get("serve").unwrap().get("p50_us"), Some(&Json::Null));
+        assert_eq!(line.get("compile").unwrap().get("cold_ms"), Some(&Json::Null));
+        // the line still parses back
+        let rt = parse(&line.to_string()).unwrap();
+        assert_eq!(rt.get("commit").unwrap().as_str(), Some("seed"));
+    }
+
+    #[test]
+    fn append_and_parse_round_trip() {
+        let dir = std::env::temp_dir().join(format!("widesa-trend-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_trend.jsonl");
+        let _ = std::fs::remove_file(&path);
+        for i in 0..3u64 {
+            let line = trend_line(&format!("c{i}"), i, Some(&serve_snapshot()), None);
+            append_trend(&path, &line).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines = parse_trend(&text).unwrap();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2].get("commit").unwrap().as_str(), Some("c2"));
+        assert!(parse_trend("not json\n").is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

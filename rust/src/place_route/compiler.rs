@@ -3,21 +3,28 @@
 //! router) or without (annealing from a random start) — the comparison
 //! behind the paper's claim that systolic constraints make large designs
 //! compile (CHARM "struggles to compile large designs on Vitis 2022.1").
+//!
+//! Timing here is span-derived: every stage runs under an
+//! [`obs::trace::Span`](crate::obs::trace::Span) and [`StageTimings`] is
+//! built from the values those spans measured. One measurement feeds
+//! both the `stage_ms` protocol field and the Chrome-trace export, so
+//! the two can never disagree (the duplication the observability PR
+//! removed).
 
 use crate::arch::vck5000::BoardConfig;
 use crate::graph::builder::MappedGraph;
+use crate::obs::trace::Span;
 use crate::place_route::anneal::anneal;
 use crate::place_route::constraints::ConstraintSet;
 use crate::place_route::placement::{place, Placement};
 use crate::place_route::router::route_all;
 use crate::plio::assignment::assign;
-use std::time::Instant;
 
-/// Per-stage wall times of one P&R run, in milliseconds. The serve
-/// layer threads these into every response (`stage_ms`) so tail-latency
-/// regressions can be attributed to a stage without rerunning
-/// `bench_compile`; on the annealing path the anneal is the "place"
-/// stage.
+/// Per-stage wall times of one P&R run, in milliseconds, as measured by
+/// the `pnr.place` / `pnr.assign` / `pnr.route` spans (single source of
+/// truth — the serve layer's `stage_ms` field and `--trace-out` exports
+/// report the same numbers). On the annealing path the anneal is the
+/// "place" stage; stages that never ran stay 0.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StageTimings {
     pub place_ms: f64,
@@ -46,24 +53,25 @@ pub struct CompileOutcome {
 /// PLIO assignment, XY routing. Fails only if the design genuinely does
 /// not fit.
 pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
-    let t0 = Instant::now();
-    let Some(pl) = place(g, &board.array) else {
-        let wall_s = t0.elapsed().as_secs_f64();
+    let pnr = Span::begin("pnr", "pnr");
+    let place_span = Span::begin("pnr.place", "pnr");
+    let placed = place(g, &board.array);
+    let place_ms = place_span.end_ms();
+    let Some(pl) = placed else {
         return CompileOutcome {
             success: false,
-            wall_s,
+            wall_s: pnr.end_ms() / 1e3,
             iterations: 0,
             placement: None,
             constraints: None,
             max_congestion: None,
             stages: StageTimings {
-                place_ms: wall_s * 1e3,
+                place_ms,
                 ..Default::default()
             },
         };
     };
-    let place_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let t1 = Instant::now();
+    let assign_span = Span::begin("pnr.assign", "pnr");
     let a = assign(
         g,
         &pl,
@@ -71,8 +79,8 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
         board.array.rc_west,
         board.array.rc_east,
     );
-    let assign_ms = t1.elapsed().as_secs_f64() * 1e3;
-    let t2 = Instant::now();
+    let assign_ms = assign_span.end_ms();
+    let route_span = Span::begin("pnr.route", "pnr");
     let routing = route_all(
         g,
         &pl,
@@ -81,11 +89,11 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
         board.array.rc_west,
         board.array.rc_east,
     );
-    let route_ms = t2.elapsed().as_secs_f64() * 1e3;
+    let route_ms = route_span.end_ms();
     let cs = ConstraintSet::from_design(g, &pl, &a.columns);
     CompileOutcome {
         success: a.feasible && routing.success && pl.shared_buffers_adjacent(g, &board.array),
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: pnr.end_ms() / 1e3,
         iterations: 0,
         placement: Some(pl),
         constraints: Some(cs),
@@ -100,19 +108,22 @@ pub fn compile(g: &MappedGraph, board: &BoardConfig) -> CompileOutcome {
 
 /// Compile without constraints: annealing placement under an iteration
 /// budget (the raw-ILP stand-in), then Algorithm-1-free column packing.
+/// The anneal runs as the `pnr.place` span (it *is* this path's
+/// placement stage).
 pub fn compile_unconstrained(
     g: &MappedGraph,
     board: &BoardConfig,
     seed: u64,
     max_iters: u64,
 ) -> CompileOutcome {
-    let t0 = Instant::now();
+    let pnr = Span::begin("pnr", "pnr");
+    let place_span = Span::begin("pnr.place", "pnr");
     let r = anneal(g, &board.array, seed, max_iters);
-    let place_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let place_ms = place_span.end_ms();
     if !r.converged {
         return CompileOutcome {
             success: false,
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s: pnr.end_ms() / 1e3,
             iterations: r.iterations,
             placement: Some(r.placement),
             constraints: None,
@@ -123,7 +134,7 @@ pub fn compile_unconstrained(
             },
         };
     }
-    let t1 = Instant::now();
+    let assign_span = Span::begin("pnr.assign", "pnr");
     let a = assign(
         g,
         &r.placement,
@@ -131,8 +142,8 @@ pub fn compile_unconstrained(
         board.array.rc_west,
         board.array.rc_east,
     );
-    let assign_ms = t1.elapsed().as_secs_f64() * 1e3;
-    let t2 = Instant::now();
+    let assign_ms = assign_span.end_ms();
+    let route_span = Span::begin("pnr.route", "pnr");
     let routing = route_all(
         g,
         &r.placement,
@@ -141,10 +152,10 @@ pub fn compile_unconstrained(
         board.array.rc_west,
         board.array.rc_east,
     );
-    let route_ms = t2.elapsed().as_secs_f64() * 1e3;
+    let route_ms = route_span.end_ms();
     CompileOutcome {
         success: a.feasible && routing.success,
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s: pnr.end_ms() / 1e3,
         iterations: r.iterations,
         placement: Some(r.placement),
         constraints: None,
@@ -208,6 +219,47 @@ mod tests {
             "stage sum {sum_s}s exceeds wall {}s",
             out.wall_s
         );
+    }
+
+    /// Regression for the StageTimings-duplication fix: with tracing on,
+    /// the spans a compile emits carry exactly the durations that landed
+    /// in `StageTimings` — there is no second clock to drift.
+    #[test]
+    fn stage_timings_match_recorded_spans() {
+        use crate::obs::trace;
+        let (g, board) = graph(400);
+        trace::set_enabled(true);
+        let id = trace::next_trace_id();
+        let out = {
+            let _ctx = trace::TraceCtx::set(id);
+            compile(&g, &board)
+        };
+        let evs: Vec<_> = trace::snapshot_events()
+            .into_iter()
+            .filter(|e| e.trace_id == id)
+            .collect();
+        let dur_ms = |name: &str| -> f64 {
+            let e = evs
+                .iter()
+                .find(|e| e.name == name)
+                .unwrap_or_else(|| panic!("span {name} recorded"));
+            e.dur_us as f64 / 1e3
+        };
+        // span µs are the truncated-integer view of the same measurement
+        // StageTimings stores as f64 ms: equal to within 1 µs + rounding
+        let close = |a: f64, b: f64| (a - b).abs() <= 2e-3;
+        assert!(close(dur_ms("pnr.place"), out.stages.place_ms));
+        assert!(close(dur_ms("pnr.assign"), out.stages.assign_ms));
+        assert!(close(dur_ms("pnr.route"), out.stages.route_ms));
+        assert!(close(dur_ms("pnr"), out.wall_s * 1e3));
+        // nesting: children sit inside the pnr parent interval
+        let parent = evs.iter().find(|e| e.name == "pnr").unwrap();
+        for child in ["pnr.place", "pnr.assign", "pnr.route"] {
+            let c = evs.iter().find(|e| e.name == child).unwrap();
+            assert!(c.ts_us >= parent.ts_us);
+            // +2 µs slack: ts and dur truncate to whole µs independently
+            assert!(c.ts_us + c.dur_us <= parent.ts_us + parent.dur_us + 2);
+        }
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Server lifecycle: graceful shutdown, periodic snapshots, and the
+//! final observability export.
+//!
+//! `widesa serve` is a long-lived process, so "the run ended" has three
+//! distinct triggers — stdin EOF, SIGTERM/SIGINT from a supervisor, and
+//! (for TCP mode) only the signals — and all of them must leave the same
+//! artifacts behind: the design-cache snapshot (so the next boot
+//! warm-starts), the metrics JSON (`--metrics-out`), and the Chrome
+//! trace (`--trace-out`). This module centralizes that in
+//! [`final_export`], with a watchdog thread ([`spawn_watchdog`]) that
+//! polls a process-wide shutdown flag and also writes **periodic**
+//! snapshots every `--snapshot-interval-s` so a crash loses at most one
+//! interval of cache warmth.
+//!
+//! The signal handler itself ([`install_signal_handlers`]) does the only
+//! thing that is async-signal-safe: a single atomic store into
+//! [`SHUTDOWN`]'s cell. Everything with side effects (file I/O, metric
+//! updates, `process::exit`) happens on the watchdog thread.
+//!
+//! Health of the snapshot loop is observable through two registry
+//! handles on the serve registry ([`ServeHandle::metrics`]):
+//! `serve.snapshot_saved` (counter, periodic + final saves) and
+//! `serve.snapshot_age_s` (gauge, seconds since the last successful
+//! save — a supervisor alerting on this catches a wedged disk long
+//! before a restart does).
+
+use crate::obs::metrics;
+use crate::obs::trace;
+use crate::serve::server::ServeHandle;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Process-wide shutdown flag; set by the signal handler (or
+/// [`request_shutdown`]) and polled by the watchdog.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Watchdog poll period: the latency ceiling on reacting to SIGTERM.
+const POLL: Duration = Duration::from_millis(200);
+
+/// True once SIGTERM/SIGINT arrived or [`request_shutdown`] was called.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::Acquire)
+}
+
+/// Programmatic equivalent of SIGTERM (used by tests and the stdin EOF
+/// path).
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::Release);
+}
+
+/// Clear the shutdown flag. The flag is process-global, so tests that
+/// exercise the watchdog must reset it; production code never does.
+#[doc(hidden)]
+pub fn reset_shutdown_for_tests() {
+    SHUTDOWN.store(false, Ordering::Release);
+}
+
+/// Route SIGTERM and SIGINT to the shutdown flag. The handler performs
+/// exactly one atomic store — no allocation, locking, or I/O — which is
+/// the whole async-signal-safe budget; the watchdog thread does the rest.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    extern "C" fn on_signal(_signum: i32) {
+        SHUTDOWN.store(true, Ordering::Release);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    type Handler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: Handler) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_signal);
+        signal(SIGINT, on_signal);
+    }
+}
+
+/// No signals to install off unix; `widesa serve` still shuts down via
+/// stdin EOF or [`request_shutdown`].
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+/// What the watchdog and [`final_export`] write, and where.
+#[derive(Debug, Clone, Default)]
+pub struct LifecycleConfig {
+    /// Periodic snapshot cadence (requires `ServeConfig::snapshot` to
+    /// name a path). `None` = final snapshot only.
+    pub snapshot_interval: Option<Duration>,
+    /// Metrics JSON destination (`{"serve": …, "pipeline": …}`).
+    pub metrics_out: Option<PathBuf>,
+    /// Chrome trace-event JSON destination.
+    pub trace_out: Option<PathBuf>,
+}
+
+impl LifecycleConfig {
+    /// Anything to do at shutdown beyond the snapshot itself?
+    pub fn wants_export(&self) -> bool {
+        self.metrics_out.is_some() || self.trace_out.is_some()
+    }
+}
+
+/// Start the lifecycle watchdog thread. It ticks every [`POLL`]:
+/// refreshes `serve.snapshot_age_s`, writes a periodic snapshot when
+/// `snapshot_interval` has elapsed, and on [`shutdown_requested`] runs
+/// [`final_export`] then either exits the process (`exit_on_shutdown`,
+/// the production SIGTERM path — the request loop is blocked in a read
+/// and can't observe the flag) or returns so the caller can join (tests,
+/// and callers that own their own exit).
+pub fn spawn_watchdog(
+    handle: ServeHandle,
+    cfg: LifecycleConfig,
+    exit_on_shutdown: bool,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name("serve-lifecycle".into())
+        .spawn(move || watchdog_loop(&handle, &cfg, exit_on_shutdown))
+        .expect("spawn serve lifecycle watchdog")
+}
+
+fn watchdog_loop(handle: &ServeHandle, cfg: &LifecycleConfig, exit_on_shutdown: bool) {
+    let saved = handle.metrics().counter("serve.snapshot_saved");
+    let age = handle.metrics().gauge("serve.snapshot_age_s");
+    let mut last_save = Instant::now();
+    loop {
+        if shutdown_requested() {
+            if let Err(e) = final_export(handle, cfg) {
+                eprintln!("widesa serve: shutdown export failed: {e:#}");
+            }
+            if exit_on_shutdown {
+                std::process::exit(0);
+            }
+            return;
+        }
+        age.set(last_save.elapsed().as_secs_f64());
+        if let (Some(interval), Some(path)) =
+            (cfg.snapshot_interval, handle.config().snapshot.as_ref())
+        {
+            if last_save.elapsed() >= interval {
+                match handle.save_snapshot(path) {
+                    Ok(_) => {
+                        saved.inc();
+                        last_save = Instant::now();
+                        age.set(0.0);
+                    }
+                    Err(e) => eprintln!("widesa serve: periodic snapshot failed: {e:#}"),
+                }
+            }
+        }
+        thread::sleep(POLL);
+    }
+}
+
+/// Write every configured shutdown artifact: design-cache snapshot (when
+/// `ServeConfig::snapshot` is set), metrics JSON, and the Chrome trace.
+/// Idempotent apart from draining the trace buffer — calling it twice
+/// rewrites snapshot/metrics identically and leaves a shorter trace.
+pub fn final_export(handle: &ServeHandle, cfg: &LifecycleConfig) -> Result<()> {
+    if let Some(path) = handle.config().snapshot.clone() {
+        let n = handle
+            .save_snapshot(&path)
+            .with_context(|| format!("saving snapshot to {}", path.display()))?;
+        handle.metrics().counter("serve.snapshot_saved").inc();
+        handle.metrics().gauge("serve.snapshot_age_s").set(0.0);
+        eprintln!("widesa serve: snapshot — {n} designs to {}", path.display());
+    }
+    if let Some(path) = &cfg.metrics_out {
+        let doc = Json::obj(vec![
+            ("serve", handle.metrics().snapshot()),
+            ("pipeline", metrics::global().snapshot()),
+        ]);
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing metrics to {}", path.display()))?;
+    }
+    if let Some(path) = &cfg.trace_out {
+        let doc = trace::export_chrome(&trace::drain_events());
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::server::ServeConfig;
+
+    /// One combined test: the shutdown flag, the watchdog's periodic
+    /// snapshot + age bookkeeping, and `final_export`'s three artifacts
+    /// all share the process-global `SHUTDOWN`, so exercising them in a
+    /// single function keeps the flag's state unambiguous even when the
+    /// test harness runs modules in parallel.
+    #[test]
+    fn watchdog_snapshots_periodically_and_exports_on_shutdown() {
+        let dir = std::env::temp_dir().join(format!("widesa-lifecycle-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let snap = dir.join("cache.snapshot");
+        let metrics_out = dir.join("metrics.json");
+        let trace_out = dir.join("trace.json");
+
+        reset_shutdown_for_tests();
+        assert!(!shutdown_requested());
+
+        let handle = ServeHandle::new(ServeConfig {
+            snapshot: Some(snap.clone()),
+            ..Default::default()
+        });
+        let cfg = LifecycleConfig {
+            snapshot_interval: Some(Duration::from_millis(0)),
+            metrics_out: Some(metrics_out.clone()),
+            trace_out: Some(trace_out.clone()),
+        };
+        assert!(cfg.wants_export());
+        let watchdog = spawn_watchdog(handle.clone(), cfg.clone(), false);
+
+        // interval 0 ⇒ a snapshot on every poll tick; wait for at least
+        // one, bounded rather than flaky-fixed.
+        let saved = handle.metrics().counter("serve.snapshot_saved");
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while saved.get() == 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(20));
+        }
+        assert!(saved.get() >= 1, "watchdog never wrote a periodic snapshot");
+        assert!(snap.exists());
+
+        request_shutdown();
+        watchdog.join().unwrap();
+        assert!(metrics_out.exists(), "final export skipped metrics_out");
+        assert!(trace_out.exists(), "final export skipped trace_out");
+
+        // Both artifacts must parse, and the metrics doc must carry the
+        // serve/pipeline split with our snapshot counter inside.
+        let m = crate::util::json::parse(&std::fs::read_to_string(&metrics_out).unwrap()).unwrap();
+        let count = m
+            .get("serve")
+            .and_then(|s| s.get("counters"))
+            .and_then(|c| c.get("serve.snapshot_saved"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert!(count >= 2, "periodic + final saves should both count");
+        assert!(m.get("pipeline").is_some());
+        let t = crate::util::json::parse(&std::fs::read_to_string(&trace_out).unwrap()).unwrap();
+        assert!(t.get("traceEvents").and_then(Json::as_arr).is_some());
+
+        // Age gauge was reset by the final save.
+        let age = handle.metrics().gauge("serve.snapshot_age_s");
+        assert_eq!(age.get(), 0.0);
+
+        reset_shutdown_for_tests();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -28,6 +28,14 @@
 //!   to a JSON-lines file and warm-starts a restarted server, with
 //!   schema-versioned, canonically-stamped entries that self-evict when
 //!   stale ([`persist::SNAPSHOT_SCHEMA`]).
+//! * [`lifecycle`] — **graceful shutdown + periodic snapshots**: SIGTERM
+//!   and SIGINT flip an async-signal-safe flag; a watchdog thread writes
+//!   snapshots every `--snapshot-interval-s` and, at shutdown, the
+//!   metrics JSON (`--metrics-out`) and Chrome trace (`--trace-out`)
+//!   via [`lifecycle::final_export`]. Every request runs under a
+//!   `serve.request` span with a per-request trace ID that follows the
+//!   work across the DSE/P&R pools; `{"cmd": "stats"}` lines answer from
+//!   the metric registries ([`server::ServeHandle::metrics`]).
 //!
 //! Production admission control wraps the whole path: per-tenant
 //! token-bucket quotas and cold-compile queue-depth shedding reject with
@@ -57,12 +65,14 @@
 //! ```
 
 pub mod cache;
+pub mod lifecycle;
 pub mod persist;
 pub mod pool;
 pub mod protocol;
 pub mod server;
 
 pub use cache::{design_key, plan_key, CacheStats, ShardedCache};
+pub use lifecycle::LifecycleConfig;
 pub use persist::SNAPSHOT_SCHEMA;
 pub use pool::WorkerPool;
 pub use protocol::CompileRequest;

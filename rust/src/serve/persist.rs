@@ -933,8 +933,11 @@ pub fn parse_entry(line: &str) -> Result<(u64, CompiledDesign)> {
 }
 
 /// Write a snapshot of `entries` (atomically: temp file + rename, so a
-/// crash mid-write leaves the previous snapshot intact).
+/// crash mid-write leaves the previous snapshot intact). Counts
+/// `persist.snapshots_saved` / `persist.entries_saved` in the global
+/// registry and runs under a `persist.save` span.
 pub fn save_snapshot(path: &Path, entries: &[(u64, Arc<CompiledDesign>)]) -> Result<usize> {
+    let _span = crate::obs::trace::Span::begin("persist.save", "persist");
     let mut out = String::new();
     for (key, design) in entries {
         out.push_str(&entry_line(*key, design));
@@ -943,6 +946,9 @@ pub fn save_snapshot(path: &Path, entries: &[(u64, Arc<CompiledDesign>)]) -> Res
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, out)?;
     std::fs::rename(&tmp, path)?;
+    let m = crate::obs::metrics::global();
+    m.counter("persist.snapshots_saved").inc();
+    m.counter("persist.entries_saved").add(entries.len() as u64);
     Ok(entries.len())
 }
 
@@ -951,6 +957,7 @@ pub fn save_snapshot(path: &Path, entries: &[(u64, Arc<CompiledDesign>)]) -> Res
 /// invalid entries are skipped one by one — this function never panics
 /// on file content.
 pub fn load_snapshot(path: &Path) -> (Vec<(u64, CompiledDesign)>, usize) {
+    let _span = crate::obs::trace::Span::begin("persist.load", "persist");
     let Ok(text) = std::fs::read_to_string(path) else {
         return (Vec::new(), 0);
     };
@@ -965,6 +972,9 @@ pub fn load_snapshot(path: &Path) -> (Vec<(u64, CompiledDesign)>, usize) {
             Err(_) => skipped += 1,
         }
     }
+    let m = crate::obs::metrics::global();
+    m.counter("persist.entries_loaded").add(out.len() as u64);
+    m.counter("persist.entries_skipped").add(skipped as u64);
     (out, skipped)
 }
 

@@ -45,11 +45,21 @@
 //! "retry_after_ms":…}` ([`overloaded_line`]) so clients can back off
 //! instead of treating shed load as failure. The connection stays usable
 //! after either.
+//!
+//! ## Stats command
+//!
+//! `{"cmd": "stats", "id": …}` is answered without touching the compile
+//! path: `{"id":…,"ok":true,"stats":{…},"metrics":{"serve":…,
+//! "pipeline":…}}`, where `stats` mirrors [`crate::ServeStats`] and
+//! `metrics` carries the per-handle and process-global
+//! [`crate::obs::metrics::Registry`] snapshots ([`stats_line`]). The
+//! `stats` block and `metrics.serve.counters` read the *same* registry
+//! cells, so the two views reconcile by construction.
 
 use crate::recurrence::dtype::DType;
 use crate::recurrence::library;
 use crate::recurrence::spec::UniformRecurrence;
-use crate::serve::server::{CacheOutcome, Overloaded};
+use crate::serve::server::{CacheOutcome, Overloaded, ServeStats};
 use crate::util::json::{parse, Json};
 use crate::CompiledDesign;
 use anyhow::{anyhow, bail, Result};
@@ -279,6 +289,50 @@ pub fn response_line(
     .to_string()
 }
 
+/// If `line` is a `{"cmd": "stats"}` command, return its echoed id.
+/// Any other line (including unparseable ones) returns `None` and flows
+/// to the normal request path. Callers on the hot path should gate this
+/// behind a cheap `line.contains("\"cmd\"")` check to avoid a second
+/// JSON parse per compile request.
+pub fn stats_request(line: &str) -> Option<Json> {
+    let root = parse(line.trim()).ok()?;
+    if root.get("cmd")?.as_str()? != "stats" {
+        return None;
+    }
+    Some(root.get("id").cloned().unwrap_or(Json::Null))
+}
+
+/// Render the `"stats"` command response: the [`ServeStats`] snapshot
+/// plus both metric-registry snapshots (per-handle `serve`, process
+/// `pipeline`).
+pub fn stats_line(id: &Json, stats: &ServeStats, serve_metrics: Json, pipeline_metrics: Json) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(true)),
+        (
+            "stats",
+            Json::obj(vec![
+                ("hits", Json::num_u64(stats.hits)),
+                ("misses", Json::num_u64(stats.misses)),
+                ("deduped", Json::num_u64(stats.deduped)),
+                ("errors", Json::num_u64(stats.errors)),
+                ("shed", Json::num_u64(stats.shed)),
+                ("plan_hits", Json::num_u64(stats.plan_hits)),
+                ("cache_len", Json::num_usize(stats.cache.len)),
+                ("cache_evictions", Json::num_u64(stats.cache.evictions)),
+            ]),
+        ),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("serve", serve_metrics),
+                ("pipeline", pipeline_metrics),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
 /// Render an error response line (no trailing newline).
 pub fn error_line(id: &Json, msg: &str) -> String {
     Json::obj(vec![
@@ -419,6 +473,40 @@ mod tests {
         assert_eq!(v.get("overloaded").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("reason").unwrap().as_str(), Some("quota"));
         assert_eq!(v.get("retry_after_ms").unwrap().as_u64(), Some(250));
+    }
+
+    #[test]
+    fn stats_command_detected_and_rendered() {
+        assert!(stats_request(r#"{"cmd":"stats","id":4}"#).is_some());
+        assert_eq!(
+            stats_request(r#"{"cmd":"stats"}"#),
+            Some(Json::Null),
+            "missing id echoes null"
+        );
+        assert!(stats_request(r#"{"bench":"mm"}"#).is_none());
+        assert!(stats_request(r#"{"cmd":"shutdown"}"#).is_none());
+        assert!(stats_request("not json").is_none());
+
+        let stats = ServeStats {
+            hits: 3,
+            misses: 2,
+            deduped: 1,
+            ..Default::default()
+        };
+        let line = stats_line(
+            &Json::Num(4.0),
+            &stats,
+            Json::obj(vec![("counters", Json::obj(vec![]))]),
+            Json::obj(vec![("counters", Json::obj(vec![]))]),
+        );
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let s = v.get("stats").unwrap();
+        assert_eq!(s.get("hits").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("misses").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("deduped").unwrap().as_u64(), Some(1));
+        assert!(v.get("metrics").unwrap().get("serve").is_some());
+        assert!(v.get("metrics").unwrap().get("pipeline").is_some());
     }
 
     #[test]

@@ -39,6 +39,8 @@ use crate::coordinator::framework::{
 use crate::mapping::cost::{CostModel, PerfEstimate};
 use crate::mapping::dse::{self, Ranked};
 use crate::mapping::MappingCandidate;
+use crate::obs::metrics::{Counter, Histogram, Registry};
+use crate::obs::trace::{self, Span, TraceCtx};
 use crate::recurrence::spec::UniformRecurrence;
 use crate::serve::cache::{self, design_key, CacheStats, ShardedCache};
 use crate::serve::persist;
@@ -248,6 +250,45 @@ impl Flight {
     }
 }
 
+/// The handle's metric cells: every [`ServeStats`] counter *is* a
+/// registry counter (one source of truth — the `"stats"` protocol
+/// command and [`ServeHandle::stats`] read the same atomics), with
+/// handles resolved once at construction so the hot path records
+/// lock-free. Per-handle (not global) so tests see deterministic counts
+/// under parallel test execution.
+struct Metrics {
+    registry: Arc<Registry>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    deduped: Arc<Counter>,
+    errors: Arc<Counter>,
+    shed: Arc<Counter>,
+    plan_hits: Arc<Counter>,
+    batch_coalesced: Arc<Counter>,
+    /// Cold-compile latency (µs), recorded by the single-flight leader.
+    compile_us: Arc<Histogram>,
+    /// End-to-end protocol request latency (µs), recorded per line.
+    request_us: Arc<Histogram>,
+}
+
+impl Metrics {
+    fn new() -> Self {
+        let registry = Arc::new(Registry::new());
+        Self {
+            hits: registry.counter("serve.hits"),
+            misses: registry.counter("serve.misses"),
+            deduped: registry.counter("serve.deduped"),
+            errors: registry.counter("serve.errors"),
+            shed: registry.counter("serve.shed"),
+            plan_hits: registry.counter("serve.plan_hits"),
+            batch_coalesced: registry.counter("serve.batch_coalesced"),
+            compile_us: registry.histogram("serve.compile_us"),
+            request_us: registry.histogram("serve.request_us"),
+            registry,
+        }
+    }
+}
+
 struct Inner {
     cfg: ServeConfig,
     cache: ShardedCache<Arc<CompiledDesign>>,
@@ -259,12 +300,7 @@ struct Inner {
     dse_pool: WorkerPool,
     tenants: Mutex<HashMap<String, TokenBucket>>,
     inflight: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    deduped: AtomicU64,
-    errors: AtomicU64,
-    shed: AtomicU64,
-    plan_hits: AtomicU64,
+    metrics: Metrics,
 }
 
 /// Occupies one cold-compile slot; releases it on drop (any exit path).
@@ -404,12 +440,7 @@ impl ServeHandle {
                 dse_pool,
                 tenants: Mutex::new(HashMap::new()),
                 inflight: AtomicU64::new(0),
-                hits: AtomicU64::new(0),
-                misses: AtomicU64::new(0),
-                deduped: AtomicU64::new(0),
-                errors: AtomicU64::new(0),
-                shed: AtomicU64::new(0),
-                plan_hits: AtomicU64::new(0),
+                metrics: Metrics::new(),
             }),
         };
         if let Some(path) = handle.inner.cfg.snapshot.clone() {
@@ -429,15 +460,24 @@ impl ServeHandle {
     }
 
     pub fn stats(&self) -> ServeStats {
+        let m = &self.inner.metrics;
         ServeStats {
-            hits: self.inner.hits.load(Ordering::Relaxed),
-            misses: self.inner.misses.load(Ordering::Relaxed),
-            deduped: self.inner.deduped.load(Ordering::Relaxed),
-            errors: self.inner.errors.load(Ordering::Relaxed),
-            shed: self.inner.shed.load(Ordering::Relaxed),
-            plan_hits: self.inner.plan_hits.load(Ordering::Relaxed),
+            hits: m.hits.get(),
+            misses: m.misses.get(),
+            deduped: m.deduped.get(),
+            errors: m.errors.get(),
+            shed: m.shed.get(),
+            plan_hits: m.plan_hits.get(),
             cache: self.inner.cache.stats(),
         }
+    }
+
+    /// The handle's metric registry (the cells behind [`ServeStats`],
+    /// plus latency histograms like `serve.compile_us`). Snapshot it via
+    /// [`Registry::snapshot`] — that is exactly what the `"stats"`
+    /// protocol command and `widesa serve --metrics-out` emit.
+    pub fn metrics(&self) -> &Registry {
+        &self.inner.metrics.registry
     }
 
     /// Warm-start the design cache from a snapshot file. Returns
@@ -480,14 +520,20 @@ impl ServeHandle {
         cfg: &WideSaConfig,
     ) -> Result<ServeResult> {
         let inner = &*self.inner;
-        if let Err(o) = inner.admit_quota(tenant) {
-            inner.shed.fetch_add(1, Ordering::Relaxed);
+        let quota_span = Span::begin("serve.quota", "serve");
+        let admitted = inner.admit_quota(tenant);
+        drop(quota_span);
+        if let Err(o) = admitted {
+            inner.metrics.shed.inc();
             return Err(o.into());
         }
+        let probe_span = Span::begin("serve.cache_probe", "serve");
         let key = design_key(rec, cfg);
+        let probed = inner.cache.get(key);
+        drop(probe_span);
 
-        if let Some(design) = inner.cache.get(key) {
-            inner.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(design) = probed {
+            inner.metrics.hits.inc();
             return Ok(ServeResult {
                 design,
                 outcome: CacheOutcome::Hit,
@@ -509,7 +555,8 @@ impl ServeHandle {
         };
 
         if !leader {
-            inner.deduped.fetch_add(1, Ordering::Relaxed);
+            inner.metrics.deduped.inc();
+            let _wait_span = Span::begin("serve.flight_wait", "serve");
             return match flight.wait() {
                 Ok(design) => Ok(ServeResult {
                     design,
@@ -520,8 +567,8 @@ impl ServeHandle {
                     // Sheds propagate typed to followers but count as
                     // shed load, not compile errors.
                     match &fe {
-                        FlightError::Overloaded(_) => inner.shed.fetch_add(1, Ordering::Relaxed),
-                        _ => inner.errors.fetch_add(1, Ordering::Relaxed),
+                        FlightError::Overloaded(_) => inner.metrics.shed.inc(),
+                        _ => inner.metrics.errors.inc(),
                     };
                     Err(fe.into_error())
                 }
@@ -541,7 +588,7 @@ impl ServeHandle {
         // cold key). Without this, a request racing the tail of another
         // compile would compile the same design twice.
         if let Some(design) = inner.cache.get(key) {
-            inner.hits.fetch_add(1, Ordering::Relaxed);
+            inner.metrics.hits.inc();
             guard.resolve(Ok(Arc::clone(&design)));
             return Ok(ServeResult {
                 design,
@@ -556,20 +603,25 @@ impl ServeHandle {
         let _slot = match inner.acquire_inflight() {
             Ok(slot) => slot,
             Err(o) => {
-                inner.shed.fetch_add(1, Ordering::Relaxed);
+                inner.metrics.shed.inc();
                 guard.resolve(Err(FlightError::Overloaded(o.clone())));
                 return Err(o.into());
             }
         };
-        inner.misses.fetch_add(1, Ordering::Relaxed);
+        inner.metrics.misses.inc();
+        let compile_span = Span::begin("serve.cold_compile", "serve");
         let compiled = self.cold_compile(rec, cfg);
+        inner
+            .metrics
+            .compile_us
+            .record((compile_span.end_ms() * 1e3) as u64);
         let published: Result<Arc<CompiledDesign>, FlightError> = match &compiled {
             Ok(design) => {
                 inner.cache.insert(key, Arc::clone(design));
                 Ok(Arc::clone(design))
             }
             Err(e) => {
-                inner.errors.fetch_add(1, Ordering::Relaxed);
+                inner.metrics.errors.inc();
                 Err(FlightError::of(e))
             }
         };
@@ -595,7 +647,8 @@ impl ServeHandle {
         for (rec, cfg) in reqs {
             let key = design_key(rec, cfg);
             if let Some(prev) = first.get(&key) {
-                self.inner.deduped.fetch_add(1, Ordering::Relaxed);
+                self.inner.metrics.deduped.inc();
+                self.inner.metrics.batch_coalesced.inc();
                 out.push(match prev {
                     Ok(design) => Ok(ServeResult {
                         design: Arc::clone(design),
@@ -659,12 +712,18 @@ impl ServeHandle {
         }
         let ws = Arc::new(ws);
         let model = Arc::new(model);
+        // carry the request's trace ID into the pool so the fallback
+        // P&R spans correlate with this request across worker threads
+        let trace_id = trace::current_trace();
         type EvalJob = Box<dyn FnOnce() -> CompiledDesign + Send>;
         let jobs: Vec<EvalJob> = top
             .into_iter()
             .map(|candidate| {
                 let (ws, model) = (Arc::clone(&ws), Arc::clone(&model));
-                Box::new(move || ws.evaluate_candidate(&model, candidate)) as EvalJob
+                Box::new(move || {
+                    let _ctx = TraceCtx::set(trace_id);
+                    ws.evaluate_candidate(&model, candidate)
+                }) as EvalJob
             })
             .collect();
         let mut designs = self.inner.dse_pool.scatter(jobs);
@@ -684,7 +743,7 @@ impl ServeHandle {
     fn plan_for(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Arc<dse::DsePlan> {
         let key = cache::plan_key(rec, cfg);
         if let Some(plan) = self.inner.plans.get(key) {
-            self.inner.plan_hits.fetch_add(1, Ordering::Relaxed);
+            self.inner.metrics.plan_hits.inc();
             return plan;
         }
         let plan = Arc::new(dse::plan(rec, &cfg.board, &cfg.constraints));
@@ -698,23 +757,30 @@ impl ServeHandle {
     /// then go through the canonical [`dse::rank`] — bit-identical to
     /// the serial path.
     fn explore_all_pooled(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Ranked {
+        let _dse = Span::begin("dse", "dse");
         let plan = self.plan_for(rec, cfg);
         let choices = plan.choices.clone();
         if self.inner.dse_pool.workers() <= 1 || choices.len() <= 1 {
             return dse::score_serial(rec, &cfg.board, &cfg.constraints, &plan, choices);
         }
-        // Pool jobs are 'static: share the invariants behind Arcs.
+        // Pool jobs are 'static: share the invariants behind Arcs. Each
+        // job re-installs this request's trace ID on its worker thread
+        // so its dse.score span correlates across the pool.
         type ScoreJob = Box<dyn FnOnce() -> Option<(MappingCandidate, PerfEstimate)> + Send>;
         let rec = Arc::new(rec.clone());
         let model: Arc<CostModel> = Arc::new(dse::scoring_model(&cfg.board, &cfg.constraints));
         let cons = Arc::new(cfg.constraints.clone());
+        let trace_id = trace::current_trace();
         let jobs: Vec<ScoreJob> = choices
             .into_iter()
             .map(|choice| {
                 let (rec, model, cons, plan) =
                     (Arc::clone(&rec), Arc::clone(&model), Arc::clone(&cons), Arc::clone(&plan));
-                Box::new(move || dse::score_choice(&rec, &model, &cons, &plan, choice))
-                    as ScoreJob
+                Box::new(move || {
+                    let _ctx = TraceCtx::set(trace_id);
+                    let _span = Span::begin("dse.score", "dse");
+                    dse::score_choice(&rec, &model, &cons, &plan, choice)
+                }) as ScoreJob
             })
             .collect();
         let scored = self.inner.dse_pool.scatter(jobs);
@@ -743,7 +809,34 @@ impl ServeHandle {
     /// panics outward. The one-response-per-request contract holds even
     /// for the single-flight leader whose compile dies: followers get
     /// the `FlightGuard` error, the leader's requester gets this one.
+    ///
+    /// Each line gets a fresh trace ID and runs under a `serve.request`
+    /// root span; the ID rides into the DSE/P&R pool jobs so one
+    /// request's spans correlate across threads in a Chrome-trace
+    /// export. `{"cmd": "stats"}` lines are answered from the metric
+    /// registries without touching the compile path.
     pub fn handle_line(&self, line: &str) -> String {
+        // cheap precheck: compile requests have no "cmd" field, so the
+        // hot path never parses twice
+        if line.contains("\"cmd\"") {
+            if let Some(id) = protocol::stats_request(line) {
+                return protocol::stats_line(
+                    &id,
+                    &self.stats(),
+                    self.inner.metrics.registry.snapshot(),
+                    crate::obs::metrics::global().snapshot(),
+                );
+            }
+        }
+        let _ctx = TraceCtx::set(trace::next_trace_id());
+        let root = Span::begin("serve.request", "serve");
+        let out = self.handle_request_line(line);
+        self.inner.metrics.request_us.record((root.end_ms() * 1e3) as u64);
+        out
+    }
+
+    fn handle_request_line(&self, line: &str) -> String {
+        let parse_span = Span::begin("serve.parse", "serve");
         let req = match protocol::parse_request(line) {
             Ok(req) => req,
             Err(e) => return protocol::error_line(&crate::util::json::Json::Null, &e.to_string()),
@@ -752,6 +845,7 @@ impl ServeHandle {
             Ok(rec) => rec,
             Err(e) => return protocol::error_line(&req.id, &e.to_string()),
         };
+        drop(parse_span);
         let cfg = self.effective_config(&req);
         let tenant = req.tenant.clone().unwrap_or_default();
         let t0 = Instant::now();

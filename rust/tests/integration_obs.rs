@@ -1,0 +1,200 @@
+//! Integration tests for the `widesa::obs` layer: Chrome-trace
+//! well-formedness and span-nesting invariants over random recurrences
+//! (testkit generators), metric-registry determinism under concurrent
+//! serve traffic, reconciliation of the `"stats"` protocol command with
+//! `ServeStats`, and the committed `BENCH_trend.jsonl` seed.
+//!
+//! Tracing state (the event sink, the enabled flag) is process-global
+//! and the test harness runs in parallel, so every tracing test filters
+//! the sink by its own trace IDs and never asserts on the sink as a
+//! whole.
+
+mod testkit;
+
+use widesa::coordinator::framework::{WideSa, WideSaConfig};
+use widesa::obs::trace::{self, Span, TraceCtx};
+use widesa::obs::trend;
+use widesa::serve::{ServeConfig, ServeHandle};
+use widesa::util::json::{parse, Json};
+use widesa::util::rng::XorShift64;
+use widesa::DseConstraints;
+
+fn small_handle() -> ServeHandle {
+    ServeHandle::new(ServeConfig {
+        base: WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(32),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        cache_capacity: 16,
+        cache_shards: 4,
+        dse_threads: 4,
+        request_workers: 4,
+        ..Default::default()
+    })
+}
+
+/// Property: any compile — random recurrence, random AIE budget, legal
+/// or not — exports a Chrome trace that passes the same validator
+/// `widesa obs-check` runs: well-formed "X" events, per-thread nesting,
+/// dse.*/pnr.* under their parents, one trace ID throughout.
+#[test]
+fn traced_compiles_export_valid_chrome_traces() {
+    trace::set_enabled(true);
+    let mut rng = XorShift64::new(0xB0B5);
+    for case in 0..testkit::cases(6) {
+        let rec = testkit::random_recurrence(&mut rng);
+        let cons = testkit::random_constraints(&mut rng);
+        let id = trace::next_trace_id();
+        {
+            let _ctx = TraceCtx::set(id);
+            let root = Span::begin("map", "cli");
+            // a failed mapping still closes every span it opened
+            let _ = WideSa::new(WideSaConfig {
+                constraints: cons,
+                ..Default::default()
+            })
+            .compile(&rec);
+            drop(root);
+        }
+        let evs: Vec<_> = trace::snapshot_events()
+            .into_iter()
+            .filter(|e| e.trace_id == id)
+            .collect();
+        assert!(!evs.is_empty(), "case {case} ({}): no events", rec.name);
+        let doc = trace::export_chrome(&evs);
+        let report = trace::validate_chrome(&doc)
+            .unwrap_or_else(|e| panic!("case {case} ({}): {e:#}", rec.name));
+        assert_eq!(report.root_name, "map", "case {case}");
+        assert_eq!(report.trace_ids, 1, "case {case}");
+    }
+}
+
+/// The serve registry snapshot is byte-stable when quiescent and its
+/// counters agree with `ServeStats` after genuinely concurrent traffic.
+#[test]
+fn registry_snapshot_is_deterministic_under_concurrent_serve_traffic() {
+    let handle = small_handle();
+    let line = r#"{"id":1,"bench":"fir","dims":[65536,15],"max_aies":32}"#;
+    let first = parse(&handle.handle_line(line)).unwrap();
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true));
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                for _ in 0..25 {
+                    handle.handle_line(line);
+                }
+            });
+        }
+    });
+    let stats = handle.stats();
+    assert_eq!(
+        stats.hits + stats.misses + stats.deduped,
+        201,
+        "every request lands in exactly one outcome counter"
+    );
+    let snap1 = handle.metrics().snapshot().to_string();
+    let snap2 = handle.metrics().snapshot().to_string();
+    assert_eq!(snap1, snap2, "quiescent snapshots must be byte-identical");
+    let doc = parse(&snap1).unwrap();
+    let counter = |name: &str| {
+        doc.get("counters")
+            .and_then(|c| c.get(name))
+            .and_then(Json::as_u64)
+            .unwrap_or_else(|| panic!("missing counter {name}"))
+    };
+    assert_eq!(counter("serve.hits"), stats.hits);
+    assert_eq!(counter("serve.misses"), stats.misses);
+    assert_eq!(counter("serve.deduped"), stats.deduped);
+    // every handled line lands in the request-latency histogram
+    let req_count = doc
+        .get("histograms")
+        .and_then(|h| h.get("serve.request_us"))
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert_eq!(req_count, 201);
+}
+
+/// The in-band `{"cmd":"stats"}` answer reconciles with the
+/// programmatic `ServeStats` view and carries both metric registries.
+#[test]
+fn stats_command_reconciles_with_serve_stats() {
+    let handle = small_handle();
+    let line = r#"{"id":7,"bench":"fir","dims":[131072,15],"max_aies":32}"#;
+    let cold = parse(&handle.handle_line(line)).unwrap();
+    assert_eq!(cold.get("cached").and_then(Json::as_bool), Some(false));
+    let hit = parse(&handle.handle_line(line)).unwrap();
+    assert_eq!(hit.get("cached").and_then(Json::as_bool), Some(true));
+    let bad = parse(&handle.handle_line("{\"id\":8}")).unwrap();
+    assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+
+    let out = parse(&handle.handle_line(r#"{"cmd":"stats","id":99}"#)).unwrap();
+    assert_eq!(out.get("id").and_then(Json::as_u64), Some(99));
+    assert_eq!(out.get("ok").and_then(Json::as_bool), Some(true));
+    let s = handle.stats();
+    let got = |k: &str| out.get("stats").and_then(|v| v.get(k)).and_then(Json::as_u64);
+    assert_eq!(got("hits"), Some(s.hits));
+    assert_eq!(got("misses"), Some(s.misses));
+    assert_eq!(got("deduped"), Some(s.deduped));
+    assert_eq!(got("errors"), Some(s.errors));
+    assert_eq!(got("shed"), Some(s.shed));
+    assert_eq!(got("plan_hits"), Some(s.plan_hits));
+    assert_eq!(got("cache_len"), Some(s.cache.len as u64));
+
+    // the metrics payload is the same registry the handle exposes
+    let m = out.get("metrics").expect("metrics in stats response");
+    let serve_counters = m.get("serve").and_then(|v| v.get("counters")).unwrap();
+    assert_eq!(serve_counters.get("serve.hits").and_then(Json::as_u64), Some(s.hits));
+    assert!(m.get("pipeline").and_then(|v| v.get("counters")).is_some());
+
+    // the stats line itself bypasses the request path: three data lines
+    // handled, three request_us samples
+    let req_count = m
+        .get("serve")
+        .and_then(|v| v.get("histograms"))
+        .and_then(|h| h.get("serve.request_us"))
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert_eq!(req_count, 3);
+}
+
+/// `stage_ms` in a served design is span-derived: each stage is
+/// positive, and the stages partition (don't exceed) the recorded P&R
+/// wall time.
+#[test]
+fn served_stage_timings_partition_the_pnr_wall() {
+    let handle = small_handle();
+    let rec = widesa::recurrence::library::fir(65536, 15, widesa::DType::F32);
+    let res = handle.compile(&rec).unwrap();
+    let c = &res.design.compile;
+    let stages = &c.stages;
+    assert!(stages.place_ms >= 0.0 && stages.assign_ms >= 0.0 && stages.route_ms >= 0.0);
+    let sum_s = (stages.place_ms + stages.assign_ms + stages.route_ms) / 1e3;
+    assert!(
+        sum_s <= c.wall_s + 1e-3,
+        "stage sum {sum_s}s exceeds P&R wall {}s",
+        c.wall_s
+    );
+}
+
+/// The committed trend seed parses under the same reader CI appends
+/// with, and every line carries the schema + commit keys.
+#[test]
+fn committed_trend_seed_parses() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_trend.jsonl");
+    let text = std::fs::read_to_string(&path).expect("BENCH_trend.jsonl committed at repo root");
+    let lines = trend::parse_trend(&text).expect("seed parses");
+    assert!(!lines.is_empty());
+    for line in &lines {
+        assert_eq!(line.get("schema").and_then(Json::as_u64), Some(1));
+        assert!(line.get("commit").and_then(Json::as_str).is_some());
+        assert!(line.get("serve").is_some() && line.get("compile").is_some());
+    }
+}
