@@ -11,7 +11,7 @@ ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 OBS_SMOKE_DIR := target/obs-smoke
 
-.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke energy-smoke clean
 
 build:
 	cargo build --release
@@ -72,16 +72,19 @@ obs-smoke: build
 # Mutation-style suite smoke: prove the tests would notice. Positive
 # controls first (each guard passes unmutated), then each WIDESA_MUTATE
 # seam must make its guard FAIL — a suite that still passes under a
-# halved cost-model peak, a disabled admission quota, or an off-by-one
-# histogram bucketing is not testing what it claims to.
+# halved cost-model peak, a disabled admission quota, an off-by-one
+# histogram bucketing, or a +7 W static-power drift is not testing what
+# it claims to.
 mutation-smoke:
 	cargo test -q --lib mm_f32_lands_near_paper
 	cargo test -q --lib quota_admission_is_per_tenant
 	cargo test -q --lib histogram_bucketing_is_exact
+	cargo test -q --lib widesa_power_near_55w
 	! WIDESA_MUTATE=cost-peak cargo test -q --lib mm_f32_lands_near_paper
 	! WIDESA_MUTATE=quota-grant cargo test -q --lib quota_admission_is_per_tenant
 	! WIDESA_MUTATE=obs-bucket cargo test -q --lib histogram_bucketing_is_exact
-	@echo "mutation-smoke OK (all three seams detected)"
+	! WIDESA_MUTATE=power-static cargo test -q --lib widesa_power_near_55w
+	@echo "mutation-smoke OK (all four seams detected)"
 
 # Gate the exact-port ranking: scoring a candidate with exact merged
 # port counts must cost ≤ 2× the legacy analytic score (bench_rank exits
@@ -106,6 +109,19 @@ pnr-smoke:
 workloads-smoke: build
 	cargo test -q --test integration_workloads
 	./target/release/widesa workloads
+
+# Gate the energy pathway: the shared power model must keep the Table IV
+# calibration (fp32 MM normalised TOPS/W within tolerance), every energy
+# row must carry a consistent power estimate and a non-empty Pareto
+# frontier, and the Pareto ranking law (non-dominated frontier,
+# insertion-order independence, serial ≡ parallel) must hold on the
+# Table II corpus — then print the energy table (docs/ENERGY.md).
+energy-smoke: build
+	cargo test -q --lib eval::energy
+	cargo test -q --lib eval::table4
+	cargo test -q --test divergence_corpus pareto_law_holds_on_all_table2_recurrences
+	cargo test -q --test cache_compat
+	./target/release/widesa energy
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

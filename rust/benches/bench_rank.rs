@@ -85,7 +85,7 @@ fn main() {
             winner.summary(),
             stats.in_ports_after,
             stats.out_ports_after,
-            est.tops
+            est.perf.tops
         );
     }
 

@@ -32,7 +32,7 @@ fn main() {
     let hit = bench("serve/cache-hit", 2000, || {
         let r = handle.compile(&rec).expect("hit");
         assert_eq!(r.outcome, CacheOutcome::Hit);
-        std::hint::black_box(r.design.estimate.tops);
+        std::hint::black_box(r.design.estimate.perf.tops);
     });
     let speedup = cold_s / hit.median_s.max(1e-12);
     println!("cache-hit speedup over cold compile: {speedup:.0}×");

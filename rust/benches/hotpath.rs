@@ -36,7 +36,7 @@ fn main() {
 
     println!("== L3 hot paths ==");
     bench("cost-model/estimate", 2000, || {
-        std::hint::black_box(model.estimate(&cand).tops);
+        std::hint::black_box(model.estimate(&cand).perf.tops);
     });
     bench("dse/explore-all (MM)", 50, || {
         std::hint::black_box(explore_all(&rec, &board, &cons).len());

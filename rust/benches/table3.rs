@@ -28,7 +28,7 @@ fn main() {
         });
         bench(&format!("pipeline/{name}"), 5, || {
             let d = ws.compile(&rec).unwrap();
-            std::hint::black_box(d.estimate.tops);
+            std::hint::black_box(d.estimate.perf.tops);
         });
     }
 

@@ -67,6 +67,6 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nOK: mapping, simulation, AOT replay and verification all agree.");
     println!("    paper Table III MM fp32: 4.15 TOPS @400 AIEs — our model: {:.2} TOPS",
-        paper_scale.estimate.tops);
+        paper_scale.estimate.perf.tops);
     Ok(())
 }

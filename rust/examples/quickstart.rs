@@ -31,13 +31,17 @@ fn main() -> anyhow::Result<()> {
 
     // The paper's headline metric: how much of the 8×50 array the mapping
     // actually keeps busy.
-    let used = design.estimate.aies;
+    let used = design.estimate.perf.aies;
     let total = ws.config.board.array.num_cores() as u64;
     println!(
         "AIE utilization: {used}/{total} cores = {:.1}% (MAC occupancy {:.1}%, {:.2} TOPS on-chip)",
         100.0 * used as f64 / total as f64,
-        100.0 * design.estimate.occupancy,
-        design.estimate.tops,
+        100.0 * design.estimate.perf.occupancy,
+        design.estimate.perf.tops,
+    );
+    println!(
+        "power estimate: {:.1} W → {:.4} TOPS/W (shared cost + power model)",
+        design.estimate.power.watts, design.estimate.power.tops_per_watt,
     );
 
     // 4. Inspect the generated AIE kernel (one program serves all cores).

@@ -26,13 +26,39 @@ pub struct PowerModel {
 impl Default for PowerModel {
     fn default() -> Self {
         Self {
-            static_w: 13.0,
+            static_w: 13.0 + static_w_mutation(),
             aie_w: 0.095,
             dsp_w: 0.0038,
             mover_w: 0.055,
             dram_w_per_gbs: 0.009,
         }
     }
+}
+
+/// Mutation seam for `make mutation-smoke`: `WIDESA_MUTATE=power-static`
+/// inflates the static rail draw, which must flip the Table IV
+/// calibration guards (`widesa_power_near_55w` here and in
+/// `eval::table4`). Read once so every model in the process agrees.
+fn static_w_mutation() -> f64 {
+    static DELTA: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *DELTA.get_or_init(|| match std::env::var("WIDESA_MUTATE").as_deref() {
+        Ok("power-static") => 7.0,
+        _ => 0.0,
+    })
+}
+
+/// Power-side half of a design estimate: absolute draw, efficiency, and
+/// the energy of one full pass. Produced next to every `PerfEstimate` by
+/// `mapping::cost::CostModel` (see `mapping::cost::Estimate`), always
+/// through one shared `PowerModel` — the one-power-model invariant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerEstimate {
+    /// Total board draw while the design runs (W).
+    pub watts: f64,
+    /// Energy efficiency (TOPS/W) at the estimate's throughput.
+    pub tops_per_watt: f64,
+    /// Energy of one full pass over the recurrence (J = W × s).
+    pub energy_j: f64,
 }
 
 /// What a design activates, for power accounting.
@@ -70,6 +96,48 @@ impl PowerModel {
             dram_gbs,
             aie_occupancy: 1.0,
         }
+    }
+
+    /// Price an activity profile at a given throughput and runtime.
+    ///
+    /// Pure: the estimate is fully determined by `(tops, seconds, act)`
+    /// and the model coefficients, which is what lets `serve::persist`
+    /// recompute power on snapshot load instead of serializing it.
+    pub fn estimate(&self, tops: f64, seconds: f64, act: &ActivityProfile) -> PowerEstimate {
+        let watts = self.total_w(act);
+        PowerEstimate {
+            watts,
+            tops_per_watt: tops / watts,
+            energy_j: watts * seconds,
+        }
+    }
+}
+
+/// Derive the activity profile of a mapped WideSA design from the
+/// numbers a `PerfEstimate` already carries. One derivation shared by
+/// the cost model, the simulator, and the energy eval tables: active
+/// AIEs, merged PLIO channels (post port-model), the per-dtype mover
+/// DSP budget from Table IV, and achieved DRAM GB/s capped at the
+/// board's practical ceiling.
+pub fn design_activity(
+    dtype: DType,
+    aies: u64,
+    plio_channels: u32,
+    dram_bytes: u64,
+    seconds: f64,
+    occupancy: f64,
+) -> ActivityProfile {
+    let dram_gbs = if seconds > 0.0 {
+        (dram_bytes as f64 / seconds / 1e9).min(100.0)
+    } else {
+        0.0
+    };
+    ActivityProfile {
+        aies: aies.min(u32::MAX as u64) as u32,
+        dsps: widesa_mover_dsps(dtype),
+        plio_channels,
+        dram_gbs,
+        aie_occupancy: occupancy,
     }
 }
 
@@ -158,5 +226,30 @@ mod tests {
         let small = m.total_w(&PowerModel::widesa_activity(100, 20, 60, 10.0));
         let large = m.total_w(&PowerModel::widesa_activity(400, 78, 152, 90.0));
         assert!(large > small);
+    }
+
+    #[test]
+    fn estimate_is_consistent_with_total_w() {
+        let m = PowerModel::default();
+        let act = PowerModel::widesa_activity(400, 78, 152, 90.0);
+        let est = m.estimate(4.15, 2.0, &act);
+        assert_eq!(est.watts, m.total_w(&act));
+        assert_eq!(est.tops_per_watt, 4.15 / est.watts);
+        assert_eq!(est.energy_j, est.watts * 2.0);
+    }
+
+    #[test]
+    fn design_activity_caps_dram_and_uses_mover_dsps() {
+        // 1 TB moved in 1 s would be 1000 GB/s; the profile caps at the
+        // board's practical 100 GB/s ceiling.
+        let act = design_activity(DType::F32, 400, 78, 1_000_000_000_000, 1.0, 0.9);
+        assert_eq!(act.aies, 400);
+        assert_eq!(act.dsps, widesa_mover_dsps(DType::F32));
+        assert_eq!(act.plio_channels, 78);
+        assert_eq!(act.dram_gbs, 100.0);
+        assert_eq!(act.aie_occupancy, 0.9);
+        // Degenerate zero-runtime designs draw no DRAM power rather
+        // than dividing by zero.
+        assert_eq!(design_activity(DType::I8, 1, 1, 100, 0.0, 1.0).dram_gbs, 0.0);
     }
 }

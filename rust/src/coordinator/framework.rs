@@ -7,8 +7,10 @@ use crate::arch::vck5000::BoardConfig;
 use crate::codegen::{self, CodeBundle};
 use crate::graph::builder::{build, MappedGraph};
 use crate::graph::packet::{merge_ports_with_budget, MergeStats};
-use crate::mapping::cost::{CostModel, PerfEstimate};
-use crate::mapping::dse::{explore_all, explore_all_parallel, scoring_model, DseConstraints};
+use crate::mapping::cost::{CostModel, Estimate};
+use crate::mapping::dse::{
+    explore_all, explore_all_parallel, frontier_size, scoring_model, DseConstraints, Ranked,
+};
 use crate::mapping::MappingCandidate;
 use crate::obs::trace::{self, Span, TraceCtx};
 use crate::place_route::compiler::{compile, CompileOutcome};
@@ -70,14 +72,26 @@ impl Default for WideSaConfig {
     }
 }
 
+/// What the DSE ranking's throughput/efficiency tradeoff looked like at
+/// compile time: how many of the scored candidates sat on the Pareto
+/// frontier. Carried on every [`CompiledDesign`]; `(0, 0)` when the
+/// design was built directly from a candidate without a ranking.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrontierSummary {
+    /// Candidates no rival beat on both TOPS and TOPS/W.
+    pub frontier: usize,
+    /// Total candidates the DSE ranked.
+    pub candidates: usize,
+}
+
 /// Everything the framework produces for one recurrence.
 pub struct CompiledDesign {
     pub candidate: MappingCandidate,
-    /// The DSE's ranking view of this design, re-priced under the
-    /// framework's mover configuration. Under the default
+    /// The DSE's ranking view of this design (perf + power), re-priced
+    /// under the framework's mover configuration. Under the default
     /// [`crate::mapping::cost::PortModel::Exact`] this already uses the
     /// predicted merged port counts.
-    pub estimate: PerfEstimate,
+    pub estimate: Estimate,
     /// The same model evaluated with the merged PLIO port counts that
     /// packet merging *actually realised* on the built graph
     /// ([`CompiledDesign::merge_stats`]). Under
@@ -86,7 +100,10 @@ pub struct CompiledDesign {
     /// [`CompiledDesign::estimate`]; under the legacy analytic ranking
     /// ([`DseConstraints::analytic_ranking`]) it diverges exactly when
     /// port packing is the binding resource.
-    pub estimate_exact: PerfEstimate,
+    pub estimate_exact: Estimate,
+    /// Pareto-frontier summary of the ranking this design was selected
+    /// from (see [`FrontierSummary`]).
+    pub frontier: FrontierSummary,
     pub graph: MappedGraph,
     pub merge_stats: MergeStats,
     pub compile: CompileOutcome,
@@ -97,14 +114,19 @@ pub struct CompiledDesign {
 impl CompiledDesign {
     pub fn report(&self) -> String {
         format!(
-            "{}\n  mapping : {}\n  est     : {:.3} TOPS ({:.4}/AIE), bound {}\n  exact   : {:.3} TOPS with merged ports, bound {}\n  sim     : {}\n  ports   : {} in / {} out (merged from {} / {})\n  compile : success={} congestion={} in {:.3}s (place {:.1} ms, assign {:.1} ms, route {:.1} ms)\n",
+            "{}\n  mapping : {}\n  est     : {:.3} TOPS ({:.4}/AIE), bound {}\n  exact   : {:.3} TOPS with merged ports, bound {}\n  power   : {:.1} W, {:.4} TOPS/W, {:.2} J/pass ({} of {} candidates Pareto-optimal)\n  sim     : {}\n  ports   : {} in / {} out (merged from {} / {})\n  compile : success={} congestion={} in {:.3}s (place {:.1} ms, assign {:.1} ms, route {:.1} ms)\n",
             self.candidate.rec.name,
             self.candidate.summary(),
-            self.estimate.tops,
-            self.estimate.tops_per_aie,
-            self.estimate.bound,
-            self.estimate_exact.tops,
-            self.estimate_exact.bound,
+            self.estimate.perf.tops,
+            self.estimate.perf.tops_per_aie,
+            self.estimate.perf.bound,
+            self.estimate_exact.perf.tops,
+            self.estimate_exact.perf.bound,
+            self.estimate_exact.power.watts,
+            self.estimate_exact.power.tops_per_watt,
+            self.estimate_exact.power.energy_j,
+            self.frontier.frontier,
+            self.frontier.candidates,
             self.sim.summary(),
             self.merge_stats.in_ports_after,
             self.merge_stats.out_ports_after,
@@ -245,6 +267,7 @@ impl WideSa {
             candidate,
             estimate,
             estimate_exact,
+            frontier: FrontierSummary::default(),
             graph,
             merge_stats,
             compile: compile_out,
@@ -279,12 +302,18 @@ impl WideSa {
     /// [`WideSa::select_design`] picks the same design the serial
     /// first-success loop would. Returns a typed [`NoLegalMapping`] error
     /// when the DSE produced no candidates.
-    pub fn compile_ranked(
-        &self,
-        rec: &UniformRecurrence,
-        ranked: Vec<(MappingCandidate, PerfEstimate)>,
-    ) -> Result<CompiledDesign> {
+    pub fn compile_ranked(&self, rec: &UniformRecurrence, ranked: Ranked) -> Result<CompiledDesign> {
         let model = self.cost_model();
+        // Frontier summary of the full ranking, attached to whichever
+        // design the back half settles on (the serve layer surfaces it).
+        let summary = FrontierSummary {
+            frontier: frontier_size(&ranked),
+            candidates: ranked.len(),
+        };
+        let attach = |mut d: CompiledDesign| {
+            d.frontier = summary;
+            d
+        };
         let mut top: Vec<MappingCandidate> = ranked
             .into_iter()
             .take(FALLBACK_CANDIDATES)
@@ -297,13 +326,13 @@ impl WideSa {
             for candidate in top {
                 let design = self.evaluate_candidate(&model, candidate);
                 if design.compile.success {
-                    return Ok(design);
+                    return Ok(attach(design));
                 }
                 if fallback.is_none() {
                     fallback = Some(design);
                 }
             }
-            return fallback.ok_or_else(|| {
+            return fallback.map(attach).ok_or_else(|| {
                 NoLegalMapping {
                     recurrence: rec.name.clone(),
                 }
@@ -315,11 +344,11 @@ impl WideSa {
         // pure waste (slower than the serial short-circuit).
         let first = self.evaluate_candidate(&model, top.remove(0));
         if first.compile.success || top.is_empty() {
-            return Ok(first);
+            return Ok(attach(first));
         }
         let mut designs = self.evaluate_all(&model, top);
         designs.insert(0, first);
-        Self::select_design(designs).ok_or_else(|| {
+        Self::select_design(designs).map(attach).ok_or_else(|| {
             NoLegalMapping {
                 recurrence: rec.name.clone(),
             }
@@ -383,13 +412,22 @@ mod tests {
         });
         let d = ws.compile(&library::mm(8192, 8192, 8192, DType::F32)).unwrap();
         assert!(d.compile.success, "place & route must succeed");
-        assert!(d.estimate.tops > 3.0);
+        assert!(d.estimate.perf.tops > 3.0);
         assert!(d.sim.tops > 3.0);
         assert!(d.merge_stats.in_ports_after <= 78);
         assert!(d.merge_stats.out_ports_after <= 78);
         assert!(!d.code.aie_kernel.is_empty());
+        // power flows with the design: full-array MM draws well above
+        // the static rail, and the report publishes W and TOPS/W
+        assert!(d.estimate.power.watts > 20.0);
+        assert!(d.estimate.power.tops_per_watt > 0.0);
+        assert!(d.frontier.candidates > 0);
+        assert!(d.frontier.frontier >= 1);
+        assert!(d.frontier.frontier <= d.frontier.candidates);
         let report = d.report();
         assert!(report.contains("TOPS"));
+        assert!(report.contains("W,"), "report must print watts: {report}");
+        assert!(report.contains("TOPS/W"), "report must print TOPS/W: {report}");
     }
 
     #[test]
@@ -429,7 +467,9 @@ mod tests {
         let a = serial.compile(&rec).unwrap();
         let b = parallel.compile(&rec).unwrap();
         assert_eq!(a.candidate.summary(), b.candidate.summary());
-        assert_eq!(a.estimate.tops.to_bits(), b.estimate.tops.to_bits());
+        assert_eq!(a.estimate.perf.tops.to_bits(), b.estimate.perf.tops.to_bits());
+        assert_eq!(a.estimate.power.watts.to_bits(), b.estimate.power.watts.to_bits());
+        assert_eq!(a.frontier, b.frontier);
         assert_eq!(a.merge_stats, b.merge_stats);
     }
 
@@ -443,9 +483,9 @@ mod tests {
             ..Default::default()
         });
         let d = ws.compile(&library::mm(8192, 8192, 8192, DType::F32)).unwrap();
-        assert_eq!(d.estimate_exact.plio_in_ports as usize, d.merge_stats.in_ports_after);
-        assert_eq!(d.estimate_exact.plio_out_ports as usize, d.merge_stats.out_ports_after);
-        assert!(d.estimate_exact.tops > 0.0);
+        assert_eq!(d.estimate_exact.perf.plio_in_ports as usize, d.merge_stats.in_ports_after);
+        assert_eq!(d.estimate_exact.perf.plio_out_ports as usize, d.merge_stats.out_ports_after);
+        assert!(d.estimate_exact.perf.tops > 0.0);
         let report = d.report();
         assert!(report.contains("exact"));
     }
@@ -515,10 +555,13 @@ mod tests {
                 );
                 assert_eq!(serial.compile.success, sharded.compile.success);
                 assert_eq!(serial.merge_stats, sharded.merge_stats);
-                assert_eq!(serial.estimate.tops.to_bits(), sharded.estimate.tops.to_bits());
                 assert_eq!(
-                    serial.estimate_exact.tops.to_bits(),
-                    sharded.estimate_exact.tops.to_bits()
+                    serial.estimate.perf.tops.to_bits(),
+                    sharded.estimate.perf.tops.to_bits()
+                );
+                assert_eq!(
+                    serial.estimate_exact.perf.tops.to_bits(),
+                    sharded.estimate_exact.perf.tops.to_bits()
                 );
             }
         }
@@ -543,16 +586,22 @@ mod tests {
         ] {
             let d = ws.compile(&rec).unwrap();
             assert_eq!(
-                d.estimate.plio_in_ports, d.estimate_exact.plio_in_ports,
+                d.estimate.perf.plio_in_ports, d.estimate_exact.perf.plio_in_ports,
                 "{}",
                 rec.name
             );
-            assert_eq!(d.estimate.plio_out_ports, d.estimate_exact.plio_out_ports);
+            assert_eq!(d.estimate.perf.plio_out_ports, d.estimate_exact.perf.plio_out_ports);
             assert_eq!(
-                d.estimate.tops.to_bits(),
-                d.estimate_exact.tops.to_bits(),
+                d.estimate.perf.tops.to_bits(),
+                d.estimate_exact.perf.tops.to_bits(),
                 "{}: ranked estimate must equal post-merge exact estimate",
                 rec.name
+            );
+            // the one-power-model invariant rides along: identical perf
+            // and ports → identical watts
+            assert_eq!(
+                d.estimate.power.watts.to_bits(),
+                d.estimate_exact.power.watts.to_bits()
             );
         }
     }

@@ -30,7 +30,7 @@ pub struct Row {
 fn compile_tops(rec: &UniformRecurrence, cap: u64, cons: DseConstraints) -> f64 {
     let board = BoardConfig::vck5000();
     explore(rec, &board, &DseConstraints { max_aies: Some(cap), ..cons })
-        .map(|(_, est)| est.tops)
+        .map(|(_, est)| est.perf.tops)
         .unwrap_or(0.0)
 }
 
@@ -72,7 +72,7 @@ pub fn run() -> (Vec<Row>, String) {
         // narrow (128-bit) movers
         let board = BoardConfig::vck5000();
         let model = CostModel::new(board.clone()).with_mover_bits(128);
-        let narrow = model.estimate(&d.candidate).tops;
+        let narrow = model.estimate(&d.candidate).perf.tops;
         let raw = build(&d.candidate, &CostModel::new(board));
         rows.push(Row {
             bench: rec.name.clone(),

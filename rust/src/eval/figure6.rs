@@ -57,7 +57,7 @@ fn eval_point(aies: u64, plios: u32, buffer_mb: u64) -> Point {
     let (cand, _) = explore(&rec, &board, &cons).expect("mapping");
     // conservative movers for the scalability study
     let model = CostModel::new(board).with_mover_bits(128);
-    let est = model.estimate(&cand);
+    let est = model.estimate(&cand).perf;
     Point {
         aies: est.aies,
         plios,

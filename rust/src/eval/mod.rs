@@ -4,6 +4,7 @@
 //! whose rows mirror what the paper prints.
 
 pub mod ablations;
+pub mod energy;
 pub mod figure6;
 pub mod pnr_ablation;
 pub mod table1;
@@ -14,10 +15,13 @@ pub mod workloads;
 /// Experiment index (mirrors the paper's evaluation section):
 /// E1 = [`table3`], E2 = [`table4`], E3 = [`figure6`], E4 = [`table1`],
 /// E5 = [`pnr_ablation`], E7 = [`ablations`]; [`workloads`] is the
-/// repo's own workload-coverage table over the expanded catalog. Each
-/// `run()` returns the structured rows plus a rendered text table; the
-/// `widesa` CLI prints them (`widesa table3`, `widesa workloads`, ...).
+/// repo's own workload-coverage table over the expanded catalog and
+/// [`energy`] its Table IV-style TOPS-vs-W tradeoff across the same
+/// catalog. Each `run()` returns the structured rows plus a rendered
+/// text table; the `widesa` CLI prints them (`widesa table3`,
+/// `widesa workloads`, `widesa energy`, ...).
 pub use ablations::run as run_ablations;
+pub use energy::run as run_energy;
 pub use figure6::run as run_figure6;
 pub use pnr_ablation::run as run_pnr_ablation;
 pub use table1::run as run_table1;

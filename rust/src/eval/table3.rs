@@ -85,9 +85,9 @@ pub fn run() -> (Vec<Row>, String) {
             baseline_name: base.as_ref().map(|b| b.name),
             baseline_aies: base.as_ref().map(|b| b.aies),
             baseline_tops: base.as_ref().map(|b| b.tops),
-            widesa_aies: d.estimate.aies,
-            widesa_tops: d.estimate.tops,
-            widesa_tops_e2e: d.estimate.tops_e2e,
+            widesa_aies: d.estimate.perf.aies,
+            widesa_tops: d.estimate.perf.tops,
+            widesa_tops_e2e: d.estimate.perf.tops_e2e,
             paper_widesa_aies: paper_aies,
             paper_widesa_tops: paper_tops,
         });

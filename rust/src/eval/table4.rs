@@ -1,7 +1,7 @@
 //! Table IV: MM performance + energy efficiency, PL-only (AutoSA) vs
 //! WideSA (E2).
 
-use crate::arch::power::{widesa_mover_dsps, PowerModel};
+use crate::arch::power::widesa_mover_dsps;
 use crate::baselines::autosa_pl;
 use crate::coordinator::framework::{WideSa, WideSaConfig};
 use crate::mapping::dse::DseConstraints;
@@ -35,7 +35,6 @@ pub fn paper_norm(dtype: DType) -> f64 {
 }
 
 pub fn run() -> (Vec<Row>, String) {
-    let power = PowerModel::default();
     let mut rows = Vec::new();
     for dtype in [DType::F32, DType::I8, DType::I16, DType::I32] {
         let pl = autosa_pl::design(dtype);
@@ -52,25 +51,19 @@ pub fn run() -> (Vec<Row>, String) {
             ..Default::default()
         });
         let d = ws.compile(&library::mm(n, n, n, dtype)).expect("mapping");
-        let ws_dsps = widesa_mover_dsps(dtype);
-        let dram_gbs = d.estimate.dram_bytes as f64 / d.estimate.seconds / 1e9;
-        let act = crate::arch::power::ActivityProfile {
-            aies: d.estimate.aies as u32,
-            dsps: ws_dsps,
-            plio_channels: d.estimate.plio_in_ports + d.estimate.plio_out_ports,
-            dram_gbs: dram_gbs.min(100.0),
-            aie_occupancy: d.estimate.occupancy,
-        };
-        let ws_power = power.total_w(&act);
-        let norm = (d.estimate.tops / ws_power) / (pl.tops / pl.power_w);
+        // The design's own power estimate: every estimate is priced
+        // through the shared model now, so Table IV consumes it instead
+        // of rebuilding an activity profile by hand.
+        let ws_power = d.estimate.power.watts;
+        let norm = d.estimate.power.tops_per_watt / (pl.tops / pl.power_w);
         rows.push(Row {
             dtype,
             pl_dsps: pl.dsps,
             pl_tops: pl.tops,
             pl_power_w: pl.power_w,
-            ws_dsps,
-            ws_aies: d.estimate.aies,
-            ws_tops: d.estimate.tops,
+            ws_dsps: widesa_mover_dsps(dtype),
+            ws_aies: d.estimate.perf.aies,
+            ws_tops: d.estimate.perf.tops,
             ws_power_w: ws_power,
             norm_tops_per_watt: norm,
             paper_norm: paper_norm(dtype),

@@ -56,15 +56,15 @@ pub fn run() -> (Vec<Row>, String) {
         } else {
             "2D serpentine"
         };
-        let rel = (d.sim.tops - d.estimate.tops).abs() / d.estimate.tops;
+        let rel = (d.sim.tops - d.estimate.perf.tops).abs() / d.estimate.perf.tops;
         let row = Row {
             name: d.candidate.rec.name.clone(),
             mapping,
             aies: d.candidate.aies_used(),
-            tops: d.estimate.tops,
+            tops: d.estimate.perf.tops,
             sim_tops: d.sim.tops,
             sim_rel_err: rel,
-            bound: d.estimate.bound,
+            bound: d.estimate.perf.bound,
             pnr_success: d.compile.success,
             in_ports: d.merge_stats.in_ports_after,
             out_ports: d.merge_stats.out_ports_after,

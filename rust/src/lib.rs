@@ -47,8 +47,9 @@
 //! });
 //! let design = ws.compile(&library::mm(1024, 1024, 1024, DType::F32)).unwrap();
 //! assert!(design.compile.success, "place & route must succeed");
-//! assert!(design.estimate.tops > 0.0);
-//! assert!(design.estimate.aies <= 64);
+//! assert!(design.estimate.perf.tops > 0.0);
+//! assert!(design.estimate.perf.aies <= 64);
+//! assert!(design.estimate.power.watts > 0.0); // every estimate carries power
 //! println!("{}", design.report());
 //! ```
 //!
@@ -83,8 +84,10 @@ pub mod serve;
 pub mod sim;
 pub mod util;
 
-pub use coordinator::framework::{CompiledDesign, NoLegalMapping, WideSa, WideSaConfig};
-pub use mapping::cost::PortModel;
-pub use mapping::dse::DseConstraints;
+pub use coordinator::framework::{
+    CompiledDesign, FrontierSummary, NoLegalMapping, WideSa, WideSaConfig,
+};
+pub use mapping::cost::{Estimate, PortModel};
+pub use mapping::dse::{DseConstraints, Objective};
 pub use recurrence::{dtype::DType, library, spec::UniformRecurrence};
 pub use serve::{CacheOutcome, Overloaded, ServeConfig, ServeHandle, ServeResult, ServeStats};

@@ -8,7 +8,8 @@ use anyhow::{bail, Context, Result};
 use widesa::coordinator::framework::{WideSa, WideSaConfig};
 use widesa::coordinator::{exec, verify};
 use widesa::eval;
-use widesa::mapping::dse::DseConstraints;
+use widesa::arch::vck5000::BoardConfig;
+use widesa::mapping::dse::{self, DseConstraints, Objective};
 use widesa::obs::trace::{self, Span, TraceCtx};
 use widesa::obs::trend;
 use widesa::recurrence::dtype::DType;
@@ -34,6 +35,9 @@ COMMANDS (evaluation):
   ablations              E7: technique ablations (latency hiding, threading, merge, movers)
   workloads              workload-coverage table: every library workload end to end
                          (mapping shape, AIEs, TOPS, sim agreement, P&R, ports)
+  energy                 energy table: Table IV's TOPS-vs-W tradeoff across the
+                         workload catalog (W, TOPS/W, J/pass, Pareto frontier)
+                         vs the AutoSA PL-only baseline; see docs/ENERGY.md
 
 COMMANDS (framework):
   map <bench> <dtype> [--aies N] [--trace-out PATH]
@@ -49,6 +53,9 @@ COMMANDS (service):
     options: --cache N (design-cache entries, default 64)
              --workers N (concurrent requests), --dse-threads N (scoring shards),
              --aies N / --mover-bits N / --cold-dram (base compile config)
+             --objective throughput|efficiency|pareto (default ranking goal;
+                              requests may override per compile)
+             --max-power-w X (drop candidates whose estimate exceeds X watts)
              --snapshot PATH (warm-start the cache from PATH; stdin mode
                               writes the cache back to PATH at EOF)
              --snapshot-interval-s N (periodic background snapshots; also
@@ -69,8 +76,9 @@ COMMANDS (observability):
                                     default 0.95) and optionally a --metrics-out file
   trend [--commit SHA] [--serve PATH] [--compile PATH] [--out PATH]
                                     append one per-commit trend line (p50/p99/p999,
-                                    stage ms, overhead) from the BENCH_*.json files
-                                    to BENCH_trend.jsonl; SHA defaults to $GITHUB_SHA
+                                    stage ms, overhead, fp32 MM TOPS/W) from the
+                                    BENCH_*.json files to BENCH_trend.jsonl;
+                                    SHA defaults to $GITHUB_SHA
 
   <bench>: mm | conv2d | fft2d | fir | dwconv2d | trsv | stencil2d
   <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
@@ -228,6 +236,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 i += 1;
             }
             "--cold-dram" => cfg.base.cold_dram = true,
+            "--objective" => {
+                let v = flag_val(args, i, "--objective")?;
+                cfg.base.constraints.objective = Objective::parse(&v).ok_or_else(|| {
+                    anyhow::anyhow!("unknown objective {v:?} (throughput|efficiency|pareto)")
+                })?;
+                i += 1;
+            }
+            "--max-power-w" => {
+                let w: f64 = flag_val(args, i, "--max-power-w")?.parse()?;
+                if !w.is_finite() || w <= 0.0 {
+                    bail!("--max-power-w must be a positive number");
+                }
+                cfg.base.constraints.max_power_w = Some(w);
+                i += 1;
+            }
             "--snapshot" => {
                 cfg.snapshot = Some(flag_val(args, i, "--snapshot")?.into());
                 i += 1;
@@ -315,7 +338,19 @@ fn cmd_trend(args: &[String]) -> Result<()> {
         .unwrap_or(0);
     let serve = trend::read_bench(&serve_path);
     let compile = trend::read_bench(&compile_path);
-    let line = trend::trend_line(&commit, ts, serve.as_ref(), compile.as_ref());
+    // Deterministic fp32 MM TOPS/W datum straight from the shared cost +
+    // power model (analytic explore only — no P&R, so this is cheap and
+    // bit-stable across runs on the same commit).
+    let mm_tpw = dse::explore(
+        &library::mm(8192, 8192, 8192, DType::F32),
+        &BoardConfig::vck5000(),
+        &DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        },
+    )
+    .map(|(_, est)| est.power.tops_per_watt);
+    let line = trend::trend_line(&commit, ts, serve.as_ref(), compile.as_ref(), mm_tpw);
     trend::append_trend(&out, &line)?;
     println!("{line}");
     eprintln!("widesa trend: appended to {}", out.display());
@@ -420,6 +455,10 @@ fn main() -> Result<()> {
         }
         Some("workloads") => {
             let (_, table) = eval::workloads::run();
+            println!("{table}");
+        }
+        Some("energy") => {
+            let (_, table) = eval::energy::run();
             println!("{table}");
         }
         Some("map") => cmd_map(&args[1..])?,

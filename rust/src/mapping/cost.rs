@@ -39,6 +39,7 @@
 //! port model. The legacy analytic packing survives behind
 //! [`PortModel::Analytic`] for A/B comparison.
 
+use crate::arch::power::{design_activity, PowerEstimate, PowerModel};
 use crate::arch::vck5000::BoardConfig;
 use crate::mapping::candidate::{Kind, MappingCandidate};
 use crate::recurrence::dtype::DType;
@@ -86,6 +87,18 @@ pub struct PerfEstimate {
     pub dram_bytes: u64,
     /// Average MAC occupancy of active AIEs (for the power model).
     pub occupancy: f64,
+}
+
+/// The multi-metric design estimate every consumer sees: throughput and
+/// power priced together, from one candidate, under one port model and
+/// one power model. `perf` is the Table III half; `power` is the
+/// Table IV half, derived from the same activity (`perf.aies`, merged
+/// PLIO ports, mover DSPs, DRAM GB/s, `perf.occupancy`) — so the two
+/// can never describe different designs.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub perf: PerfEstimate,
+    pub power: PowerEstimate,
 }
 
 /// Mutation seam for `make mutation-smoke`: `WIDESA_MUTATE=cost-peak`
@@ -182,6 +195,27 @@ pub struct CostModel {
     pub mover_bits: u64,
     /// Port-count model [`CostModel::estimate`] prices with.
     pub ports: PortModel,
+    /// Power model every estimate is priced with — the **one-power-model
+    /// invariant**: the DSE ranking, the simulator and the framework's
+    /// published estimates all derive watts from this same model.
+    pub power: PowerModel,
+}
+
+/// Price a perf estimate through a power model. This is *the* activity
+/// derivation (shared by [`CostModel::estimate`], `sim::engine`, the
+/// energy eval tables, and `serve::persist`'s snapshot-load recompute):
+/// active AIEs, total merged PLIO channels, Table IV mover DSPs for the
+/// dtype, achieved DRAM GB/s, and the estimate's own occupancy.
+pub fn price_power(model: &PowerModel, dtype: DType, perf: &PerfEstimate) -> PowerEstimate {
+    let act = design_activity(
+        dtype,
+        perf.aies,
+        perf.plio_in_ports + perf.plio_out_ports,
+        perf.dram_bytes,
+        perf.seconds,
+        perf.occupancy,
+    );
+    model.estimate(perf.tops, perf.seconds, &act)
 }
 
 impl CostModel {
@@ -190,6 +224,7 @@ impl CostModel {
             board,
             mover_bits: 512,
             ports: PortModel::default(),
+            power: PowerModel::default(),
         }
     }
 
@@ -200,6 +235,11 @@ impl CostModel {
 
     pub fn with_port_model(mut self, ports: PortModel) -> Self {
         self.ports = ports;
+        self
+    }
+
+    pub fn with_power_model(mut self, power: PowerModel) -> Self {
+        self.power = power;
         self
     }
 
@@ -219,7 +259,7 @@ impl CostModel {
     /// is needed and the estimate still agrees with what place & route
     /// sees. [`PortModel::Analytic`] keeps the legacy stream-class
     /// packing for A/B comparison.
-    pub fn estimate(&self, cand: &MappingCandidate) -> PerfEstimate {
+    pub fn estimate(&self, cand: &MappingCandidate) -> Estimate {
         match self.ports {
             PortModel::Exact => {
                 let stats = crate::graph::packet::predict_ports(
@@ -240,7 +280,7 @@ impl CostModel {
 
     /// The legacy analytic port-packing estimate, regardless of the
     /// configured [`PortModel`].
-    pub fn estimate_analytic(&self, cand: &MappingCandidate) -> PerfEstimate {
+    pub fn estimate_analytic(&self, cand: &MappingCandidate) -> Estimate {
         self.estimate_impl(cand, None)
     }
 
@@ -256,7 +296,7 @@ impl CostModel {
         cand: &MappingCandidate,
         in_ports: u64,
         out_ports: u64,
-    ) -> PerfEstimate {
+    ) -> Estimate {
         self.estimate_impl(cand, Some((in_ports, out_ports)))
     }
 
@@ -264,7 +304,7 @@ impl CostModel {
         &self,
         cand: &MappingCandidate,
         exact_ports: Option<(u64, u64)>,
-    ) -> PerfEstimate {
+    ) -> Estimate {
         let core = &self.board.array.core;
         let dtype = cand.rec.dtype;
         let eff = issue_efficiency(cand.kind, dtype) * cand.latency.efficiency(core);
@@ -347,7 +387,7 @@ impl CostModel {
             PerfBound::PlioOut
         };
 
-        PerfEstimate {
+        let perf = PerfEstimate {
             tops,
             tops_e2e,
             seconds: exec_s,
@@ -362,7 +402,9 @@ impl CostModel {
             plio_out_ports: out_ports as u32,
             dram_bytes,
             occupancy: (compute_total_s / exec_s).min(1.0),
-        }
+        };
+        let power = price_power(&self.power, dtype, &perf);
+        Estimate { perf, power }
     }
 
     /// Total PLIO traffic decomposition by workload family.
@@ -606,7 +648,7 @@ mod tests {
     fn estimate_best(
         rec: crate::recurrence::spec::UniformRecurrence,
         max_aies: Option<u64>,
-    ) -> PerfEstimate {
+    ) -> Estimate {
         let board = BoardConfig::vck5000();
         let cons = DseConstraints {
             max_aies,
@@ -621,21 +663,21 @@ mod tests {
     fn mm_f32_lands_near_paper() {
         let est = estimate_best(library::mm(8192, 8192, 8192, DType::F32), Some(400));
         assert!(
-            (est.tops - 4.15).abs() < 0.6,
+            (est.perf.tops - 4.15).abs() < 0.6,
             "MM f32 TOPS {} vs paper 4.15",
-            est.tops
+            est.perf.tops
         );
-        assert_eq!(est.aies, 400);
-        assert_eq!(est.bound, PerfBound::Compute);
+        assert_eq!(est.perf.aies, 400);
+        assert_eq!(est.perf.bound, PerfBound::Compute);
     }
 
     #[test]
     fn mm_i8_lands_near_paper() {
         let est = estimate_best(library::mm(10240, 10240, 10240, DType::I8), Some(400));
         assert!(
-            (est.tops - 32.49).abs() < 4.0,
+            (est.perf.tops - 32.49).abs() < 4.0,
             "MM i8 TOPS {} vs paper 32.49",
-            est.tops
+            est.perf.tops
         );
     }
 
@@ -643,9 +685,9 @@ mod tests {
     fn conv_i8_lands_near_paper() {
         let est = estimate_best(library::conv2d(10240, 10240, 8, 8, DType::I8), Some(400));
         assert!(
-            (est.tops - 36.02).abs() < 5.0,
+            (est.perf.tops - 36.02).abs() < 5.0,
             "Conv i8 TOPS {} vs paper 36.02",
-            est.tops
+            est.perf.tops
         );
     }
 
@@ -653,9 +695,9 @@ mod tests {
     fn fir_f32_lands_near_paper() {
         let est = estimate_best(library::fir(1048576, 15, DType::F32), Some(256));
         assert!(
-            (est.tops - 2.92).abs() < 0.6,
+            (est.perf.tops - 2.92).abs() < 0.6,
             "FIR f32 TOPS {} vs paper 2.92",
-            est.tops
+            est.perf.tops
         );
     }
 
@@ -663,9 +705,9 @@ mod tests {
     fn fft_cf32_lands_near_paper() {
         let est = estimate_best(library::fft2d(8192, 8192, DType::CF32), Some(320));
         assert!(
-            (est.tops - 1.10).abs() < 0.35,
+            (est.perf.tops - 1.10).abs() < 0.35,
             "FFT cf32 TOPS {} vs paper 1.10",
-            est.tops
+            est.perf.tops
         );
     }
 
@@ -678,7 +720,34 @@ mod tests {
             library::fft2d(8192, 8192, DType::CF32),
         ] {
             let est = estimate_best(rec, Some(400));
-            assert!(est.tops_e2e <= est.tops * (1.0 + 1e-9));
+            assert!(est.perf.tops_e2e <= est.perf.tops * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn every_estimate_carries_consistent_power() {
+        // The power half is derived from the perf half by the shared
+        // `price_power` recipe — identical by construction, above the
+        // static rail, and energy = watts × seconds.
+        let model = CostModel::new(BoardConfig::vck5000());
+        for rec in [
+            library::mm(8192, 8192, 8192, DType::F32),
+            library::trsv(8192, DType::F32),
+        ] {
+            let cons = DseConstraints {
+                max_aies: Some(400),
+                ..Default::default()
+            };
+            let (cand, est) = explore(&rec, &BoardConfig::vck5000(), &cons).unwrap();
+            let repriced = price_power(&model.power, cand.rec.dtype, &est.perf);
+            assert_eq!(est.power.watts.to_bits(), repriced.watts.to_bits());
+            assert_eq!(est.power.tops_per_watt.to_bits(), repriced.tops_per_watt.to_bits());
+            assert!(est.power.watts > model.power.static_w);
+            assert!(
+                (est.power.energy_j - est.power.watts * est.perf.seconds).abs() < 1e-9,
+                "energy_j must be watts × seconds"
+            );
+            assert!(est.power.tops_per_watt > 0.0);
         }
     }
 
@@ -695,12 +764,12 @@ mod tests {
         let (cand, _) = explore(&rec, &board, &cons).unwrap();
         let model = CostModel::new(board).with_mover_bits(128);
         let est = model.estimate(&cand);
-        assert_ne!(est.bound, PerfBound::Compute, "8 ports × 128-bit movers must bind");
+        assert_ne!(est.perf.bound, PerfBound::Compute, "8 ports × 128-bit movers must bind");
         // And the same design with the full 78 ports is compute-bound.
         let model78 = CostModel::new(BoardConfig::vck5000()).with_mover_bits(512);
         let est78 = model78.estimate(&cand);
-        assert_eq!(est78.bound, PerfBound::Compute);
-        assert!(est78.tops > est.tops);
+        assert_eq!(est78.perf.bound, PerfBound::Compute);
+        assert!(est78.perf.tops > est.perf.tops);
     }
 
     #[test]
@@ -717,12 +786,12 @@ mod tests {
             .with_mover_bits(128)
             .estimate(&cand);
         assert!(
-            small.plio_in_s > big.plio_in_s,
+            small.perf.plio_in_s > big.perf.plio_in_s,
             "segment drains must add PLIO traffic: {} vs {}",
-            small.plio_in_s,
-            big.plio_in_s
+            small.perf.plio_in_s,
+            big.perf.plio_in_s
         );
-        assert!(small.tops <= big.tops);
+        assert!(small.perf.tops <= big.perf.tops);
     }
 
     #[test]
@@ -735,26 +804,30 @@ mod tests {
         };
         let (cand, _) = explore(&rec, &board, &cons).unwrap();
         let model = CostModel::new(board);
-        let analytic = model.estimate(&cand);
+        let analytic = model.estimate(&cand).perf;
         // Feeding the analytic path's own port counts back reproduces it.
-        let echo = model.estimate_with_ports(
-            &cand,
-            analytic.plio_in_ports as u64,
-            analytic.plio_out_ports as u64,
-        );
+        let echo = model
+            .estimate_with_ports(
+                &cand,
+                analytic.plio_in_ports as u64,
+                analytic.plio_out_ports as u64,
+            )
+            .perf;
         assert_eq!(echo.plio_in_ports, analytic.plio_in_ports);
         assert_eq!(echo.plio_out_ports, analytic.plio_out_ports);
         assert_eq!(echo.tops.to_bits(), analytic.tops.to_bits());
         // Halving the ports cannot shrink PLIO time, and over-budget
         // requests clamp to the board's channels.
-        let halved = model.estimate_with_ports(
-            &cand,
-            (analytic.plio_in_ports as u64 / 2).max(1),
-            (analytic.plio_out_ports as u64 / 2).max(1),
-        );
+        let halved = model
+            .estimate_with_ports(
+                &cand,
+                (analytic.plio_in_ports as u64 / 2).max(1),
+                (analytic.plio_out_ports as u64 / 2).max(1),
+            )
+            .perf;
         assert!(halved.plio_in_s >= analytic.plio_in_s);
         assert!(halved.plio_out_s >= analytic.plio_out_s);
-        let clamped = model.estimate_with_ports(&cand, 10_000, 10_000);
+        let clamped = model.estimate_with_ports(&cand, 10_000, 10_000).perf;
         assert!(clamped.plio_in_ports <= 78);
         assert!(clamped.plio_out_ports <= 78);
     }
@@ -771,7 +844,7 @@ mod tests {
         let model = CostModel::new(board);
         assert_eq!(model.ports, PortModel::Exact);
         // the default estimate prices the predictor's merged counts
-        let exact = model.estimate(&cand);
+        let exact = model.estimate(&cand).perf;
         let stats = crate::graph::packet::predict_ports(
             &cand,
             &model,
@@ -782,8 +855,8 @@ mod tests {
         assert_eq!(exact.plio_in_ports as usize, stats.in_ports_after.clamp(1, 78));
         assert_eq!(exact.plio_out_ports as usize, stats.out_ports_after.clamp(1, 78));
         // the A/B flag reproduces the legacy analytic path bit-for-bit
-        let flagged = model.clone().with_port_model(PortModel::Analytic).estimate(&cand);
-        let legacy = model.estimate_analytic(&cand);
+        let flagged = model.clone().with_port_model(PortModel::Analytic).estimate(&cand).perf;
+        let legacy = model.estimate_analytic(&cand).perf;
         assert_eq!(flagged.tops.to_bits(), legacy.tops.to_bits());
         assert_eq!(flagged.plio_in_ports, legacy.plio_in_ports);
         assert_eq!(flagged.plio_out_ports, legacy.plio_out_ports);
@@ -800,8 +873,8 @@ mod tests {
             library::stencil2d_chain(2, 1024, 1024, DType::F32),
         ] {
             let est = estimate_best(rec, Some(400));
-            assert!(est.plio_in_ports <= 78);
-            assert!(est.plio_out_ports <= 78);
+            assert!(est.perf.plio_in_ports <= 78);
+            assert!(est.perf.plio_out_ports <= 78);
         }
     }
 
@@ -813,9 +886,9 @@ mod tests {
             library::stencil2d_chain(2, 1024, 1024, DType::F32),
         ] {
             let est = estimate_best(rec, Some(400));
-            assert!(est.tops > 0.0);
-            assert!(est.tops_e2e <= est.tops * (1.0 + 1e-9));
-            assert!(est.dram_bytes > 0);
+            assert!(est.perf.tops > 0.0);
+            assert!(est.perf.tops_e2e <= est.perf.tops * (1.0 + 1e-9));
+            assert!(est.perf.dram_bytes > 0);
         }
     }
 
@@ -836,12 +909,12 @@ mod tests {
         let winner = &all[0].0;
         assert_eq!(winner.choice.dims(), 1, "{}", winner.summary());
         // L streams are the bound: the design is PLIO-in limited
-        assert_eq!(all[0].1.bound, PerfBound::PlioIn, "{}", winner.summary());
+        assert_eq!(all[0].1.perf.bound, PerfBound::PlioIn, "{}", winner.summary());
         // every 2D hull mapping ranks strictly below the linear array
         for (cand, est) in &all[1..] {
             if cand.choice.dims() == 2 {
                 assert!(
-                    est.tops < all[0].1.tops,
+                    est.perf.tops < all[0].1.perf.tops,
                     "2D hull {} must trail the 1D array",
                     cand.summary()
                 );

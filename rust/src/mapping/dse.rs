@@ -6,10 +6,12 @@
 //! per-recurrence setup once (memoized demarcation, space-time
 //! enumeration, the loop-invariant latency-hiding plan), [`score_choice`]
 //! evaluates one candidate — a pure function of its inputs — and
-//! [`rank`] merges scored candidates in the canonical order. Both
-//! [`explore_all`] (serial) and [`explore_all_parallel`] (scoped-thread
-//! sharding) are thin drivers over those three, as is the serve layer's
-//! worker-pool variant — all produce bit-identical rankings.
+//! [`rank_by`] merges scored candidates in the canonical order of the
+//! run's [`Objective`] (throughput, TOPS/W efficiency, or the
+//! [`rank_pareto`] non-dominated frontier). Both [`explore_all`]
+//! (serial) and [`explore_all_parallel`] (scoped-thread sharding) are
+//! thin drivers over those three, as is the serve layer's worker-pool
+//! variant — all produce bit-identical rankings.
 //!
 //! Candidates are ranked on **exact merged-PLIO port counts** (the
 //! incremental predictor behind [`PortModel::Exact`], the
@@ -20,7 +22,7 @@
 
 use crate::arch::vck5000::BoardConfig;
 use crate::mapping::candidate::{Kind, MappingCandidate};
-use crate::mapping::cost::{CostModel, PerfEstimate, PortModel};
+use crate::mapping::cost::{CostModel, Estimate, PortModel};
 use crate::mapping::latency::{self, LatencyHiding};
 use crate::mapping::partition::partition;
 use crate::mapping::spacetime::{self, SpaceTimeChoice};
@@ -41,6 +43,8 @@ struct DseCounters {
     plans: Arc<Counter>,
     scored: Arc<Counter>,
     over_budget: Arc<Counter>,
+    over_power: Arc<Counter>,
+    frontier: Arc<Counter>,
 }
 
 fn counters() -> &'static DseCounters {
@@ -51,8 +55,53 @@ fn counters() -> &'static DseCounters {
             plans: r.counter("dse.plans"),
             scored: r.counter("dse.candidates_scored"),
             over_budget: r.counter("dse.candidates_over_budget"),
+            over_power: r.counter("dse.candidates_over_power"),
+            frontier: r.counter("dse.frontier_size"),
         }
     })
+}
+
+/// What the DSE optimizes for when ordering scored candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// On-chip TOPS, descending — the paper's Table III ordering and the
+    /// historical single-metric ranking. The default: rankings (and
+    /// serve cache keys) are unchanged from before power existed.
+    #[default]
+    Throughput,
+    /// TOPS/W, descending (Table IV's metric).
+    Efficiency,
+    /// Non-dominated (tops, tops_per_watt) frontier first, dominated
+    /// candidates after — see [`rank_pareto`].
+    Pareto,
+}
+
+impl Objective {
+    /// Stable wire/fingerprint discriminant (never reorder).
+    pub fn discriminant(self) -> u8 {
+        match self {
+            Objective::Throughput => 0,
+            Objective::Efficiency => 1,
+            Objective::Pareto => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Objective::Throughput => "throughput",
+            Objective::Efficiency => "efficiency",
+            Objective::Pareto => "pareto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "throughput" => Some(Objective::Throughput),
+            "efficiency" => Some(Objective::Efficiency),
+            "pareto" => Some(Objective::Pareto),
+            _ => None,
+        }
+    }
 }
 
 /// Resource constraints for a DSE run (Figure 6 sweeps these).
@@ -68,10 +117,21 @@ pub struct DseConstraints {
     /// exact merged-port predictor (A/B comparison — see
     /// [`PortModel`]).
     pub analytic_ranking: bool,
+    /// Drop candidates whose estimated board draw exceeds this cap (W).
+    pub max_power_w: Option<f64>,
+    /// Ranking objective (throughput / efficiency / Pareto).
+    pub objective: Objective,
 }
 
 impl DseConstraints {
     /// Fold the constraints into a stable fingerprint (serve cache key).
+    ///
+    /// Backward compatible by construction: fields at their defaults
+    /// write **no bytes**, so `DseConstraints::default()` hashes exactly
+    /// as it did before `max_power_w`/`objective` existed and schema-1
+    /// `serve::persist` snapshots keep warm-starting (guarded by
+    /// `tests/cache_compat.rs`). New fields append tag bytes (2, 3)
+    /// disjoint from the legacy `max_aies` tags (0, 1).
     pub fn fingerprint(&self, h: &mut Fnv64) {
         match self.max_aies {
             Some(v) => {
@@ -83,6 +143,14 @@ impl DseConstraints {
         h.write_bool(self.no_latency_hiding);
         h.write_bool(self.no_threading);
         h.write_bool(self.analytic_ranking);
+        if let Some(w) = self.max_power_w {
+            h.write_u8(2);
+            h.write_u64(w.to_bits());
+        }
+        if self.objective != Objective::Throughput {
+            h.write_u8(3);
+            h.write_u8(self.objective.discriminant());
+        }
     }
 }
 
@@ -102,7 +170,7 @@ pub fn scoring_model(board: &BoardConfig, cons: &DseConstraints) -> CostModel {
 
 /// Scored candidates in ranking order (what every `explore_all` variant
 /// returns and [`crate::WideSa::compile_ranked`] consumes).
-pub type Ranked = Vec<(MappingCandidate, PerfEstimate)>;
+pub type Ranked = Vec<(MappingCandidate, Estimate)>;
 
 /// The loop-invariant part of one DSE run: everything [`score_choice`]
 /// needs besides the choice itself. `Clone` so the serve layer can cache
@@ -158,7 +226,7 @@ pub fn score_choice(
     cons: &DseConstraints,
     plan: &DsePlan,
     choice: SpaceTimeChoice,
-) -> Option<(MappingCandidate, PerfEstimate)> {
+) -> Option<(MappingCandidate, Estimate)> {
     let board = &model.board;
     let part = partition(&choice.nest, &choice.space, &board.array, Some(plan.budget));
     let spare = plan.budget / part.active_aies().max(1);
@@ -182,17 +250,120 @@ pub fn score_choice(
     }
     counters().scored.inc();
     let est = model.estimate(&cand);
+    if let Some(cap) = cons.max_power_w {
+        if est.power.watts > cap {
+            counters().over_power.inc();
+            return None;
+        }
+    }
     Some((cand, est))
 }
 
-/// Canonical ranking: throughput-descending, ties broken by enumeration
-/// order (stable sort) — the merge step every exploration variant shares.
-pub fn rank(
-    mut results: Vec<(MappingCandidate, PerfEstimate)>,
-) -> Vec<(MappingCandidate, PerfEstimate)> {
+/// Canonical throughput ranking: TOPS-descending, ties broken by
+/// enumeration order (stable sort) — the historical merge step, and what
+/// [`Objective::Throughput`] (the default) selects.
+pub fn rank(mut results: Ranked) -> Ranked {
     let _span = Span::begin("dse.rank", "dse");
-    results.sort_by(|a, b| b.1.tops.partial_cmp(&a.1.tops).unwrap());
+    results.sort_by(|a, b| b.1.perf.tops.partial_cmp(&a.1.perf.tops).unwrap());
     results
+}
+
+/// Deterministic non-dominated sort over `(tops, tops_per_watt)`.
+///
+/// The frontier (candidates no other candidate beats on both throughput
+/// and efficiency) comes first, TOPS-descending; dominated candidates
+/// follow, also TOPS-descending. Both halves keep the existing
+/// total-order tie-break — a stable sort over the canonical enumeration
+/// order — so serial, scoped-thread and serve-pooled exploration return
+/// bit-identical rankings, and frontier *membership* is independent of
+/// input order. Reports the frontier size on the `dse.frontier_size`
+/// counter and runs under `dse.rank` with sort/frontier child spans.
+pub fn rank_pareto(mut results: Ranked) -> Ranked {
+    let _span = Span::begin("dse.rank", "dse");
+    {
+        let _sort = Span::begin("dse.rank.sort", "dse");
+        results.sort_by(|a, b| b.1.perf.tops.partial_cmp(&a.1.perf.tops).unwrap());
+    }
+    let _frontier_span = Span::begin("dse.rank.frontier", "dse");
+    let n = results.len();
+    let mut on_frontier = vec![false; n];
+    // One sweep over equal-TOPS groups: with TOPS descending, a candidate
+    // is dominated iff some strictly-higher-TOPS candidate has >= its
+    // TOPS/W, or a same-TOPS candidate has strictly more TOPS/W. Exact
+    // (tops, tops_per_watt) duplicates dominate neither way and all stay
+    // on the frontier.
+    let mut best_tpw_above = f64::NEG_INFINITY;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        let tops = results[i].1.perf.tops;
+        let mut group_max = f64::NEG_INFINITY;
+        while j < n && results[j].1.perf.tops == tops {
+            group_max = group_max.max(results[j].1.power.tops_per_watt);
+            j += 1;
+        }
+        for (k, flag) in on_frontier.iter_mut().enumerate().take(j).skip(i) {
+            let tpw = results[k].1.power.tops_per_watt;
+            *flag = tpw > best_tpw_above && tpw >= group_max;
+        }
+        best_tpw_above = best_tpw_above.max(group_max);
+        i = j;
+    }
+    let frontier_size = on_frontier.iter().filter(|f| **f).count();
+    counters().frontier.add(frontier_size as u64);
+    // Stable partition: frontier first, dominated after, both keeping
+    // the TOPS-descending + enumeration-order sequence.
+    let mut frontier = Vec::with_capacity(frontier_size);
+    let mut dominated = Vec::with_capacity(n - frontier_size);
+    for (flag, item) in on_frontier.into_iter().zip(results) {
+        if flag {
+            frontier.push(item);
+        } else {
+            dominated.push(item);
+        }
+    }
+    frontier.extend(dominated);
+    frontier
+}
+
+/// Order scored candidates under the run's objective — the one merge
+/// step all three exploration drivers (serial, scoped-thread,
+/// serve-pooled) share, so the objective semantics cannot diverge
+/// between them.
+pub fn rank_by(results: Ranked, objective: Objective) -> Ranked {
+    match objective {
+        Objective::Throughput => rank(results),
+        Objective::Efficiency => {
+            let _span = Span::begin("dse.rank", "dse");
+            let mut results = results;
+            results.sort_by(|a, b| {
+                b.1.power
+                    .tops_per_watt
+                    .partial_cmp(&a.1.power.tops_per_watt)
+                    .unwrap()
+            });
+            results
+        }
+        Objective::Pareto => rank_pareto(results),
+    }
+}
+
+/// How many leading candidates of a ranking sit on the Pareto frontier
+/// (the frontier summary the framework publishes). Under
+/// [`Objective::Pareto`] the frontier is exactly the ranking's prefix;
+/// for other objectives this recomputes membership without reordering.
+pub fn frontier_size(results: &Ranked) -> usize {
+    let refs: Vec<(f64, f64)> = results
+        .iter()
+        .map(|(_, e)| (e.perf.tops, e.power.tops_per_watt))
+        .collect();
+    refs.iter()
+        .filter(|(tops, tpw)| {
+            !refs.iter().any(|(t2, w2)| {
+                t2 >= tops && w2 >= tpw && (t2 > tops || w2 > tpw)
+            })
+        })
+        .count()
 }
 
 /// Explore and return the best candidate with its estimate.
@@ -200,7 +371,7 @@ pub fn explore(
     rec: &UniformRecurrence,
     board: &BoardConfig,
     cons: &DseConstraints,
-) -> Option<(MappingCandidate, PerfEstimate)> {
+) -> Option<(MappingCandidate, Estimate)> {
     explore_all(rec, board, cons).into_iter().next()
 }
 
@@ -222,7 +393,7 @@ pub fn score_serial(
         .filter_map(|choice| score_choice(rec, &model, cons, plan, choice))
         .collect();
     drop(score_span); // close before rank so dse.rank is a sibling
-    rank(results)
+    rank_by(results, cons.objective)
 }
 
 /// All evaluated candidates, best first (serial reference path).
@@ -230,7 +401,7 @@ pub fn explore_all(
     rec: &UniformRecurrence,
     board: &BoardConfig,
     cons: &DseConstraints,
-) -> Vec<(MappingCandidate, PerfEstimate)> {
+) -> Ranked {
     let _dse = Span::begin("dse", "dse");
     let mut p = plan(rec, board, cons);
     let choices = std::mem::take(&mut p.choices);
@@ -250,7 +421,7 @@ pub fn explore_all_parallel(
     board: &BoardConfig,
     cons: &DseConstraints,
     threads: usize,
-) -> Vec<(MappingCandidate, PerfEstimate)> {
+) -> Ranked {
     if threads <= 1 {
         return explore_all(rec, board, cons);
     }
@@ -263,7 +434,7 @@ pub fn explore_all_parallel(
     let model = scoring_model(board, cons);
     let indexed: Vec<(usize, SpaceTimeChoice)> = choices.into_iter().enumerate().collect();
     let chunk = indexed.len().div_ceil(threads);
-    let mut slots: Vec<Option<(MappingCandidate, PerfEstimate)>> = Vec::new();
+    let mut slots: Vec<Option<(MappingCandidate, Estimate)>> = Vec::new();
     slots.resize_with(indexed.len(), || None);
     // propagate the request's trace ID into the scoring shards so their
     // dse.score spans correlate with the caller's trace
@@ -287,7 +458,7 @@ pub fn explore_all_parallel(
             }
         }
     });
-    rank(slots.into_iter().flatten().collect())
+    rank_by(slots.into_iter().flatten().collect(), cons.objective)
 }
 
 #[cfg(test)]
@@ -302,7 +473,7 @@ mod tests {
         let board = BoardConfig::vck5000();
         let (cand, est) = explore(&rec, &board, &DseConstraints::default()).unwrap();
         assert_eq!(cand.choice.dims(), 2, "MM should map to a 2D array");
-        assert!(est.tops > 1.0);
+        assert!(est.perf.tops > 1.0);
         assert!(cand.aies_used() <= 400);
     }
 
@@ -332,11 +503,11 @@ mod tests {
             };
             let (_, est) = explore(&rec, &board, &cons).unwrap();
             assert!(
-                est.tops >= last * 0.95,
+                est.perf.tops >= last * 0.95,
                 "throughput dropped at budget {budget}: {} < {last}",
-                est.tops
+                est.perf.tops
             );
-            last = est.tops;
+            last = est.perf.tops;
         }
     }
 
@@ -355,10 +526,10 @@ mod tests {
         )
         .unwrap();
         assert!(
-            with.tops > without.tops * 1.5,
+            with.perf.tops > without.perf.tops * 1.5,
             "latency hiding should matter: {} vs {}",
-            with.tops,
-            without.tops
+            with.perf.tops,
+            without.perf.tops
         );
     }
 
@@ -369,7 +540,7 @@ mod tests {
         let all = explore_all(&rec, &board, &DseConstraints::default());
         assert!(all.len() >= 3);
         for w in all.windows(2) {
-            assert!(w[0].1.tops >= w[1].1.tops);
+            assert!(w[0].1.perf.tops >= w[1].1.perf.tops);
         }
     }
 
@@ -384,9 +555,117 @@ mod tests {
             assert_eq!(serial.len(), par.len(), "{threads} threads");
             for (s, p) in serial.iter().zip(&par) {
                 assert_eq!(s.0.summary(), p.0.summary(), "{threads} threads");
-                assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
+                assert_eq!(s.1.perf.tops.to_bits(), p.1.perf.tops.to_bits());
+                assert_eq!(
+                    s.1.power.tops_per_watt.to_bits(),
+                    p.1.power.tops_per_watt.to_bits()
+                );
             }
         }
+    }
+
+    #[test]
+    fn pareto_frontier_is_non_dominated_and_leads_the_ranking() {
+        let rec = library::mm(2048, 2048, 2048, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            objective: Objective::Pareto,
+            ..Default::default()
+        };
+        let ranked = explore_all(&rec, &board, &cons);
+        assert!(ranked.len() >= 3);
+        let k = frontier_size(&ranked);
+        assert!((1..=ranked.len()).contains(&k));
+        // The first k entries are exactly the frontier: nothing in the
+        // full set dominates any of them, and every later entry is
+        // dominated by someone.
+        for (i, (_, e)) in ranked.iter().enumerate() {
+            let dominated = ranked.iter().any(|(_, o)| {
+                o.perf.tops >= e.perf.tops
+                    && o.power.tops_per_watt >= e.power.tops_per_watt
+                    && (o.perf.tops > e.perf.tops
+                        || o.power.tops_per_watt > e.power.tops_per_watt)
+            });
+            assert_eq!(dominated, i >= k, "entry {i} of frontier size {k}");
+        }
+        // Frontier half and dominated half are each TOPS-descending.
+        for w in ranked[..k].windows(2) {
+            assert!(w[0].1.perf.tops >= w[1].1.perf.tops);
+        }
+        for w in ranked[k..].windows(2) {
+            assert!(w[0].1.perf.tops >= w[1].1.perf.tops);
+        }
+    }
+
+    #[test]
+    fn throughput_objective_matches_legacy_rank_exactly() {
+        // Acceptance bar: under the default objective the ranking (and
+        // so the selected design) is byte-identical to the historical
+        // single-metric `rank`.
+        let rec = library::mm(2048, 2048, 2048, DType::F32);
+        let board = BoardConfig::vck5000();
+        let legacy = rank(explore_all(&rec, &board, &DseConstraints::default()));
+        let via_by = explore_all(&rec, &board, &DseConstraints::default());
+        assert_eq!(legacy.len(), via_by.len());
+        for (l, r) in legacy.iter().zip(&via_by) {
+            assert_eq!(l.0.summary(), r.0.summary());
+            assert_eq!(l.1.perf.tops.to_bits(), r.1.perf.tops.to_bits());
+        }
+    }
+
+    #[test]
+    fn efficiency_objective_orders_by_tops_per_watt() {
+        let rec = library::mm(2048, 2048, 2048, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            objective: Objective::Efficiency,
+            ..Default::default()
+        };
+        let ranked = explore_all(&rec, &board, &cons);
+        assert!(ranked.len() >= 3);
+        for w in ranked.windows(2) {
+            assert!(w[0].1.power.tops_per_watt >= w[1].1.power.tops_per_watt);
+        }
+    }
+
+    #[test]
+    fn power_cap_filters_candidates() {
+        let rec = library::mm(8192, 8192, 8192, DType::F32);
+        let board = BoardConfig::vck5000();
+        let open = explore_all(&rec, &board, &DseConstraints::default());
+        let peak = open
+            .iter()
+            .map(|(_, e)| e.power.watts)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let floor = open
+            .iter()
+            .map(|(_, e)| e.power.watts)
+            .fold(f64::INFINITY, f64::min);
+        assert!(peak > floor, "need a power spread to test the cap");
+        let cap = (peak + floor) / 2.0;
+        let capped = explore_all(
+            &rec,
+            &board,
+            &DseConstraints {
+                max_power_w: Some(cap),
+                ..Default::default()
+            },
+        );
+        assert!(!capped.is_empty());
+        assert!(capped.len() < open.len(), "cap {cap} W must drop candidates");
+        for (_, e) in &capped {
+            assert!(e.power.watts <= cap);
+        }
+        // An unreachable cap empties the search instead of panicking.
+        let none = explore_all(
+            &rec,
+            &board,
+            &DseConstraints {
+                max_power_w: Some(1.0),
+                ..Default::default()
+            },
+        );
+        assert!(none.is_empty());
     }
 
     #[test]
@@ -411,10 +690,32 @@ mod tests {
             ..Default::default()
         }
         .fingerprint(&mut analytic);
+        let mut powered = Fnv64::new();
+        DseConstraints {
+            max_power_w: Some(40.0),
+            ..Default::default()
+        }
+        .fingerprint(&mut powered);
+        let mut pareto = Fnv64::new();
+        DseConstraints {
+            objective: Objective::Pareto,
+            ..Default::default()
+        }
+        .fingerprint(&mut pareto);
+        let mut efficiency = Fnv64::new();
+        DseConstraints {
+            objective: Objective::Efficiency,
+            ..Default::default()
+        }
+        .fingerprint(&mut efficiency);
         assert_ne!(base.finish(), capped.finish());
         assert_ne!(base.finish(), ablated.finish());
         assert_ne!(capped.finish(), ablated.finish());
         assert_ne!(base.finish(), analytic.finish());
         assert_ne!(ablated.finish(), analytic.finish());
+        assert_ne!(base.finish(), powered.finish());
+        assert_ne!(base.finish(), pareto.finish());
+        assert_ne!(pareto.finish(), efficiency.finish());
+        assert_ne!(powered.finish(), pareto.finish());
     }
 }

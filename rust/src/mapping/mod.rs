@@ -29,6 +29,6 @@ pub mod spacetime;
 pub mod threading;
 
 pub use candidate::MappingCandidate;
-pub use cost::{CostModel, PerfBound, PerfEstimate, PortModel};
-pub use dse::{explore, DseConstraints};
+pub use cost::{CostModel, Estimate, PerfBound, PerfEstimate, PortModel};
+pub use dse::{explore, DseConstraints, Objective};
 pub use spacetime::SpaceTimeChoice;

@@ -298,7 +298,8 @@ const NEST_SLACK_US: u64 = 2;
 /// strictly nest (within [`NEST_SLACK_US`]), the pipeline hierarchies
 /// hold (`pnr.place`/`pnr.assign`/`pnr.route` inside a same-thread
 /// `pnr`; `dse.plan`/`dse.score`/`dse.rank` inside a same-trace-ID `dse`
-/// interval, which crosses threads via the worker pools), and the root
+/// interval, which crosses threads via the worker pools;
+/// `dse.rank.sort`/`dse.rank.frontier` inside `dse.rank`), and the root
 /// span carries a non-zero trace ID. Returns coverage numbers for the
 /// caller to gate on.
 pub fn validate_chrome(doc: &Json) -> anyhow::Result<ChromeReport> {
@@ -384,6 +385,7 @@ pub fn validate_chrome(doc: &Json) -> anyhow::Result<ChromeReport> {
         if let Some(want) = match c.name.as_str() {
             "pnr.place" | "pnr.assign" | "pnr.route" => Some("pnr"),
             "dse.plan" | "dse.score" | "dse.rank" => Some("dse"),
+            "dse.rank.sort" | "dse.rank.frontier" => Some("dse.rank"),
             _ => None,
         } {
             let held = evs.iter().any(|p| {

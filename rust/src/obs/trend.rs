@@ -5,14 +5,19 @@
 //! The snapshot files answer "how fast is it now"; the trend file
 //! answers "which commit moved the p99" — the ROADMAP item this closes.
 //! CI runs `widesa trend --commit $GITHUB_SHA` after the bench smokes so
-//! every run appends exactly one line. The line shape (schema 1):
+//! every run appends exactly one line. The line shape (schema 2):
 //!
 //! ```json
-//! {"schema":1,"commit":"<sha>","ts":<unix-s>,
+//! {"schema":2,"commit":"<sha>","ts":<unix-s>,
 //!  "serve":{"p50_us":…,"p99_us":…,"p999_us":…,"shed_rate":…,
 //!           "overhead_p50_pct":…,"stage_ms":{"place":…,"assign":…,"route":…}},
-//!  "compile":{"cold_ms":{…},"anneal_speedup":…}}
+//!  "compile":{"cold_ms":{…},"anneal_speedup":…},
+//!  "energy":{"mm_f32_tops_per_watt":…}}
 //! ```
+//!
+//! Schema 2 added the `energy` section: the fp32 MM 8192³ TOPS/W from
+//! the shared analytic cost + power model, so efficiency regressions
+//! trend per commit alongside latency (`docs/ENERGY.md`).
 //!
 //! Missing inputs (file absent, or a seed schema full of `null`s) render
 //! as `null` fields rather than failing: a trend line that says "no
@@ -25,16 +30,23 @@ use std::path::Path;
 
 /// Version stamp on every trend line; bump on shape changes so readers
 /// can split the file by era.
-pub const TREND_SCHEMA: u32 = 1;
+pub const TREND_SCHEMA: u32 = 2;
 
 /// Copy `key` out of `src` (or `Json::Null` when absent/`src` is None).
 fn lift(src: Option<&Json>, key: &str) -> Json {
     src.and_then(|v| v.get(key)).cloned().unwrap_or(Json::Null)
 }
 
-/// Build one trend line from the two bench snapshots. Pure — callers
-/// supply the commit and timestamp, so tests are byte-exact.
-pub fn trend_line(commit: &str, unix_ts: u64, serve: Option<&Json>, compile: Option<&Json>) -> Json {
+/// Build one trend line from the two bench snapshots plus the analytic
+/// fp32 MM TOPS/W datum. Pure — callers supply the commit, timestamp and
+/// the efficiency number, so tests are byte-exact.
+pub fn trend_line(
+    commit: &str,
+    unix_ts: u64,
+    serve: Option<&Json>,
+    compile: Option<&Json>,
+    mm_f32_tops_per_watt: Option<f64>,
+) -> Json {
     let serve_part = Json::obj(vec![
         ("p50_us", lift(serve, "p50_us")),
         ("p99_us", lift(serve, "p99_us")),
@@ -59,12 +71,17 @@ pub fn trend_line(commit: &str, unix_ts: u64, serve: Option<&Json>, compile: Opt
                 .unwrap_or(Json::Null),
         ),
     ]);
+    let energy_part = Json::obj(vec![(
+        "mm_f32_tops_per_watt",
+        mm_f32_tops_per_watt.map_or(Json::Null, Json::Num),
+    )]);
     Json::obj(vec![
         ("schema", Json::num_u64(u64::from(TREND_SCHEMA))),
         ("commit", Json::str(commit)),
         ("ts", Json::num_u64(unix_ts)),
         ("serve", serve_part),
         ("compile", compile_part),
+        ("energy", energy_part),
     ])
 }
 
@@ -118,8 +135,20 @@ mod tests {
 
     #[test]
     fn trend_line_is_deterministic_and_complete() {
-        let a = trend_line("abc123", 1_700_000_000, Some(&serve_snapshot()), Some(&compile_snapshot()));
-        let b = trend_line("abc123", 1_700_000_000, Some(&serve_snapshot()), Some(&compile_snapshot()));
+        let a = trend_line(
+            "abc123",
+            1_700_000_000,
+            Some(&serve_snapshot()),
+            Some(&compile_snapshot()),
+            Some(0.074),
+        );
+        let b = trend_line(
+            "abc123",
+            1_700_000_000,
+            Some(&serve_snapshot()),
+            Some(&compile_snapshot()),
+            Some(0.074),
+        );
         assert_eq!(a.to_string(), b.to_string(), "same inputs → byte-identical line");
         assert_eq!(a.get("schema").unwrap().as_u64(), Some(u64::from(TREND_SCHEMA)));
         assert_eq!(a.get("commit").unwrap().as_str(), Some("abc123"));
@@ -136,13 +165,21 @@ mod tests {
             Some(45.0)
         );
         assert_eq!(compile.get("anneal_speedup").unwrap().as_f64(), Some(2.4));
+        assert_eq!(
+            a.get("energy").unwrap().get("mm_f32_tops_per_watt").unwrap().as_f64(),
+            Some(0.074)
+        );
     }
 
     #[test]
     fn missing_inputs_degrade_to_nulls() {
-        let line = trend_line("seed", 0, None, None);
+        let line = trend_line("seed", 0, None, None, None);
         assert_eq!(line.get("serve").unwrap().get("p50_us"), Some(&Json::Null));
         assert_eq!(line.get("compile").unwrap().get("cold_ms"), Some(&Json::Null));
+        assert_eq!(
+            line.get("energy").unwrap().get("mm_f32_tops_per_watt"),
+            Some(&Json::Null)
+        );
         // the line still parses back
         let rt = parse(&line.to_string()).unwrap();
         assert_eq!(rt.get("commit").unwrap().as_str(), Some("seed"));
@@ -155,7 +192,7 @@ mod tests {
         let path = dir.join("BENCH_trend.jsonl");
         let _ = std::fs::remove_file(&path);
         for i in 0..3u64 {
-            let line = trend_line(&format!("c{i}"), i, Some(&serve_snapshot()), None);
+            let line = trend_line(&format!("c{i}"), i, Some(&serve_snapshot()), None, None);
             append_trend(&path, &line).unwrap();
         }
         let text = std::fs::read_to_string(&path).unwrap();

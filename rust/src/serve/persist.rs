@@ -23,17 +23,26 @@
 //! Every validation failure — parse error, truncated line, schema bump,
 //! stamp mismatch — skips **that entry only** and never panics: a
 //! corrupt snapshot degrades to a colder start, not a dead server.
+//!
+//! Power figures are **derived, never stored**: estimates serialize
+//! their 14 performance fields exactly as before the power refactor,
+//! and the loader reprices [`crate::arch::power::PowerEstimate`]s (and
+//! the sim report's watts) through the default
+//! [`crate::arch::power::PowerModel`] — a pure function of the stored
+//! fields. Pre-refactor schema-1 snapshots therefore still warm-start,
+//! and within-version round-trips stay byte-identical.
 
 use crate::arch::array::Coord;
 use crate::arch::plio::PlioDir;
+use crate::arch::power::{design_activity, PowerModel};
 use crate::codegen::CodeBundle;
-use crate::coordinator::framework::CompiledDesign;
+use crate::coordinator::framework::{CompiledDesign, FrontierSummary};
 use crate::graph::builder::MappedGraph;
 use crate::graph::edge::{Edge, EdgeKind};
 use crate::graph::node::{Node, NodeKind};
 use crate::graph::packet::MergeStats;
 use crate::mapping::candidate::{Kind, MappingCandidate};
-use crate::mapping::cost::{PerfBound, PerfEstimate};
+use crate::mapping::cost::{price_power, Estimate, PerfBound, PerfEstimate};
 use crate::mapping::latency::LatencyHiding;
 use crate::mapping::partition::ArrayPartition;
 use crate::mapping::spacetime::SpaceTimeChoice;
@@ -488,6 +497,10 @@ fn bound_from(s: &str) -> Result<PerfBound> {
     })
 }
 
+/// Exactly the 14 performance fields, exactly this order — the layout
+/// predates the power refactor and is frozen so older snapshots keep
+/// warm-starting (power is repriced on load, never stored); guarded by
+/// `tests/cache_compat.rs`.
 fn estimate_to_json(e: &PerfEstimate) -> Json {
     Json::obj(vec![
         ("tops", Json::Num(e.tops)),
@@ -821,16 +834,41 @@ fn sim_to_json(s: &SimReport) -> Json {
     ])
 }
 
-fn sim_from_json(v: &Json) -> Result<SimReport> {
+/// Inverse of [`sim_to_json`], with watts replayed rather than read:
+/// the engine's own activity derivation (same shared [`PowerModel`], sim
+/// occupancy = 1 − stall, the design estimate's port/DRAM figures — the
+/// engine derives its internal estimate from the same model, so the two
+/// coincide bit-for-bit) is a pure function of the stored fields, so the
+/// restored report carries the identical power numbers without widening
+/// the snapshot layout.
+fn sim_from_json(v: &Json, power: &PowerModel, dtype: DType, est: &PerfEstimate) -> Result<SimReport> {
+    let seconds = f64_field(v, "seconds")?;
+    let tops = f64_field(v, "tops")?;
+    let aies = u64_field(v, "aies")?;
+    let stall_fraction = f64_field(v, "stall_fraction")?;
+    let p = power.estimate(
+        tops,
+        seconds,
+        &design_activity(
+            dtype,
+            aies.max(1),
+            est.plio_in_ports + est.plio_out_ports,
+            est.dram_bytes,
+            seconds,
+            (1.0 - stall_fraction).clamp(0.0, 1.0),
+        ),
+    );
     Ok(SimReport {
-        seconds: f64_field(v, "seconds")?,
+        seconds,
         cycles: u64_field(v, "cycles")?,
-        tops: f64_field(v, "tops")?,
-        aies: u64_field(v, "aies")?,
+        tops,
+        aies,
         tops_per_aie: f64_field(v, "tops_per_aie")?,
-        stall_fraction: f64_field(v, "stall_fraction")?,
+        stall_fraction,
         bound: bound_from(&str_field(v, "bound")?)?,
         rounds: u64_field(v, "rounds")?,
+        watts: p.watts,
+        tops_per_watt: p.tops_per_watt,
     })
 }
 
@@ -864,8 +902,8 @@ fn code_from_json(v: &Json) -> Result<CodeBundle> {
 pub fn design_to_json(d: &CompiledDesign) -> Json {
     Json::obj(vec![
         ("candidate", candidate_to_json(&d.candidate)),
-        ("estimate", estimate_to_json(&d.estimate)),
-        ("estimate_exact", estimate_to_json(&d.estimate_exact)),
+        ("estimate", estimate_to_json(&d.estimate.perf)),
+        ("estimate_exact", estimate_to_json(&d.estimate_exact.perf)),
         ("graph", graph_to_json(&d.graph)),
         (
             "merge_stats",
@@ -882,13 +920,28 @@ pub fn design_to_json(d: &CompiledDesign) -> Json {
     ])
 }
 
-/// Inverse of [`design_to_json`].
+/// Inverse of [`design_to_json`]. Power estimates (and the sim report's
+/// watts) are repriced through the default [`PowerModel`] — the same
+/// pure derivation the compile pipeline used — rather than read from the
+/// file. The frontier summary is a DSE-session artifact, not part of the
+/// design's identity, so restored designs report the empty summary.
 pub fn design_from_json(v: &Json) -> Result<CompiledDesign> {
     let m = field(v, "merge_stats")?;
+    let candidate = candidate_from_json(field(v, "candidate")?)?;
+    let dtype = candidate.rec.dtype;
+    let power_model = PowerModel::default();
+    let reprice = |perf: PerfEstimate| -> Estimate {
+        let power = price_power(&power_model, dtype, &perf);
+        Estimate { perf, power }
+    };
+    let estimate = reprice(estimate_from_json(field(v, "estimate")?)?);
+    let estimate_exact = reprice(estimate_from_json(field(v, "estimate_exact")?)?);
+    let sim = sim_from_json(field(v, "sim")?, &power_model, dtype, &estimate.perf)?;
     Ok(CompiledDesign {
-        candidate: candidate_from_json(field(v, "candidate")?)?,
-        estimate: estimate_from_json(field(v, "estimate")?)?,
-        estimate_exact: estimate_from_json(field(v, "estimate_exact")?)?,
+        candidate,
+        estimate,
+        estimate_exact,
+        frontier: FrontierSummary::default(),
         graph: graph_from_json(field(v, "graph")?)?,
         merge_stats: MergeStats {
             in_ports_before: usize_field(m, "in_before")?,
@@ -897,7 +950,7 @@ pub fn design_from_json(v: &Json) -> Result<CompiledDesign> {
             out_ports_after: usize_field(m, "out_after")?,
         },
         compile: compile_from_json(field(v, "compile")?)?,
-        sim: sim_from_json(field(v, "sim")?)?,
+        sim,
         code: code_from_json(field(v, "code")?)?,
     })
 }
@@ -1019,8 +1072,22 @@ mod tests {
         assert_eq!(key, 7);
         assert_eq!(back.candidate.summary(), d.candidate.summary());
         assert_eq!(back.candidate.kind, d.candidate.kind, "kind recomputed via Kind::of");
-        assert_eq!(back.estimate.tops.to_bits(), d.estimate.tops.to_bits());
-        assert_eq!(back.estimate_exact.tops.to_bits(), d.estimate_exact.tops.to_bits());
+        assert_eq!(back.estimate.perf.tops.to_bits(), d.estimate.perf.tops.to_bits());
+        assert_eq!(
+            back.estimate_exact.perf.tops.to_bits(),
+            d.estimate_exact.perf.tops.to_bits()
+        );
+        // power is repriced on load, not stored — and lands bit-identical
+        // because the derivation is a pure function of the stored fields
+        assert_eq!(
+            back.estimate.power.watts.to_bits(),
+            d.estimate.power.watts.to_bits()
+        );
+        assert_eq!(
+            back.estimate_exact.power.tops_per_watt.to_bits(),
+            d.estimate_exact.power.tops_per_watt.to_bits()
+        );
+        assert_eq!(back.sim.watts.to_bits(), d.sim.watts.to_bits());
         assert_eq!(back.graph.nodes.len(), d.graph.nodes.len());
         assert_eq!(back.graph.edges.len(), d.graph.edges.len());
         assert_eq!(back.merge_stats, d.merge_stats);

@@ -24,6 +24,11 @@
 //!   (optional; absent means the anonymous tenant `""`).
 //! * `max_aies`, `mover_bits`, `cold_dram` — per-request overrides of the
 //!   server's base [`crate::WideSaConfig`].
+//! * `objective` — `throughput` | `efficiency` | `pareto` ranking
+//!   objective override; `max_power_w` — board power cap in watts
+//!   (candidates drawing more are filtered before ranking). Both
+//!   optional; absent means the server's configured defaults, so
+//!   existing clients see identical behaviour.
 //!
 //! ## Response
 //!
@@ -35,7 +40,8 @@
 //!  "stage_ms":{"assign":0.4,"place":1.3,"route":2.0},"wall_us":812345.2}
 //! ```
 //!
-//! `tops`/`bound`/port counts come from the exact-port estimate
+//! `tops`/`bound`/port counts — and the `watts`/`tops_per_watt` power
+//! figures — come from the exact-port estimate
 //! ([`crate::CompiledDesign::estimate_exact`]) — the numbers that agree
 //! with what place & route saw; `stage_ms` breaks the P&R wall time into
 //! its place/assign/route stages so tail-latency regressions can be
@@ -56,6 +62,7 @@
 //! `stats` block and `metrics.serve.counters` read the *same* registry
 //! cells, so the two views reconcile by construction.
 
+use crate::mapping::dse::Objective;
 use crate::recurrence::dtype::DType;
 use crate::recurrence::library;
 use crate::recurrence::spec::UniformRecurrence;
@@ -77,6 +84,10 @@ pub struct CompileRequest {
     pub max_aies: Option<u64>,
     pub mover_bits: Option<u64>,
     pub cold_dram: Option<bool>,
+    /// Ranking objective override (`None` = server default).
+    pub objective: Option<Objective>,
+    /// Board power cap in watts (`None` = uncapped).
+    pub max_power_w: Option<f64>,
 }
 
 pub fn parse_dtype(s: &str) -> Result<DType> {
@@ -156,6 +167,29 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
                 .to_string(),
         ),
     };
+    let objective = match root.get("objective") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("field \"objective\" must be a string"))?;
+            Some(Objective::parse(s).ok_or_else(|| {
+                anyhow!("unknown objective {s:?} (throughput|efficiency|pareto)")
+            })?)
+        }
+    };
+    let max_power_w = match root.get("max_power_w") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let w = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("field \"max_power_w\" must be a number"))?;
+            if !(w.is_finite() && w > 0.0) {
+                bail!("field \"max_power_w\" must be a positive number of watts, got {w}");
+            }
+            Some(w)
+        }
+    };
     Ok(CompileRequest {
         id: root.get("id").cloned().unwrap_or(Json::Null),
         bench,
@@ -165,6 +199,8 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
         max_aies: get_u64(&root, "max_aies")?,
         mover_bits: get_u64(&root, "mover_bits")?,
         cold_dram,
+        objective,
+        max_power_w,
     })
 }
 
@@ -261,10 +297,12 @@ pub fn response_line(
         ("deduped", Json::Bool(outcome == CacheOutcome::Deduped)),
         ("key", Json::Str(format!("{key:016x}"))),
         ("name", Json::Str(design.candidate.rec.name.clone())),
-        ("aies", Json::Num(est.aies as f64)),
-        ("tops", Json::Num(est.tops)),
-        ("tops_per_aie", Json::Num(est.tops_per_aie)),
-        ("bound", Json::Str(est.bound.to_string())),
+        ("aies", Json::Num(est.perf.aies as f64)),
+        ("tops", Json::Num(est.perf.tops)),
+        ("tops_per_aie", Json::Num(est.perf.tops_per_aie)),
+        ("bound", Json::Str(est.perf.bound.to_string())),
+        ("watts", Json::Num(est.power.watts)),
+        ("tops_per_watt", Json::Num(est.power.tops_per_watt)),
         ("sim_tops", Json::Num(design.sim.tops)),
         ("pnr", Json::Bool(design.compile.success)),
         (
@@ -426,6 +464,8 @@ mod tests {
             max_aies: None,
             mover_bits: None,
             cold_dram: None,
+            objective: None,
+            max_power_w: None,
         };
         assert!(request_recurrence(&zero).is_err());
     }
@@ -447,6 +487,35 @@ mod tests {
         assert!(request_recurrence(&real_fft).is_err());
         let odd_fft = parse_request(r#"{"bench":"fft2d","dims":[64,100]}"#).unwrap();
         assert!(request_recurrence(&odd_fft).is_err());
+    }
+
+    #[test]
+    fn objective_and_power_cap_parse_and_validate() {
+        let req = parse_request(
+            r#"{"bench":"mm","objective":"pareto","max_power_w":45.5}"#,
+        )
+        .unwrap();
+        assert_eq!(req.objective, Some(Objective::Pareto));
+        assert_eq!(req.max_power_w, Some(45.5));
+
+        let req = parse_request(r#"{"bench":"mm","objective":"efficiency"}"#).unwrap();
+        assert_eq!(req.objective, Some(Objective::Efficiency));
+        assert_eq!(req.max_power_w, None);
+
+        // absent and null both mean "server default"
+        let req = parse_request(r#"{"bench":"mm","objective":null,"max_power_w":null}"#).unwrap();
+        assert_eq!(req.objective, None);
+        assert_eq!(req.max_power_w, None);
+        let req = parse_request(r#"{"bench":"mm"}"#).unwrap();
+        assert_eq!(req.objective, None);
+        assert_eq!(req.max_power_w, None);
+
+        // typed per-field errors, not silent coercion
+        assert!(parse_request(r#"{"bench":"mm","objective":"fastest"}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","objective":3}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","max_power_w":-5}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","max_power_w":0}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","max_power_w":"55w"}"#).is_err());
     }
 
     #[test]

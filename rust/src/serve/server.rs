@@ -34,9 +34,9 @@
 //! (see [`crate::serve::pool`]).
 
 use crate::coordinator::framework::{
-    CompiledDesign, NoLegalMapping, WideSa, WideSaConfig, FALLBACK_CANDIDATES,
+    CompiledDesign, FrontierSummary, NoLegalMapping, WideSa, WideSaConfig, FALLBACK_CANDIDATES,
 };
-use crate::mapping::cost::{CostModel, PerfEstimate};
+use crate::mapping::cost::{CostModel, Estimate};
 use crate::mapping::dse::{self, Ranked};
 use crate::mapping::MappingCandidate;
 use crate::obs::metrics::{Counter, Histogram, Registry};
@@ -265,6 +265,9 @@ struct Metrics {
     shed: Arc<Counter>,
     plan_hits: Arc<Counter>,
     batch_coalesced: Arc<Counter>,
+    /// Requests carrying an explicit `objective` override (the rest rank
+    /// under the server's configured default).
+    objective: Arc<Counter>,
     /// Cold-compile latency (µs), recorded by the single-flight leader.
     compile_us: Arc<Histogram>,
     /// End-to-end protocol request latency (µs), recorded per line.
@@ -282,6 +285,7 @@ impl Metrics {
             shed: registry.counter("serve.shed"),
             plan_hits: registry.counter("serve.plan_hits"),
             batch_coalesced: registry.counter("serve.batch_coalesced"),
+            objective: registry.counter("serve.objective"),
             compile_us: registry.histogram("serve.compile_us"),
             request_us: registry.histogram("serve.request_us"),
             registry,
@@ -697,6 +701,12 @@ impl ServeHandle {
         if self.inner.dse_pool.workers() <= 1 || ranked.len() <= 1 {
             return ws.compile_ranked(rec, ranked).map(Arc::new);
         }
+        // Same frontier summary the serial compile_ranked path attaches:
+        // the pooled fallback fan-out must not lose it.
+        let summary = FrontierSummary {
+            frontier: dse::frontier_size(&ranked),
+            candidates: ranked.len(),
+        };
         let model = ws.cost_model();
         let mut top: Vec<_> = ranked
             .into_iter()
@@ -706,7 +716,8 @@ impl ServeHandle {
         // Top candidate first: the common first-success case costs one
         // evaluation (like the serial loop); only a P&R failure pays for
         // the speculative fallback fan-out.
-        let first = ws.evaluate_candidate(&model, top.remove(0));
+        let mut first = ws.evaluate_candidate(&model, top.remove(0));
+        first.frontier = summary;
         if first.compile.success || top.is_empty() {
             return Ok(Arc::new(first));
         }
@@ -728,12 +739,17 @@ impl ServeHandle {
             .collect();
         let mut designs = self.inner.dse_pool.scatter(jobs);
         designs.insert(0, first);
-        WideSa::select_design(designs).map(Arc::new).ok_or_else(|| {
-            NoLegalMapping {
-                recurrence: rec.name.clone(),
-            }
-            .into()
-        })
+        WideSa::select_design(designs)
+            .map(|mut d| {
+                d.frontier = summary;
+                Arc::new(d)
+            })
+            .ok_or_else(|| {
+                NoLegalMapping {
+                    recurrence: rec.name.clone(),
+                }
+                .into()
+            })
     }
 
     /// The memoized DSE plan for a request's (recurrence, board,
@@ -754,8 +770,9 @@ impl ServeHandle {
     /// `explore_all` with the plan memoized across requests and
     /// per-candidate scoring as pool jobs. Results come back in
     /// submission (= enumeration) order via [`WorkerPool::scatter`],
-    /// then go through the canonical [`dse::rank`] — bit-identical to
-    /// the serial path.
+    /// then go through the canonical objective dispatch
+    /// ([`dse::rank_by`]) — bit-identical to the serial path under
+    /// every [`dse::Objective`].
     fn explore_all_pooled(&self, rec: &UniformRecurrence, cfg: &WideSaConfig) -> Ranked {
         let _dse = Span::begin("dse", "dse");
         let plan = self.plan_for(rec, cfg);
@@ -766,7 +783,7 @@ impl ServeHandle {
         // Pool jobs are 'static: share the invariants behind Arcs. Each
         // job re-installs this request's trace ID on its worker thread
         // so its dse.score span correlates across the pool.
-        type ScoreJob = Box<dyn FnOnce() -> Option<(MappingCandidate, PerfEstimate)> + Send>;
+        type ScoreJob = Box<dyn FnOnce() -> Option<(MappingCandidate, Estimate)> + Send>;
         let rec = Arc::new(rec.clone());
         let model: Arc<CostModel> = Arc::new(dse::scoring_model(&cfg.board, &cfg.constraints));
         let cons = Arc::new(cfg.constraints.clone());
@@ -784,7 +801,10 @@ impl ServeHandle {
             })
             .collect();
         let scored = self.inner.dse_pool.scatter(jobs);
-        dse::rank(scored.into_iter().flatten().collect())
+        dse::rank_by(
+            scored.into_iter().flatten().collect(),
+            cfg.constraints.objective,
+        )
     }
 
     /// Effective per-request configuration: the base with the request's
@@ -799,6 +819,13 @@ impl ServeHandle {
         }
         if let Some(cold) = req.cold_dram {
             cfg.cold_dram = cold;
+        }
+        if let Some(obj) = req.objective {
+            cfg.constraints.objective = obj;
+            self.inner.metrics.objective.inc();
+        }
+        if let Some(w) = req.max_power_w {
+            cfg.constraints.max_power_w = Some(w);
         }
         cfg
     }
@@ -928,7 +955,7 @@ fn serve_connection(handle: &ServeHandle, stream: TcpStream) -> std::io::Result<
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mapping::dse::{explore_all, DseConstraints};
+    use crate::mapping::dse::{explore_all, DseConstraints, Objective};
     use crate::recurrence::{dtype::DType, library};
 
     fn small_cfg() -> WideSaConfig {
@@ -975,7 +1002,8 @@ mod tests {
             assert_eq!(serial.len(), pooled.len());
             for (s, p) in serial.iter().zip(&pooled) {
                 assert_eq!(s.0.summary(), p.0.summary());
-                assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
+                assert_eq!(s.1.perf.tops.to_bits(), p.1.perf.tops.to_bits());
+                assert_eq!(s.1.power.watts.to_bits(), p.1.power.watts.to_bits());
             }
         }
         // rescoring the same recurrences hit the memoized plan cache
@@ -1019,10 +1047,42 @@ mod tests {
             assert_eq!(served.design.compile.success, serial.compile.success);
             assert_eq!(served.design.merge_stats, serial.merge_stats);
             assert_eq!(
-                served.design.estimate.tops.to_bits(),
-                serial.estimate.tops.to_bits()
+                served.design.estimate.perf.tops.to_bits(),
+                serial.estimate.perf.tops.to_bits()
+            );
+            assert_eq!(
+                served.design.frontier, serial.frontier,
+                "pooled path must attach the same frontier summary"
             );
         }
+    }
+
+    #[test]
+    fn objective_and_power_cap_overrides_flow_into_config() {
+        let handle = ServeHandle::new(ServeConfig {
+            base: small_cfg(),
+            ..Default::default()
+        });
+        let req = protocol::parse_request(
+            r#"{"bench":"mm","objective":"pareto","max_power_w":50}"#,
+        )
+        .unwrap();
+        let cfg = handle.effective_config(&req);
+        assert_eq!(cfg.constraints.objective, Objective::Pareto);
+        assert_eq!(cfg.constraints.max_power_w, Some(50.0));
+        assert_eq!(handle.inner.metrics.objective.get(), 1);
+        // a plain request leaves the defaults (and the counter) alone
+        let plain = protocol::parse_request(r#"{"bench":"mm"}"#).unwrap();
+        let cfg = handle.effective_config(&plain);
+        assert_eq!(cfg.constraints.objective, Objective::Throughput);
+        assert_eq!(cfg.constraints.max_power_w, None);
+        assert_eq!(handle.inner.metrics.objective.get(), 1);
+        // the override shifts the cache key, so objective variants of
+        // one workload cache as distinct designs
+        let rec = library::mm(1024, 1024, 1024, DType::F32);
+        let base = handle.config().base.clone();
+        let pareto = handle.effective_config(&req);
+        assert_ne!(design_key(&rec, &base), design_key(&rec, &pareto));
     }
 
     #[test]

@@ -79,7 +79,7 @@ pub fn simulate(cand: &MappingCandidate, model: &CostModel, cfg: &SimConfig) -> 
 
     // Phase durations shared with the analytic model: per-round PLIO
     // in/out times at the assigned port counts.
-    let est = model.estimate(cand);
+    let est = model.estimate(cand).perf;
     let in_round_s = est.plio_in_s / rounds as f64;
     let out_round_s = est.plio_out_s / rounds as f64;
     let in_bytes_round = est.dram_bytes as f64 / rounds as f64; // prefetch granularity
@@ -158,6 +158,23 @@ pub fn simulate(cand: &MappingCandidate, model: &CostModel, cfg: &SimConfig) -> 
         est.bound
     };
 
+    // Occupancy-consistent power from the same shared model the cost
+    // estimate priced with (the one-power-model invariant): identical
+    // activity derivation, but at the simulator's own wall time and
+    // occupancy (1 − stall) rather than the analytic ones.
+    let power = model.power.estimate(
+        tops,
+        seconds,
+        &crate::arch::power::design_activity(
+            dtype,
+            aies,
+            est.plio_in_ports + est.plio_out_ports,
+            est.dram_bytes,
+            seconds,
+            (1.0 - stall).clamp(0.0, 1.0),
+        ),
+    );
+
     (
         SimReport {
             seconds,
@@ -168,6 +185,8 @@ pub fn simulate(cand: &MappingCandidate, model: &CostModel, cfg: &SimConfig) -> 
             stall_fraction: stall,
             bound,
             rounds,
+            watts: power.watts,
+            tops_per_watt: power.tops_per_watt,
         },
         trace,
     )
@@ -185,7 +204,7 @@ mod tests {
         rec: crate::recurrence::spec::UniformRecurrence,
         cap: u64,
         cold: bool,
-    ) -> (SimReport, crate::mapping::cost::PerfEstimate) {
+    ) -> (SimReport, crate::mapping::cost::Estimate) {
         let board = BoardConfig::vck5000();
         let cons = DseConstraints {
             max_aies: Some(cap),
@@ -207,15 +226,35 @@ mod tests {
     #[test]
     fn sim_agrees_with_analytic_mm() {
         let (rep, est) = sim_for(library::mm(8192, 8192, 8192, DType::F32), 400, false);
-        let rel = (rep.tops - est.tops).abs() / est.tops;
-        assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.tops);
+        let rel = (rep.tops - est.perf.tops).abs() / est.perf.tops;
+        assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.perf.tops);
     }
 
     #[test]
     fn sim_agrees_with_analytic_conv() {
         let (rep, est) = sim_for(library::conv2d(10240, 10240, 8, 8, DType::I8), 400, false);
-        let rel = (rep.tops - est.tops).abs() / est.tops;
-        assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.tops);
+        let rel = (rep.tops - est.perf.tops).abs() / est.perf.tops;
+        assert!(rel < 0.15, "sim {} vs analytic {}", rep.tops, est.perf.tops);
+    }
+
+    #[test]
+    fn sim_power_tracks_the_shared_model() {
+        // One power model end to end: the sim's watts come from the same
+        // coefficients as the analytic estimate, differing only through
+        // occupancy and wall time — so they must land within the same
+        // ballpark (well inside 25 % for a compute-bound design), and the
+        // efficiency must divide out exactly.
+        let (rep, est) = sim_for(library::mm(8192, 8192, 8192, DType::F32), 400, false);
+        assert!(rep.watts > 0.0);
+        let rel = (rep.watts - est.power.watts).abs() / est.power.watts;
+        assert!(
+            rel < 0.25,
+            "sim power {} W vs analytic {} W (rel {rel:.3})",
+            rep.watts,
+            est.power.watts
+        );
+        assert!((rep.tops_per_watt - rep.tops / rep.watts).abs() < 1e-12);
+        assert!(rep.summary().contains("TOPS/W"));
     }
 
     #[test]
@@ -230,12 +269,12 @@ mod tests {
         ] {
             let name = rec.name.clone();
             let (rep, est) = sim_for(rec, cap, false);
-            let rel = (rep.tops - est.tops).abs() / est.tops;
+            let rel = (rep.tops - est.perf.tops).abs() / est.perf.tops;
             assert!(
                 rel < 0.15,
                 "{name}: sim {} vs analytic {} (rel {rel:.3})",
                 rep.tops,
-                est.tops
+                est.perf.tops
             );
         }
     }
@@ -253,7 +292,7 @@ mod tests {
         };
         let (cand, _) = explore(&library::mm(10240, 10240, 10240, DType::I8), &board, &cons).unwrap();
         let model = CostModel::new(board).with_mover_bits(128);
-        let est = model.estimate(&cand);
+        let est = model.estimate(&cand).perf;
         let (rep, _) = simulate(&cand, &model, &SimConfig::default());
         let rel = (rep.tops - est.tops).abs() / est.tops;
         assert!(
@@ -307,7 +346,7 @@ mod tests {
     #[test]
     fn stall_fraction_small_when_compute_bound() {
         let (rep, est) = sim_for(library::mm(8192, 8192, 8192, DType::I8), 400, false);
-        assert_eq!(est.bound, crate::mapping::cost::PerfBound::Compute);
+        assert_eq!(est.perf.bound, crate::mapping::cost::PerfBound::Compute);
         assert!(rep.stall_fraction < 0.2, "stall {}", rep.stall_fraction);
     }
 }

@@ -15,18 +15,25 @@ pub struct SimReport {
     pub stall_fraction: f64,
     pub bound: PerfBound,
     pub rounds: u64,
+    /// Board draw priced from the *same* power model the cost estimate
+    /// used (the one-power-model invariant), at the simulator's own
+    /// occupancy (1 − stall) and wall time.
+    pub watts: f64,
+    pub tops_per_watt: f64,
 }
 
 impl SimReport {
     pub fn summary(&self) -> String {
         format!(
-            "{:.4} TOPS on {} AIEs ({:.4} TOPS/AIE), {:.3} ms, stall {:.1}%, bound {}",
+            "{:.4} TOPS on {} AIEs ({:.4} TOPS/AIE), {:.3} ms, stall {:.1}%, bound {}, {:.1} W ({:.4} TOPS/W)",
             self.tops,
             self.aies,
             self.tops_per_aie,
             self.seconds * 1e3,
             self.stall_fraction * 100.0,
-            self.bound
+            self.bound,
+            self.watts,
+            self.tops_per_watt
         )
     }
 }

@@ -1,0 +1,198 @@
+//! Cache-key and snapshot compatibility regression tests.
+//!
+//! The power/objective refactor widened [`DseConstraints`] and the
+//! design estimate, but both are wire/disk surfaces with compatibility
+//! promises:
+//!
+//! * `DseConstraints::fingerprint` feeds the serve cache's
+//!   [`design_key`], which clients may remember across server restarts —
+//!   at default `max_power_w`/`objective` it must hash to exactly the
+//!   pre-refactor bytes (golden constants below, FNV-1a over the legacy
+//!   byte sequence);
+//! * `serve::persist` snapshots must keep the schema-1 layout: power is
+//!   derived on load, never stored, so pre-refactor snapshot files keep
+//!   warm-starting the cache.
+
+use widesa::coordinator::framework::WideSaConfig;
+use widesa::mapping::dse::{DseConstraints, Objective};
+use widesa::recurrence::{dtype::DType, library};
+use widesa::serve::cache::design_key;
+use widesa::serve::persist::{entry_line, load_snapshot, save_snapshot};
+use widesa::util::hash::Fnv64;
+use widesa::WideSa;
+
+fn fingerprint_of(cons: &DseConstraints) -> u64 {
+    let mut h = Fnv64::new();
+    cons.fingerprint(&mut h);
+    h.finish()
+}
+
+/// The constraint fingerprint exactly as it was written before
+/// `max_power_w` and `objective` existed: the `max_aies` tag byte (+
+/// value) followed by the three ablation booleans, nothing else.
+fn legacy_fingerprint(
+    max_aies: Option<u64>,
+    no_latency_hiding: bool,
+    no_threading: bool,
+    analytic_ranking: bool,
+) -> u64 {
+    let mut h = Fnv64::new();
+    match max_aies {
+        Some(v) => {
+            h.write_u8(1);
+            h.write_u64(v);
+        }
+        None => h.write_u8(0),
+    }
+    h.write_bool(no_latency_hiding);
+    h.write_bool(no_threading);
+    h.write_bool(analytic_ranking);
+    h.finish()
+}
+
+#[test]
+fn default_fingerprint_matches_pre_refactor_goldens() {
+    // FNV-1a over [0x00, 0x00, 0x00, 0x00] — the literal byte sequence
+    // DseConstraints::default() hashed to before the power refactor.
+    // If this constant moves, every serve client's remembered key and
+    // every schema-1 snapshot key goes stale. Do not "fix" the constant.
+    assert_eq!(
+        fingerprint_of(&DseConstraints::default()),
+        0x4d25_767f_9dce_13f5,
+        "default DseConstraints fingerprint drifted from the pre-refactor bytes"
+    );
+    // The common serve operating point (max_aies = 400, everything else
+    // default) — same era, same promise.
+    assert_eq!(
+        fingerprint_of(&DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        }),
+        0xe010_69cf_ed57_745d,
+        "max_aies=400 fingerprint drifted from the pre-refactor bytes"
+    );
+}
+
+#[test]
+fn fingerprint_matches_legacy_bytes_across_the_legacy_field_space() {
+    // At default max_power_w/objective, the new fingerprint must equal
+    // the legacy byte sequence for *every* combination of the legacy
+    // fields, not just the defaults.
+    for max_aies in [None, Some(1), Some(64), Some(400)] {
+        for bits in 0u8..8 {
+            let (nl, nt, ar) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            let cons = DseConstraints {
+                max_aies,
+                no_latency_hiding: nl,
+                no_threading: nt,
+                analytic_ranking: ar,
+                max_power_w: None,
+                objective: Objective::Throughput,
+            };
+            assert_eq!(
+                fingerprint_of(&cons),
+                legacy_fingerprint(max_aies, nl, nt, ar),
+                "fingerprint bytes changed for {cons:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn new_fields_shift_the_fingerprint_only_when_set() {
+    let base = fingerprint_of(&DseConstraints::default());
+    // explicit defaults are the same constraints
+    assert_eq!(
+        base,
+        fingerprint_of(&DseConstraints {
+            max_power_w: None,
+            objective: Objective::Throughput,
+            ..Default::default()
+        })
+    );
+    // non-default values are distinct cache entries
+    let capped = fingerprint_of(&DseConstraints {
+        max_power_w: Some(50.0),
+        ..Default::default()
+    });
+    let pareto = fingerprint_of(&DseConstraints {
+        objective: Objective::Pareto,
+        ..Default::default()
+    });
+    let efficiency = fingerprint_of(&DseConstraints {
+        objective: Objective::Efficiency,
+        ..Default::default()
+    });
+    assert_ne!(base, capped);
+    assert_ne!(base, pareto);
+    assert_ne!(base, efficiency);
+    assert_ne!(pareto, efficiency);
+    assert_ne!(capped, pareto);
+}
+
+#[test]
+fn design_key_unchanged_at_default_constraints_and_shifted_otherwise() {
+    let rec = library::mm(1024, 1024, 1024, DType::F32);
+    let cfg = WideSaConfig::default();
+    let base = design_key(&rec, &cfg);
+    // explicitly spelling out the new fields' defaults is a no-op
+    let mut explicit = cfg.clone();
+    explicit.constraints.max_power_w = None;
+    explicit.constraints.objective = Objective::Throughput;
+    assert_eq!(base, design_key(&rec, &explicit));
+    // objective / power-cap overrides get their own cache entries
+    let mut pareto = cfg.clone();
+    pareto.constraints.objective = Objective::Pareto;
+    assert_ne!(base, design_key(&rec, &pareto));
+    let mut capped = cfg.clone();
+    capped.constraints.max_power_w = Some(55.0);
+    assert_ne!(base, design_key(&rec, &capped));
+}
+
+#[test]
+fn snapshot_layout_is_frozen_and_stale_snapshots_warm_start() {
+    let ws = WideSa::new(WideSaConfig {
+        constraints: DseConstraints {
+            max_aies: Some(32),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let rec = library::fir(65536, 15, DType::F32);
+    let d = ws.compile(&rec).expect("small FIR compiles");
+    let key = design_key(&rec, &ws.config);
+    let line = entry_line(key, &d);
+
+    // The schema-1 layout is frozen: power and frontier figures are
+    // derived on load, never serialized, so this line is byte-compatible
+    // with files written before the power refactor.
+    assert!(line.contains("\"schema\":1"), "snapshot schema must stay 1");
+    assert!(!line.contains("watts"), "power must not be serialized");
+    assert!(!line.contains("tops_per_watt"), "power must not be serialized");
+    assert!(!line.contains("objective"), "objective is not part of a design");
+    assert!(!line.contains("frontier"), "frontier summaries are per-DSE-run");
+
+    // A pre-refactor snapshot (same bytes, since the layout never
+    // changed) warm-starts: entries load, and the loader reprices power
+    // to exactly what the live compile produced.
+    let dir = std::env::temp_dir().join(format!("widesa-cache-compat-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("snap.jsonl");
+    std::fs::write(&path, format!("{line}\n")).unwrap();
+    let (mut entries, skipped) = load_snapshot(&path);
+    assert_eq!(skipped, 0, "a frozen-layout snapshot must load cleanly");
+    assert_eq!(entries.len(), 1);
+    let (loaded_key, back) = entries.remove(0);
+    assert_eq!(loaded_key, key);
+    assert_eq!(back.estimate.perf.tops.to_bits(), d.estimate.perf.tops.to_bits());
+    assert_eq!(back.estimate.power.watts.to_bits(), d.estimate.power.watts.to_bits());
+    assert_eq!(back.sim.watts.to_bits(), d.sim.watts.to_bits());
+
+    // and the save path reproduces the identical bytes (round-trip
+    // stability is what lets a server rewrite an old snapshot without
+    // churning it)
+    let arc = std::sync::Arc::new(back);
+    save_snapshot(&path, &[(key, arc)]).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), format!("{line}\n"));
+    let _ = std::fs::remove_file(&path);
+}

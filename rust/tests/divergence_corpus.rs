@@ -1,21 +1,29 @@
-//! The one-port-model invariant, end to end:
+//! The one-port-model and one-power-model invariants, end to end, as
+//! [`testkit::laws`] driven over the Table II corpus:
 //!
 //! 1. the incremental port predictor ([`predict_ports`]) is bit-identical
 //!    to [`merge_ports_with_budget`] on **every DSE candidate** of all 14
-//!    Table II recurrences, across port-cap settings;
+//!    Table II recurrences, across port-cap settings
+//!    ([`laws::predictor_matches_merge`]);
 //! 2. a divergence corpus: sweep Table II × port caps under both the
 //!    exact and the legacy analytic ranking, record every candidate where
 //!    the two rankings disagree, and assert the exact-ranked winner
 //!    always satisfies the paper's 78-in/78-out PLIO budget after real
 //!    packet merging;
 //! 3. serial and scoped-thread rankings stay bit-identical under the
-//!    exact port model, including on starved boards where the models
-//!    genuinely diverge.
+//!    exact port model ([`laws::serial_parallel_ranking`]), including on
+//!    starved boards where the models genuinely diverge;
+//! 4. the Pareto ranking obeys [`laws::pareto_frontier`] on all 14
+//!    recurrences: non-dominated frontier prefix, insertion-order
+//!    independent membership, serial ≡ scoped-thread bit-for-bit.
 
+mod testkit;
+
+use testkit::laws;
 use widesa::arch::vck5000::BoardConfig;
 use widesa::graph::builder::build;
-use widesa::graph::packet::{merge_ports_with_budget, predict_ports};
-use widesa::mapping::dse::{self, explore_all, explore_all_parallel, DseConstraints};
+use widesa::graph::packet::merge_ports_with_budget;
+use widesa::mapping::dse::{self, explore_all, DseConstraints};
 use widesa::recurrence::library;
 
 fn cons(analytic: bool) -> DseConstraints {
@@ -30,30 +38,8 @@ fn cons(analytic: bool) -> DseConstraints {
 fn predictor_is_bit_identical_to_merge_on_all_table2_candidates() {
     for budget in [78u32, 16, 8] {
         let board = BoardConfig::vck5000().with_plio_budget(budget);
-        let constraints = cons(false);
-        let model = dse::scoring_model(&board, &constraints);
         for rec in library::table2_benchmarks() {
-            let plan = dse::plan(&rec, &board, &constraints);
-            for choice in plan.choices.clone() {
-                let Some((cand, _)) =
-                    dse::score_choice(&rec, &model, &constraints, &plan, choice)
-                else {
-                    continue;
-                };
-                let g = build(&cand, &model);
-                let (in_b, out_b) = (
-                    board.plio.in_channels as usize,
-                    board.plio.out_channels as usize,
-                );
-                let (_, stats) = merge_ports_with_budget(&g, model.channel_bw(), in_b, out_b);
-                let predicted = predict_ports(&cand, &model, model.channel_bw(), in_b, out_b);
-                assert_eq!(
-                    predicted, stats,
-                    "{} @ {budget} channels: predictor diverged on {}",
-                    rec.name,
-                    cand.summary()
-                );
-            }
+            laws::predictor_matches_merge(&rec, &board, &cons(false));
         }
     }
 }
@@ -65,30 +51,8 @@ fn predictor_is_bit_identical_on_the_expanded_catalog() {
     // keep it bit-identical to real merging there too
     for budget in [78u32, 16] {
         let board = BoardConfig::vck5000().with_plio_budget(budget);
-        let constraints = cons(false);
-        let model = dse::scoring_model(&board, &constraints);
         for rec in library::catalog_small() {
-            let plan = dse::plan(&rec, &board, &constraints);
-            for choice in plan.choices.clone() {
-                let Some((cand, _)) =
-                    dse::score_choice(&rec, &model, &constraints, &plan, choice)
-                else {
-                    continue;
-                };
-                let g = build(&cand, &model);
-                let (in_b, out_b) = (
-                    board.plio.in_channels as usize,
-                    board.plio.out_channels as usize,
-                );
-                let (_, stats) = merge_ports_with_budget(&g, model.channel_bw(), in_b, out_b);
-                let predicted = predict_ports(&cand, &model, model.channel_bw(), in_b, out_b);
-                assert_eq!(
-                    predicted, stats,
-                    "{} @ {budget} channels: predictor diverged on {}",
-                    rec.name,
-                    cand.summary()
-                );
-            }
+            laws::predictor_matches_merge(&rec, &board, &cons(false));
         }
     }
 }
@@ -158,16 +122,18 @@ fn parallel_ranking_bit_identical_under_exact_model() {
     // genuinely disagree here), so this checks determinism of the exact
     // ranking itself, not just of the arithmetic both models share
     let board = BoardConfig::vck5000().with_plio_budget(16);
-    let constraints = cons(false);
     for rec in library::table2_benchmarks() {
-        let serial = explore_all(&rec, &board, &constraints);
-        for threads in [2, 8] {
-            let par = explore_all_parallel(&rec, &board, &constraints, threads);
-            assert_eq!(serial.len(), par.len(), "{} × {threads}", rec.name);
-            for (s, p) in serial.iter().zip(&par) {
-                assert_eq!(s.0.summary(), p.0.summary(), "{} × {threads}", rec.name);
-                assert_eq!(s.1.tops.to_bits(), p.1.tops.to_bits());
-            }
-        }
+        laws::serial_parallel_ranking(&rec, &board, &cons(false), &[2, 8]);
+    }
+}
+
+#[test]
+fn pareto_law_holds_on_all_table2_recurrences() {
+    // the third exploration driver (serve's worker pool) shares rank_by
+    // with these two and is pinned to the serial ranking by the server's
+    // own pooled-vs-serial test; together the three stay bit-identical
+    let board = BoardConfig::vck5000();
+    for rec in library::table2_benchmarks() {
+        laws::pareto_frontier(&rec, &board, &cons(false), &[2, 8]);
     }
 }

@@ -38,10 +38,10 @@ fn every_table2_benchmark_compiles_end_to_end() {
             .compile(&rec)
             .unwrap_or_else(|e| panic!("{}: {e}", rec.name));
         assert!(d.compile.success, "{} failed P&R", rec.name);
-        assert!(d.estimate.tops > 0.0);
+        assert!(d.estimate.perf.tops > 0.0);
         assert!(d.merge_stats.in_ports_after <= 78, "{}", rec.name);
         assert!(d.merge_stats.out_ports_after <= 78, "{}", rec.name);
-        assert!(d.estimate.aies <= cap);
+        assert!(d.estimate.perf.aies <= cap);
     }
 }
 
@@ -146,13 +146,13 @@ fn sim_and_analytic_agree_across_benchmarks() {
         (library::fft2d(8192, 8192, DType::CI16), 320),
     ] {
         let d = ws(cap).compile(&rec).unwrap();
-        let rel = (d.sim.tops - d.estimate.tops).abs() / d.estimate.tops;
+        let rel = (d.sim.tops - d.estimate.perf.tops).abs() / d.estimate.perf.tops;
         assert!(
             rel < 0.15,
             "{}: sim {:.3} vs analytic {:.3}",
             rec.name,
             d.sim.tops,
-            d.estimate.tops
+            d.estimate.perf.tops
         );
     }
 }
@@ -164,7 +164,7 @@ fn bound_classification_sensible() {
     let d = ws(400)
         .compile(&library::mm(8192, 8192, 8192, DType::F32))
         .unwrap();
-    assert_eq!(d.estimate.bound, PerfBound::Compute);
+    assert_eq!(d.estimate.perf.bound, PerfBound::Compute);
 
     let starved = WideSa::new(WideSaConfig {
         board: BoardConfig::vck5000().with_plio_budget(4),
@@ -178,8 +178,8 @@ fn bound_classification_sensible() {
     let d2 = starved
         .compile(&library::mm(8192, 8192, 8192, DType::F32))
         .unwrap();
-    assert_ne!(d2.estimate.bound, PerfBound::Compute);
-    assert!(d2.estimate.tops < d.estimate.tops);
+    assert_ne!(d2.estimate.perf.bound, PerfBound::Compute);
+    assert!(d2.estimate.perf.tops < d.estimate.perf.tops);
 }
 
 #[test]

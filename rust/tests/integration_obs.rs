@@ -193,7 +193,13 @@ fn committed_trend_seed_parses() {
     let lines = trend::parse_trend(&text).expect("seed parses");
     assert!(!lines.is_empty());
     for line in &lines {
-        assert_eq!(line.get("schema").and_then(Json::as_u64), Some(1));
+        // schema 1 = latency-only era, schema 2 added the energy section;
+        // the append-only seed legitimately spans eras.
+        let schema = line.get("schema").and_then(Json::as_u64).expect("schema");
+        assert!(
+            (1..=u64::from(trend::TREND_SCHEMA)).contains(&schema),
+            "unknown trend schema {schema}"
+        );
         assert!(line.get("commit").and_then(Json::as_str).is_some());
         assert!(line.get("serve").is_some() && line.get("compile").is_some());
     }

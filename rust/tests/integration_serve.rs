@@ -133,9 +133,15 @@ fn parallel_dse_matches_serial_on_all_library_recurrences() {
         let (pw, pe) = &parallel[0];
         assert_eq!(sw.summary(), pw.summary(), "{}: winner differs", rec.name);
         assert_eq!(
-            se.tops.to_bits(),
-            pe.tops.to_bits(),
+            se.perf.tops.to_bits(),
+            pe.perf.tops.to_bits(),
             "{}: winner estimate differs",
+            rec.name
+        );
+        assert_eq!(
+            se.power.watts.to_bits(),
+            pe.power.watts.to_bits(),
+            "{}: winner power differs",
             rec.name
         );
         for (s, p) in serial.iter().zip(&parallel) {
@@ -158,6 +164,11 @@ fn protocol_round_trip_through_service() {
         Some("mm_1024x1024x1024_Float")
     );
     assert!(v.get("tops").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        v.get("watts").unwrap().as_f64().unwrap() > 13.0,
+        "response watts must sit above the static floor"
+    );
+    assert!(v.get("tops_per_watt").unwrap().as_f64().unwrap() > 0.0);
     assert!(v.get("aies").unwrap().as_u64().unwrap() <= 64);
     assert_eq!(v.get("key").unwrap().as_str().unwrap().len(), 16);
 

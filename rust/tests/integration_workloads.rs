@@ -40,7 +40,7 @@ fn every_catalog_workload_compiles_to_a_legal_design() {
         assert!(d.compile.success, "{name}: place & route failed");
         assert!(d.merge_stats.in_ports_after <= 78, "{name}");
         assert!(d.merge_stats.out_ports_after <= 78, "{name}");
-        assert!(d.estimate.tops > 0.0, "{name}");
+        assert!(d.estimate.perf.tops > 0.0, "{name}");
         assert!(d.sim.tops > 0.0, "{name}");
         assert!(!d.code.aie_kernel.is_empty(), "{name}");
     }

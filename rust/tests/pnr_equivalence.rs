@@ -6,21 +6,22 @@
 //! grid, CSR incidence and a bitset violated-edge worklist — but it must
 //! consume the *identical* RNG trace as the retained HashMap
 //! implementation, so per seed the two produce bit-identical
-//! (iterations, violations, converged, final placement). That is what
-//! keeps `deterministic_for_seed`, the E5 ablation and
+//! (iterations, violations, converged, final placement). That invariant
+//! lives in [`testkit::laws::dense_legacy_anneal`]; this corpus drives
+//! it over MM sizes × seeds × budgets, which is what keeps
+//! `deterministic_for_seed`, the E5 ablation and
 //! `unconstrained_fails_at_400_within_budget` meaningful without
 //! retuning any iteration budget.
 #![cfg(feature = "legacy-hash-pnr")]
 
-use std::collections::BTreeMap;
-use widesa::arch::array::{AieArray, Coord};
+mod testkit;
+
+use testkit::laws;
+use widesa::arch::array::AieArray;
 use widesa::arch::vck5000::BoardConfig;
 use widesa::graph::builder::{build, MappedGraph};
-use widesa::graph::node::NodeId;
 use widesa::mapping::cost::CostModel;
 use widesa::mapping::dse::{explore, DseConstraints};
-use widesa::place_route::anneal::{anneal, legacy::anneal_legacy};
-use widesa::place_route::placement::Placement;
 use widesa::recurrence::dtype::DType;
 use widesa::recurrence::library;
 
@@ -35,10 +36,6 @@ fn graph(cap: u64) -> MappedGraph {
     build(&cand, &CostModel::new(board))
 }
 
-fn coords_of(p: &Placement) -> BTreeMap<NodeId, Coord> {
-    p.iter().collect()
-}
-
 #[test]
 fn dense_annealer_is_bit_identical_to_legacy_across_corpus() {
     let array = AieArray::default();
@@ -51,22 +48,7 @@ fn dense_annealer_is_bit_identical_to_legacy_across_corpus() {
     ] {
         let g = graph(cap);
         for seed in [1u64, 3, 7, 11, 42] {
-            let dense = anneal(&g, &array, seed, budget);
-            let legacy = anneal_legacy(&g, &array, seed, budget);
-            assert_eq!(
-                dense.iterations, legacy.iterations,
-                "MM-{cap} seed {seed}: iteration counts diverged"
-            );
-            assert_eq!(
-                dense.violations, legacy.violations,
-                "MM-{cap} seed {seed}: violation counts diverged"
-            );
-            assert_eq!(dense.converged, legacy.converged, "MM-{cap} seed {seed}");
-            assert_eq!(
-                coords_of(&dense.placement),
-                coords_of(&legacy.placement),
-                "MM-{cap} seed {seed}: final placements diverged"
-            );
+            laws::dense_legacy_anneal(&g, &array, seed, budget, &format!("MM-{cap}"));
         }
     }
 }
@@ -78,14 +60,10 @@ fn dense_annealer_convergence_budget_unchanged() {
     // the same iteration), a 400-core design does not within 20k iters.
     let array = AieArray::default();
     let g16 = graph(16);
-    let dense = anneal(&g16, &array, 3, 2_000_000);
-    let legacy = anneal_legacy(&g16, &array, 3, 2_000_000);
-    assert!(dense.converged && legacy.converged);
-    assert_eq!(dense.iterations, legacy.iterations);
+    let r = laws::dense_legacy_anneal(&g16, &array, 3, 2_000_000, "MM-16");
+    assert!(r.converged, "MM-16 must converge within 2M iterations");
 
     let g400 = graph(400);
-    let dense = anneal(&g400, &array, 3, 20_000);
-    let legacy = anneal_legacy(&g400, &array, 3, 20_000);
-    assert!(!dense.converged && !legacy.converged);
-    assert_eq!(dense.violations, legacy.violations);
+    let r = laws::dense_legacy_anneal(&g400, &array, 3, 20_000, "MM-400");
+    assert!(!r.converged, "MM-400 must not converge within 20k iterations");
 }

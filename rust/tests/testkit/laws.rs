@@ -1,0 +1,234 @@
+//! Reusable oracle-equivalence laws.
+//!
+//! Each law states one "two implementations must agree bit-for-bit"
+//! invariant as a plain function over a workload, so every test crate
+//! (and every future corpus) asserts the *same* property instead of
+//! re-implementing its own comparison loop:
+//!
+//! * [`serial_parallel_ranking`] — the scoped-thread DSE is
+//!   bit-identical to the serial reference, estimates included;
+//! * [`predictor_matches_merge`] — the incremental port predictor equals
+//!   real packet merging on every scored candidate;
+//! * [`dense_legacy_anneal`] — the flat-array annealer replays the
+//!   legacy HashMap implementation exactly (behind `legacy-hash-pnr`);
+//! * [`pareto_frontier`] — the Pareto ranking's frontier prefix is
+//!   non-dominated, membership is insertion-order independent, and the
+//!   serial and scoped-thread drivers agree bit-for-bit.
+//!
+//! `tests/divergence_corpus.rs` and `tests/pnr_equivalence.rs` drive
+//! these over the Table II corpus; the laws themselves stay
+//! corpus-agnostic.
+
+use widesa::arch::vck5000::BoardConfig;
+use widesa::graph::builder::build;
+use widesa::graph::packet::{merge_ports_with_budget, predict_ports};
+use widesa::mapping::dse::{
+    self, explore_all, explore_all_parallel, DseConstraints, Objective, Ranked,
+};
+use widesa::recurrence::spec::UniformRecurrence;
+use widesa::util::rng::XorShift64;
+
+/// Two rankings are the same ranking: same candidates in the same order
+/// with bit-identical perf *and* power estimates.
+pub fn assert_rankings_bit_identical(a: &Ranked, b: &Ranked, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: ranking lengths diverged");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.0.summary(), y.0.summary(), "{what}: rank {i} candidate");
+        assert_eq!(
+            x.1.perf.tops.to_bits(),
+            y.1.perf.tops.to_bits(),
+            "{what}: rank {i} tops"
+        );
+        assert_eq!(
+            x.1.power.watts.to_bits(),
+            y.1.power.watts.to_bits(),
+            "{what}: rank {i} watts"
+        );
+        assert_eq!(
+            x.1.power.tops_per_watt.to_bits(),
+            y.1.power.tops_per_watt.to_bits(),
+            "{what}: rank {i} TOPS/W"
+        );
+    }
+}
+
+/// Law: the scoped-thread exploration driver returns the serial
+/// reference ranking bit-for-bit at every thread count. Returns the
+/// serial ranking so callers can chain further checks without
+/// re-exploring.
+pub fn serial_parallel_ranking(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+    thread_counts: &[usize],
+) -> Ranked {
+    let serial = explore_all(rec, board, cons);
+    for &threads in thread_counts {
+        let par = explore_all_parallel(rec, board, cons, threads);
+        assert_rankings_bit_identical(
+            &serial,
+            &par,
+            &format!("{} × {threads} threads", rec.name),
+        );
+    }
+    serial
+}
+
+/// Law: on every candidate the DSE scores for `rec`, the incremental
+/// port predictor is bit-identical to really merging the built graph
+/// under the board's PLIO budget.
+pub fn predictor_matches_merge(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+) {
+    let model = dse::scoring_model(board, cons);
+    let plan = dse::plan(rec, board, cons);
+    let (in_b, out_b) = (
+        board.plio.in_channels as usize,
+        board.plio.out_channels as usize,
+    );
+    for choice in plan.choices.clone() {
+        let Some((cand, _)) = dse::score_choice(rec, &model, cons, &plan, choice) else {
+            continue;
+        };
+        let g = build(&cand, &model);
+        let (_, stats) = merge_ports_with_budget(&g, model.channel_bw(), in_b, out_b);
+        let predicted = predict_ports(&cand, &model, model.channel_bw(), in_b, out_b);
+        assert_eq!(
+            predicted,
+            stats,
+            "{}: predictor diverged from merge on {}",
+            rec.name,
+            cand.summary()
+        );
+    }
+}
+
+/// Law: the dense flat-array annealer consumes the identical RNG trace
+/// as the retained HashMap implementation — per seed the two produce
+/// bit-identical (iterations, violations, converged, placement).
+#[cfg(feature = "legacy-hash-pnr")]
+pub fn dense_legacy_anneal(
+    g: &widesa::graph::builder::MappedGraph,
+    array: &widesa::arch::array::AieArray,
+    seed: u64,
+    budget: u64,
+    what: &str,
+) -> widesa::place_route::anneal::AnnealResult {
+    use std::collections::BTreeMap;
+    use widesa::arch::array::Coord;
+    use widesa::graph::node::NodeId;
+    use widesa::place_route::anneal::{anneal, legacy::anneal_legacy};
+
+    let dense = anneal(g, array, seed, budget);
+    let legacy = anneal_legacy(g, array, seed, budget);
+    assert_eq!(
+        dense.iterations, legacy.iterations,
+        "{what} seed {seed}: iteration counts diverged"
+    );
+    assert_eq!(
+        dense.violations, legacy.violations,
+        "{what} seed {seed}: violation counts diverged"
+    );
+    assert_eq!(dense.converged, legacy.converged, "{what} seed {seed}");
+    let coords = |p: &widesa::place_route::placement::Placement| -> BTreeMap<NodeId, Coord> {
+        p.iter().collect()
+    };
+    assert_eq!(
+        coords(&dense.placement),
+        coords(&legacy.placement),
+        "{what} seed {seed}: final placements diverged"
+    );
+    dense
+}
+
+/// Frontier prefix of a Pareto ranking as a sorted membership list.
+fn frontier_members(ranked: &Ranked) -> Vec<String> {
+    let k = dse::frontier_size(ranked);
+    let mut m: Vec<String> = ranked[..k].iter().map(|(c, _)| c.summary()).collect();
+    m.sort();
+    m
+}
+
+/// Law: under [`Objective::Pareto`],
+///
+/// 1. the ranking's frontier prefix is exactly the non-dominated set
+///    over `(tops, tops_per_watt)` — nothing in the prefix is dominated,
+///    everything after it is;
+/// 2. frontier membership (and the full ranked sequence) is independent
+///    of the order candidates were scored in — reversed and shuffled
+///    insertions re-rank to the same frontier;
+/// 3. the serial and scoped-thread drivers return the ranking
+///    bit-for-bit.
+pub fn pareto_frontier(
+    rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+    thread_counts: &[usize],
+) {
+    let cons = DseConstraints {
+        objective: Objective::Pareto,
+        ..cons.clone()
+    };
+    // (3) serial ≡ parallel, which also hands us the reference ranking.
+    let ranked = serial_parallel_ranking(rec, board, &cons, thread_counts);
+    assert!(!ranked.is_empty(), "{}: empty ranking", rec.name);
+
+    // (1) the frontier prefix is the non-dominated set.
+    let pts: Vec<(f64, f64)> = ranked
+        .iter()
+        .map(|(_, e)| (e.perf.tops, e.power.tops_per_watt))
+        .collect();
+    let dominated = |i: usize| {
+        pts.iter().any(|&(t, w)| {
+            t >= pts[i].0 && w >= pts[i].1 && (t > pts[i].0 || w > pts[i].1)
+        })
+    };
+    let k = dse::frontier_size(&ranked);
+    assert!(
+        (1..=ranked.len()).contains(&k),
+        "{}: frontier {k}/{}",
+        rec.name,
+        ranked.len()
+    );
+    for i in 0..ranked.len() {
+        assert_eq!(
+            i < k,
+            !dominated(i),
+            "{}: rank {i} ({}) on the wrong side of the frontier split",
+            rec.name,
+            ranked[i].0.summary()
+        );
+    }
+    // Frontier TOPS must be descending (the prefix keeps the sort order).
+    for w in pts[..k].windows(2) {
+        assert!(w[0].0 >= w[1].0, "{}: frontier not TOPS-descending", rec.name);
+    }
+
+    // (2) insertion-order independence: reversed and PRNG-shuffled
+    // inputs re-rank to the same frontier membership.
+    let reference = frontier_members(&ranked);
+    let mut reversed: Ranked = ranked.clone();
+    reversed.reverse();
+    let reranked = dse::rank_by(reversed, Objective::Pareto);
+    assert_eq!(
+        frontier_members(&reranked),
+        reference,
+        "{}: frontier membership changed under reversed insertion",
+        rec.name
+    );
+    let mut shuffled: Ranked = ranked.clone();
+    let mut rng = XorShift64::new(0x51DE5A);
+    for i in (1..shuffled.len()).rev() {
+        let j = rng.gen_range(i as u64 + 1) as usize;
+        shuffled.swap(i, j);
+    }
+    let reranked = dse::rank_by(shuffled, Objective::Pareto);
+    assert_eq!(
+        frontier_members(&reranked),
+        reference,
+        "{}: frontier membership changed under shuffled insertion",
+        rec.name
+    );
+}

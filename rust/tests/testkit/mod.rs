@@ -9,7 +9,11 @@
 //!
 //! Each test crate pulls this in with `mod testkit;` — not every crate
 //! uses every generator, hence the file-wide `dead_code` allow.
+//! [`laws`] holds the reusable oracle-equivalence law functions the
+//! divergence and P&R corpora drive.
 #![allow(dead_code)]
+
+pub mod laws;
 
 use widesa::mapping::dse::DseConstraints;
 use widesa::polyhedral::dependence::{DepKind, Dependence};
