@@ -11,7 +11,7 @@ ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 OBS_SMOKE_DIR := target/obs-smoke
 
-.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke energy-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke energy-smoke blocking-smoke clean
 
 build:
 	cargo build --release
@@ -73,18 +73,20 @@ obs-smoke: build
 # controls first (each guard passes unmutated), then each WIDESA_MUTATE
 # seam must make its guard FAIL — a suite that still passes under a
 # halved cost-model peak, a disabled admission quota, an off-by-one
-# histogram bucketing, or a +7 W static-power drift is not testing what
-# it claims to.
+# histogram bucketing, a +7 W static-power drift, or a blocking pricer
+# that forgets streamed-panel reloads is not testing what it claims to.
 mutation-smoke:
 	cargo test -q --lib mm_f32_lands_near_paper
 	cargo test -q --lib quota_admission_is_per_tenant
 	cargo test -q --lib histogram_bucketing_is_exact
 	cargo test -q --lib widesa_power_near_55w
+	cargo test -q --lib blocking_planner_prices_true_reuse
 	! WIDESA_MUTATE=cost-peak cargo test -q --lib mm_f32_lands_near_paper
 	! WIDESA_MUTATE=quota-grant cargo test -q --lib quota_admission_is_per_tenant
 	! WIDESA_MUTATE=obs-bucket cargo test -q --lib histogram_bucketing_is_exact
 	! WIDESA_MUTATE=power-static cargo test -q --lib widesa_power_near_55w
-	@echo "mutation-smoke OK (all four seams detected)"
+	! WIDESA_MUTATE=blocking-reuse cargo test -q --lib blocking_planner_prices_true_reuse
+	@echo "mutation-smoke OK (all five seams detected)"
 
 # Gate the exact-port ranking: scoring a candidate with exact merged
 # port counts must cost ≤ 2× the legacy analytic score (bench_rank exits
@@ -122,6 +124,18 @@ energy-smoke: build
 	cargo test -q --test divergence_corpus pareto_law_holds_on_all_table2_recurrences
 	cargo test -q --test cache_compat
 	./target/release/widesa energy
+
+# Gate the host-level blocked GEMM path: the oracle-equivalence corpus
+# (blocked + double-buffered replay bit-identical to the serial naive
+# driver over targeted and testkit-random shapes, typed Unplannable
+# end-to-end), then bench_blocking — the planned replay must run ≥2×
+# the naive driver at 2048³ on the NullArray host path and the measured
+# host DRAM bytes must sit within 10 % of the plan's prediction (it
+# exits non-zero otherwise). Refreshes BENCH_blocking.json at the repo
+# root; see docs/BLOCKING.md.
+blocking-smoke:
+	cargo test -q --test integration_blocking
+	cargo bench --bench bench_blocking
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,141 @@
+//! Bench: blocked replay must beat the naive driver and the DRAM model
+//! must match reality.
+//!
+//! Three checks on the host-level blocking subsystem
+//! (`coordinator::blocking` + the planned driver in `coordinator::exec`),
+//! all on the `NullArray` host-path backend at N = 2048 so kernel math
+//! never pollutes the host-traffic measurement:
+//!
+//! 1. **Speedup gate** — the planned, double-buffered replay must finish
+//!    in ≤ ½ the naive per-tile driver's wall time (≥2×), or this binary
+//!    exits non-zero. The win is pure traffic: panel reuse plus the
+//!    prefetch thread hiding packing behind the backend calls.
+//! 2. **Model gate** — the replay's measured host DRAM bytes must sit
+//!    within 10 % of `plan.predicted_dram_bytes` (the same
+//!    `CostModel::blocked_mm_dram_bytes` the DSE prices with; by
+//!    construction the two agree exactly).
+//! 3. **Oracle check** — on the real stub runtime at a ragged shape, the
+//!    blocked replay's output bits must equal the serial naive replay's.
+//!
+//! Also takes a functional GF/s point at N = 1024 through the real stub
+//! runtime and writes everything to `BENCH_blocking.json` at the repo
+//! root (`widesa trend` folds it into the per-commit trajectory).
+//!
+//! Run with `cargo bench --bench bench_blocking` (or `make blocking-smoke`).
+
+use std::path::Path;
+use widesa::coordinator::exec::{plan_for, run_mm, run_mm_naive, NullArray};
+use widesa::runtime::client::Runtime;
+use widesa::util::bench::bench;
+use widesa::util::json::Json;
+use widesa::util::rng::XorShift64;
+
+const N: usize = 2048;
+const GATE_SPEEDUP: f64 = 2.0;
+const GATE_DRAM_ERR_PCT: f64 = 10.0;
+
+fn random_mm(seed: u64, n: usize, m: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift64::new(seed);
+    let mut a = vec![0f32; n * k];
+    let mut b = vec![0f32; k * m];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    (a, b)
+}
+
+fn main() {
+    let plan = plan_for(N, N, N).expect("2048^3 must be plannable");
+    println!("== blocking: planned vs naive MM replay at {N}^3 (NullArray host path) ==");
+    println!("{}", plan.summary());
+    let (a, b) = random_mm(0xB10C, N, N, N);
+
+    let naive = bench("blocking/naive replay", 3, || {
+        std::hint::black_box(run_mm_naive(&mut NullArray, &a, &b, N, N, N).expect("naive"));
+    });
+    let mut last_stats = None;
+    let blocked = bench("blocking/planned replay", 3, || {
+        let (_, stats) = run_mm(&mut NullArray, &a, &b, N, N, N).expect("blocked");
+        last_stats = Some(stats);
+    });
+    let stats = last_stats.expect("blocked replay ran");
+    let speedup = naive.median_s / blocked.median_s.max(1e-9);
+    let predicted = plan.predicted_dram_bytes;
+    let measured = stats.dram_bytes;
+    let err_pct = (measured as f64 - predicted as f64).abs() / (predicted as f64).max(1.0) * 100.0;
+    println!(
+        "blocked {:.1} ms vs naive {:.1} ms → {speedup:.2}× | DRAM predicted {:.1} MB, \
+         measured {:.1} MB ({err_pct:.2}% off) | pack {:.1} ms, {:.1} ms hidden",
+        blocked.median_s * 1e3,
+        naive.median_s * 1e3,
+        predicted as f64 / 1e6,
+        measured as f64 / 1e6,
+        stats.pack_ms,
+        stats.overlap_hidden_ms,
+    );
+
+    // Oracle check: real stub math at a ragged shape, bit-for-bit.
+    let (n2, m2, k2) = (300usize, 260usize, 200usize);
+    let (a2, b2) = random_mm(0x0AC1E, n2, m2, k2);
+    let mut rt = Runtime::new().expect("runtime");
+    let (c_blocked, _) = run_mm(&mut rt, &a2, &b2, n2, m2, k2).expect("blocked stub");
+    let (c_serial, _) = run_mm_naive(&mut rt, &a2, &b2, n2, m2, k2).expect("serial stub");
+    let oracle_ok = c_blocked.len() == c_serial.len()
+        && c_blocked
+            .iter()
+            .zip(&c_serial)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+    println!("oracle {n2}x{m2}x{k2} on stub: {}", if oracle_ok { "bit-identical" } else { "DIVERGED" });
+
+    // Functional large-N GF/s point through the real stub runtime.
+    let large_n = 1024usize;
+    let (a3, b3) = random_mm(0x6F10, large_n, large_n, large_n);
+    let t0 = std::time::Instant::now();
+    let _ = run_mm(&mut rt, &a3, &b3, large_n, large_n, large_n).expect("stub large-N");
+    let large_s = t0.elapsed().as_secs_f64();
+    let large_gflops = 2.0 * (large_n as f64).powi(3) / large_s / 1e9;
+    println!("functional {large_n}^3 on stub: {large_s:.2} s → {large_gflops:.2} GFLOP/s");
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("blocking".into())),
+        ("n", Json::num_u64(N as u64)),
+        ("naive_ms", Json::Num(naive.median_s * 1e3)),
+        ("blocked_ms", Json::Num(blocked.median_s * 1e3)),
+        ("speedup", Json::Num(speedup)),
+        ("predicted_dram_bytes", Json::num_u64(predicted)),
+        ("measured_dram_bytes", Json::num_u64(measured)),
+        ("dram_model_err_pct", Json::Num(err_pct)),
+        ("pack_ms", Json::Num(stats.pack_ms)),
+        ("overlap_hidden_ms", Json::Num(stats.overlap_hidden_ms)),
+        ("large_n", Json::num_u64(large_n as u64)),
+        ("large_n_gflops", Json::Num(large_gflops)),
+        ("gate_speedup_min", Json::Num(GATE_SPEEDUP)),
+        ("gate_dram_err_pct_max", Json::Num(GATE_DRAM_ERR_PCT)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_blocking.json");
+    std::fs::write(&path, format!("{out}\n")).expect("write BENCH_blocking.json");
+    println!("wrote {}", path.display());
+
+    let mut failed = false;
+    if speedup < GATE_SPEEDUP {
+        eprintln!("FAIL: blocked replay only {speedup:.2}× the naive driver (gate {GATE_SPEEDUP}×)");
+        failed = true;
+    }
+    if err_pct > GATE_DRAM_ERR_PCT {
+        eprintln!(
+            "FAIL: DRAM model off by {err_pct:.2}% (gate {GATE_DRAM_ERR_PCT}%): \
+             predicted {predicted} B, measured {measured} B"
+        );
+        failed = true;
+    }
+    if !oracle_ok {
+        eprintln!("FAIL: blocked replay diverged from the serial oracle at {n2}x{m2}x{k2}");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("\nbench_blocking OK (≥{GATE_SPEEDUP}× naive, DRAM model within {GATE_DRAM_ERR_PCT}%, oracle bit-identical)");
+}

@@ -1,0 +1,445 @@
+//! Host-level blocked-GEMM planner (GotoBLAS2-on-Versal).
+//!
+//! A compiled WideSA artifact is **one fixed array pass** over a
+//! `tile × tile` graph-tile edge. Arbitrarily large (N, M, K) MM
+//! problems therefore replay the artifact in a host loop — and the host
+//! loop's blocking decides how many times every operand crosses DRAM.
+//! This module is the planner above the mapper: it enumerates
+//! GotoBLAS2-style panel loop orders and block sizes (the mc/kc/nc
+//! analogues of the DRAM → PL buffer → AIE tile hierarchy), prices each
+//! choice's DRAM traffic through
+//! [`CostModel::blocked_mm_dram_bytes`] — the *same* model the DSE's
+//! `dram_traffic` uses, so DSE and planner price with one model — and
+//! emits a deterministic [`BlockingPlan`] that
+//! [`crate::coordinator::exec`]'s double-buffered replay driver walks.
+//!
+//! ## Hierarchy levels
+//!
+//! * **DRAM → PL buffer**: one `kc × span` operand panel stays resident
+//!   across the inner loop ([`PanelOrder`] picks which operand); the
+//!   other operand streams through in `mc`-row blocks and re-reads once
+//!   per panel step. C round-trips once per k-segment.
+//! * **PL buffer → AIE tiles**: the compiled artifact consumes
+//!   `tile × tile` graph tiles; the replay driver slices them out of the
+//!   packed panels. Ragged edges are padded up to tile multiples
+//!   (zero-filled — mathematically a no-op for MM).
+//!
+//! Shapes the hierarchy cannot place at all (zero extents, or padded
+//! matrices past the 1 TiB staging cap) return the typed
+//! [`Unplannable`] error — `widesa map` and the serve protocol surface
+//! it as a structured non-500 response, never a panic.
+
+use crate::mapping::cost::CostModel;
+use crate::util::json::Json;
+
+/// Artifact graph-tile edges the host replay can drive, largest first
+/// (the stub and PJRT runtimes both serve `mm_f32_256` / `mm_f32_128`).
+pub const HOST_TILES: [u64; 2] = [256, 128];
+
+/// Padded staging cap: a plan whose largest padded matrix exceeds this
+/// is rejected as [`Unplannable`] instead of letting the replay driver
+/// attempt an allocation that can only die.
+pub const MAX_MATRIX_BYTES: u128 = 1 << 40; // 1 TiB
+
+/// Which operand's panels stay resident in the PL buffer across the
+/// inner loop (the GotoBLAS2 loop-order choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PanelOrder {
+    /// B panels (`kc × span` of K×M) resident; A streams in `mc`-row
+    /// blocks and re-reads once per `span`-wide panel of M. The
+    /// classic GotoBLAS2 GEBP order.
+    BResident,
+    /// A panels (`span × kc` of N×K) resident; B streams and re-reads
+    /// once per `span`-tall panel of N (GEPB).
+    AResident,
+}
+
+impl std::fmt::Display for PanelOrder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PanelOrder::BResident => write!(f, "b-resident"),
+            PanelOrder::AResident => write!(f, "a-resident"),
+        }
+    }
+}
+
+/// One priced host-blocking choice. Deterministic: same problem + same
+/// model → bit-identical plan (the planner keeps the *first* minimum in
+/// a canonical enumeration order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockingPlan {
+    /// Original (unpadded) problem extents: C(n×m) += A(n×k)·B(k×m).
+    pub n: u64,
+    pub m: u64,
+    pub k: u64,
+    /// Artifact graph-tile edge the replay drives (`mm_f32_<tile>`).
+    pub tile: u64,
+    /// Padded extents (tile multiples; ragged edges zero-padded).
+    pub n_pad: u64,
+    pub m_pad: u64,
+    pub k_pad: u64,
+    /// Loop order: which operand's panels stay PL-resident.
+    pub order: PanelOrder,
+    /// Resident panel depth along K (tile multiple).
+    pub kc: u64,
+    /// Resident panel width along the resident operand's free dimension
+    /// (M for [`PanelOrder::BResident`], N for `AResident`).
+    pub span: u64,
+    /// Streamed-operand block rows per packing step (tile multiple).
+    pub mc: u64,
+    /// Artifact invocations the replay will make:
+    /// `(n_pad/tile)·(m_pad/tile)·(k_pad/tile)`.
+    pub rounds: u64,
+    /// DRAM bytes the plan predicts the replay moves
+    /// ([`CostModel::blocked_mm_dram_bytes`]).
+    pub predicted_dram_bytes: u64,
+    /// `predicted_dram_bytes / dram_bandwidth` under the plan's board.
+    pub predicted_dram_s: f64,
+}
+
+impl BlockingPlan {
+    /// Artifact name the replay driver runs per tile round.
+    pub fn artifact(&self) -> String {
+        format!("mm_f32_{}", self.tile)
+    }
+
+    /// One-line human summary (`widesa map` / `run-mm` print this).
+    pub fn summary(&self) -> String {
+        format!(
+            "blocking: {}x{}x{} -> pad {}x{}x{} tile {} | {} kc={} span={} mc={} | {} rounds, predicted DRAM {:.1} MB",
+            self.n,
+            self.m,
+            self.k,
+            self.n_pad,
+            self.m_pad,
+            self.k_pad,
+            self.tile,
+            self.order,
+            self.kc,
+            self.span,
+            self.mc,
+            self.rounds,
+            self.predicted_dram_bytes as f64 / 1e6
+        )
+    }
+
+    /// Structured form for protocol responses / trend snapshots.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num_u64(self.n)),
+            ("m", Json::num_u64(self.m)),
+            ("k", Json::num_u64(self.k)),
+            ("tile", Json::num_u64(self.tile)),
+            ("n_pad", Json::num_u64(self.n_pad)),
+            ("m_pad", Json::num_u64(self.m_pad)),
+            ("k_pad", Json::num_u64(self.k_pad)),
+            ("order", Json::str(self.order.to_string())),
+            ("kc", Json::num_u64(self.kc)),
+            ("span", Json::num_u64(self.span)),
+            ("mc", Json::num_u64(self.mc)),
+            ("rounds", Json::num_u64(self.rounds)),
+            ("predicted_dram_bytes", Json::num_u64(self.predicted_dram_bytes)),
+            ("predicted_dram_s", Json::Num(self.predicted_dram_s)),
+        ])
+    }
+}
+
+/// Typed "the planner cannot place this shape" error. Surfaced as a
+/// structured protocol response (`"unplannable": true`) and a clean CLI
+/// error — never a panic or a silent truncation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Unplannable {
+    pub n: u64,
+    pub m: u64,
+    pub k: u64,
+    pub reason: String,
+}
+
+impl std::fmt::Display for Unplannable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "no host-blocking plan for {}x{}x{} MM: {}",
+            self.n, self.m, self.k, self.reason
+        )
+    }
+}
+
+impl std::error::Error for Unplannable {}
+
+fn pad_to(x: u64, tile: u64) -> u64 {
+    x.div_ceil(tile) * tile
+}
+
+/// Shape validation + tile/padding choice shared by [`plan_mm`] and
+/// [`plan_mm_candidates`]: smallest padded volume wins, ties go to the
+/// larger tile (fewer rounds for the same traffic).
+fn choose_tile(n: u64, m: u64, k: u64) -> Result<(u64, u64, u64, u64), Unplannable> {
+    let fail = |reason: &str| Unplannable {
+        n,
+        m,
+        k,
+        reason: reason.to_string(),
+    };
+    if n == 0 || m == 0 || k == 0 {
+        return Err(fail("every extent must be >= 1"));
+    }
+    let mut best: Option<(u64, u64, u64, u64, u128)> = None;
+    for &tile in &HOST_TILES {
+        let (np, mp, kp) = (pad_to(n, tile), pad_to(m, tile), pad_to(k, tile));
+        let vol = np as u128 * mp as u128 * kp as u128;
+        // HOST_TILES is largest-first, so strict `<` keeps the larger
+        // tile on equal padded volume.
+        if best.map_or(true, |b| vol < b.4) {
+            best = Some((tile, np, mp, kp, vol));
+        }
+    }
+    let (tile, np, mp, kp, _) = best.expect("HOST_TILES is non-empty");
+    let eb = 4u128; // f32 replay
+    let biggest = (np as u128 * kp as u128)
+        .max(kp as u128 * mp as u128)
+        .max(np as u128 * mp as u128)
+        * eb;
+    if biggest > MAX_MATRIX_BYTES {
+        return Err(fail(&format!(
+            "padded matrix needs {biggest} bytes, past the {MAX_MATRIX_BYTES}-byte staging cap"
+        )));
+    }
+    Ok((tile, np, mp, kp))
+}
+
+/// Every feasible blocking choice for the problem, priced, in canonical
+/// enumeration order (B-resident before A-resident, `kc` ascending,
+/// `span` ascending). Exposed so tests — the mutation-seam guard in
+/// particular — can re-price the whole candidate set independently.
+pub fn plan_mm_candidates(
+    model: &CostModel,
+    n: u64,
+    m: u64,
+    k: u64,
+) -> Result<Vec<BlockingPlan>, Unplannable> {
+    let (tile, n_pad, m_pad, k_pad) = choose_tile(n, m, k)?;
+    let eb = 4u64;
+    // Same residency convention as the cost model's k-segmentation arm:
+    // half the PL buffer holds the resident panel, the rest stages the
+    // streamed blocks + C tiles.
+    let panel_budget = model.board.pl.buffer_bytes() / 2;
+    let dram_bw = model.board.pl.dram_bandwidth();
+    let mut out = Vec::new();
+    for order in [PanelOrder::BResident, PanelOrder::AResident] {
+        let free_pad = match order {
+            PanelOrder::BResident => m_pad,
+            PanelOrder::AResident => n_pad,
+        };
+        let streamed_pad = match order {
+            PanelOrder::BResident => n_pad,
+            PanelOrder::AResident => m_pad,
+        };
+        let mut kc = tile;
+        while kc <= k_pad {
+            let mut span = tile;
+            while span <= free_pad {
+                if kc.saturating_mul(span).saturating_mul(eb) > panel_budget {
+                    break; // span ascends: nothing larger fits either
+                }
+                // mc: largest tile multiple of streamed rows whose
+                // (mc × kc) block fits a quarter-buffer — deterministic,
+                // traffic-neutral (only pack granularity, not reuse).
+                let mc_cap = (model.board.pl.buffer_bytes() / 4) / (kc * eb);
+                let mc = ((mc_cap / tile) * tile).clamp(tile, streamed_pad.max(tile));
+                let bytes =
+                    model.blocked_mm_dram_bytes(n_pad, m_pad, k_pad, eb, kc, span, matches!(order, PanelOrder::BResident));
+                out.push(BlockingPlan {
+                    n,
+                    m,
+                    k,
+                    tile,
+                    n_pad,
+                    m_pad,
+                    k_pad,
+                    order,
+                    kc,
+                    span,
+                    mc,
+                    rounds: (n_pad / tile) * (m_pad / tile) * (k_pad / tile),
+                    predicted_dram_bytes: bytes,
+                    predicted_dram_s: bytes as f64 / dram_bw,
+                });
+                span += tile;
+            }
+            kc += tile;
+        }
+    }
+    if out.is_empty() {
+        // tile × tile × eb always fits the 10 MB half-buffer, so this is
+        // unreachable on any real board config — but a hand-shrunk board
+        // must degrade to a typed error, not an empty unwrap downstream.
+        return Err(Unplannable {
+            n,
+            m,
+            k,
+            reason: format!(
+                "no {tile}-multiple panel fits half the PL buffer ({panel_budget} bytes)"
+            ),
+        });
+    }
+    Ok(out)
+}
+
+/// The deterministic host-blocking plan: the candidate with the least
+/// predicted DRAM traffic (strict `<`, so the first minimum in the
+/// canonical enumeration order wins — bit-identical across runs).
+pub fn plan_mm(model: &CostModel, n: u64, m: u64, k: u64) -> Result<BlockingPlan, Unplannable> {
+    let mut cands = plan_mm_candidates(model, n, m, k)?;
+    let mut best = 0usize;
+    for (i, c) in cands.iter().enumerate() {
+        if c.predicted_dram_bytes < cands[best].predicted_dram_bytes {
+            best = i;
+        }
+    }
+    Ok(cands.swap_remove(best))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck5000::BoardConfig;
+
+    fn model() -> CostModel {
+        CostModel::new(BoardConfig::vck5000())
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_pins_small_shapes() {
+        let m = model();
+        let a = plan_mm(&m, 2048, 2048, 2048).unwrap();
+        let b = plan_mm(&m, 2048, 2048, 2048).unwrap();
+        assert_eq!(a, b);
+        // divisible-by-both shapes keep the 256 tile (fewer rounds)
+        let p = plan_mm(&m, 256, 256, 256).unwrap();
+        assert_eq!((p.tile, p.rounds), (256, 1));
+        // 128-granular shapes fall back to the 128 tile
+        let p = plan_mm(&m, 256, 128, 128).unwrap();
+        assert_eq!((p.tile, p.rounds), (128, 2));
+        // ragged/prime/sub-tile shapes pad, never error
+        for (n, mm, k) in [(10, 10, 10), (127, 131, 7), (300, 260, 200)] {
+            let p = plan_mm(&m, n, mm, k).unwrap();
+            assert_eq!(p.n_pad % p.tile, 0);
+            assert_eq!(p.m_pad % p.tile, 0);
+            assert_eq!(p.k_pad % p.tile, 0);
+            assert!(p.n_pad >= n && p.m_pad >= mm && p.k_pad >= k);
+            assert!(p.rounds >= 1);
+        }
+    }
+
+    #[test]
+    fn plans_respect_the_panel_budget_and_model_pricing() {
+        let m = model();
+        let budget = m.board.pl.buffer_bytes() / 2;
+        for p in plan_mm_candidates(&m, 4096, 4096, 4096).unwrap() {
+            assert!(p.kc * p.span * 4 <= budget, "{}", p.summary());
+            assert_eq!(p.kc % p.tile, 0);
+            assert_eq!(p.span % p.tile, 0);
+            assert_eq!(p.mc % p.tile, 0);
+            // the plan's price is the shared cost-model formula, verbatim
+            assert_eq!(
+                p.predicted_dram_bytes,
+                m.blocked_mm_dram_bytes(
+                    p.n_pad,
+                    p.m_pad,
+                    p.k_pad,
+                    4,
+                    p.kc,
+                    p.span,
+                    matches!(p.order, PanelOrder::BResident)
+                )
+            );
+            assert!(p.predicted_dram_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn unplannable_shapes_return_typed_errors() {
+        let m = model();
+        for (n, mm, k) in [(0, 8, 8), (8, 0, 8), (8, 8, 0)] {
+            let e = plan_mm(&m, n, mm, k).unwrap_err();
+            assert!(e.to_string().contains("every extent"), "{e}");
+        }
+        // 1e9³ pads to a >1 TiB matrix: typed rejection, no allocation
+        let e = plan_mm(&m, 1_000_000_000, 1_000_000_000, 1_000_000_000).unwrap_err();
+        assert_eq!((e.n, e.m, e.k), (1_000_000_000, 1_000_000_000, 1_000_000_000));
+        assert!(e.to_string().contains("staging cap"), "{e}");
+        // std::error::Error + Display carry the shape for protocol use
+        let dyn_err: &dyn std::error::Error = &e;
+        assert!(dyn_err.to_string().contains("1000000000x1000000000"));
+    }
+
+    /// Mutation-seam guard (`WIDESA_MUTATE=blocking-reuse` must flip
+    /// this): the planner's predicted bytes equal an independently
+    /// written reuse-accounting reference, and its chosen plan attains
+    /// the reference minimum over the whole candidate set. Under the
+    /// seam the streamed operand's reload factor is mis-counted as 1,
+    /// the planner maximizes kc instead of balancing kc against span,
+    /// and both assertions fail at 4096³.
+    #[test]
+    fn blocking_planner_prices_true_reuse() {
+        let m = model();
+        let (n, mm, k) = (4096u64, 4096u64, 4096u64);
+        // Independent reference: priced from the plan geometry alone.
+        let reference = |p: &BlockingPlan| -> u128 {
+            let (np, mp, kp, eb) = (p.n_pad as u128, p.m_pad as u128, p.k_pad as u128, 4u128);
+            let segments = kp.div_ceil(p.kc as u128);
+            let free = match p.order {
+                PanelOrder::BResident => mp,
+                PanelOrder::AResident => np,
+            };
+            let reload = free.div_ceil(p.span as u128);
+            let resident = match p.order {
+                PanelOrder::BResident => kp * mp * eb,
+                PanelOrder::AResident => np * kp * eb,
+            };
+            let streamed = match p.order {
+                PanelOrder::BResident => np * kp * eb,
+                PanelOrder::AResident => kp * mp * eb,
+            };
+            resident + streamed * reload + np * mp * eb * (2 * segments - 1)
+        };
+        let cands = plan_mm_candidates(&m, n, mm, k).unwrap();
+        let chosen = plan_mm(&m, n, mm, k).unwrap();
+        // (a) the chosen plan's predicted bytes match the reference
+        assert_eq!(
+            chosen.predicted_dram_bytes as u128,
+            reference(&chosen),
+            "planner pricing diverged from the reuse-accounting reference for {}",
+            chosen.summary()
+        );
+        // (b) the chosen plan attains the reference minimum
+        let best_ref = cands.iter().map(|c| reference(c)).min().unwrap();
+        assert_eq!(
+            reference(&chosen),
+            best_ref,
+            "planner picked a traffic-pessimal order: {} (reference best {best_ref})",
+            chosen.summary()
+        );
+        // sanity: at 4096³ real reuse matters — the optimum balances kc
+        // against span rather than maxing either
+        assert!(chosen.span > chosen.tile, "{}", chosen.summary());
+        assert!(chosen.kc < chosen.k_pad, "{}", chosen.summary());
+    }
+
+    #[test]
+    fn json_and_artifact_round_trip() {
+        let m = model();
+        let p = plan_mm(&m, 300, 260, 200).unwrap();
+        assert_eq!(p.artifact(), format!("mm_f32_{}", p.tile));
+        let j = p.to_json();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(300));
+        assert_eq!(j.get("rounds").unwrap().as_u64(), Some(p.rounds));
+        assert_eq!(
+            j.get("predicted_dram_bytes").unwrap().as_u64(),
+            Some(p.predicted_dram_bytes)
+        );
+        assert_eq!(j.get("order").unwrap().as_str(), Some(p.order.to_string().as_str()));
+        assert!(p.summary().contains("blocking:"));
+    }
+}

@@ -1,13 +1,32 @@
 //! Functional executor: replay a mapped design tile-by-tile through the
 //! AOT-compiled kernels — the rust incarnation of the generated host
 //! program. The outer loops here are exactly the host-level schedule
-//! (DRAM tiling + k-chaining + inter-pass transposes); each graph tile
+//! (DRAM blocking + k-chaining + inter-pass transposes); each graph tile
 //! executes on the PJRT runtime, standing in for one round of the AIE
 //! array.
+//!
+//! The MM driver is planned: [`run_mm`] asks
+//! [`crate::coordinator::blocking`] for a GotoBLAS2-style
+//! [`BlockingPlan`] (panel loop order + kc/span/mc block sizes, priced
+//! through `mapping::cost`), then walks it with a double-buffered
+//! pipeline — one prefetch thread packs the next operand panel while the
+//! array runs the current rounds. Packing is pure `memcpy`; all
+//! arithmetic stays on the calling thread and every per-C-tile k-chain
+//! accumulates in strictly ascending k order, so the blocked replay is
+//! bit-identical to the serial [`run_mm_naive`] oracle (the law in
+//! `tests/testkit/laws.rs` holds this). Ragged shapes are handled with
+//! zero-padded tail tiles — mathematically a no-op for MM.
 
+use crate::arch::vck5000::BoardConfig;
+use crate::coordinator::blocking::{self, BlockingPlan, PanelOrder};
+use crate::mapping::cost::CostModel;
+use crate::obs::metrics;
+use crate::obs::trace::Span;
 use crate::runtime::client::Runtime;
 use crate::runtime::executor::Tensor;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::sync::mpsc;
+use std::time::Instant;
 
 /// Statistics from a functional run.
 #[derive(Debug, Clone, Default)]
@@ -18,58 +37,479 @@ pub struct ExecStats {
     pub elements: u64,
     /// Wall time of the replay.
     pub seconds: f64,
+    /// Host "DRAM" bytes the driver actually moved: operand panel/block
+    /// packs plus C-tile round-trips, counted with the same convention
+    /// as [`CostModel::blocked_mm_dram_bytes`] (first C read of a zero
+    /// accumulator is free). Compare against
+    /// `plan.predicted_dram_bytes` — `make blocking-smoke` gates the
+    /// two within 10%.
+    pub dram_bytes: u64,
+    /// Time the prefetch thread spent packing panels and blocks.
+    pub pack_ms: f64,
+    /// Packing time hidden behind compute by the double buffer:
+    /// `max(0, pack_ms − recv-stall time)`.
+    pub overlap_hidden_ms: f64,
+    /// The blocking plan the driver walked (planned MM drivers only).
+    pub plan: Option<BlockingPlan>,
 }
 
-/// C = A·B via the accumulate-form MM artifact with host k-chaining.
-/// Sizes must divide by the artifact's graph-tile edge (256 or 128).
-pub fn run_mm(rt: &mut Runtime, a: &[f32], b: &[f32], n: usize, m: usize, k: usize) -> Result<(Vec<f32>, ExecStats)> {
-    let tile = if n % 256 == 0 && m % 256 == 0 && k % 256 == 0 {
-        256
-    } else if n % 128 == 0 && m % 128 == 0 && k % 128 == 0 {
-        128
-    } else {
-        bail!("MM sizes must divide by 128 (got {n}×{m}×{k})");
-    };
-    let artifact = if tile == 256 { "mm_f32_256" } else { "mm_f32_128" };
-    let t0 = std::time::Instant::now();
-    let mut c = vec![0f32; n * m];
-    let mut stats = ExecStats::default();
+/// The array as the host program sees it: run one artifact over a set of
+/// graph tiles. [`Runtime`] is the real thing (stub or PJRT);
+/// [`NullArray`] isolates the host path for benchmarking.
+pub trait ArrayBackend {
+    fn run_tiles(&mut self, artifact: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
 
-    let sub = |src: &[f32], row0: usize, col0: usize, rows: usize, cols: usize, stride: usize| {
-        let mut out = vec![0f32; rows * cols];
+impl ArrayBackend for Runtime {
+    fn run_tiles(&mut self, artifact: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.run_ref(artifact, inputs)
+    }
+}
+
+/// Backend that skips the array entirely and returns the accumulator
+/// unchanged. The "result" is numerically WRONG (no multiply happens) —
+/// this exists only so `benches/bench_blocking.rs` can time the host
+/// packing/blocking path by itself, with the kernel cost held at one
+/// tile-sized copy per round for both drivers under test.
+pub struct NullArray;
+
+impl ArrayBackend for NullArray {
+    fn run_tiles(&mut self, _artifact: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        Ok(vec![(*inputs.last().expect("at least one input")).clone()])
+    }
+}
+
+/// Copy a `rows × cols` window at (`row0`, `col0`) out of a row-major
+/// `src_rows × stride` matrix, zero-filling cells past the source extent
+/// (the padded tail tiles of a ragged problem).
+fn pack_window(
+    src: &[f32],
+    src_rows: usize,
+    stride: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; rows * cols];
+    let avail = stride.saturating_sub(col0).min(cols);
+    if avail > 0 {
         for r in 0..rows {
-            out[r * cols..(r + 1) * cols]
-                .copy_from_slice(&src[(row0 + r) * stride + col0..(row0 + r) * stride + col0 + cols]);
-        }
-        out
-    };
-
-    for i in (0..n).step_by(tile) {
-        for j in (0..m).step_by(tile) {
-            // accumulate across k tiles (the systolic k-chain, hosted)
-            let mut acc = vec![0f32; tile * tile];
-            for kk in (0..k).step_by(tile) {
-                let at = sub(a, i, kk, tile, tile, k);
-                let bt = sub(b, kk, j, tile, tile, m);
-                let out = rt.run(
-                    artifact,
-                    &[
-                        Tensor::f32(vec![tile, tile], at),
-                        Tensor::f32(vec![tile, tile], bt),
-                        Tensor::f32(vec![tile, tile], acc),
-                    ],
-                )?;
-                acc = out.into_iter().next().unwrap().data.as_f32().unwrap().to_vec();
-                stats.rounds += 1;
+            let sr = row0 + r;
+            if sr >= src_rows {
+                break;
             }
-            for r in 0..tile {
-                c[(i + r) * m + j..(i + r) * m + j + tile]
-                    .copy_from_slice(&acc[r * tile..(r + 1) * tile]);
+            out[r * cols..r * cols + avail]
+                .copy_from_slice(&src[sr * stride + col0..sr * stride + col0 + avail]);
+        }
+    }
+    out
+}
+
+fn validate_mm_inputs(a: &[f32], b: &[f32], n: usize, m: usize, k: usize) -> Result<()> {
+    if a.len() != n * k {
+        bail!("A must have n·k = {} elements, got {}", n * k, a.len());
+    }
+    if b.len() != k * m {
+        bail!("B must have k·m = {} elements, got {}", k * m, b.len());
+    }
+    Ok(())
+}
+
+/// Plan the host blocking for an (n, m, k) MM under the default board.
+/// The typed [`blocking::Unplannable`] travels inside the `anyhow` error
+/// (serve downcasts it into a structured protocol response).
+pub fn plan_for(n: usize, m: usize, k: usize) -> Result<BlockingPlan> {
+    let span = Span::begin("blocking.plan", "exec");
+    let model = CostModel::new(BoardConfig::vck5000());
+    let plan =
+        blocking::plan_mm(&model, n as u64, m as u64, k as u64).map_err(anyhow::Error::new);
+    span.end_ms();
+    plan
+}
+
+/// One prefetch unit travelling the double-buffer channel: a packed
+/// operand panel or streamed block, pre-sliced into graph-tile tensors
+/// so the compute thread touches no operand bytes at all.
+enum Packed {
+    /// Resident-operand panel tiles, indexed `[kt · ftiles + ft]`.
+    Panel(Vec<Tensor>),
+    /// Streamed-operand block tiles, indexed `[st · ktiles + kt]`.
+    Block(Vec<Tensor>),
+}
+
+/// Shared packing context (both schedule walkers — the prefetch thread
+/// and the serial oracle — pack through this, so tile bytes are
+/// identical by construction).
+struct Packer<'a> {
+    order: PanelOrder,
+    a: &'a [f32],
+    b: &'a [f32],
+    n: usize,
+    m: usize,
+    k: usize,
+    t: usize,
+}
+
+impl Packer<'_> {
+    /// Resident panel (`kd × fw` of B for b-resident, of A transposed
+    /// roles for a-resident), sliced into `tile × tile` tensors.
+    fn panel(&self, pc: usize, kd: usize, free0: usize, fw: usize) -> Vec<Tensor> {
+        let (ktiles, ftiles) = (kd / self.t, fw / self.t);
+        let mut tiles = Vec::with_capacity(ktiles * ftiles);
+        for kt in 0..ktiles {
+            for ft in 0..ftiles {
+                let data = match self.order {
+                    PanelOrder::BResident => pack_window(
+                        self.b,
+                        self.k,
+                        self.m,
+                        pc + kt * self.t,
+                        free0 + ft * self.t,
+                        self.t,
+                        self.t,
+                    ),
+                    PanelOrder::AResident => pack_window(
+                        self.a,
+                        self.n,
+                        self.k,
+                        free0 + ft * self.t,
+                        pc + kt * self.t,
+                        self.t,
+                        self.t,
+                    ),
+                };
+                tiles.push(Tensor::f32(vec![self.t, self.t], data));
+            }
+        }
+        tiles
+    }
+
+    /// Streamed block (`sw` rows of A for b-resident, columns of B for
+    /// a-resident), sliced into `tile × tile` tensors.
+    fn block(&self, pc: usize, kd: usize, s0: usize, sw: usize) -> Vec<Tensor> {
+        let (ktiles, stiles) = (kd / self.t, sw / self.t);
+        let mut tiles = Vec::with_capacity(stiles * ktiles);
+        for st in 0..stiles {
+            for kt in 0..ktiles {
+                let data = match self.order {
+                    PanelOrder::BResident => pack_window(
+                        self.a,
+                        self.n,
+                        self.k,
+                        s0 + st * self.t,
+                        pc + kt * self.t,
+                        self.t,
+                        self.t,
+                    ),
+                    PanelOrder::AResident => pack_window(
+                        self.b,
+                        self.k,
+                        self.m,
+                        pc + kt * self.t,
+                        s0 + st * self.t,
+                        self.t,
+                        self.t,
+                    ),
+                };
+                tiles.push(Tensor::f32(vec![self.t, self.t], data));
+            }
+        }
+        tiles
+    }
+}
+
+/// One resident k-segment within a free-dimension panel group.
+struct PanelStep {
+    pc: usize,
+    kd: usize,
+    /// Streamed blocks `(s0, sw)` in schedule order.
+    blocks: Vec<(usize, usize)>,
+}
+
+/// All k-segments sharing one resident free-dimension range
+/// (`[free0, free0 + fw)` of M for b-resident, of N for a-resident).
+/// The partial C panel for the range lives across the whole group.
+struct FreeGroup {
+    free0: usize,
+    fw: usize,
+    panels: Vec<PanelStep>,
+}
+
+/// The plan's deterministic schedule walk, precomputed once so the
+/// prefetch thread and the compute loop traverse the exact same order.
+fn mm_schedule(plan: &BlockingPlan) -> Vec<FreeGroup> {
+    let (kc, span, mc) = (plan.kc as usize, plan.span as usize, plan.mc as usize);
+    let (n_pad, m_pad, k_pad) = (
+        plan.n_pad as usize,
+        plan.m_pad as usize,
+        plan.k_pad as usize,
+    );
+    let (free_total, streamed_total) = match plan.order {
+        PanelOrder::BResident => (m_pad, n_pad),
+        PanelOrder::AResident => (n_pad, m_pad),
+    };
+    let mut groups = Vec::new();
+    for free0 in (0..free_total).step_by(span) {
+        let fw = span.min(free_total - free0);
+        let mut panels = Vec::new();
+        for pc in (0..k_pad).step_by(kc) {
+            let kd = kc.min(k_pad - pc);
+            let blocks = (0..streamed_total)
+                .step_by(mc)
+                .map(|s0| (s0, mc.min(streamed_total - s0)))
+                .collect();
+            panels.push(PanelStep { pc, kd, blocks });
+        }
+        groups.push(FreeGroup { free0, fw, panels });
+    }
+    groups
+}
+
+/// C = A·B via the accumulate-form MM artifact: plan the host blocking,
+/// then replay the plan with the double-buffered driver. Accepts
+/// arbitrary (n, m, k) ≥ 1 up to the planner's staging cap — ragged and
+/// sub-tile shapes are zero-padded.
+pub fn run_mm<B: ArrayBackend>(
+    rt: &mut B,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    k: usize,
+) -> Result<(Vec<f32>, ExecStats)> {
+    validate_mm_inputs(a, b, n, m, k)?;
+    let plan = plan_for(n, m, k)?;
+    run_mm_planned(rt, a, b, n, m, k, &plan)
+}
+
+/// Serial naive replay of the same plan geometry — the oracle the
+/// blocked driver must match bit-for-bit, and the baseline
+/// `make blocking-smoke` measures against. One B tile is packed per
+/// (j, k) step and reused across the whole i loop (the old driver
+/// re-packed it n/tile times); each C tile's k-chain ascends strictly,
+/// exactly like the blocked driver's.
+pub fn run_mm_naive<B: ArrayBackend>(
+    rt: &mut B,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    k: usize,
+) -> Result<(Vec<f32>, ExecStats)> {
+    validate_mm_inputs(a, b, n, m, k)?;
+    let plan = plan_for(n, m, k)?;
+    let t = plan.tile as usize;
+    let (n_pad, m_pad, k_pad) = (
+        plan.n_pad as usize,
+        plan.m_pad as usize,
+        plan.k_pad as usize,
+    );
+    let artifact = plan.artifact();
+    let t0 = Instant::now();
+    let mut stats = ExecStats::default();
+    let mut c_pad = vec![0f32; n_pad * m_pad];
+    for j in (0..m_pad).step_by(t) {
+        for kk in (0..k_pad).step_by(t) {
+            // hoisted: one B tile per (j, kk), shared across the i loop
+            let bt = Tensor::f32(vec![t, t], pack_window(b, k, m, kk, j, t, t));
+            stats.dram_bytes += (t * t * 4) as u64;
+            for i in (0..n_pad).step_by(t) {
+                let at = Tensor::f32(vec![t, t], pack_window(a, n, k, i, kk, t, t));
+                let acc = Tensor::f32(vec![t, t], pack_window(&c_pad, n_pad, m_pad, i, j, t, t));
+                let out = rt.run_tiles(&artifact, &[&at, &bt, &acc])?;
+                let out = out.into_iter().next().expect("mm artifact returns C'");
+                let data = out.data.as_f32().expect("mm artifact returns f32");
+                for r in 0..t {
+                    c_pad[(i + r) * m_pad + j..(i + r) * m_pad + j + t]
+                        .copy_from_slice(&data[r * t..(r + 1) * t]);
+                }
+                stats.rounds += 1;
+                stats.dram_bytes += (3 * t * t * 4) as u64; // A pack + C r/w
             }
         }
     }
+    let mut c = vec![0f32; n * m];
+    for r in 0..n {
+        c[r * m..(r + 1) * m].copy_from_slice(&c_pad[r * m_pad..r * m_pad + m]);
+    }
     stats.elements = (n * m) as u64;
     stats.seconds = t0.elapsed().as_secs_f64();
+    stats.plan = Some(plan);
+    Ok((c, stats))
+}
+
+/// Replay a specific [`BlockingPlan`] with the double-buffered driver:
+/// a prefetch thread packs panels/blocks (pure `memcpy`, no arithmetic)
+/// one schedule step ahead through a bounded channel while the calling
+/// thread runs the array rounds. Bit-identical to [`run_mm_naive`].
+pub fn run_mm_planned<B: ArrayBackend>(
+    rt: &mut B,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    k: usize,
+    plan: &BlockingPlan,
+) -> Result<(Vec<f32>, ExecStats)> {
+    validate_mm_inputs(a, b, n, m, k)?;
+    let t = plan.tile as usize;
+    let (n_pad, m_pad) = (plan.n_pad as usize, plan.m_pad as usize);
+    let artifact = plan.artifact();
+    let sched = mm_schedule(plan);
+    let t0 = Instant::now();
+
+    let (c, mut stats) = std::thread::scope(|s| -> Result<(Vec<f32>, ExecStats)> {
+        // Depth 2: the packer stays exactly one panel/block ahead — the
+        // "next" buffer of a classic double buffer — and panel memory
+        // stays bounded by the plan's PL-budget-sized units.
+        let (tx, rx) = mpsc::sync_channel::<Packed>(2);
+        let packer_ctx = Packer {
+            order: plan.order,
+            a,
+            b,
+            n,
+            m,
+            k,
+            t,
+        };
+        let sched_ref = &sched;
+        let packer = s.spawn(move || -> f64 {
+            let mut pack_ms = 0.0;
+            'sched: for group in sched_ref {
+                for panel in &group.panels {
+                    let sp = Span::begin("exec.pack", "exec");
+                    let tiles = packer_ctx.panel(panel.pc, panel.kd, group.free0, group.fw);
+                    pack_ms += sp.end_ms();
+                    if tx.send(Packed::Panel(tiles)).is_err() {
+                        break 'sched; // compute side bailed: stop packing
+                    }
+                    for &(s0, sw) in &panel.blocks {
+                        let sp = Span::begin("exec.pack", "exec");
+                        let tiles = packer_ctx.block(panel.pc, panel.kd, s0, sw);
+                        pack_ms += sp.end_ms();
+                        if tx.send(Packed::Block(tiles)).is_err() {
+                            break 'sched;
+                        }
+                    }
+                }
+            }
+            pack_ms
+        });
+
+        let mut compute = |rx: mpsc::Receiver<Packed>| -> Result<(Vec<f32>, ExecStats, f64)> {
+            let mut stats = ExecStats::default();
+            let mut stall_s = 0f64;
+            let mut c = vec![0f32; n * m];
+            for group in sched_ref {
+                // Partial C panel for this free-range, zero-initialised,
+                // accumulated across the group's k segments.
+                let (pr, pcw) = match plan.order {
+                    PanelOrder::BResident => (n_pad, group.fw),
+                    PanelOrder::AResident => (group.fw, m_pad),
+                };
+                let mut c_panel = vec![0f32; pr * pcw];
+                for panel in &group.panels {
+                    let (ktiles, ftiles) = (panel.kd / t, group.fw / t);
+                    let rcv = Instant::now();
+                    let Ok(Packed::Panel(ptiles)) = rx.recv() else {
+                        bail!("prefetch pipeline ended before panel k={}", panel.pc);
+                    };
+                    stall_s += rcv.elapsed().as_secs_f64();
+                    stats.dram_bytes += (panel.kd * group.fw * 4) as u64;
+                    for &(s0, sw) in &panel.blocks {
+                        let rcv = Instant::now();
+                        let Ok(Packed::Block(btiles)) = rx.recv() else {
+                            bail!("prefetch pipeline ended before block s={s0}");
+                        };
+                        stall_s += rcv.elapsed().as_secs_f64();
+                        stats.dram_bytes += (sw * panel.kd * 4) as u64;
+                        for st in 0..sw / t {
+                            for ft in 0..ftiles {
+                                // C tile origin within the panel frame
+                                let (r0, c0) = match plan.order {
+                                    PanelOrder::BResident => (s0 + st * t, ft * t),
+                                    PanelOrder::AResident => (ft * t, s0 + st * t),
+                                };
+                                // First segment starts from a zero
+                                // accumulator (no C read — matching the
+                                // cost model's 2·segs−1 convention);
+                                // later segments reload the partial.
+                                let mut acc = if panel.pc == 0 {
+                                    Tensor::f32(vec![t, t], vec![0f32; t * t])
+                                } else {
+                                    stats.dram_bytes += (t * t * 4) as u64;
+                                    Tensor::f32(
+                                        vec![t, t],
+                                        pack_window(&c_panel, pr, pcw, r0, c0, t, t),
+                                    )
+                                };
+                                for kt in 0..ktiles {
+                                    let (at, bt) = match plan.order {
+                                        PanelOrder::BResident => {
+                                            (&btiles[st * ktiles + kt], &ptiles[kt * ftiles + ft])
+                                        }
+                                        PanelOrder::AResident => {
+                                            (&ptiles[kt * ftiles + ft], &btiles[st * ktiles + kt])
+                                        }
+                                    };
+                                    let round = Span::begin("exec.round", "exec");
+                                    let out = rt.run_tiles(&artifact, &[at, bt, &acc])?;
+                                    round.end_ms();
+                                    acc = out.into_iter().next().expect("mm artifact returns C'");
+                                    stats.rounds += 1;
+                                }
+                                let data = acc.data.as_f32().expect("mm artifact returns f32");
+                                for r in 0..t {
+                                    c_panel[(r0 + r) * pcw + c0..(r0 + r) * pcw + c0 + t]
+                                        .copy_from_slice(&data[r * t..(r + 1) * t]);
+                                }
+                                stats.dram_bytes += (t * t * 4) as u64;
+                            }
+                        }
+                    }
+                }
+                // flush the finished panel into the unpadded output
+                match plan.order {
+                    PanelOrder::BResident => {
+                        let cols = group.fw.min(m.saturating_sub(group.free0));
+                        for r in 0..n {
+                            c[r * m + group.free0..r * m + group.free0 + cols]
+                                .copy_from_slice(&c_panel[r * pcw..r * pcw + cols]);
+                        }
+                    }
+                    PanelOrder::AResident => {
+                        let rows = group.fw.min(n.saturating_sub(group.free0));
+                        for r in 0..rows {
+                            c[(group.free0 + r) * m..(group.free0 + r) * m + m]
+                                .copy_from_slice(&c_panel[r * pcw..r * pcw + m]);
+                        }
+                    }
+                }
+            }
+            Ok((c, stats, stall_s))
+        };
+        // compute consumes rx; when it returns (ok or err) the channel
+        // closes, the packer's next send fails, and join can't block.
+        let compute_res = compute(rx);
+        let pack_ms = packer
+            .join()
+            .map_err(|_| anyhow!("prefetch thread panicked"))?;
+        let (c, mut stats, stall_s) = compute_res?;
+        stats.pack_ms = pack_ms;
+        stats.overlap_hidden_ms = (pack_ms - stall_s * 1e3).max(0.0);
+        Ok((c, stats))
+    })?;
+
+    stats.elements = (n * m) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.plan = Some(plan.clone());
+    debug_assert_eq!(stats.rounds, plan.rounds);
+    let reg = metrics::global();
+    reg.counter("exec.rounds").add(stats.rounds);
+    reg.counter("exec.dram_bytes").add(stats.dram_bytes);
+    reg.histogram("exec.overlap_hidden_ms")
+        .record(stats.overlap_hidden_ms.max(0.0) as u64);
     Ok((c, stats))
 }
 
@@ -85,9 +525,12 @@ pub fn run_conv2d(rt: &mut Runtime, x: &[f32], k: &[f32], h: usize, w: usize) ->
         bail!("conv output must divide by {TILE}");
     }
     let xw = w + P - 1;
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut y = vec![0f32; h * w];
     let mut stats = ExecStats::default();
+    // kernel and zero accumulator are loop-invariant: pack once
+    let kt = Tensor::f32(vec![P, P], k.to_vec());
+    let zero_acc = Tensor::f32(vec![TILE, TILE], vec![0.0; TILE * TILE]);
     for i in (0..h).step_by(TILE) {
         for j in (0..w).step_by(TILE) {
             // halo-extended input block
@@ -98,14 +541,8 @@ pub fn run_conv2d(rt: &mut Runtime, x: &[f32], k: &[f32], h: usize, w: usize) ->
                 xt[r * bw..(r + 1) * bw]
                     .copy_from_slice(&x[(i + r) * xw + j..(i + r) * xw + j + bw]);
             }
-            let out = rt.run(
-                "conv2d_f32_128x4",
-                &[
-                    Tensor::f32(vec![bh, bw], xt),
-                    Tensor::f32(vec![P, P], k.to_vec()),
-                    Tensor::f32(vec![TILE, TILE], vec![0.0; TILE * TILE]),
-                ],
-            )?;
+            let xt = Tensor::f32(vec![bh, bw], xt);
+            let out = rt.run_ref("conv2d_f32_128x4", &[&xt, &kt, &zero_acc])?;
             let tile_out = out.into_iter().next().unwrap();
             let data = tile_out.data.as_f32().unwrap();
             for r in 0..TILE {
@@ -133,7 +570,7 @@ pub fn run_fir(rt: &mut Runtime, x: &[f32], h: &[f32], n: usize) -> Result<(Vec<
     if x.len() != n + TAPS - 1 {
         bail!("x must have n + taps - 1 samples");
     }
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut y = vec![0f32; n];
     let mut stats = ExecStats::default();
     for off in (0..n).step_by(CHUNK) {
@@ -172,7 +609,7 @@ pub fn run_fft2d(
     if cols != N || rows != N {
         bail!("fft2d replay is specialised to 256×256 grids");
     }
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut stats = ExecStats::default();
 
     // Bit-reversal permutation (host-side data movement — on the board
@@ -249,10 +686,15 @@ pub fn run_dwconv2d(
     }
     let (xh, xw) = (h + P - 1, w + P - 1);
     let (bh, bw) = (TILE + P - 1, TILE + P - 1);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut y = vec![0f32; c * h * w];
     let mut stats = ExecStats::default();
+    // zero accumulator is loop-invariant: pack once
+    let zero_acc = Tensor::f32(vec![G, TILE, TILE], vec![0.0; G * TILE * TILE]);
     for g0 in (0..c).step_by(G) {
+        // hoisted: the kernel group only changes with g0, not per tile —
+        // the old driver re-packed it (h/64)·(w/64) times per group
+        let kt = Tensor::f32(vec![G, P, P], k[g0 * P * P..(g0 + G) * P * P].to_vec());
         for i in (0..h).step_by(TILE) {
             for j in (0..w).step_by(TILE) {
                 let mut xt = vec![0f32; G * bh * bw];
@@ -263,15 +705,8 @@ pub fn run_dwconv2d(
                             .copy_from_slice(&x[src..src + bw]);
                     }
                 }
-                let kt = k[g0 * P * P..(g0 + G) * P * P].to_vec();
-                let out = rt.run(
-                    "dwconv2d_f32_8x64x3",
-                    &[
-                        Tensor::f32(vec![G, bh, bw], xt),
-                        Tensor::f32(vec![G, P, P], kt),
-                        Tensor::f32(vec![G, TILE, TILE], vec![0.0; G * TILE * TILE]),
-                    ],
-                )?;
+                let xt = Tensor::f32(vec![G, bh, bw], xt);
+                let out = rt.run_ref("dwconv2d_f32_8x64x3", &[&xt, &kt, &zero_acc])?;
                 let data = out.into_iter().next().unwrap();
                 let data = data.data.as_f32().unwrap();
                 for g in 0..G {
@@ -303,7 +738,7 @@ pub fn run_trsv(rt: &mut Runtime, l: &[f32], b: &[f32], n: usize) -> Result<(Vec
     if l.len() != n * n || b.len() != n {
         bail!("trsv input shapes inconsistent with n={n}");
     }
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut x = vec![0f32; n];
     let mut stats = ExecStats::default();
     for bi in (0..n).step_by(BLK) {
@@ -355,7 +790,7 @@ pub fn run_stencil2d(
     if coef.len() != 5 {
         bail!("stencil takes 5 coefficients [centre, n, s, w, e]");
     }
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut stats = ExecStats::default();
     let mut cur = a.to_vec();
     for _ in 0..stages / 2 {
@@ -402,6 +837,11 @@ mod tests {
         let want = verify::mm_ref(&a, &b, &vec![0.0; n * m], n, m, k);
         assert!(verify::max_abs_diff(&c, &want) < 1e-2);
         assert_eq!(stats.rounds, 2); // (256/128)·(128/128)·(128/128)
+        let plan = stats.plan.expect("planned driver records its plan");
+        assert_eq!(plan.tile, 128);
+        // measured host traffic equals the plan's prediction exactly on
+        // this driver (same accounting convention on both sides)
+        assert_eq!(stats.dram_bytes, plan.predicted_dram_bytes);
     }
 
     #[test]
@@ -422,12 +862,18 @@ mod tests {
     #[test]
     fn size_validation_errors() {
         let Some(mut rt) = runtime() else { return };
-        assert!(run_mm(&mut rt, &[0.0; 100], &[0.0; 100], 10, 10, 10).is_err());
+        // operand lengths must match the declared extents
+        assert!(run_mm(&mut rt, &[0.0; 99], &[0.0; 100], 10, 10, 10).is_err());
+        assert!(run_mm(&mut rt, &[0.0; 100], &[0.0; 99], 10, 10, 10).is_err());
+        // zero extents are Unplannable, surfaced as a typed error
+        let err = run_mm(&mut rt, &[], &[], 0, 16, 0).unwrap_err();
+        assert!(err.downcast_ref::<blocking::Unplannable>().is_some());
         assert!(run_fir(&mut rt, &[0.0; 114], &[0.0; 15], 100).is_err());
     }
 
     /// The replay loops must work on the default stub backend with no
-    /// artifacts on disk (tiling, k-chaining, halo staging, transposes).
+    /// artifacts on disk (planning, blocking, double buffering, ragged
+    /// padding, k-chaining).
     #[cfg(not(feature = "pjrt"))]
     #[test]
     fn mm_replay_on_stub_backend() {
@@ -442,8 +888,52 @@ mod tests {
         assert_eq!(stats.rounds, 2);
         let want = verify::mm_ref(&a, &b, &vec![0.0; n * m], n, m, k);
         assert!(verify::max_abs_diff(&c, &want) < 1e-2);
-        // size validation fires on the stub path too
-        assert!(run_mm(&mut rt, &[0.0; 100], &[0.0; 100], 10, 10, 10).is_err());
+        // operand-length validation fires on the stub path too
+        assert!(run_mm(&mut rt, &[0.0; 99], &[0.0; 100], 10, 10, 10).is_err());
+    }
+
+    /// Ragged, prime, and smaller-than-one-tile shapes replay through
+    /// padded tail tiles; the blocked driver is bit-identical to the
+    /// serial oracle (the full law lives in tests/testkit/laws.rs).
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn mm_ragged_shapes_on_stub_backend() {
+        let mut rt = Runtime::with_builtin();
+        for (n, m, k) in [(10usize, 10usize, 10usize), (127, 131, 7), (300, 260, 200)] {
+            let mut rng = XorShift64::new((n * 1000 + m) as u64);
+            let mut a = vec![0f32; n * k];
+            let mut b = vec![0f32; k * m];
+            rng.fill_f32(&mut a);
+            rng.fill_f32(&mut b);
+            let (blocked, stats) = run_mm(&mut rt, &a, &b, n, m, k).unwrap();
+            let (serial, _) = run_mm_naive(&mut rt, &a, &b, n, m, k).unwrap();
+            assert_eq!(blocked.len(), n * m);
+            let identical = blocked
+                .iter()
+                .zip(&serial)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(identical, "blocked != serial for {n}x{m}x{k}");
+            let want = verify::mm_ref(&a, &b, &vec![0.0; n * m], n, m, k);
+            assert!(verify::max_abs_diff(&blocked, &want) < 1e-2, "{n}x{m}x{k}");
+            let plan = stats.plan.unwrap();
+            assert_eq!(stats.rounds, plan.rounds);
+            assert_eq!(stats.dram_bytes, plan.predicted_dram_bytes);
+        }
+    }
+
+    /// The NullArray backend isolates the host path: results are
+    /// (deliberately) zeros, but the pipeline, stats, and plan flow.
+    #[test]
+    fn null_array_exercises_host_path() {
+        let (n, m, k) = (300usize, 260usize, 200usize);
+        let a = vec![1.0f32; n * k];
+        let b = vec![1.0f32; k * m];
+        let (c, stats) = run_mm(&mut NullArray, &a, &b, n, m, k).unwrap();
+        assert!(c.iter().all(|&v| v == 0.0));
+        let plan = stats.plan.unwrap();
+        assert_eq!(stats.rounds, plan.rounds);
+        assert_eq!(stats.dram_bytes, plan.predicted_dram_bytes);
+        assert!(stats.pack_ms >= 0.0 && stats.overlap_hidden_ms >= 0.0);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -4,11 +4,16 @@
 //!
 //! [`framework`] wires the full pipeline — demarcation → DSE → graph →
 //! packet merge → placement → Algorithm 1 → routing → simulation →
-//! codegen. [`exec`] is the host program: it walks the outer (DRAM-level)
-//! tile schedule and calls the PJRT runtime per graph tile, exactly as
-//! the generated host.cpp would drive the board. [`verify`] holds the
-//! host-side oracles.
+//! codegen. [`blocking`] is the host-blocking planner above the mapper:
+//! it prices GotoBLAS2-style panel loop orders through `mapping::cost`
+//! and emits the deterministic [`blocking::BlockingPlan`] the replay
+//! walks. [`exec`] is the host program: it walks the plan's outer
+//! (DRAM-level) tile schedule with a double-buffered prefetch pipeline
+//! and calls the PJRT runtime per graph tile, exactly as the generated
+//! host.cpp would drive the board. [`verify`] holds the host-side
+//! oracles.
 
+pub mod blocking;
 pub mod exec;
 pub mod framework;
 pub mod verify;

@@ -7,6 +7,7 @@ pub mod ablations;
 pub mod energy;
 pub mod figure6;
 pub mod pnr_ablation;
+pub mod scalability;
 pub mod table1;
 pub mod table3;
 pub mod table4;
@@ -17,13 +18,16 @@ pub mod workloads;
 /// E5 = [`pnr_ablation`], E7 = [`ablations`]; [`workloads`] is the
 /// repo's own workload-coverage table over the expanded catalog and
 /// [`energy`] its Table IV-style TOPS-vs-W tradeoff across the same
-/// catalog. Each `run()` returns the structured rows plus a rendered
-/// text table; the `widesa` CLI prints them (`widesa table3`,
-/// `widesa workloads`, `widesa energy`, ...).
+/// catalog; [`scalability`] sweeps N×N×N MM past the single-artifact
+/// staging ceiling under the host-level blocking planner. Each `run()`
+/// returns the structured rows plus a rendered text table; the `widesa`
+/// CLI prints them (`widesa table3`, `widesa workloads`,
+/// `widesa scalability`, ...).
 pub use ablations::run as run_ablations;
 pub use energy::run as run_energy;
 pub use figure6::run as run_figure6;
 pub use pnr_ablation::run as run_pnr_ablation;
+pub use scalability::run as run_scalability;
 pub use table1::run as run_table1;
 pub use table3::run as run_table3;
 pub use table4::run as run_table4;

@@ -1,0 +1,149 @@
+//! Large-N scalability table (`widesa scalability`): how the host-level
+//! blocking planner carries one compiled graph-tile artifact past its
+//! single-staging ceiling. Each row is an N×N×N f32 MM: the plan the
+//! planner picked (tile, loop order, panel geometry), its predicted DRAM
+//! traffic and DRAM-bound time from the shared
+//! [`crate::mapping::cost::CostModel`], and — for the sizes the table
+//! actually replays — the *measured* host traffic from walking the plan
+//! on the [`crate::coordinator::exec::NullArray`] host-path backend
+//! (driver bookkeeping only, no kernel math) plus a functional GF/s
+//! point from the real stub runtime at the smallest size. Measured and
+//! predicted bytes agree exactly by construction; `make blocking-smoke`
+//! gates the same invariant at N = 2048.
+
+use crate::arch::vck5000::BoardConfig;
+use crate::coordinator::blocking::{plan_mm, BlockingPlan};
+use crate::coordinator::exec::{run_mm, NullArray};
+use crate::mapping::cost::CostModel;
+use crate::runtime::client::Runtime;
+use crate::util::rng::XorShift64;
+use crate::util::table::TextTable;
+
+/// Problem sizes the table sweeps. The 256-tile artifact stages at most
+/// one padded operand panel at a time, so everything from 512 up
+/// exercises multi-round blocking; the top sizes are planner-only rows
+/// (operands would not fit a test runner's memory budget).
+pub const SWEEP_N: [u64; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// Largest N the table actually replays on the NullArray host path.
+pub const MEASURE_CEILING: u64 = 2048;
+
+/// One evaluated scalability row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub n: u64,
+    pub plan: BlockingPlan,
+    /// Measured host DRAM bytes from the NullArray replay; `None` for
+    /// planner-only rows past [`MEASURE_CEILING`].
+    pub measured_bytes: Option<u64>,
+    /// Blocked-replay wall seconds on the NullArray host path.
+    pub replay_s: Option<f64>,
+    /// Functional GF/s on the real stub runtime (smallest size only —
+    /// the stub does the actual f32 tile math).
+    pub stub_gflops: Option<f64>,
+}
+
+/// Replay an n³ MM on the NullArray host path and report
+/// (measured bytes, wall seconds).
+fn replay_null(n: usize) -> (u64, f64) {
+    let mut rng = XorShift64::new(0x5CA1E);
+    let mut a = vec![0f32; n * n];
+    let mut b = vec![0f32; n * n];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    let (_, stats) = run_mm(&mut NullArray, &a, &b, n, n, n).expect("planned replay");
+    (stats.dram_bytes, stats.seconds)
+}
+
+/// Functional GF/s through the real stub runtime at size n³.
+fn stub_gflops(n: usize) -> Option<f64> {
+    let mut rt = Runtime::new().ok()?;
+    let mut rng = XorShift64::new(0x6F10);
+    let mut a = vec![0f32; n * n];
+    let mut b = vec![0f32; n * n];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    let (_, stats) = run_mm(&mut rt, &a, &b, n, n, n).ok()?;
+    Some(2.0 * (n as f64).powi(3) / stats.seconds / 1e9)
+}
+
+/// Sweep [`SWEEP_N`] and tabulate plan + replay evidence.
+pub fn run() -> (Vec<Row>, String) {
+    let model = CostModel::new(BoardConfig::vck5000());
+    let mut rows = Vec::new();
+    let mut table =
+        TextTable::new("Host-blocking scalability — N×N×N f32 MM on one graph-tile artifact");
+    table.header(&[
+        "N", "tile", "order", "kc", "span", "mc", "rounds", "pred MB", "DRAM s", "meas MB",
+        "GF/s",
+    ]);
+    for n in SWEEP_N {
+        let plan = plan_mm(&model, n, n, n)
+            .unwrap_or_else(|e| panic!("sweep size {n} must be plannable: {e}"));
+        let (measured_bytes, replay_s) = if n <= MEASURE_CEILING {
+            let (bytes, secs) = replay_null(n as usize);
+            (Some(bytes), Some(secs))
+        } else {
+            (None, None)
+        };
+        let gfs = if n == SWEEP_N[0] { stub_gflops(n as usize) } else { None };
+        let row = Row {
+            n,
+            plan: plan.clone(),
+            measured_bytes,
+            replay_s,
+            stub_gflops: gfs,
+        };
+        table.row(vec![
+            n.to_string(),
+            plan.tile.to_string(),
+            plan.order.to_string(),
+            plan.kc.to_string(),
+            plan.span.to_string(),
+            plan.mc.to_string(),
+            plan.rounds.to_string(),
+            format!("{:.1}", plan.predicted_dram_bytes as f64 / 1e6),
+            format!("{:.4}", plan.predicted_dram_s),
+            row.measured_bytes
+                .map_or_else(|| "-".to_string(), |b| format!("{:.1}", b as f64 / 1e6)),
+            row.stub_gflops
+                .map_or_else(|| "-".to_string(), |g| format!("{g:.2}")),
+        ]);
+        rows.push(row);
+    }
+    (rows, table.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalability_sweep_covers_and_reconciles() {
+        let (rows, rendered) = run();
+        assert_eq!(rows.len(), SWEEP_N.len());
+        for (row, n) in rows.iter().zip(SWEEP_N) {
+            assert_eq!(row.n, n);
+            assert_eq!(row.plan.n, n);
+            assert!(row.plan.predicted_dram_bytes > 0, "N={n}");
+            // measured replays reconcile with the model exactly
+            if let Some(bytes) = row.measured_bytes {
+                assert_eq!(bytes, row.plan.predicted_dram_bytes, "N={n}");
+            } else {
+                assert!(n > MEASURE_CEILING, "N={n} should have been measured");
+            }
+        }
+        // traffic grows with the problem: the sweep actually scales
+        for w in rows.windows(2) {
+            assert!(
+                w[1].plan.predicted_dram_bytes > w[0].plan.predicted_dram_bytes,
+                "DRAM traffic must grow monotonically over the sweep"
+            );
+        }
+        assert!(
+            rows[0].stub_gflops.is_none() || rows[0].stub_gflops.unwrap() > 0.0,
+            "stub GF/s point must be positive when available"
+        );
+        assert!(rendered.contains("Host-blocking scalability"));
+    }
+}

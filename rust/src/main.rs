@@ -38,13 +38,20 @@ COMMANDS (evaluation):
   energy                 energy table: Table IV's TOPS-vs-W tradeoff across the
                          workload catalog (W, TOPS/W, J/pass, Pareto frontier)
                          vs the AutoSA PL-only baseline; see docs/ENERGY.md
+  scalability            large-N MM sweep past the single-artifact staging
+                         ceiling: chosen blocking plan, predicted vs measured
+                         host DRAM traffic per size; see docs/BLOCKING.md
 
 COMMANDS (framework):
-  map <bench> <dtype> [--aies N] [--trace-out PATH]
+  map <bench> <dtype> [--aies N] [--dims NxMxK] [--trace-out PATH]
                                     run the mapping pipeline, print the design report
-                                    (--trace-out writes Chrome trace-event JSON)
+                                    (--dims overrides the mm problem size and prints
+                                    the host blocking plan; --trace-out writes Chrome
+                                    trace-event JSON)
   codegen <bench> <dtype> <outdir>  emit AIE kernel / ADF graph / PL movers / host code
-  run-mm [n m k]                    functional replay of MM (default 512³)
+  run-mm [n m k]                    functional replay of MM (default 512³) through the
+                                    blocked, double-buffered host driver; prints the
+                                    plan and predicted-vs-measured DRAM traffic
   selftest                          quick end-to-end smoke test
 
 COMMANDS (service):
@@ -74,9 +81,10 @@ COMMANDS (observability):
                                     validate a --trace-out file (well-formed events,
                                     span nesting, trace IDs, root coverage >= F,
                                     default 0.95) and optionally a --metrics-out file
-  trend [--commit SHA] [--serve PATH] [--compile PATH] [--out PATH]
+  trend [--commit SHA] [--serve PATH] [--compile PATH] [--blocking PATH] [--out PATH]
                                     append one per-commit trend line (p50/p99/p999,
-                                    stage ms, overhead, fp32 MM TOPS/W) from the
+                                    stage ms, overhead, fp32 MM TOPS/W, large-N
+                                    blocked-replay speedup + GF/s) from the
                                     BENCH_*.json files to BENCH_trend.jsonl;
                                     SHA defaults to $GITHUB_SHA
 
@@ -126,7 +134,7 @@ fn framework(max_aies: Option<u64>) -> WideSa {
 fn cmd_map(args: &[String]) -> Result<()> {
     let (bench, dtype) = (args.first(), args.get(1));
     let (Some(bench), Some(dtype)) = (bench, dtype) else {
-        bail!("usage: widesa map <bench> <dtype> [--aies N] [--trace-out PATH]");
+        bail!("usage: widesa map <bench> <dtype> [--aies N] [--dims NxMxK] [--trace-out PATH]");
     };
     let mut aies = None;
     if let Some(i) = args.iter().position(|a| a == "--aies") {
@@ -138,7 +146,37 @@ fn cmd_map(args: &[String]) -> Result<()> {
         trace_out = Some(path.into());
         trace::set_enabled(true);
     }
-    let rec = parse_bench(bench, parse_dtype(dtype)?)?;
+    let mut dims: Option<Vec<u64>> = None;
+    if let Some(i) = args.iter().position(|a| a == "--dims") {
+        let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--dims needs NxMxK"))?;
+        dims = Some(
+            v.split('x')
+                .map(|s| s.parse::<u64>().with_context(|| format!("bad --dims part {s:?}")))
+                .collect::<Result<_>>()?,
+        );
+    }
+    let rec = match &dims {
+        None => parse_bench(bench, parse_dtype(dtype)?)?,
+        Some(d) => {
+            if bench != "mm" || d.len() != 3 {
+                bail!("--dims NxMxK is only supported for mm");
+            }
+            library::mm(d[0], d[1], d[2], parse_dtype(dtype)?)
+        }
+    };
+    // mm designs replay under a host-level blocking plan: report it with
+    // the design, and reject unplannable shapes with the typed error
+    // before spending any compile time.
+    let blocking_plan = if bench == "mm" {
+        let d = dims.as_deref().unwrap_or(&[8192, 8192, 8192]);
+        let model = widesa::mapping::cost::CostModel::new(BoardConfig::vck5000());
+        Some(
+            widesa::coordinator::blocking::plan_mm(&model, d[0], d[1], d[2])
+                .map_err(anyhow::Error::new)?,
+        )
+    } else {
+        None
+    };
     // The whole compile runs under one root span with its own trace ID,
     // so the exported trace attributes wall time the way a serve request
     // would (dse under map; dse.score fan-out correlated by the ID).
@@ -147,6 +185,9 @@ fn cmd_map(args: &[String]) -> Result<()> {
     let d = framework(aies).compile(&rec)?;
     drop(root);
     println!("{}", d.report());
+    if let Some(plan) = &blocking_plan {
+        println!("  {}", plan.summary());
+    }
     if let Some(path) = trace_out {
         let doc = trace::export_chrome(&trace::drain_events());
         std::fs::write(&path, format!("{doc}\n"))
@@ -175,6 +216,10 @@ fn cmd_run_mm(args: &[String]) -> Result<()> {
     let m: usize = args.get(1).map(|v| v.parse()).transpose()?.unwrap_or(n);
     let k: usize = args.get(2).map(|v| v.parse()).transpose()?.unwrap_or(n);
     println!("functional MM replay: {n}×{m}×{k} f32");
+    // Plan before allocating operands: an unplannable shape gets the
+    // typed error without first trying to stage petabyte inputs.
+    let plan = exec::plan_for(n, m, k)?;
+    println!("{}", plan.summary());
     let mut rt = Runtime::new()?;
     println!("runtime backend: {}", rt.platform());
     let mut rng = XorShift64::new(1234);
@@ -189,6 +234,13 @@ fn cmd_run_mm(args: &[String]) -> Result<()> {
     println!(
         "rounds={} wall={:.3}s functional-throughput={:.2} GFLOP/s max|Δ|={err:.2e}",
         stats.rounds, stats.seconds, gflops
+    );
+    println!(
+        "host DRAM: predicted {:.1} MB, measured {:.1} MB | pack {:.1} ms ({:.1} ms hidden by overlap)",
+        plan.predicted_dram_bytes as f64 / 1e6,
+        stats.dram_bytes as f64 / 1e6,
+        stats.pack_ms,
+        stats.overlap_hidden_ms
     );
     if err > 1e-2 {
         bail!("verification FAILED (max|Δ| = {err})");
@@ -331,6 +383,8 @@ fn cmd_trend(args: &[String]) -> Result<()> {
     let serve_path = flag("--serve").map_or_else(|| root.join("BENCH_serve.json"), Into::into);
     let compile_path =
         flag("--compile").map_or_else(|| root.join("BENCH_compile.json"), Into::into);
+    let blocking_path =
+        flag("--blocking").map_or_else(|| root.join("BENCH_blocking.json"), Into::into);
     let out = flag("--out").map_or_else(|| root.join("BENCH_trend.jsonl"), Into::into);
     let ts = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -338,6 +392,7 @@ fn cmd_trend(args: &[String]) -> Result<()> {
         .unwrap_or(0);
     let serve = trend::read_bench(&serve_path);
     let compile = trend::read_bench(&compile_path);
+    let blocking = trend::read_bench(&blocking_path);
     // Deterministic fp32 MM TOPS/W datum straight from the shared cost +
     // power model (analytic explore only — no P&R, so this is cheap and
     // bit-stable across runs on the same commit).
@@ -350,7 +405,14 @@ fn cmd_trend(args: &[String]) -> Result<()> {
         },
     )
     .map(|(_, est)| est.power.tops_per_watt);
-    let line = trend::trend_line(&commit, ts, serve.as_ref(), compile.as_ref(), mm_tpw);
+    let line = trend::trend_line(
+        &commit,
+        ts,
+        serve.as_ref(),
+        compile.as_ref(),
+        mm_tpw,
+        blocking.as_ref(),
+    );
     trend::append_trend(&out, &line)?;
     println!("{line}");
     eprintln!("widesa trend: appended to {}", out.display());
@@ -459,6 +521,10 @@ fn main() -> Result<()> {
         }
         Some("energy") => {
             let (_, table) = eval::energy::run();
+            println!("{table}");
+        }
+        Some("scalability") => {
+            let (_, table) = eval::scalability::run();
             println!("{table}");
         }
         Some("map") => cmd_map(&args[1..])?,

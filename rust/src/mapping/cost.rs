@@ -114,6 +114,20 @@ fn mutation_scale() -> f64 {
     })
 }
 
+/// Mutation seam for `make mutation-smoke`: `WIDESA_MUTATE=blocking-reuse`
+/// makes [`CostModel::blocked_mm_dram_bytes`] mis-count panel reuse — the
+/// streamed operand's reload factor collapses to 1, as if every panel
+/// order got perfect reuse for free. Under that lie the host-blocking
+/// planner picks a traffic-pessimal order; the planner guard test
+/// (`blocking_planner_prices_true_reuse`) is asserted to flip. Read once
+/// (the planner prices hundreds of candidates per plan).
+pub(crate) fn blocking_reuse_mutated() -> bool {
+    static CACHE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        matches!(std::env::var("WIDESA_MUTATE").as_deref(), Ok("blocking-reuse"))
+    })
+}
+
 /// Sustained issue efficiency of the generated AIE microkernel
 /// (kernel-level calibration — see module docs). Values assume latency
 /// hiding has filled the accumulation pipeline; [`CostModel::estimate`]
@@ -599,6 +613,51 @@ impl CostModel {
                 2 * n * m * b + 5 * b
             }
         }
+    }
+
+    /// DRAM bytes a GotoBLAS2-style host-blocked MM replay moves under one
+    /// blocking choice — **the** pricing formula the host-blocking planner
+    /// ([`crate::coordinator::blocking`]) minimizes over, kept here next
+    /// to [`Self::dram_traffic`] so the DSE and the planner price DRAM
+    /// with one model (same `buffer_bytes()/2` residency convention, same
+    /// reload-factor accounting as the `Kind::Mm` arm above).
+    ///
+    /// Dimensions are the *padded* problem (tile multiples); `eb` is the
+    /// element width. One operand panel (`kc × span` of B when
+    /// `b_resident`, else of A) stays resident in the PL buffer across
+    /// the inner loop, so it is read once; the other operand streams and
+    /// re-reads once per panel step of the resident operand's free
+    /// dimension. C is written once per k-segment and re-read on every
+    /// re-entry (`2·segs − 1` transfers of n×m).
+    ///
+    /// Internally u128 (an absurd shape like 1e9³ would overflow u64
+    /// mid-sum), saturating to `u64::MAX` on return — the planner's
+    /// feasibility cap rejects such shapes before any driver runs them.
+    pub fn blocked_mm_dram_bytes(
+        &self,
+        n: u64,
+        m: u64,
+        k: u64,
+        eb: u64,
+        kc: u64,
+        span: u64,
+        b_resident: bool,
+    ) -> u64 {
+        let (n, m, k, eb) = (n as u128, m as u128, k as u128, eb as u128);
+        let segs = (k.div_ceil(kc.max(1) as u128)).max(1);
+        let (resident_once, streamed_total, mut reload) = if b_resident {
+            // B panels resident: A streams, re-read per jc panel of m.
+            (k * m * eb, n * k * eb, m.div_ceil(span.max(1) as u128).max(1))
+        } else {
+            // A panels resident: B streams, re-read per ic panel of n.
+            (n * k * eb, k * m * eb, n.div_ceil(span.max(1) as u128).max(1))
+        };
+        if blocking_reuse_mutated() {
+            reload = 1; // seam: pretend the streamed operand never re-reads
+        }
+        let c_rw = n * m * eb * (2 * segs - 1);
+        let total = resident_once + streamed_total * reload + c_rw;
+        u64::try_from(total).unwrap_or(u64::MAX)
     }
 }
 

@@ -5,19 +5,26 @@
 //! The snapshot files answer "how fast is it now"; the trend file
 //! answers "which commit moved the p99" — the ROADMAP item this closes.
 //! CI runs `widesa trend --commit $GITHUB_SHA` after the bench smokes so
-//! every run appends exactly one line. The line shape (schema 2):
+//! every run appends exactly one line. The line shape (schema 3):
 //!
 //! ```json
-//! {"schema":2,"commit":"<sha>","ts":<unix-s>,
+//! {"schema":3,"commit":"<sha>","ts":<unix-s>,
 //!  "serve":{"p50_us":…,"p99_us":…,"p999_us":…,"shed_rate":…,
 //!           "overhead_p50_pct":…,"stage_ms":{"place":…,"assign":…,"route":…}},
 //!  "compile":{"cold_ms":{…},"anneal_speedup":…},
-//!  "energy":{"mm_f32_tops_per_watt":…}}
+//!  "energy":{"mm_f32_tops_per_watt":…},
+//!  "blocking":{"speedup":…,"large_n_gflops":…,"dram_model_err_pct":…}}
 //! ```
 //!
 //! Schema 2 added the `energy` section: the fp32 MM 8192³ TOPS/W from
 //! the shared analytic cost + power model, so efficiency regressions
-//! trend per commit alongside latency (`docs/ENERGY.md`).
+//! trend per commit alongside latency (`docs/ENERGY.md`). Schema 3 added
+//! the `blocking` section from `BENCH_blocking.json` (`make
+//! blocking-smoke`): the large-N blocked-replay speedup over the naive
+//! driver, the large-N functional GF/s point, and the predicted-vs-
+//! measured DRAM model error (`docs/BLOCKING.md`). Readers accept both
+//! eras — a schema-2 line simply has no `blocking` key, exactly like any
+//! other skipped lane.
 //!
 //! Missing inputs (file absent, or a seed schema full of `null`s) render
 //! as `null` fields rather than failing: a trend line that says "no
@@ -30,7 +37,7 @@ use std::path::Path;
 
 /// Version stamp on every trend line; bump on shape changes so readers
 /// can split the file by era.
-pub const TREND_SCHEMA: u32 = 2;
+pub const TREND_SCHEMA: u32 = 3;
 
 /// Copy `key` out of `src` (or `Json::Null` when absent/`src` is None).
 fn lift(src: Option<&Json>, key: &str) -> Json {
@@ -46,6 +53,7 @@ pub fn trend_line(
     serve: Option<&Json>,
     compile: Option<&Json>,
     mm_f32_tops_per_watt: Option<f64>,
+    blocking: Option<&Json>,
 ) -> Json {
     let serve_part = Json::obj(vec![
         ("p50_us", lift(serve, "p50_us")),
@@ -75,6 +83,11 @@ pub fn trend_line(
         "mm_f32_tops_per_watt",
         mm_f32_tops_per_watt.map_or(Json::Null, Json::Num),
     )]);
+    let blocking_part = Json::obj(vec![
+        ("speedup", lift(blocking, "speedup")),
+        ("large_n_gflops", lift(blocking, "large_n_gflops")),
+        ("dram_model_err_pct", lift(blocking, "dram_model_err_pct")),
+    ]);
     Json::obj(vec![
         ("schema", Json::num_u64(u64::from(TREND_SCHEMA))),
         ("commit", Json::str(commit)),
@@ -82,6 +95,7 @@ pub fn trend_line(
         ("serve", serve_part),
         ("compile", compile_part),
         ("energy", energy_part),
+        ("blocking", blocking_part),
     ])
 }
 
@@ -133,6 +147,11 @@ mod tests {
         parse(r#"{"cold_ms":{"mm-400":45.0},"anneal":{"speedup":2.4}}"#).unwrap()
     }
 
+    fn blocking_snapshot() -> Json {
+        parse(r#"{"n":2048,"speedup":2.8,"large_n_gflops":41.5,"dram_model_err_pct":0.0}"#)
+            .unwrap()
+    }
+
     #[test]
     fn trend_line_is_deterministic_and_complete() {
         let a = trend_line(
@@ -141,6 +160,7 @@ mod tests {
             Some(&serve_snapshot()),
             Some(&compile_snapshot()),
             Some(0.074),
+            Some(&blocking_snapshot()),
         );
         let b = trend_line(
             "abc123",
@@ -148,6 +168,7 @@ mod tests {
             Some(&serve_snapshot()),
             Some(&compile_snapshot()),
             Some(0.074),
+            Some(&blocking_snapshot()),
         );
         assert_eq!(a.to_string(), b.to_string(), "same inputs → byte-identical line");
         assert_eq!(a.get("schema").unwrap().as_u64(), Some(u64::from(TREND_SCHEMA)));
@@ -169,20 +190,48 @@ mod tests {
             a.get("energy").unwrap().get("mm_f32_tops_per_watt").unwrap().as_f64(),
             Some(0.074)
         );
+        let blocking = a.get("blocking").unwrap();
+        assert_eq!(blocking.get("speedup").unwrap().as_f64(), Some(2.8));
+        assert_eq!(blocking.get("large_n_gflops").unwrap().as_f64(), Some(41.5));
+        assert_eq!(blocking.get("dram_model_err_pct").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
     fn missing_inputs_degrade_to_nulls() {
-        let line = trend_line("seed", 0, None, None, None);
+        let line = trend_line("seed", 0, None, None, None, None);
         assert_eq!(line.get("serve").unwrap().get("p50_us"), Some(&Json::Null));
         assert_eq!(line.get("compile").unwrap().get("cold_ms"), Some(&Json::Null));
         assert_eq!(
             line.get("energy").unwrap().get("mm_f32_tops_per_watt"),
             Some(&Json::Null)
         );
+        assert_eq!(
+            line.get("blocking").unwrap().get("large_n_gflops"),
+            Some(&Json::Null)
+        );
         // the line still parses back
         let rt = parse(&line.to_string()).unwrap();
         assert_eq!(rt.get("commit").unwrap().as_str(), Some("seed"));
+    }
+
+    #[test]
+    fn readers_accept_schema_two_and_three_eras() {
+        // A real schema-2 line (no blocking key, as written before the
+        // bump) must coexist with schema-3 lines in one trend file.
+        let old = r#"{"schema":2,"commit":"old","ts":1,"serve":{"p50_us":900.0},
+                      "compile":{"cold_ms":null},"energy":{"mm_f32_tops_per_watt":0.07}}"#
+            .replace('\n', " ");
+        let new = trend_line("new", 2, None, None, None, Some(&blocking_snapshot()));
+        let text = format!("{old}\n{new}\n");
+        let lines = parse_trend(&text).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("schema").unwrap().as_u64(), Some(2));
+        assert!(lines[0].get("blocking").is_none(), "old era has no blocking");
+        assert_eq!(lines[1].get("schema").unwrap().as_u64(), Some(3));
+        assert_eq!(
+            lines[1].get("blocking").unwrap().get("speedup").unwrap().as_f64(),
+            Some(2.8)
+        );
     }
 
     #[test]
@@ -192,7 +241,7 @@ mod tests {
         let path = dir.join("BENCH_trend.jsonl");
         let _ = std::fs::remove_file(&path);
         for i in 0..3u64 {
-            let line = trend_line(&format!("c{i}"), i, Some(&serve_snapshot()), None, None);
+            let line = trend_line(&format!("c{i}"), i, Some(&serve_snapshot()), None, None, None);
             append_trend(&path, &line).unwrap();
         }
         let text = std::fs::read_to_string(&path).unwrap();

@@ -118,7 +118,7 @@ impl Tensor {
 }
 
 /// Check an input list against an artifact signature (both backends).
-fn validate_inputs(name: &str, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+fn validate_inputs(name: &str, spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!(
             "{name}: expected {} inputs, got {}",
@@ -145,10 +145,19 @@ impl Runtime {
     /// stub kernel; validates the signature against the manifest on both
     /// sides.
     pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_ref(name, &refs)
+    }
+
+    /// Borrowed-input variant of [`Runtime::run`]: the blocked replay
+    /// driver slices tiles out of long-lived packed panels, and cloning
+    /// every operand per round would double the host traffic the blocking
+    /// plan exists to avoid.
+    pub fn run_ref(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let spec = self.spec(name)?.clone();
         validate_inputs(name, &spec, inputs)?;
         let exe = self.executable(name)?;
-        let outputs = exe.execute(inputs)?;
+        let outputs = exe.execute_ref(inputs)?;
         if outputs.len() != spec.outputs.len() {
             bail!(
                 "{name}: expected {} outputs, got {}",
@@ -165,11 +174,19 @@ impl Runtime {
     /// Execute an artifact with typed host tensors on the PJRT client;
     /// validates the signature against the manifest on both sides.
     pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_ref(name, &refs)
+    }
+
+    /// Borrowed-input variant of [`Runtime::run`] (see the stub-backend
+    /// doc comment; the PJRT marshalling copies into literals either way,
+    /// but the shared signature keeps the replay driver backend-agnostic).
+    pub fn run_ref(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let spec = self.spec(name)?.clone();
         validate_inputs(name, &spec, inputs)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()
-            .map(Tensor::to_literal)
+            .map(|t| Tensor::to_literal(t))
             .collect::<Result<_>>()?;
         let exe = self.executable(name)?;
         let result = exe

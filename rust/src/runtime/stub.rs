@@ -108,6 +108,14 @@ impl StubExecutable {
     /// Execute on host tensors. Inputs are assumed already validated
     /// against the artifact signature (the runtime's `run` does that).
     pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.execute_ref(&refs)
+    }
+
+    /// Borrowed-input variant of [`StubExecutable::execute`]: the blocked
+    /// replay driver passes tile views borrowed from packed panels, and an
+    /// owned-slice signature would force a clone per round.
+    pub fn execute_ref(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let name = &self.spec.name;
         match self.kind {
             Kind::MmF32 => {

@@ -49,8 +49,13 @@
 //! `{"id":…,"ok":false,"error":"…"}`; admission-control rejections as
 //! `{"id":…,"ok":false,"overloaded":true,"reason":"quota"|"queue",
 //! "retry_after_ms":…}` ([`overloaded_line`]) so clients can back off
-//! instead of treating shed load as failure. The connection stays usable
-//! after either.
+//! instead of treating shed load as failure. `mm` shapes the host-level
+//! blocking planner cannot place come back as `{"id":…,"ok":false,
+//! "unplannable":true,"n":…,"m":…,"k":…,"reason":"…"}`
+//! ([`unplannable_line`]) — a typed, permanent property of the request,
+//! never a 500. `mm` successes additionally carry a `"blocking"` object
+//! with the chosen panel plan and predicted DRAM traffic. The connection
+//! stays usable after any of these.
 //!
 //! ## Stats command
 //!
@@ -62,6 +67,7 @@
 //! `stats` block and `metrics.serve.counters` read the *same* registry
 //! cells, so the two views reconcile by construction.
 
+use crate::coordinator::blocking::{BlockingPlan, Unplannable};
 use crate::mapping::dse::Objective;
 use crate::recurrence::dtype::DType;
 use crate::recurrence::library;
@@ -281,16 +287,22 @@ pub fn request_recurrence(req: &CompileRequest) -> Result<UniformRecurrence> {
     })
 }
 
-/// Render a success response line (no trailing newline).
+/// Render a success response line (no trailing newline). `blocking`
+/// carries the host-level panel plan for benches the coordinator blocks
+/// at replay time (`mm`): when present it is embedded verbatim as the
+/// `"blocking"` object ([`BlockingPlan::to_json`]) so clients see the
+/// chosen loop order, panel geometry, and predicted DRAM traffic
+/// alongside the compile result.
 pub fn response_line(
     id: &Json,
     key: u64,
     outcome: CacheOutcome,
     design: &CompiledDesign,
     wall_s: f64,
+    blocking: Option<&BlockingPlan>,
 ) -> String {
     let est = &design.estimate_exact;
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", id.clone()),
         ("ok", Json::Bool(true)),
         ("cached", Json::Bool(outcome == CacheOutcome::Hit)),
@@ -323,8 +335,11 @@ pub fn response_line(
             ]),
         ),
         ("wall_us", Json::Num(wall_s * 1e6)),
-    ])
-    .to_string()
+    ];
+    if let Some(plan) = blocking {
+        fields.push(("blocking", plan.to_json()));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// If `line` is a `{"cmd": "stats"}` command, return its echoed id.
@@ -392,6 +407,26 @@ pub fn overloaded_line(id: &Json, o: &Overloaded) -> String {
         ("reason", Json::Str(o.reason.clone())),
         ("retry_after_ms", Json::num_u64(o.retry_after_ms)),
         ("error", Json::Str(o.to_string())),
+    ])
+    .to_string()
+}
+
+/// Render a planner rejection line (no trailing newline). Distinguished
+/// from compile errors by `"unplannable": true` plus the echoed problem
+/// geometry: the request parsed fine and the server is healthy, but no
+/// host-blocking plan exists for the shape (e.g. a single staged matrix
+/// would blow the staging cap). Clients should treat this as a permanent
+/// property of the request, not a retryable fault.
+pub fn unplannable_line(id: &Json, u: &Unplannable) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("unplannable", Json::Bool(true)),
+        ("n", Json::num_u64(u.n)),
+        ("m", Json::num_u64(u.m)),
+        ("k", Json::num_u64(u.k)),
+        ("reason", Json::Str(u.reason.clone())),
+        ("error", Json::Str(u.to_string())),
     ])
     .to_string()
 }
@@ -542,6 +577,69 @@ mod tests {
         assert_eq!(v.get("overloaded").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("reason").unwrap().as_str(), Some("quota"));
         assert_eq!(v.get("retry_after_ms").unwrap().as_u64(), Some(250));
+    }
+
+    #[test]
+    fn unplannable_line_round_trips() {
+        let line = unplannable_line(
+            &Json::Num(11.0),
+            &Unplannable {
+                n: 1_000_000_000,
+                m: 1_000_000_000,
+                k: 1_000_000_000,
+                reason: "a staged matrix would exceed the staging cap".into(),
+            },
+        );
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(11.0));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("unplannable").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(1_000_000_000));
+        assert_eq!(v.get("m").unwrap().as_u64(), Some(1_000_000_000));
+        assert_eq!(v.get("k").unwrap().as_u64(), Some(1_000_000_000));
+        assert!(v.get("reason").unwrap().as_str().unwrap().contains("staging cap"));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("no host-blocking plan"));
+        assert!(v.get("overloaded").is_none(), "distinct from shed load");
+    }
+
+    #[test]
+    fn response_line_embeds_blocking_plan() {
+        use crate::arch::vck5000::BoardConfig;
+        use crate::coordinator::blocking::plan_mm;
+        use crate::mapping::cost::CostModel;
+        use crate::mapping::dse::DseConstraints;
+        use crate::{WideSa, WideSaConfig};
+        let ws = WideSa::new(WideSaConfig {
+            constraints: DseConstraints {
+                max_aies: Some(32),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let design = ws.compile(&library::fir(65536, 15, DType::F32)).unwrap();
+        let model = CostModel::new(BoardConfig::vck5000());
+        let plan = plan_mm(&model, 256, 128, 128).unwrap();
+        let line = response_line(
+            &Json::Num(1.0),
+            0xBEEF,
+            CacheOutcome::Miss,
+            &design,
+            0.5,
+            Some(&plan),
+        );
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let b = v.get("blocking").expect("blocking object present");
+        assert_eq!(b.get("tile").unwrap().as_u64(), Some(128));
+        assert_eq!(b.get("order").unwrap().as_str(), Some("b-resident"));
+        assert_eq!(
+            b.get("predicted_dram_bytes").unwrap().as_u64(),
+            Some(plan.predicted_dram_bytes)
+        );
+        // Without a plan the field is absent, not null — old clients
+        // never see an unknown key.
+        let line = response_line(&Json::Num(1.0), 0xBEEF, CacheOutcome::Miss, &design, 0.5, None);
+        assert!(parse(&line).unwrap().get("blocking").is_none());
     }
 
     #[test]

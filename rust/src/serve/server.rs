@@ -874,6 +874,26 @@ impl ServeHandle {
         };
         drop(parse_span);
         let cfg = self.effective_config(&req);
+        // mm requests carry a host-level blocking plan in the response;
+        // shapes the planner cannot place are rejected *before* any
+        // compile work with the typed `unplannable` protocol line.
+        let blocking_plan = if req.bench == "mm" {
+            let d: &[u64] = if req.dims.is_empty() {
+                &[8192, 8192, 8192]
+            } else {
+                &req.dims
+            };
+            let model = CostModel::new(cfg.board.clone());
+            match crate::coordinator::blocking::plan_mm(&model, d[0], d[1], d[2]) {
+                Ok(plan) => Some(plan),
+                Err(u) => {
+                    self.inner.metrics.errors.inc();
+                    return protocol::unplannable_line(&req.id, &u);
+                }
+            }
+        } else {
+            None
+        };
         let tenant = req.tenant.clone().unwrap_or_default();
         let t0 = Instant::now();
         let compiled = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -886,6 +906,7 @@ impl ServeHandle {
                 res.outcome,
                 &res.design,
                 t0.elapsed().as_secs_f64(),
+                blocking_plan.as_ref(),
             ),
             Ok(Err(e)) => match e.downcast_ref::<Overloaded>() {
                 Some(o) => protocol::overloaded_line(&req.id, o),

@@ -1,0 +1,116 @@
+//! Blocked-replay equivalence corpus: the oracle law
+//! [`testkit::laws::blocked_matches_serial_mm`] (blocked + double-
+//! buffered replay ≡ serial naive replay, bit-for-bit) driven over
+//! targeted shapes — ragged, prime, smaller-than-one-tile — and
+//! testkit-random (n, m, k), in the divergence-corpus style. Also pins
+//! the planner's protocol behaviour: typed [`Unplannable`] errors for
+//! shapes the blocking hierarchy cannot place.
+
+mod testkit;
+
+use testkit::{cases, laws};
+use widesa::arch::vck5000::BoardConfig;
+use widesa::coordinator::blocking::{plan_mm, Unplannable};
+use widesa::coordinator::exec::{run_mm, NullArray};
+use widesa::mapping::cost::CostModel;
+use widesa::util::rng::XorShift64;
+
+#[cfg(not(feature = "pjrt"))]
+use widesa::runtime::client::Runtime;
+
+fn random_mm(rng: &mut XorShift64, n: usize, m: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut a = vec![0f32; n * k];
+    let mut b = vec![0f32; k * m];
+    rng.fill_f32(&mut a);
+    rng.fill_f32(&mut b);
+    (a, b)
+}
+
+/// Targeted corpus: one-element, prime, sub-tile, tile-exact,
+/// mixed-granularity, and ragged shapes all replay bit-identically to
+/// the serial oracle on the stub runtime.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn blocked_law_targeted_shapes() {
+    let mut rt = Runtime::with_builtin();
+    let mut rng = XorShift64::new(0xB10C);
+    for (n, m, k) in [
+        (1usize, 1usize, 1usize),
+        (10, 10, 10),
+        (127, 131, 7),
+        (128, 128, 128),
+        (256, 128, 64),
+        (300, 260, 200),
+    ] {
+        let (a, b) = random_mm(&mut rng, n, m, k);
+        laws::blocked_matches_serial_mm(&mut rt, &a, &b, n, m, k);
+    }
+}
+
+/// Random corpus: testkit-PRNG shapes in [1, 280]³ (ragged with
+/// probability ≈ 1), swept `PROPTEST_CASES` deep on the nightly lane.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn blocked_law_random_shapes() {
+    let mut rt = Runtime::with_builtin();
+    let mut rng = XorShift64::new(0x60B10C);
+    for _ in 0..cases(6) {
+        let n = 1 + rng.gen_range(280) as usize;
+        let m = 1 + rng.gen_range(280) as usize;
+        let k = 1 + rng.gen_range(280) as usize;
+        let (a, b) = random_mm(&mut rng, n, m, k);
+        laws::blocked_matches_serial_mm(&mut rt, &a, &b, n, m, k);
+    }
+}
+
+/// The law also holds on the NullArray host-path backend (what
+/// `benches/bench_blocking.rs` times): both drivers degrade to the same
+/// all-zero output and the blocked stats still match the plan.
+#[test]
+fn blocked_law_on_null_array() {
+    let mut rng = XorShift64::new(0x11A);
+    for (n, m, k) in [(64usize, 200usize, 130usize), (257, 129, 255)] {
+        let (a, b) = random_mm(&mut rng, n, m, k);
+        laws::blocked_matches_serial_mm(&mut NullArray, &a, &b, n, m, k);
+    }
+}
+
+/// Shapes the planner cannot place come back as typed [`Unplannable`]
+/// errors — through the planner directly and through the replay driver's
+/// `anyhow` chain (what serve downcasts for its protocol response).
+#[test]
+fn unplannable_is_typed_end_to_end() {
+    let model = CostModel::new(BoardConfig::vck5000());
+    let huge = 1_000_000_000u64;
+    let err = plan_mm(&model, huge, huge, huge).unwrap_err();
+    assert_eq!((err.n, err.m, err.k), (huge, huge, huge));
+    assert!(err.to_string().contains("staging cap"), "{err}");
+
+    let err = run_mm(&mut NullArray, &[], &[], 0, 4, 0).unwrap_err();
+    let typed = err
+        .downcast_ref::<Unplannable>()
+        .expect("replay surfaces Unplannable through anyhow");
+    assert_eq!(typed.n, 0);
+}
+
+/// The planner is deterministic and self-consistent over a PRNG sweep:
+/// same shape → bit-identical plan; every plan's predicted bytes come
+/// from the shared cost model for its own geometry.
+#[test]
+fn planner_deterministic_over_random_shapes() {
+    let model = CostModel::new(BoardConfig::vck5000());
+    let mut rng = XorShift64::new(0xDE7);
+    for _ in 0..cases(24) {
+        let n = 1 + rng.gen_range(4096);
+        let m = 1 + rng.gen_range(4096);
+        let k = 1 + rng.gen_range(4096);
+        let p1 = plan_mm(&model, n, m, k).unwrap();
+        let p2 = plan_mm(&model, n, m, k).unwrap();
+        assert_eq!(p1, p2, "plan for {n}x{m}x{k} not deterministic");
+        assert_eq!(p1.predicted_dram_bytes, {
+            let b_res = p1.order == widesa::coordinator::blocking::PanelOrder::BResident;
+            model.blocked_mm_dram_bytes(p1.n_pad, p1.m_pad, p1.k_pad, 4, p1.kc, p1.span, b_res)
+        });
+        assert_eq!(p1.rounds, (p1.n_pad / p1.tile) * (p1.m_pad / p1.tile) * (p1.k_pad / p1.tile));
+    }
+}

@@ -65,8 +65,22 @@ fn restart_simulation_warm_starts_from_snapshot() {
         assert_eq!(new.key, old.key);
         // Bit-identity end to end: the warm-started design renders the
         // exact same protocol response bytes as the original.
-        let a = protocol::response_line(&Json::Null, old.key, CacheOutcome::Hit, &old.design, 0.0);
-        let b = protocol::response_line(&Json::Null, new.key, CacheOutcome::Hit, &new.design, 0.0);
+        let a = protocol::response_line(
+            &Json::Null,
+            old.key,
+            CacheOutcome::Hit,
+            &old.design,
+            0.0,
+            None,
+        );
+        let b = protocol::response_line(
+            &Json::Null,
+            new.key,
+            CacheOutcome::Hit,
+            &new.design,
+            0.0,
+            None,
+        );
         assert_eq!(a, b, "{}", rec.name);
     }
     let stats = second.stats();

@@ -1,8 +1,9 @@
 //! Integration tests for the `widesa::serve` subsystem: cache behaviour,
 //! single-flight deduplication under concurrent requests, determinism of
 //! the parallel DSE against the serial reference, admission control
-//! (typed `Overloaded` over both front-ends), plan-cache sharing, and
-//! protocol round-trips through the real service.
+//! (typed `Overloaded` over both front-ends), host-blocking planner
+//! rejections (typed `unplannable` over both front-ends, never a 500),
+//! plan-cache sharing, and protocol round-trips through the real service.
 
 use std::sync::Arc;
 use widesa::mapping::dse::{explore_all, explore_all_parallel, DseConstraints};
@@ -171,6 +172,16 @@ fn protocol_round_trip_through_service() {
     assert!(v.get("tops_per_watt").unwrap().as_f64().unwrap() > 0.0);
     assert!(v.get("aies").unwrap().as_u64().unwrap() <= 64);
     assert_eq!(v.get("key").unwrap().as_str().unwrap().len(), 16);
+    // mm successes carry the host-level blocking plan
+    let b = v.get("blocking").expect("mm response embeds blocking plan");
+    assert_eq!(b.get("n").unwrap().as_u64(), Some(1024));
+    assert_eq!(b.get("m").unwrap().as_u64(), Some(1024));
+    assert_eq!(b.get("k").unwrap().as_u64(), Some(1024));
+    assert!(b.get("predicted_dram_bytes").unwrap().as_u64().unwrap() > 0);
+    assert!(matches!(
+        b.get("order").unwrap().as_str(),
+        Some("b-resident") | Some("a-resident")
+    ));
 
     // the same request again is served from cache
     let resp2 = handle.handle_line(line);
@@ -331,6 +342,70 @@ fn overloaded_response_round_trips_tcp() {
     assert_eq!(other.get("ok").unwrap().as_bool(), Some(true));
     assert_eq!(other.get("cached").unwrap().as_bool(), Some(true));
     assert_eq!(handle.stats().shed, 1);
+}
+
+#[test]
+fn unplannable_shape_typed_over_stdin_path() {
+    // A shape the host-blocking planner cannot place (one staged matrix
+    // would exceed the staging cap) must come back as the structured
+    // `unplannable` line — not a stringified 500, not a panic — and the
+    // handle must stay usable for the next request.
+    let handle = small_handle();
+    let resp = handle.handle_line(
+        r#"{"id": 13, "bench": "mm", "dims": [1000000000, 1000000000, 1000000000]}"#,
+    );
+    let v = parse(&resp).unwrap();
+    assert_eq!(v.get("id").unwrap().as_f64(), Some(13.0));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("unplannable").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("n").unwrap().as_u64(), Some(1_000_000_000));
+    assert_eq!(v.get("m").unwrap().as_u64(), Some(1_000_000_000));
+    assert_eq!(v.get("k").unwrap().as_u64(), Some(1_000_000_000));
+    assert!(v.get("reason").unwrap().as_str().unwrap().contains("staging cap"));
+    assert!(v.get("overloaded").is_none(), "not an admission shed");
+    assert_eq!(handle.stats().errors, 1, "counted as a request error");
+    assert_eq!(handle.stats().misses, 0, "rejected before any compile");
+
+    // a plannable request on the same handle still succeeds
+    let ok = handle.handle_line(
+        r#"{"id": 14, "bench": "mm", "dims": [1024, 1024, 1024], "max_aies": 64}"#,
+    );
+    let v = parse(&ok).unwrap();
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    assert!(v.get("blocking").is_some());
+}
+
+#[test]
+fn unplannable_shape_typed_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let handle = small_handle();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            let _ = widesa::serve::serve_tcp(&handle, listener);
+        });
+    }
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut send = |req: &str| -> Json {
+        writeln!(stream, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        parse(line.trim()).unwrap()
+    };
+    let v = send(
+        r#"{"id": "big", "bench": "mm", "dims": [1000000000, 1000000000, 1000000000]}"#,
+    );
+    assert_eq!(v.get("id").unwrap().as_str(), Some("big"));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("unplannable").unwrap().as_bool(), Some(true));
+    assert!(v.get("reason").unwrap().as_str().unwrap().contains("staging cap"));
+    // the connection survives the rejection
+    let ok = send(r#"{"id": "ok", "bench": "fir", "dims": [65536, 15], "max_aies": 32}"#);
+    assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true));
 }
 
 #[test]

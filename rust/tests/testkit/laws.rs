@@ -13,11 +13,15 @@
 //!   legacy HashMap implementation exactly (behind `legacy-hash-pnr`);
 //! * [`pareto_frontier`] — the Pareto ranking's frontier prefix is
 //!   non-dominated, membership is insertion-order independent, and the
-//!   serial and scoped-thread drivers agree bit-for-bit.
+//!   serial and scoped-thread drivers agree bit-for-bit;
+//! * [`blocked_matches_serial_mm`] — the planned, double-buffered MM
+//!   replay is bit-identical to the serial naive replay on any (n, m, k),
+//!   including ragged, prime, and smaller-than-one-tile shapes, and its
+//!   measured host traffic equals the plan's prediction.
 //!
-//! `tests/divergence_corpus.rs` and `tests/pnr_equivalence.rs` drive
-//! these over the Table II corpus; the laws themselves stay
-//! corpus-agnostic.
+//! `tests/divergence_corpus.rs`, `tests/pnr_equivalence.rs`, and
+//! `tests/integration_blocking.rs` drive these over the Table II corpus
+//! and testkit-random shapes; the laws themselves stay corpus-agnostic.
 
 use widesa::arch::vck5000::BoardConfig;
 use widesa::graph::builder::build;
@@ -141,6 +145,43 @@ pub fn dense_legacy_anneal(
         "{what} seed {seed}: final placements diverged"
     );
     dense
+}
+
+/// Law: the blocked + double-buffered MM replay walks its plan to the
+/// exact bits of the serial naive replay — the prefetch thread only ever
+/// packs (pure `memcpy`), every per-C-tile k-chain ascends strictly, and
+/// segment partials round-trip verbatim, so no float operation reorders.
+/// Also pins the plan's self-consistency: the driver makes exactly
+/// `plan.rounds` kernel calls and moves exactly the predicted bytes
+/// (both sides count with the same convention).
+pub fn blocked_matches_serial_mm<B: widesa::coordinator::exec::ArrayBackend>(
+    rt: &mut B,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    k: usize,
+) {
+    use widesa::coordinator::exec::{run_mm, run_mm_naive};
+    let (blocked, stats) = run_mm(rt, a, b, n, m, k).expect("blocked replay");
+    let (serial, _) = run_mm_naive(rt, a, b, n, m, k).expect("serial replay");
+    assert_eq!(blocked.len(), serial.len(), "{n}x{m}x{k}: output lengths");
+    for (i, (x, y)) in blocked.iter().zip(&serial).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{n}x{m}x{k}: element {i} diverged ({x} vs {y})"
+        );
+    }
+    let plan = stats.plan.expect("blocked replay records its plan");
+    assert_eq!(
+        stats.rounds, plan.rounds,
+        "{n}x{m}x{k}: round count diverged from the plan"
+    );
+    assert_eq!(
+        stats.dram_bytes, plan.predicted_dram_bytes,
+        "{n}x{m}x{k}: measured host traffic diverged from the plan"
+    );
 }
 
 /// Frontier prefix of a Pareto ranking as a sorted membership list.
