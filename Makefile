@@ -11,7 +11,7 @@ ARTIFACTS := artifacts
 SERVE_SMOKE_OUT := target/serve-smoke.out
 OBS_SMOKE_DIR := target/obs-smoke
 
-.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke energy-smoke blocking-smoke clean
+.PHONY: build test bench doc artifacts serve-smoke serve-load-smoke obs-smoke mutation-smoke rank-smoke pnr-smoke workloads-smoke ca-smoke energy-smoke blocking-smoke clean
 
 build:
 	cargo build --release
@@ -73,20 +73,23 @@ obs-smoke: build
 # controls first (each guard passes unmutated), then each WIDESA_MUTATE
 # seam must make its guard FAIL — a suite that still passes under a
 # halved cost-model peak, a disabled admission quota, an off-by-one
-# histogram bucketing, a +7 W static-power drift, or a blocking pricer
-# that forgets streamed-panel reloads is not testing what it claims to.
+# histogram bucketing, a +7 W static-power drift, a blocking pricer
+# that forgets streamed-panel reloads, or a CA pricer that forgets
+# partial-sum reduction traffic is not testing what it claims to.
 mutation-smoke:
 	cargo test -q --lib mm_f32_lands_near_paper
 	cargo test -q --lib quota_admission_is_per_tenant
 	cargo test -q --lib histogram_bucketing_is_exact
 	cargo test -q --lib widesa_power_near_55w
 	cargo test -q --lib blocking_planner_prices_true_reuse
+	cargo test -q --lib ca_pricer_charges_partial_sum_reduction
 	! WIDESA_MUTATE=cost-peak cargo test -q --lib mm_f32_lands_near_paper
 	! WIDESA_MUTATE=quota-grant cargo test -q --lib quota_admission_is_per_tenant
 	! WIDESA_MUTATE=obs-bucket cargo test -q --lib histogram_bucketing_is_exact
 	! WIDESA_MUTATE=power-static cargo test -q --lib widesa_power_near_55w
 	! WIDESA_MUTATE=blocking-reuse cargo test -q --lib blocking_planner_prices_true_reuse
-	@echo "mutation-smoke OK (all five seams detected)"
+	! WIDESA_MUTATE=ca-reduce cargo test -q --lib ca_pricer_charges_partial_sum_reduction
+	@echo "mutation-smoke OK (all six seams detected)"
 
 # Gate the exact-port ranking: scoring a candidate with exact merged
 # port counts must cost ≤ 2× the legacy analytic score (bench_rank exits
@@ -111,6 +114,21 @@ pnr-smoke:
 workloads-smoke: build
 	cargo test -q --test integration_workloads
 	./target/release/widesa workloads
+
+# Gate the communication-avoiding mapping arm: the form-selection law
+# (CA crowned iff the standard form is PLIO-bound, predictor re-verified
+# against the real merge) over the library's CA pairs and testkit-random
+# replication-axis shapes, the CA candidate port/ranking properties, the
+# Gauss–Seidel skew-fallback case, and the CA/seidel replay drivers —
+# then print the standard-vs-CA selection table across channel budgets,
+# refreshing BENCH_ca.json at the repo root (docs/CA_VARIANTS.md).
+ca-smoke: build
+	cargo test -q --test divergence_corpus ca_selected_iff_port_bound_across_the_corpus
+	cargo test -q --test proptest_invariants prop_ca_candidates_obey_port_and_ranking_laws
+	cargo test -q --test integration_workloads seidel_is_only_mappable_via_the_skew_fallback
+	cargo test -q --lib ca_
+	cargo test -q --lib seidel
+	./target/release/widesa ca
 
 # Gate the energy pathway: the shared power model must keep the Table IV
 # calibration (fp32 MM normalised TOPS/W within tolerance), every energy

@@ -91,6 +91,39 @@ def trsv_tile(l, b):
     return (jax.lax.fori_loop(0, n, body, jnp.zeros_like(b)),)
 
 
+def ca_mm_reduce_tile(parts):
+    """One CA-MM reduction graph tile: replica partial-C tiles summed in
+    ascending slab order (the replication-axis merge of the 2.5D
+    communication-avoiding schedule; see docs/CA_VARIANTS.md).
+
+    parts: [rep, N, M]. The fold order matters — the rust stub and the
+    ``verify::ca_mm_ref`` oracle reduce in the same slab order, so the
+    replay path is bit-identical across backends.
+    """
+    out = parts[0]
+    for r in range(1, parts.shape[0]):
+        out = out + parts[r]
+    return (out,)
+
+
+def seidel2d_tile(a, coef, *, stages=2):
+    """``stages`` Gauss–Seidel-style sweeps with zero boundary: rows are
+    updated bottom-up in place, so the south neighbour is this sweep's
+    fresh value while the remaining reads come from the previous sweep;
+    coef = [centre, south_new, south_old, west, east]."""
+    n = a.shape[0]
+    for _ in range(stages):
+        prev = a
+        for i in range(n - 1, -1, -1):
+            row = coef[0] * prev[i]
+            if i + 1 < n:
+                row = row + coef[1] * a[i + 1] + coef[2] * prev[i + 1]
+            row = row + coef[3] * jnp.pad(prev[i, :-1], (1, 0))
+            row = row + coef[4] * jnp.pad(prev[i, 1:], (0, 1))
+            a = a.at[i].set(row)
+    return (a,)
+
+
 def stencil2d_tile(a, coef, *, stages=2):
     """``stages`` 5-point Jacobi sweeps over a grid tile with zero
     boundary; coef = [centre, north, south, west, east]."""
@@ -169,6 +202,18 @@ def _stencil_args(stages, n, m, dtype):
     )
 
 
+def _ca_reduce_args(rep, n, m, dtype):
+    return (jax.ShapeDtypeStruct((rep, n, m), dtype),)
+
+
+def _seidel_args(stages, n, m, dtype):
+    del stages  # baked into the variant's sweep count, not its shapes
+    return (
+        jax.ShapeDtypeStruct((n, m), dtype),
+        jax.ShapeDtypeStruct((5,), dtype),
+    )
+
+
 VARIANTS = {
     # MM graph tiles: 256³ macro-tile of 32³ core tiles (f32 functional
     # path) and an i32 variant for the integer benchmark rows. A smaller
@@ -190,6 +235,10 @@ VARIANTS = {
     "trsv_f32_256": (trsv_tile, lambda: _trsv_args(256, jnp.float32)),
     # Stencil-chain graph tile: 2 Jacobi sweeps over a 128×128 grid.
     "stencil2d_f32_2x128": (functools.partial(stencil2d_tile, stages=2), lambda: _stencil_args(2, 128, 128, jnp.float32)),
+    # CA-MM reduction graph tile: 4 replica partials of a 128×128 C tile.
+    "ca_mm_f32_4x128": (ca_mm_reduce_tile, lambda: _ca_reduce_args(4, 128, 128, jnp.float32)),
+    # Gauss–Seidel sweep-chain graph tile: 2 sweeps over a 64×64 grid.
+    "seidel2d_f32_2x64": (functools.partial(seidel2d_tile, stages=2), lambda: _seidel_args(2, 64, 64, jnp.float32)),
 }
 
 

@@ -41,7 +41,9 @@ pub fn table3_baseline(kind: crate::mapping::candidate::Kind, dtype: DType) -> O
         Kind::Conv2d => dpu::conv_point(dtype),
         Kind::Fft2d => Some(dsplib::fft_point(dtype)),
         Kind::Fir => Some(dsplib::fir_point(dtype)),
-        // the expanded catalog has no published Table III baseline row
-        Kind::DwConv2d | Kind::Trsv | Kind::Stencil => None,
+        // the expanded catalog and the CA mapping arm have no published
+        // Table III baseline row (CA variants compare against the
+        // standard-form winner instead — see eval/ca.rs)
+        Kind::DwConv2d | Kind::Trsv | Kind::Stencil | Kind::CaMm => None,
     }
 }

@@ -513,6 +513,125 @@ pub fn run_mm_planned<B: ArrayBackend>(
     Ok((c, stats))
 }
 
+/// C = A·B via the communication-avoiding schedule: the reduction
+/// dimension splits into `rep` k-slabs, each slab's partial product runs
+/// through the planned MM driver (one slab ≙ one row-replica of the
+/// array), and the partials merge in ascending slab order through the
+/// `ca_mm_f32_4x128` reduction artifact — the same schedule as
+/// [`crate::coordinator::verify::ca_mm_ref`], so the two agree to
+/// accumulation tolerance. Like the fft2d/stencil drivers, this replay
+/// is specialised to the artifact's shape: 4 replicas, 128-edge C tiles.
+pub fn run_ca_mm(
+    rt: &mut Runtime,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    k: usize,
+    rep: usize,
+) -> Result<(Vec<f32>, ExecStats)> {
+    const REP: usize = 4;
+    const TILE: usize = 128;
+    if rep != REP {
+        bail!("CA replay is specialised to the artifact's {REP} replicas");
+    }
+    if k % rep != 0 {
+        bail!("reduction extent k={k} must divide across {rep} replicas");
+    }
+    if n % TILE != 0 || m % TILE != 0 {
+        bail!("CA output must divide by the {TILE}-edge reduction tile");
+    }
+    validate_mm_inputs(a, b, n, m, k)?;
+    let slab = k / rep;
+    let t0 = Instant::now();
+    let mut stats = ExecStats::default();
+    // each replica's partial product: a full planned-MM replay over its
+    // k-slab (A columns / B rows [s·slab, (s+1)·slab))
+    let mut partials = Vec::with_capacity(rep);
+    for s in 0..rep {
+        let mut a_slab = vec![0f32; n * slab];
+        for i in 0..n {
+            a_slab[i * slab..(i + 1) * slab]
+                .copy_from_slice(&a[i * k + s * slab..i * k + (s + 1) * slab]);
+        }
+        let b_slab = &b[s * slab * m..(s + 1) * slab * m];
+        let (p, st) = run_mm(rt, &a_slab, b_slab, n, m, slab)?;
+        stats.rounds += st.rounds;
+        stats.dram_bytes += st.dram_bytes;
+        partials.push(p);
+    }
+    // replication-axis merge, one 128×128 C tile per artifact round
+    let mut c_out = vec![0f32; n * m];
+    for i in (0..n).step_by(TILE) {
+        for j in (0..m).step_by(TILE) {
+            let mut stack = vec![0f32; rep * TILE * TILE];
+            for (s, p) in partials.iter().enumerate() {
+                for r in 0..TILE {
+                    let dst = s * TILE * TILE + r * TILE;
+                    let src = (i + r) * m + j;
+                    stack[dst..dst + TILE].copy_from_slice(&p[src..src + TILE]);
+                }
+            }
+            let out = rt.run(
+                "ca_mm_f32_4x128",
+                &[Tensor::f32(vec![rep, TILE, TILE], stack)],
+            )?;
+            let tile_out = out.into_iter().next().expect("reduce artifact returns C");
+            let data = tile_out.data.as_f32().expect("reduce artifact returns f32");
+            for r in 0..TILE {
+                c_out[(i + r) * m + j..(i + r) * m + j + TILE]
+                    .copy_from_slice(&data[r * TILE..(r + 1) * TILE]);
+            }
+            stats.rounds += 1;
+            stats.dram_bytes += ((REP + 1) * TILE * TILE * 4) as u64;
+        }
+    }
+    stats.elements = (n * m) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((c_out, stats))
+}
+
+/// `stages` Gauss–Seidel sweeps over a 64×64 grid by chaining the
+/// 2-sweep `seidel2d_f32_2x64` artifact (stages must be even); coef =
+/// [centre, south_new, south_old, west, east]. Like the stencil driver,
+/// specialised to the artifact's grid.
+pub fn run_seidel2d(
+    rt: &mut Runtime,
+    a: &[f32],
+    n: usize,
+    m: usize,
+    stages: usize,
+    coef: &[f32],
+) -> Result<(Vec<f32>, ExecStats)> {
+    const N: usize = 64;
+    if n != N || m != N {
+        bail!("seidel2d replay is specialised to {N}×{N} grids");
+    }
+    if stages == 0 || stages % 2 != 0 {
+        bail!("stages must be a positive multiple of the artifact's 2 sweeps");
+    }
+    if coef.len() != 5 {
+        bail!("seidel takes 5 coefficients [centre, s_new, s_old, w, e]");
+    }
+    let t0 = Instant::now();
+    let mut stats = ExecStats::default();
+    let mut cur = a.to_vec();
+    for _ in 0..stages / 2 {
+        let out = rt.run(
+            "seidel2d_f32_2x64",
+            &[
+                Tensor::f32(vec![N, N], cur),
+                Tensor::f32(vec![5], coef.to_vec()),
+            ],
+        )?;
+        cur = out.into_iter().next().unwrap().data.as_f32().unwrap().to_vec();
+        stats.rounds += 1;
+    }
+    stats.elements = (n * m) as u64;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((cur, stats))
+}
+
 /// Y = conv2d_valid(X, K) with a 4×4 kernel; output sizes must divide by
 /// the 128-edge conv artifact.
 pub fn run_conv2d(rt: &mut Runtime, x: &[f32], k: &[f32], h: usize, w: usize) -> Result<(Vec<f32>, ExecStats)> {
@@ -994,6 +1113,49 @@ mod tests {
         // odd sweep counts and foreign grids are rejected
         assert!(run_stencil2d(&mut rt, &a, n, n, 3, &coef).is_err());
         assert!(run_stencil2d(&mut rt, &a, 64, 64, 2, &coef).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn ca_mm_replay_on_stub_backend() {
+        let mut rt = Runtime::with_builtin();
+        let (n, m, k, rep) = (256usize, 128usize, 512usize, 4usize);
+        let mut rng = XorShift64::new(73);
+        let mut a = vec![0f32; n * k];
+        let mut b = vec![0f32; k * m];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut b);
+        let (c, stats) = run_ca_mm(&mut rt, &a, &b, n, m, k, rep).unwrap();
+        // (n/128)·(m/128) reduction rounds on top of the per-slab MM rounds
+        let reduce_rounds = (n / 128 * m / 128) as u64;
+        assert!(stats.rounds > reduce_rounds);
+        let want = verify::ca_mm_ref(&a, &b, &vec![0.0; n * m], n, m, k, rep);
+        assert!(verify::max_abs_diff(&c, &want) < 1e-2);
+        // and the CA schedule agrees with the standard form within
+        // accumulation tolerance (the reassociated k sum)
+        let std = verify::mm_ref(&a, &b, &vec![0.0; n * m], n, m, k);
+        assert!(verify::max_abs_diff(&c, &std) < 1e-1);
+        // replication factor and tiling are validated
+        assert!(run_ca_mm(&mut rt, &a, &b, n, m, k, 2).is_err());
+        assert!(run_ca_mm(&mut rt, &a[..64 * k], &b, 64, m, k, rep).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn seidel_replay_on_stub_backend() {
+        let mut rt = Runtime::with_builtin();
+        let n = 64usize;
+        let mut rng = XorShift64::new(79);
+        let mut a = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        let coef = [0.4f32, 0.2, 0.1, 0.15, 0.15];
+        let (out, stats) = run_seidel2d(&mut rt, &a, n, n, 4, &coef).unwrap();
+        assert_eq!(stats.rounds, 2); // two chained 2-sweep tiles
+        let want = verify::seidel2d_ref(&a, n, n, 4, &coef);
+        assert!(verify::max_abs_diff(&out, &want) < 1e-4);
+        // odd sweep counts and foreign grids are rejected
+        assert!(run_seidel2d(&mut rt, &a, n, n, 3, &coef).is_err());
+        assert!(run_seidel2d(&mut rt, &a[..32 * 32], 32, 32, 2, &coef).is_err());
     }
 
     #[cfg(not(feature = "pjrt"))]

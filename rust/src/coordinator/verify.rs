@@ -193,6 +193,79 @@ pub fn stencil2d_chain_ref(a: &[f32], n: usize, m: usize, stages: usize, coef: &
     cur
 }
 
+/// Communication-avoiding MM reference: split the reduction into `rep`
+/// k-slabs, compute each slab's partial product independently, then
+/// reduce the partials in slab order — the host-side mirror of the
+/// on-chip broadcast-reduction schedule (`rep` row-replicas each walk
+/// one slab; partial C tiles reduce down the replication axis).
+/// Numerically this reassociates the k sum, so it agrees with
+/// [`mm_ref`] to accumulation tolerance, not bit-exactly.
+pub fn ca_mm_ref(
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    n: usize,
+    m: usize,
+    k: usize,
+    rep: usize,
+) -> Vec<f32> {
+    assert!(rep >= 1 && k % rep == 0, "reduction must divide across replicas");
+    let slab = k / rep;
+    let mut out = c.to_vec();
+    for s in 0..rep {
+        let mut partial = vec![0f32; n * m];
+        for i in 0..n {
+            for kk in s * slab..(s + 1) * slab {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..m {
+                    partial[i * m + j] += av * b[kk * m + j];
+                }
+            }
+        }
+        for (o, p) in out.iter_mut().zip(&partial) {
+            *o += p;
+        }
+    }
+    out
+}
+
+/// `stages` Gauss–Seidel-style sweeps over a row-major n×m grid: each
+/// stage updates in place with rows traversed bottom-up, so the south
+/// neighbour is the *current* stage's freshly updated value while the
+/// remaining neighbours come from the previous stage. Coefficients are
+/// `[centre, south_new, south_old, west, east]`; values beyond the
+/// boundary are zero. This realises the
+/// [`crate::recurrence::library::seidel2d`] dependence set — the
+/// same-sweep `(0, -1, 0)` flow is the `south_new` term.
+pub fn seidel2d_ref(a: &[f32], n: usize, m: usize, stages: usize, coef: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), n * m);
+    assert_eq!(coef.len(), 5);
+    let mut cur = a.to_vec();
+    for _ in 0..stages {
+        let prev = cur.clone();
+        for i in (0..n).rev() {
+            for j in 0..m {
+                let mut s = coef[0] * prev[i * m + j];
+                if i + 1 < n {
+                    s += coef[1] * cur[(i + 1) * m + j]; // fresh, this sweep
+                    s += coef[2] * prev[(i + 1) * m + j];
+                }
+                if j > 0 {
+                    s += coef[3] * prev[i * m + j - 1];
+                }
+                if j + 1 < m {
+                    s += coef[4] * prev[i * m + j + 1];
+                }
+                cur[i * m + j] = s;
+            }
+        }
+    }
+    cur
+}
+
 /// Max |a - b| over two buffers.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter()
@@ -320,6 +393,45 @@ mod tests {
         assert!((avg[m + 2] - 1.0).abs() < 1e-6);
         // boundary cells lose mass to the zero halo
         assert!(avg[0] < 1.0);
+    }
+
+    #[test]
+    fn ca_mm_ref_agrees_with_mm_ref() {
+        let (n, m, k) = (6usize, 5usize, 8usize);
+        let a: Vec<f32> = (0..n * k).map(|i| ((i * 13 + 5) % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * m).map(|i| ((i * 11 + 2) % 9) as f32 - 4.0).collect();
+        let c: Vec<f32> = (0..n * m).map(|i| (i % 3) as f32).collect();
+        let base = mm_ref(&a, &b, &c, n, m, k);
+        for rep in [1, 2, 4, 8] {
+            let ca = ca_mm_ref(&a, &b, &c, n, m, k, rep);
+            assert!(
+                max_abs_diff(&base, &ca) < 1e-3,
+                "rep {rep}: reassociated reduction drifted"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divide across replicas")]
+    fn ca_mm_ref_rejects_indivisible_slabs() {
+        ca_mm_ref(&[0.0; 6], &[0.0; 6], &[0.0; 4], 2, 2, 3, 2);
+    }
+
+    #[test]
+    fn seidel_identity_and_fresh_south() {
+        let (n, m) = (4usize, 5usize);
+        let a: Vec<f32> = (0..n * m).map(|i| i as f32).collect();
+        // centre-only kernel is the identity for any number of sweeps
+        let id = seidel2d_ref(&a, n, m, 3, &[1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(id, a);
+        // a pure fresh-south kernel drains to zero in ONE sweep: the
+        // bottom row reads the zero halo and every row above reads the
+        // already-updated (zero) row below — the Jacobi chain
+        // (stencil2d_chain_ref's old-south term) would take n sweeps
+        let fresh = seidel2d_ref(&a, n, m, 1, &[0.0, 1.0, 0.0, 0.0, 0.0]);
+        assert!(fresh.iter().all(|v| *v == 0.0), "fresh south must chain within a sweep");
+        let old = seidel2d_ref(&a, n, m, 1, &[0.0, 0.0, 1.0, 0.0, 0.0]);
+        assert!(old[0] != 0.0, "old south is the previous sweep's value");
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Standard-vs-CA form selection table (`widesa ca`, `make ca-smoke`):
+//! every [`library::ca_pairs`] recurrence through [`dse::select_form`] at
+//! a sweep of PLIO channel budgets. The communication-avoiding variant
+//! must be crowned exactly when the standard winner's merged port counts
+//! exceed the board budget (the `ca_selected_iff_port_bound` law in
+//! `tests/testkit/laws.rs`), so this table is the human-readable ledger
+//! of where that boundary sits: on the full 78-channel VCK5000 the
+//! standard form wins everywhere; on port-starved boards the broadcast-
+//! reduction designs take over. See docs/CA_VARIANTS.md.
+
+use crate::arch::vck5000::BoardConfig;
+use crate::mapping::dse::{select_form, DseConstraints};
+use crate::recurrence::library;
+use crate::util::table::{fmt3, TextTable};
+
+/// PLIO budgets the table sweeps (per direction): the real board, a
+/// mid-range point, and the port-starved regime the CA arm exists for.
+pub const CHANNEL_BUDGETS: [u32; 3] = [78, 16, 8];
+
+/// One (workload, budget) selection row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub channels: u32,
+    /// `"standard"` or `"ca"` — what [`select_form`] crowned.
+    pub selected: &'static str,
+    /// Did the standard winner's merged ports fit the budget?
+    pub standard_fits: bool,
+    pub std_tops: f64,
+    pub ca_tops: f64,
+    /// CA winner's replication factor (rows of the reduction chain).
+    pub replication: u64,
+    pub std_in_ports: u32,
+    pub std_out_ports: u32,
+}
+
+/// Evaluate every CA pair at every budget and tabulate the selections.
+pub fn run() -> (Vec<Row>, String) {
+    let mut rows = Vec::new();
+    let mut table =
+        TextTable::new("Form selection — standard vs communication-avoiding across PLIO budgets");
+    table.header(&[
+        "workload", "chan", "selected", "std fits", "std TOPS", "CA TOPS", "repl", "std in",
+        "std out",
+    ]);
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    for (std_rec, ca_rec) in library::ca_pairs() {
+        for &chan in &CHANNEL_BUDGETS {
+            let board = BoardConfig::vck5000().with_plio_budget(chan);
+            let sel = select_form(&std_rec, &ca_rec, &board, &cons)
+                .unwrap_or_else(|| panic!("{}: no legal mapping for either form", std_rec.name));
+            let row = Row {
+                name: std_rec.name.clone(),
+                channels: chan,
+                selected: sel.selected.as_str(),
+                standard_fits: sel.standard_fits,
+                std_tops: sel.standard.1.perf.tops,
+                ca_tops: sel.ca.1.perf.tops,
+                replication: sel.ca.0.replication(),
+                std_in_ports: sel.standard.1.perf.plio_in_ports,
+                std_out_ports: sel.standard.1.perf.plio_out_ports,
+            };
+            table.row(vec![
+                row.name.clone(),
+                row.channels.to_string(),
+                row.selected.to_string(),
+                if row.standard_fits { "yes" } else { "no" }.to_string(),
+                fmt3(row.std_tops),
+                fmt3(row.ca_tops),
+                row.replication.to_string(),
+                row.std_in_ports.to_string(),
+                row.std_out_ports.to_string(),
+            ]);
+            rows.push(row);
+        }
+    }
+    (rows, table.render())
+}
+
+/// Render the rows as the `BENCH_ca.json` document (`widesa ca` writes
+/// this at the repo root; the committed file is the seed schema).
+pub fn bench_json(rows: &[Row]) -> String {
+    let mut cells = Vec::new();
+    for r in rows {
+        cells.push(format!(
+            "{{\"workload\": \"{}\", \"channels\": {}, \"selected\": \"{}\", \
+             \"standard_fits\": {}, \"std_tops\": {:.4}, \"ca_tops\": {:.4}, \
+             \"replication\": {}, \"std_in_ports\": {}, \"std_out_ports\": {}}}",
+            r.name,
+            r.channels,
+            r.selected,
+            r.standard_fits,
+            r.std_tops,
+            r.ca_tops,
+            r.replication,
+            r.std_in_ports,
+            r.std_out_ports
+        ));
+    }
+    format!(
+        "{{\"bench\": \"ca\", \"budgets\": [78, 16, 8], \"rows\": [{}]}}",
+        cells.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_flips_exactly_at_the_port_boundary() {
+        let (rows, rendered) = run();
+        assert_eq!(rows.len(), library::ca_pairs().len() * CHANNEL_BUDGETS.len());
+        for row in &rows {
+            // the table IS the law: CA ⇔ the standard form is port-bound
+            assert_eq!(
+                row.selected == "ca",
+                !row.standard_fits,
+                "{} @ {} channels: selected {} but standard_fits={}",
+                row.name,
+                row.channels,
+                row.selected,
+                row.standard_fits
+            );
+            assert!(row.std_tops > 0.0 && row.ca_tops > 0.0, "{}", row.name);
+            assert!(row.replication >= 2, "{}: CA winner not replicated", row.name);
+        }
+        // the full board keeps the standard form; the 8-channel board
+        // must force every pair onto the CA arm
+        assert!(rows
+            .iter()
+            .filter(|r| r.channels == 78)
+            .all(|r| r.selected == "standard"));
+        assert!(rows
+            .iter()
+            .filter(|r| r.channels == 8)
+            .all(|r| r.selected == "ca"));
+        assert!(rendered.contains("Form selection"));
+    }
+
+    #[test]
+    fn bench_json_is_well_formed() {
+        let (rows, _) = run();
+        let doc = bench_json(&rows);
+        let parsed = crate::util::json::parse(&doc).expect("BENCH_ca.json must parse");
+        let rows_json = parsed.get("rows").and_then(crate::util::json::Json::as_arr);
+        assert_eq!(rows_json.map(<[_]>::len), Some(rows.len()));
+    }
+}

@@ -4,6 +4,7 @@
 //! whose rows mirror what the paper prints.
 
 pub mod ablations;
+pub mod ca;
 pub mod energy;
 pub mod figure6;
 pub mod pnr_ablation;
@@ -19,11 +20,14 @@ pub mod workloads;
 /// repo's own workload-coverage table over the expanded catalog and
 /// [`energy`] its Table IV-style TOPS-vs-W tradeoff across the same
 /// catalog; [`scalability`] sweeps N×N×N MM past the single-artifact
-/// staging ceiling under the host-level blocking planner. Each `run()`
+/// staging ceiling under the host-level blocking planner; [`ca`] sweeps
+/// standard-vs-communication-avoiding form selection across PLIO channel
+/// budgets (docs/CA_VARIANTS.md). Each `run()`
 /// returns the structured rows plus a rendered text table; the `widesa`
 /// CLI prints them (`widesa table3`, `widesa workloads`,
 /// `widesa scalability`, ...).
 pub use ablations::run as run_ablations;
+pub use ca::run as run_ca;
 pub use energy::run as run_energy;
 pub use figure6::run as run_figure6;
 pub use pnr_ablation::run as run_pnr_ablation;

@@ -97,6 +97,12 @@ pub enum PortRates {
     /// output stream per core at the same sustained rate, plus one
     /// zero-rate broadcast input per replica.
     Private { rate: f64 },
+    /// Communication-avoiding replicated-summand MM: one `A` broadcast
+    /// per threading replica, `B` slab feeds at rate `b` (one per
+    /// replication row, propagating east), and the partial-`C` reduction
+    /// chain down the replication axis draining one stream per column at
+    /// rate `c`.
+    BroadcastReduce { b: f64, c: f64 },
 }
 
 /// Derive the per-stream rates for `cand` from the cost model's step time
@@ -118,6 +124,19 @@ pub fn stream_rates(cand: &MappingCandidate, model: &CostModel) -> PortRates {
             let c_rate = (t[0] * t[1] * b) as f64 / (step_s * steps as f64);
             PortRates::Systolic {
                 a: a_rate,
+                b: b_rate,
+                c: c_rate,
+            }
+        }
+        Kind::CaMm => {
+            // B[k-slab, j-tile] streams along each replication row (same
+            // tile-per-step cadence as MM's feeds); the reduced C column
+            // drains once per round like MM's per-core C, but only from
+            // the bottom replication row.
+            let b_rate = (t[2] * t[1] * b) as f64 / step_s;
+            let steps = cand.time_steps_per_round().max(1);
+            let c_rate = (t[0] * t[1] * b) as f64 / (step_s * steps as f64);
+            PortRates::BroadcastReduce {
                 b: b_rate,
                 c: c_rate,
             }
@@ -159,8 +178,13 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
     let rates = stream_rates(cand, model);
 
     // 1D partitions fold serpentine into (r, c) but may not fill the last
-    // row: build exactly `active` cores per replica.
-    let active = cand.partition.active_aies();
+    // row: build exactly `active` cores per replica. CA designs replicate
+    // the partitioned chain across rows — every slot of the (replicate ×
+    // active) block holds a core.
+    let active = match cand.kind {
+        Kind::CaMm => r * c,
+        _ => cand.partition.active_aies(),
+    };
     for rep in 0..f {
         // AIE nodes of this replica (usize::MAX = absent slot).
         let mut ids = vec![vec![usize::MAX; c as usize]; r as usize];
@@ -267,6 +291,90 @@ pub fn build(cand: &MappingCandidate, model: &CostModel) -> MappedGraph {
                             c_rate,
                         ));
                     }
+                }
+            }
+            Kind::CaMm => {
+                let PortRates::BroadcastReduce {
+                    b: b_rate,
+                    c: c_rate,
+                } = rates
+                else {
+                    unreachable!("CA candidates have broadcast-reduce rates");
+                };
+                // The replicated block is always full (active = r × c), so
+                // no absent-slot checks are needed here.
+                //
+                // A k-slabs broadcast to the whole block: every core in
+                // replication row i works the same A[*, k-slab i] panel,
+                // and one port time-multiplexes the R slabs. Broadcast
+                // edges carry the usual negligible sustained rate — the
+                // real A bandwidth is priced by the cost model's traffic
+                // accounting, and zero-rate ports survive packet merging
+                // untouched, which keeps the port predictor exact.
+                let bc = g.add_node(
+                    NodeKind::Plio { dir: PlioDir::In },
+                    format!("A_bcast_r{rep}"),
+                );
+                for i in 0..r as usize {
+                    for j in 0..c as usize {
+                        g.edges.push(Edge::new(
+                            bc,
+                            ids[i][j],
+                            EdgeKind::Broadcast,
+                            "A",
+                            DepKind::Read,
+                            1e3, // negligible sustained rate
+                        ));
+                    }
+                }
+                // B slab rows: edge-fed at column 0, propagating east —
+                // MM's systolic feed, one per replication row.
+                for i in 0..r as usize {
+                    let p = g.add_node(
+                        NodeKind::Plio { dir: PlioDir::In },
+                        format!("B_in_r{rep}_{i}"),
+                    );
+                    g.edges
+                        .push(Edge::new(p, ids[i][0], EdgeKind::Stream, "B", DepKind::Read, b_rate));
+                    for j in 0..c as usize - 1 {
+                        g.edges.push(Edge::new(
+                            ids[i][j],
+                            ids[i][j + 1],
+                            EdgeKind::SharedBuffer,
+                            "B",
+                            DepKind::Read,
+                            b_rate,
+                        ));
+                    }
+                }
+                // Partial-sum reduction down the replication axis: each
+                // column's partials flow south through shared buffers and
+                // only the bottom row drains to PLIO — this is the mover
+                // shape that collapses MM's per-core C drains to one port
+                // per column.
+                for j in 0..c as usize {
+                    for i in 0..r as usize - 1 {
+                        g.edges.push(Edge::new(
+                            ids[i][j],
+                            ids[i + 1][j],
+                            EdgeKind::SharedBuffer,
+                            "C",
+                            DepKind::Flow,
+                            c_rate,
+                        ));
+                    }
+                    let p = g.add_node(
+                        NodeKind::Plio { dir: PlioDir::Out },
+                        format!("C_out_r{rep}_{j}"),
+                    );
+                    g.edges.push(Edge::new(
+                        ids[r as usize - 1][j],
+                        p,
+                        EdgeKind::Stream,
+                        "C",
+                        DepKind::Output,
+                        c_rate,
+                    ));
                 }
             }
             Kind::Conv2d | Kind::Fir | Kind::Fft2d | Kind::DwConv2d | Kind::Trsv
@@ -379,6 +487,45 @@ mod tests {
             .filter(|e| e.kind == EdgeKind::Broadcast)
             .count();
         assert_eq!(bcast, aies);
+    }
+
+    #[test]
+    fn ca_graph_is_broadcast_reduce_shaped() {
+        let g = build_for(library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32), 400);
+        assert!(g.node_ids_are_dense());
+        let f = g.replicas as usize;
+        let (r, c) = (g.replica.0 as usize, g.replica.1 as usize);
+        assert_eq!(r, 4, "replication occupies the rows");
+        assert!(c >= 2, "the chain spans at least two columns");
+        // every slot of the replicated block holds a core
+        assert_eq!(g.num_aies(), f * r * c);
+        // in: one A broadcast + R B-row feeds per threading replica
+        assert_eq!(g.plio_count(PlioDir::In), f * (1 + r));
+        // out: one reduced C drain per column per threading replica —
+        // not per core, that is the whole point of the reduction chain
+        assert_eq!(g.plio_count(PlioDir::Out), f * c);
+        let bcast = g
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::Broadcast)
+            .count();
+        assert_eq!(bcast, f * r * c);
+        // reduction edges: (r - 1) per column; B propagation: (c - 1) per row
+        let reduce = g
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::SharedBuffer && e.array == "C")
+            .count();
+        assert_eq!(reduce, f * (r - 1) * c);
+        let b_prop = g
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::SharedBuffer && e.array == "B")
+            .count();
+        assert_eq!(b_prop, f * r * (c - 1));
+        for e in &g.edges {
+            assert!(e.rate > 0.0);
+        }
     }
 
     #[test]

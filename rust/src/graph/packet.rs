@@ -246,6 +246,23 @@ pub fn predict_ports(
                 out_ports_after: out_after,
             }
         }
+        PortRates::BroadcastReduce { b, c: c_rate } => {
+            // Input side: R B-row feeds per threading replica, all at one
+            // rate (the zero-rate A broadcast per replica is skipped by
+            // the merge's rate>0 filter and survives untouched). Output
+            // side: one reduced C drain per column, all at one rate.
+            let (r, c) = (r as usize, c as usize);
+            let n_in = r * f;
+            let n_out = c * f;
+            let in_after = equal_rate_bins(n_in, b, forced_fanin(n_in, in_budget), cap) + f;
+            let out_after = equal_rate_bins(n_out, c_rate, forced_fanin(n_out, out_budget), cap);
+            MergeStats {
+                in_ports_before: n_in + f,
+                in_ports_after: in_after,
+                out_ports_before: n_out,
+                out_ports_after: out_after,
+            }
+        }
         PortRates::Private { rate } => {
             // One private in + out stream per core at one rate; the
             // zero-rate broadcast port per replica is never merged and
@@ -392,6 +409,8 @@ mod tests {
             (library::conv2d(10240, 10240, 8, 8, DType::I8), 400),
             (library::fir(1048576, 15, DType::F32), 256),
             (library::fft2d(8192, 8192, DType::CF32), 320),
+            (library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32), 400),
+            (library::ca_mm_blockrec(512, 3, DType::F32), 400),
         ] {
             let cons = DseConstraints {
                 max_aies: Some(cap),
@@ -427,6 +446,7 @@ mod tests {
         for rec in [
             library::mm(512, 512, 512, DType::F32),
             library::conv2d(1024, 1024, 4, 4, DType::I16),
+            library::ca_mm_25d(512, 512, 512, 4, DType::F32),
         ] {
             for (cand, _) in crate::mapping::dse::explore_all(&rec, &board, &cons) {
                 let g = build(&cand, &model);

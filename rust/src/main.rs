@@ -41,6 +41,9 @@ COMMANDS (evaluation):
   scalability            large-N MM sweep past the single-artifact staging
                          ceiling: chosen blocking plan, predicted vs measured
                          host DRAM traffic per size; see docs/BLOCKING.md
+  ca                     standard-vs-communication-avoiding form selection
+                         across PLIO channel budgets (78/16/8); writes
+                         BENCH_ca.json at the repo root; see docs/CA_VARIANTS.md
 
 COMMANDS (framework):
   map <bench> <dtype> [--aies N] [--dims NxMxK] [--trace-out PATH]
@@ -88,7 +91,7 @@ COMMANDS (observability):
                                     BENCH_*.json files to BENCH_trend.jsonl;
                                     SHA defaults to $GITHUB_SHA
 
-  <bench>: mm | conv2d | fft2d | fir | dwconv2d | trsv | stencil2d
+  <bench>: mm | conv2d | fft2d | fir | dwconv2d | trsv | stencil2d | ca_mm | seidel2d
   <dtype>: f32 | i8 | i16 | i32 | cf32 | ci16
 
 The functional replay runs on the in-process stub executor by default;
@@ -117,7 +120,11 @@ fn parse_bench(bench: &str, dtype: DType) -> Result<UniformRecurrence> {
         "dwconv2d" => library::dw_conv2d(64, 2048, 2048, 3, 3, dtype),
         "trsv" => library::trsv(8192, dtype),
         "stencil2d" => library::stencil2d_chain(2, 4096, 4096, dtype),
-        _ => bail!("unknown benchmark {bench} (mm|conv2d|fft2d|fir|dwconv2d|trsv|stencil2d)"),
+        "ca_mm" => library::ca_mm_25d(1024, 1024, 1024, 4, dtype),
+        "seidel2d" => library::seidel2d(2, 64, 64, dtype),
+        _ => bail!(
+            "unknown benchmark {bench} (mm|conv2d|fft2d|fir|dwconv2d|trsv|stencil2d|ca_mm|seidel2d)"
+        ),
     })
 }
 
@@ -526,6 +533,17 @@ fn main() -> Result<()> {
         Some("scalability") => {
             let (_, table) = eval::scalability::run();
             println!("{table}");
+        }
+        Some("ca") => {
+            let (rows, table) = eval::ca::run();
+            println!("{table}");
+            let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("workspace root")
+                .join("BENCH_ca.json");
+            std::fs::write(&out, format!("{}\n", eval::ca::bench_json(&rows)))
+                .with_context(|| format!("writing {}", out.display()))?;
+            eprintln!("widesa ca: selection table written to {}", out.display());
         }
         Some("map") => cmd_map(&args[1..])?,
         Some("codegen") => cmd_codegen(&args[1..])?,

@@ -25,13 +25,25 @@ pub enum Kind {
     /// 2D stencil chain: pipelined Jacobi/advection sweeps
     /// ([`crate::recurrence::library::stencil2d_chain`]).
     Stencil,
+    /// Communication-avoiding replicated-summand matrix multiply
+    /// (2.5D / block-recursive forms): `replicate` row-replicas each
+    /// compute a `k`-slab of partials, reduced on chip across the
+    /// replication axis ([`crate::recurrence::library::ca_mm_25d`],
+    /// [`crate::recurrence::library::ca_mm_blockrec`]).
+    CaMm,
 }
 
 impl Kind {
     pub fn of(rec: &UniformRecurrence) -> Self {
         let n = rec.name.as_str();
-        if n.starts_with("mm") {
+        if n.starts_with("ca_mm") {
+            Kind::CaMm
+        } else if n.starts_with("mm") {
             Kind::Mm
+        } else if n.starts_with("seidel2d") {
+            // Gauss–Seidel sweeps share the stencil microkernel: same
+            // 5-term relaxation body, different sweep dependences.
+            Kind::Stencil
         } else if n.starts_with("dwconv2d") {
             Kind::DwConv2d
         } else if n.starts_with("conv2d") {
@@ -63,13 +75,28 @@ pub struct MappingCandidate {
 }
 
 impl MappingCandidate {
-    /// AIE cores the design occupies.
+    /// Replication factor of the summand axis (1 for standard forms).
+    pub fn replication(&self) -> u64 {
+        self.rec.replicate.max(1)
+    }
+
+    /// AIE cores the design occupies. The replication axis multiplies
+    /// in: each of the `replicate` summand replicas instantiates the
+    /// partitioned chain on its own array rows.
     pub fn aies_used(&self) -> u64 {
-        self.partition.active_aies() * self.threading.factor
+        self.partition.active_aies() * self.threading.factor * self.replication()
     }
 
     /// Physical array shape used per replica (rows, cols).
+    ///
+    /// For CA designs the shape is the whole replicated block: the
+    /// replication axis occupies rows, the partitioned 1D chain spans
+    /// columns — the geometry `graph::builder`'s broadcast-reduction
+    /// mover shape realises.
     pub fn replica_shape(&self) -> (u64, u64) {
+        if self.replication() > 1 {
+            return (self.replication(), self.partition.active_aies().max(1));
+        }
         match self.partition.phys.as_slice() {
             [r, c] => (*r, *c),
             [len] => {
@@ -100,7 +127,10 @@ impl MappingCandidate {
             }
             steps = steps.saturating_mul(e);
         }
-        steps
+        // The replication axis splits the reduction across replicas:
+        // each of the R row-replicas walks 1/R of the summand extent
+        // (work conservation: R replicas × steps/R × core MACs = total).
+        steps.div_ceil(self.replication())
     }
 
     /// Is the design *edge-fed* — inputs enter at the array boundary and
@@ -111,7 +141,10 @@ impl MappingCandidate {
     /// lands. Must agree with the graph shape
     /// [`crate::graph::builder::stream_rates`] assigns.
     pub fn edge_fed(&self) -> bool {
-        matches!(self.kind, Kind::Mm)
+        // CA MM keeps MM's edge feeding for B (row-edge inject, eastward
+        // systolic propagation) and adds the column reduction — both are
+        // boundary-fed pipelines, so the fill model applies unchanged.
+        matches!(self.kind, Kind::Mm | Kind::CaMm)
     }
 
     /// Systolic pipeline-fill steps before the first round's value
@@ -184,6 +217,20 @@ mod tests {
         assert_eq!(Kind::of(&library::trsv(256, DType::F32)), Kind::Trsv);
         assert_eq!(
             Kind::of(&library::stencil2d_chain(2, 64, 64, DType::F32)),
+            Kind::Stencil
+        );
+        // the ca_mm prefix must not fall through to the mm arm
+        assert_eq!(
+            Kind::of(&library::ca_mm_25d(64, 64, 64, 4, DType::F32)),
+            Kind::CaMm
+        );
+        assert_eq!(
+            Kind::of(&library::ca_mm_blockrec(64, 2, DType::F32)),
+            Kind::CaMm
+        );
+        // seidel shares the stencil microkernel family
+        assert_eq!(
+            Kind::of(&library::seidel2d(2, 64, 64, DType::F32)),
             Kind::Stencil
         );
     }

@@ -128,6 +128,21 @@ pub(crate) fn blocking_reuse_mutated() -> bool {
     })
 }
 
+/// Mutation seam for `make mutation-smoke`: `WIDESA_MUTATE=ca-reduce`
+/// makes the CA traffic pricer *forget* the partial-sum reduction bytes —
+/// as if reducing `replicate` partial C tiles down the replication axis
+/// were free. Under that lie the communication-avoiding form looks
+/// strictly cheaper than it is; the guard test
+/// (`ca_pricer_charges_partial_sum_reduction`) is asserted to flip. Read
+/// once (the DSE prices every CA candidate through this).
+fn ca_reduce_scale() -> f64 {
+    static SCALE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *SCALE.get_or_init(|| match std::env::var("WIDESA_MUTATE").as_deref() {
+        Ok("ca-reduce") => 0.0,
+        _ => 1.0,
+    })
+}
+
 /// Sustained issue efficiency of the generated AIE microkernel
 /// (kernel-level calibration — see module docs). Values assume latency
 /// hiding has filled the accumulation pipeline; [`CostModel::estimate`]
@@ -140,6 +155,14 @@ pub fn issue_efficiency(kind: Kind, dtype: DType) -> f64 {
         (Kind::Mm, DType::I32) => 0.49,
         (Kind::Mm, DType::CF32) => 0.40,
         (Kind::Mm, DType::CI16) => 0.30,
+        // CA MM replicas run the MM microkernel with an extra partial-sum
+        // accumulate per k-slab boundary — a hair under the dense MM
+        // sustained rates.
+        (Kind::CaMm, DType::F32) => 0.50,
+        (Kind::CaMm, DType::I8) => 0.244,
+        (Kind::CaMm, DType::I16) => 0.243,
+        (Kind::CaMm, DType::I32) => 0.47,
+        (Kind::CaMm, _) => 0.36,
         (Kind::Conv2d, DType::F32) => 0.5625,
         (Kind::Conv2d, DType::I8) => 0.2814,
         (Kind::Conv2d, DType::I16) => 0.3234,
@@ -465,6 +488,38 @@ impl CostModel {
                     out_bytes_total: out_total,
                 }
             }
+            Kind::CaMm => {
+                // Replicated-summand MM: `rr` row-replicas each walk a
+                // k-slab. B is edge-fed per replication row; one
+                // broadcast port carries the rows' A slabs (one copy
+                // serves the whole chain — the communication saving over
+                // the standard form's per-column feeds). Partial C tiles
+                // reduce on chip down the replication axis; the
+                // reduction bytes are charged to the output side — the
+                // bottom-row cores absorb (rr − 1) partial tiles per
+                // column before the merged drain leaves the array.
+                let (rr, cc) = cand.replica_shape();
+                let (n0, m0, k0) = (t[0], t[1], t[2]);
+                let a_tile = n0 * k0 * b;
+                let b_tile = k0 * m0 * b;
+                let c_tile = n0 * m0 * b;
+                let in_total = total_steps * (rr * (a_tile + b_tile)) as f64 * f as f64;
+                let drain = (rounds * cc * c_tile * f) as f64;
+                let reduce =
+                    (rounds * cc * (rr - 1) * c_tile * f) as f64 * ca_reduce_scale();
+                let out_total = drain + reduce;
+                Traffic {
+                    edge_in_streams: rr * f,
+                    edge_in_bytes_per_stream: in_total / (rr * f).max(1) as f64,
+                    private_in_streams: 0,
+                    private_in_bytes_per_stream: 0.0,
+                    broadcast_ports: f,
+                    private_out_streams: cc * f,
+                    private_out_bytes_per_stream: out_total / (cc * f).max(1) as f64,
+                    in_bytes_total: in_total,
+                    out_bytes_total: out_total,
+                }
+            }
             Kind::Conv2d => {
                 // Unique input bytes = output tile bytes (halo via DMA).
                 let (h0, w0, _, _) = (t[0], t[1], t[2], t[3]);
@@ -576,6 +631,15 @@ impl CostModel {
                 };
                 let thread_out = cand.threading.factor.max(1);
                 n * k * b * reload_a + m * k * b * reload_b + (1 + thread_out) * n * m * b
+            }
+            Kind::CaMm => {
+                // Every k-slab of A and B is read once (the on-chip
+                // broadcast gives the chain full A reuse; partial sums
+                // reduce on chip and never round-trip DRAM). C is written
+                // once plus one pass per threading-replica recombination.
+                let (n, m, k) = (dims[0].extent, dims[1].extent, dims[2].extent);
+                let thread_out = cand.threading.factor.max(1);
+                n * k * b + m * k * b + (1 + thread_out) * n * m * b
             }
             Kind::Conv2d => {
                 let (h, w, p, q) = (dims[0].extent, dims[1].extent, dims[2].extent, dims[3].extent);
@@ -930,10 +994,56 @@ mod tests {
             library::dw_conv2d(64, 256, 256, 3, 3, DType::F32),
             library::trsv(8192, DType::F32),
             library::stencil2d_chain(2, 1024, 1024, DType::F32),
+            library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32),
+            library::ca_mm_blockrec(512, 3, DType::F32),
+            library::seidel2d(2, 64, 64, DType::F32),
         ] {
             let est = estimate_best(rec, Some(400));
             assert!(est.perf.plio_in_ports <= 78);
             assert!(est.perf.plio_out_ports <= 78);
+        }
+    }
+
+    #[test]
+    fn ca_pricer_charges_partial_sum_reduction() {
+        // The CA output side must charge the on-chip reduction on top of
+        // the merged drain — forgetting it is exactly the
+        // WIDESA_MUTATE=ca-reduce lie `make mutation-smoke` injects, and
+        // this is the guard asserted to flip under it.
+        let rec = library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32);
+        let board = BoardConfig::vck5000();
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        let (cand, _) = explore(&rec, &board, &cons).unwrap();
+        let model = CostModel::new(board);
+        let rounds = cand.rounds().max(1);
+        let steps = cand.time_steps_per_round().max(1);
+        let tr = model.traffic(&cand, rounds, steps);
+        let (rr, cc) = cand.replica_shape();
+        let f = cand.threading.factor.max(1);
+        let t = &cand.scope.core_factors;
+        let c_tile = t[0] * t[1] * cand.rec.dtype.bytes();
+        let drain = (rounds * cc * c_tile * f) as f64;
+        let reduce = (rounds * cc * (rr - 1) * c_tile * f) as f64;
+        assert!(rr >= 2 && reduce > 0.0);
+        assert!(
+            tr.out_bytes_total >= drain + reduce * 0.999,
+            "CA out bytes {} must include the {} reduction bytes over the {} drain",
+            tr.out_bytes_total,
+            reduce,
+            drain
+        );
+    }
+
+    #[test]
+    fn ca_estimates_are_positive_and_consistent() {
+        for (_, ca) in library::ca_pairs() {
+            let est = estimate_best(ca, Some(400));
+            assert!(est.perf.tops > 0.0);
+            assert!(est.perf.tops_e2e <= est.perf.tops * (1.0 + 1e-9));
+            assert!(est.perf.dram_bytes > 0);
         }
     }
 

@@ -228,8 +228,25 @@ pub fn score_choice(
     choice: SpaceTimeChoice,
 ) -> Option<(MappingCandidate, Estimate)> {
     let board = &model.board;
-    let part = partition(&choice.nest, &choice.space, &board.array, Some(plan.budget));
-    let spare = plan.budget / part.active_aies().max(1);
+    let repl = rec.replicate.max(1);
+    if repl > 1 {
+        // The replication axis occupies array rows: each of the `repl`
+        // summand replicas instantiates the partitioned chain on its own
+        // row band, so CA designs map the remaining space 1D (the chain
+        // spans columns) and the replication factor must fit the rows.
+        if choice.dims() != 1 || repl > board.array.rows as u64 {
+            return None;
+        }
+    }
+    // Per-replica AIE budget: replication multiplies the footprint, and
+    // a CA chain cannot exceed one physical row.
+    let part_budget = if repl > 1 {
+        (plan.budget / repl).min(board.array.cols as u64).max(1)
+    } else {
+        plan.budget
+    };
+    let part = partition(&choice.nest, &choice.space, &board.array, Some(part_budget));
+    let spare = plan.budget / (part.active_aies().max(1) * repl);
     let thr = if cons.no_threading {
         threading::Threading::none()
     } else {
@@ -364,6 +381,83 @@ pub fn frontier_size(results: &Ranked) -> usize {
             })
         })
         .count()
+}
+
+/// Which form [`select_form`] crowned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Form {
+    Standard,
+    Ca,
+}
+
+impl Form {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Form::Standard => "standard",
+            Form::Ca => "ca",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "standard" => Some(Form::Standard),
+            "ca" => Some(Form::Ca),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of a standard-vs-CA form selection (see [`select_form`]).
+#[derive(Debug, Clone)]
+pub struct FormSelection {
+    pub standard: (MappingCandidate, Estimate),
+    pub ca: (MappingCandidate, Estimate),
+    /// Do the standard winner's merged port counts fit the board's
+    /// channel budget in both directions?
+    pub standard_fits: bool,
+    pub selected: Form,
+}
+
+/// Choose between a recurrence's standard form and its
+/// communication-avoiding variant.
+///
+/// The CA form pays on-chip partial-sum reduction to collapse the
+/// standard form's per-core drains, so it is only worth considering when
+/// the standard form is PLIO-bound in the *strict* sense: packet merging
+/// cannot bring its winner's ports under the board's channel budget even
+/// at maximum fan-in — the merged design is unroutable as built (the
+/// cost model prices it charitably by time-sharing channels, but the
+/// ports do not exist). The rule is therefore a feasibility gate, not a
+/// performance race: `Form::Ca` iff the standard winner's predicted
+/// merged ports exceed the budget in either direction. The predicate is
+/// [`crate::graph::packet::predict_ports`], which the testkit law
+/// `ca_selected_iff_port_bound` re-verifies against the real merge on
+/// the built graph.
+pub fn select_form(
+    std_rec: &UniformRecurrence,
+    ca_rec: &UniformRecurrence,
+    board: &BoardConfig,
+    cons: &DseConstraints,
+) -> Option<FormSelection> {
+    let standard = explore(std_rec, board, cons)?;
+    let ca = explore(ca_rec, board, cons)?;
+    let model = scoring_model(board, cons);
+    let stats = crate::graph::packet::predict_ports(
+        &standard.0,
+        &model,
+        model.channel_bw(),
+        board.plio.in_channels as usize,
+        board.plio.out_channels as usize,
+    );
+    let standard_fits = stats.in_ports_after <= board.plio.in_channels as usize
+        && stats.out_ports_after <= board.plio.out_channels as usize;
+    let selected = if standard_fits { Form::Standard } else { Form::Ca };
+    Some(FormSelection {
+        standard,
+        ca,
+        standard_fits,
+        selected,
+    })
 }
 
 /// Explore and return the best candidate with its estimate.
@@ -666,6 +760,50 @@ mod tests {
             },
         );
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn ca_candidates_are_row_replicated_1d_chains() {
+        let rec = library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32);
+        let board = BoardConfig::vck5000();
+        let all = explore_all(&rec, &board, &DseConstraints::default());
+        assert!(!all.is_empty(), "CA variant must map on the full board");
+        for (cand, _) in &all {
+            // every CA candidate is a 1D chain replicated across rows
+            assert_eq!(cand.choice.dims(), 1, "{}", cand.summary());
+            let (r, c) = cand.replica_shape();
+            assert_eq!(r, 4);
+            assert!(c <= board.array.cols as u64);
+            assert_eq!(cand.aies_used(), r * c * cand.threading.factor);
+            assert!(cand.aies_used() <= 400, "{}", cand.summary());
+        }
+        // a replication factor beyond the physical rows is unmappable
+        let too_tall = library::ca_mm_25d(1024, 1024, 1024, 16, DType::F32);
+        assert!(explore_all(&too_tall, &board, &DseConstraints::default()).is_empty());
+    }
+
+    #[test]
+    fn ca_form_selected_only_when_standard_is_port_bound() {
+        // The acceptance pair of the CA arm: on the default 78-channel
+        // board the standard form's merged ports fit and it stays
+        // crowned; on an 8-channel board the standard winner's drains
+        // cannot merge under the budget and the CA form takes over.
+        for (std_rec, ca_rec) in library::ca_pairs() {
+            let cons = DseConstraints::default();
+            let full = select_form(&std_rec, &ca_rec, &BoardConfig::vck5000(), &cons)
+                .expect("both forms map on the full board");
+            assert!(full.standard_fits, "{}", std_rec.name);
+            assert_eq!(full.selected, Form::Standard, "{}", std_rec.name);
+
+            let starved = BoardConfig::vck5000().with_plio_budget(8);
+            let tight = select_form(&std_rec, &ca_rec, &starved, &cons)
+                .expect("both forms map on the starved board");
+            assert!(!tight.standard_fits, "{}", std_rec.name);
+            assert_eq!(tight.selected, Form::Ca, "{}", std_rec.name);
+            // the crowned CA design really is a replicated chain
+            assert!(tight.ca.0.replication() >= 2);
+            assert_eq!(tight.ca.0.choice.dims(), 1);
+        }
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub fn mm(n: u64, m: u64, k: u64, dtype: DType) -> UniformRecurrence {
         dtype,
         macs_per_iter: 1,
         carried: vec![],
+        replicate: 1,
     }
 }
 
@@ -84,6 +85,7 @@ pub fn conv2d(h: u64, w: u64, p: u64, q: u64, dtype: DType) -> UniformRecurrence
         dtype,
         macs_per_iter: 1,
         carried: vec![],
+        replicate: 1,
     }
 }
 
@@ -108,6 +110,7 @@ pub fn fir(n: u64, taps: u64, dtype: DType) -> UniformRecurrence {
         dtype,
         macs_per_iter: 1,
         carried: vec![],
+        replicate: 1,
     }
 }
 
@@ -142,6 +145,7 @@ pub fn fft2d(rows: u64, cols: u64, dtype: DType) -> UniformRecurrence {
         dtype,
         macs_per_iter: 1,
         carried: vec![],
+        replicate: 1,
     }
 }
 
@@ -201,6 +205,7 @@ pub fn dw_conv2d(groups: u64, h: u64, w: u64, p: u64, q: u64, dtype: DType) -> U
         dtype,
         macs_per_iter: 1,
         carried: vec![],
+        replicate: 1,
     }
 }
 
@@ -256,6 +261,7 @@ pub fn trsv(n: u64, dtype: DType) -> UniformRecurrence {
         dtype,
         macs_per_iter: 1,
         carried: vec![],
+        replicate: 1,
     }
 }
 
@@ -315,6 +321,127 @@ pub fn stencil2d_chain(stages: u64, n: u64, m: u64, dtype: DType) -> UniformRecu
         dtype,
         macs_per_iter: 5,
         carried,
+        replicate: 1,
+    }
+}
+
+/// Communication-avoiding 2.5D (replicated-summand) matrix multiply:
+/// the same computation as [`mm`] — `C[i,j] += A[i,k] · B[k,j]` — but
+/// with the reduction loop `k` *split across `rep` on-chip replicas*
+/// (Solomonik–Demmel's "c" dimension, EA4RCA's regular CA recipe).
+/// Each replica computes a partial `C` over its `k/rep` slab; the
+/// partials are reduced across the replication axis by the
+/// broadcast-reduction mover shape in `graph::builder`, so the array
+/// drains `L` reduced streams instead of one stream per core.
+///
+/// The domain is the *full* problem (total MACs are unchanged — the
+/// replicas split it); only [`UniformRecurrence::replicate`] differs
+/// from the standard form, which is exactly why the DSE can price the
+/// two head-to-head: CA buys fewer PLIO output streams with on-chip
+/// partial-sum reduction traffic, and wins precisely when the port
+/// predictor says the standard form is PLIO-bound (see
+/// `docs/CA_VARIANTS.md`).
+///
+/// ```
+/// use widesa::{library, DType};
+///
+/// let rec = library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32);
+/// assert_eq!(rec.replicate, 4);
+/// // same total work as the standard form
+/// assert_eq!(rec.total_macs(), library::mm(1024, 1024, 1024, DType::F32).total_macs());
+/// ```
+pub fn ca_mm_25d(n: u64, m: u64, k: u64, rep: u64, dtype: DType) -> UniformRecurrence {
+    assert!(rep >= 2, "a CA variant needs at least two replicas");
+    assert!(k % rep == 0, "the reduction extent must divide across replicas");
+    let mut rec = mm(n, m, k, dtype);
+    rec.name = format!("ca_mm_25d_{n}x{m}x{k}_r{rep}_{dtype}");
+    rec.replicate = rep;
+    rec
+}
+
+/// Communication-avoiding block-recursive matrix multiply: `levels`
+/// rounds of the classic 2×2×2 block split, with the `k`-halvings
+/// realised as summand replication — one level splits `C = A·B` into
+/// eight half-size products whose `k`-paired partials sum, so `levels`
+/// levels leave `2^levels` replicated summand slabs reduced on chip.
+/// The `i`/`j` halvings are ordinary space tiling the mapper already
+/// performs, which is why the recurrence is [`mm`]'s domain plus a
+/// [`UniformRecurrence::replicate`] factor of `2^levels` — the same
+/// replication axis as [`ca_mm_25d`], reached by a different algorithm
+/// recursion (see `docs/CA_VARIANTS.md` for the equations).
+///
+/// ```
+/// use widesa::{library, DType};
+///
+/// let rec = library::ca_mm_blockrec(512, 3, DType::F32);
+/// assert_eq!(rec.replicate, 8);
+/// assert_eq!(rec.total_macs(), 512u64.pow(3));
+/// ```
+pub fn ca_mm_blockrec(n: u64, levels: u32, dtype: DType) -> UniformRecurrence {
+    assert!(levels >= 1, "block recursion needs at least one level");
+    let rep = 1u64 << levels;
+    assert!(n % rep == 0, "n must divide across the recursive halvings");
+    let mut rec = mm(n, n, n, dtype);
+    rec.name = format!("ca_mm_blockrec_{n}_l{levels}_{dtype}");
+    rec.replicate = rep;
+    rec
+}
+
+/// Gauss–Seidel-style 2D sweep chain over `[t, i, j]`: `stages` in-place
+/// relaxation sweeps where each point combines the *current* sweep's
+/// already-updated neighbour below with the previous sweep's stencil:
+///
+/// ```text
+/// A(t,i,j) = c₀·A(t,i+1,j)            (same sweep — runs against i)
+///          + c₁·A(t−1,i,j) + c₂·A(t−1,i+1,j)
+///          + c₃·A(t−1,i,j−1) + c₄·A(t−1,i,j+1)
+/// ```
+///
+/// The same-sweep term carries the dependence `(0,−1,0)` — backward in
+/// `i` with *zero* time advance — so, unlike [`stencil2d_chain`], no
+/// rectangular core tile is legal (neighbouring tiles would be mutually
+/// dependent: demarcation degenerates to point kernels) and no loop
+/// permutation alone realises the transfer: every space-time choice the
+/// enumerator keeps is legalised by the wavefront **skew fallback**
+/// (`SpaceTimeChoice::skews` is non-empty on all of them), the machinery
+/// that was previously reachable only from synthetic nests.
+///
+/// ```
+/// use widesa::{library, DType};
+///
+/// let rec = library::seidel2d(2, 64, 64, DType::F32);
+/// assert_eq!(rec.rank(), 3);
+/// assert_eq!(rec.total_macs(), 2 * 64 * 64 * 5);
+/// assert!(rec.dependences().iter().any(|d| d.vector == vec![0, -1, 0]));
+/// ```
+pub fn seidel2d(stages: u64, n: u64, m: u64, dtype: DType) -> UniformRecurrence {
+    assert!(stages >= 1, "a sweep chain needs at least one sweep");
+    let carried = [[0i64, -1, 0], [1, -1, 0], [1, 0, 1], [1, 0, -1]]
+        .iter()
+        .map(|v| Dependence::new("A", DepKind::Flow, v.to_vec()))
+        .collect();
+    let domain = IterationDomain::new(vec![
+        LoopDim::new("t", stages),
+        LoopDim::new("i", n),
+        LoopDim::new("j", m),
+    ]);
+    UniformRecurrence {
+        name: format!("seidel2d_{stages}x{n}x{m}_{dtype}"),
+        domain,
+        accesses: vec![
+            // A[i,j] in-place across sweeps: centre-point flow along t.
+            Access::new(
+                "A",
+                AccessKind::Accumulate,
+                AffineMap::select(&[1, 2], &[0, 0], 3),
+            ),
+            // the 5 relaxation coefficients: loop-invariant broadcast.
+            Access::new("c", AccessKind::Read, AffineMap::new(vec![])),
+        ],
+        dtype,
+        macs_per_iter: 5,
+        carried,
+        replicate: 1,
     }
 }
 
@@ -352,6 +479,27 @@ pub fn catalog_small() -> Vec<UniformRecurrence> {
         dw_conv2d(64, 256, 256, 3, 3, DType::F32),
         trsv(8192, DType::F32),
         stencil2d_chain(2, 1024, 1024, DType::F32),
+        ca_mm_25d(1024, 1024, 1024, 4, DType::F32),
+        ca_mm_blockrec(512, 3, DType::F32),
+        seidel2d(2, 64, 64, DType::F32),
+    ]
+}
+
+/// Pair every communication-avoiding MM variant with the standard-form
+/// recurrence it replaces, at matched problem shape — the selection
+/// corpus behind the `ca_selected_iff_port_bound` law, `widesa ca`, and
+/// `make ca-smoke`: the DSE must crown the CA member exactly when the
+/// port predictor says the standard member is PLIO-bound.
+pub fn ca_pairs() -> Vec<(UniformRecurrence, UniformRecurrence)> {
+    vec![
+        (
+            mm(1024, 1024, 1024, DType::F32),
+            ca_mm_25d(1024, 1024, 1024, 4, DType::F32),
+        ),
+        (
+            mm(512, 512, 512, DType::F32),
+            ca_mm_blockrec(512, 3, DType::F32),
+        ),
     ]
 }
 
@@ -476,9 +624,82 @@ mod tests {
     }
 
     #[test]
+    fn ca_variants_replicate_without_changing_work() {
+        let std = mm(1024, 1024, 1024, DType::F32);
+        let ca = ca_mm_25d(1024, 1024, 1024, 4, DType::F32);
+        // same computation, different mapping: work and accesses match
+        assert_eq!(ca.total_macs(), std.total_macs());
+        assert_eq!(ca.accesses.len(), std.accesses.len());
+        assert_eq!(ca.replicate, 4);
+        // distinct cache keys — replication is a semantic mapping choice
+        assert_ne!(ca.canonical_u64(), std.canonical_u64());
+
+        let br = ca_mm_blockrec(512, 3, DType::F32);
+        assert_eq!(br.replicate, 8);
+        assert_eq!(br.total_macs(), 512u64.pow(3));
+        assert_ne!(br.canonical_u64(), mm(512, 512, 512, DType::F32).canonical_u64());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two replicas")]
+    fn ca_mm_rejects_degenerate_replication() {
+        ca_mm_25d(64, 64, 64, 1, DType::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide across replicas")]
+    fn ca_mm_rejects_indivisible_reduction() {
+        ca_mm_25d(64, 64, 63, 4, DType::F32);
+    }
+
+    #[test]
+    fn seidel_has_the_reverse_sweep_dependence() {
+        let r = seidel2d(2, 64, 64, DType::F32);
+        let deps = r.dependences();
+        // the same-sweep reverse term plus the previous-sweep stencil
+        for v in [
+            vec![0i64, -1, 0],
+            vec![1, -1, 0],
+            vec![1, 0, 1],
+            vec![1, 0, -1],
+            vec![1, 0, 0], // centre, from the Accumulate reuse along t
+        ] {
+            assert!(
+                deps.iter().any(|d| d.array == "A" && d.kind == DepKind::Flow && d.vector == v),
+                "missing seidel dep {v:?} in {deps:?}"
+            );
+        }
+        assert_eq!(r.total_macs(), 2 * 64 * 64 * 5);
+        // the declared order is NOT a legal sequential schedule — that is
+        // the point: only the wavefront skew realises this recurrence.
+        assert!(!crate::polyhedral::legality::is_legal_order(&deps));
+    }
+
+    #[test]
+    fn ca_pairs_match_shapes() {
+        for (std, ca) in ca_pairs() {
+            assert_eq!(std.replicate, 1);
+            assert!(ca.replicate > 1);
+            assert_eq!(std.total_macs(), ca.total_macs());
+            assert_eq!(std.dtype, ca.dtype);
+        }
+    }
+
+    #[test]
     fn catalog_covers_every_constructor_once() {
         let names: Vec<String> = catalog_small().into_iter().map(|r| r.name).collect();
-        for prefix in ["mm_", "conv2d_", "fir_", "fft2d_", "dwconv2d_", "trsv_", "stencil2d_"] {
+        for prefix in [
+            "mm_",
+            "conv2d_",
+            "fir_",
+            "fft2d_",
+            "dwconv2d_",
+            "trsv_",
+            "stencil2d_",
+            "ca_mm_25d_",
+            "ca_mm_blockrec_",
+            "seidel2d_",
+        ] {
             assert_eq!(
                 names.iter().filter(|n| n.starts_with(prefix)).count(),
                 1,

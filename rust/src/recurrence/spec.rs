@@ -80,6 +80,18 @@ pub struct UniformRecurrence {
     /// catching up with the paper's program class, not an escape hatch.
     /// Empty for every purely access-derived recurrence (all of Table II).
     pub carried: Vec<Dependence>,
+    /// Replication factor of the communication-avoiding summand axis
+    /// (the "c" of 2.5D matrix multiply): the computation is split into
+    /// this many replicas that each produce a partial result, reduced on
+    /// chip across the replication axis. `1` (the default for every
+    /// standard-form recurrence) means no replication.
+    ///
+    /// The replication axis is *not* a loop of the iteration domain — it
+    /// is neither space, time, nor tile. The mapper assigns it to array
+    /// rows, `graph::builder` realises it as a broadcast-reduction mover
+    /// shape, and `mapping::cost` prices the partial-sum reduction
+    /// traffic it buys the PLIO savings with. See `docs/CA_VARIANTS.md`.
+    pub replicate: u64,
 }
 
 impl UniformRecurrence {
@@ -154,9 +166,10 @@ impl UniformRecurrence {
     /// memoization key for [`crate::recurrence::tiling::demarcate_cached`].
     ///
     /// **Key-stability contract:** the `carried` block is folded in only
-    /// when non-empty, so every pre-existing (access-derived) recurrence
-    /// keeps the exact key it had before the field existed — serve caches
-    /// and persisted keys for the Table II workloads must never shift when
+    /// when non-empty, and the `replicate` factor only when > 1, so every
+    /// pre-existing (access-derived, standard-form) recurrence keeps the
+    /// exact key it had before either field existed — serve caches and
+    /// persisted keys for the Table II workloads must never shift when
     /// the input language grows (asserted against a frozen re-computation
     /// of the original layout in `tests/proptest_invariants.rs`).
     pub fn canonical_u64(&self) -> u64 {
@@ -200,6 +213,10 @@ impl UniformRecurrence {
                     h.write_i64(c);
                 }
             }
+        }
+        if self.replicate > 1 {
+            h.write_str("rep");
+            h.write_u64(self.replicate);
         }
         h.finish()
     }
@@ -251,6 +268,7 @@ mod tests {
             dtype: DType::F32,
             macs_per_iter: 1,
             carried: vec![],
+            replicate: 1,
         }
     }
 
@@ -340,5 +358,24 @@ mod tests {
             .carried
             .push(Dependence::new("C", DepKind::Flow, vec![1, 1, 0]));
         assert_ne!(stencil.canonical_u64(), other.canonical_u64());
+    }
+
+    #[test]
+    fn replicate_enters_key_only_when_above_one() {
+        // replicate == 1 is the standard form: bit-identical key to the
+        // pre-field layout (the key-stability contract).
+        let base = mm();
+        let mut explicit_one = mm();
+        explicit_one.replicate = 1;
+        assert_eq!(base.canonical_u64(), explicit_one.canonical_u64());
+
+        // a real replication factor is a semantic difference → key moves,
+        // and distinct factors hash apart.
+        let mut rep4 = mm();
+        rep4.replicate = 4;
+        assert_ne!(base.canonical_u64(), rep4.canonical_u64());
+        let mut rep8 = mm();
+        rep8.replicate = 8;
+        assert_ne!(rep4.canonical_u64(), rep8.canonical_u64());
     }
 }

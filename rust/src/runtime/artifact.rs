@@ -198,6 +198,20 @@ impl Manifest {
             vec![ts(&[128, 128], "float32"), ts(&[5], "float32")],
             vec![ts(&[128, 128], "float32")],
         );
+        // CA-MM reduction graph tile: 4 replica partial-C tiles summed in
+        // slab order (the replication-axis merge of the 2.5D schedule).
+        add(
+            "ca_mm_f32_4x128",
+            vec![ts(&[4, 128, 128], "float32")],
+            vec![ts(&[128, 128], "float32")],
+        );
+        // Gauss–Seidel sweep-chain graph tile: 2 bottom-up in-place sweeps
+        // over a 64×64 grid, coefficients [centre, s_new, s_old, w, e].
+        add(
+            "seidel2d_f32_2x64",
+            vec![ts(&[64, 64], "float32"), ts(&[5], "float32")],
+            vec![ts(&[64, 64], "float32")],
+        );
         Self { artifacts, dir }
     }
 
@@ -247,7 +261,7 @@ mod tests {
     #[test]
     fn builtin_mirrors_python_variant_registry() {
         let m = Manifest::builtin();
-        assert_eq!(m.artifacts.len(), 11);
+        assert_eq!(m.artifacts.len(), 13);
         for name in [
             "mm_f32_256",
             "mm_f32_128",
@@ -260,6 +274,8 @@ mod tests {
             "dwconv2d_f32_8x64x3",
             "trsv_f32_256",
             "stencil2d_f32_2x128",
+            "ca_mm_f32_4x128",
+            "seidel2d_f32_2x64",
         ] {
             assert!(m.artifacts.contains_key(name), "{name} missing");
         }

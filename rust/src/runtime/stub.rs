@@ -42,6 +42,11 @@ enum Kind {
     TrsvF32,
     /// 5-point Jacobi sweeps (stage count baked into the artifact name).
     Stencil2dF32,
+    /// CA-MM replication-axis merge: replica partials summed in slab order.
+    CaMmReduceF32,
+    /// Gauss–Seidel sweeps, rows bottom-up with a fresh south read
+    /// (sweep count baked into the artifact name).
+    Seidel2dF32,
 }
 
 /// A "compiled" stub kernel: the artifact's signature plus its dispatch.
@@ -88,6 +93,10 @@ impl StubExecutable {
             Kind::TrsvF32
         } else if spec.name.starts_with("stencil2d_f32") {
             Kind::Stencil2dF32
+        } else if spec.name.starts_with("ca_mm_f32") {
+            Kind::CaMmReduceF32
+        } else if spec.name.starts_with("seidel2d_f32") {
+            Kind::Seidel2dF32
         } else {
             bail!(
                 "stub executor has no builtin kernel for artifact {:?}; \
@@ -288,6 +297,30 @@ impl StubExecutable {
                 let stages = stencil_stages(name);
                 let cur =
                     crate::coordinator::verify::stencil2d_chain_ref(a, n, m, stages, coef);
+                Ok(vec![Tensor::f32(vec![n, m], cur)])
+            }
+            Kind::CaMmReduceF32 => {
+                let (rep, n, m) = (inputs[0].shape[0], inputs[0].shape[1], inputs[0].shape[2]);
+                let p = f32_of(&inputs[0], name, "partials")?;
+                // ascending slab order — the same reduction schedule as
+                // verify::ca_mm_ref, so the replay driver bit-matches it
+                let mut out = p[..n * m].to_vec();
+                for s in 1..rep {
+                    for (o, v) in out.iter_mut().zip(&p[s * n * m..(s + 1) * n * m]) {
+                        *o += v;
+                    }
+                }
+                Ok(vec![Tensor::f32(vec![n, m], out)])
+            }
+            Kind::Seidel2dF32 => {
+                let (n, m) = (inputs[0].shape[0], inputs[0].shape[1]);
+                let a = f32_of(&inputs[0], name, "A")?;
+                let coef = f32_of(&inputs[1], name, "coef")?;
+                if coef.len() != 5 {
+                    bail!("{name}: seidel takes 5 coefficients, got {}", coef.len());
+                }
+                let stages = stencil_stages(name);
+                let cur = crate::coordinator::verify::seidel2d_ref(a, n, m, stages, coef);
                 Ok(vec![Tensor::f32(vec![n, m], cur)])
             }
         }
@@ -546,6 +579,47 @@ mod tests {
         assert_eq!(super::stencil_stages("stencil2d_f32_2x128"), 2);
         assert_eq!(super::stencil_stages("stencil2d_f32_4x64"), 4);
         assert_eq!(super::stencil_stages("weird"), 2);
+    }
+
+    #[test]
+    fn ca_reduce_matches_slab_order_sum() {
+        let (rep, n) = (4usize, 128usize);
+        let mut rng = XorShift64::new(41);
+        let mut parts = vec![0f32; rep * n * n];
+        rng.fill_f32(&mut parts);
+        let out = exe("ca_mm_f32_4x128")
+            .execute(&[Tensor::f32(vec![rep, n, n], parts.clone())])
+            .unwrap();
+        // reference: fold the slabs in ascending order, bit-exactly
+        let mut want = parts[..n * n].to_vec();
+        for s in 1..rep {
+            for (o, v) in want.iter_mut().zip(&parts[s * n * n..(s + 1) * n * n]) {
+                *o += v;
+            }
+        }
+        let got = out[0].data.as_f32().unwrap();
+        assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn seidel_matches_oracle_and_differs_from_jacobi() {
+        let n = 64usize;
+        let mut rng = XorShift64::new(43);
+        let mut a = vec![0f32; n * n];
+        rng.fill_f32(&mut a);
+        let coef = [0.4f32, 0.2, 0.1, 0.15, 0.15];
+        let out = exe("seidel2d_f32_2x64")
+            .execute(&[
+                Tensor::f32(vec![n, n], a.clone()),
+                Tensor::f32(vec![5], coef.to_vec()),
+            ])
+            .unwrap();
+        let want = verify::seidel2d_ref(&a, n, n, 2, &coef);
+        assert!(verify::max_abs_diff(out[0].data.as_f32().unwrap(), &want) < 1e-4);
+        // the fresh-south read distinguishes GS from the Jacobi stencil
+        let jacobi = verify::stencil2d_chain_ref(&a, n, n, 2, &coef);
+        assert!(verify::max_abs_diff(&want, &jacobi) > 1e-6);
+        assert_eq!(super::stencil_stages("seidel2d_f32_2x64"), 2);
     }
 
     #[test]

@@ -288,7 +288,7 @@ fn access_kind_from(s: &str) -> Result<AccessKind> {
 /// Serialize a recurrence (the snapshot's innermost identity: its
 /// canonical key is recomputed from exactly this on load).
 pub fn rec_to_json(r: &UniformRecurrence) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(r.name.clone())),
         ("domain", domain_to_json(&r.domain)),
         (
@@ -309,7 +309,13 @@ pub fn rec_to_json(r: &UniformRecurrence) -> Json {
         ("dtype", Json::str(r.dtype.code())),
         ("macs_per_iter", Json::num_u64(r.macs_per_iter)),
         ("carried", Json::Arr(r.carried.iter().map(dep_to_json).collect())),
-    ])
+    ];
+    // replication is written only when present, mirroring the canonical
+    // key's stability contract: standard-form snapshots are byte-stable.
+    if r.replicate > 1 {
+        fields.push(("replicate", Json::num_u64(r.replicate)));
+    }
+    Json::obj(fields)
 }
 
 /// Inverse of [`rec_to_json`].
@@ -337,6 +343,8 @@ pub fn rec_from_json(v: &Json) -> Result<UniformRecurrence> {
             .iter()
             .map(dep_from_json)
             .collect::<Result<Vec<_>>>()?,
+        // absent ≡ 1 (standard form): pre-CA snapshots load unchanged.
+        replicate: v.get("replicate").and_then(|j| j.as_u64()).unwrap_or(1),
     })
 }
 
@@ -1062,6 +1070,14 @@ mod tests {
         let back = rec_from_json(&parse(&rec_to_json(&rec).to_string()).unwrap()).unwrap();
         assert_eq!(back.carried, rec.carried);
         assert_eq!(back.canonical_u64(), rec.canonical_u64());
+        // the replication axis survives, and standard forms never write it
+        let ca = library::ca_mm_25d(1024, 1024, 1024, 4, DType::F32);
+        assert!(rec_to_json(&ca).to_string().contains("\"replicate\""));
+        let ca_back = rec_from_json(&parse(&rec_to_json(&ca).to_string()).unwrap()).unwrap();
+        assert_eq!(ca_back.replicate, 4);
+        assert_eq!(ca_back.canonical_u64(), ca.canonical_u64());
+        let std = library::mm(1024, 1024, 1024, DType::F32);
+        assert!(!rec_to_json(&std).to_string().contains("replicate"));
     }
 
     #[test]

@@ -12,11 +12,17 @@
 //! ```
 //!
 //! * `bench` — `mm` | `conv2d` | `fir` | `fft2d` | `dwconv2d` | `trsv` |
-//!   `stencil2d` (required).
+//!   `stencil2d` | `ca_mm` | `seidel2d` (required).
 //! * `dims` — loop extents: `mm` `[n, m, k]`, `conv2d` `[h, w, p, q]`,
 //!   `fir` `[n, taps]`, `fft2d` `[rows, cols]`, `dwconv2d`
 //!   `[groups, h, w, p, q]`, `trsv` `[n]`, `stencil2d`
+//!   `[stages, n, m]`, `ca_mm` `[n, m, k, rep]`, `seidel2d`
 //!   `[stages, n, m]`. Optional; each benchmark has a sensible default.
+//! * `variant` — `standard` | `ca`: route an `mm` compile through its
+//!   communication-avoiding form (the 2.5D replicated-summand variant,
+//!   docs/CA_VARIANTS.md) instead of the standard recurrence. Optional;
+//!   absent (or `standard`) means the standard form, so existing clients
+//!   see identical behaviour — and identical cache keys.
 //! * `dtype` — `f32|i8|i16|i32|cf32|ci16`; defaults to `f32` (`cf32` for
 //!   `fft2d`, which requires a complex type).
 //! * `id` — any JSON value, echoed verbatim in the response.
@@ -68,7 +74,7 @@
 //! cells, so the two views reconcile by construction.
 
 use crate::coordinator::blocking::{BlockingPlan, Unplannable};
-use crate::mapping::dse::Objective;
+use crate::mapping::dse::{Form, Objective};
 use crate::recurrence::dtype::DType;
 use crate::recurrence::library;
 use crate::recurrence::spec::UniformRecurrence;
@@ -94,6 +100,9 @@ pub struct CompileRequest {
     pub objective: Option<Objective>,
     /// Board power cap in watts (`None` = uncapped).
     pub max_power_w: Option<f64>,
+    /// Mapping-form routing: `Some(Form::Ca)` compiles the request's
+    /// communication-avoiding variant (`None` ≡ `Form::Standard`).
+    pub variant: Option<Form>,
 }
 
 pub fn parse_dtype(s: &str) -> Result<DType> {
@@ -133,7 +142,10 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
         .get("bench")
         .and_then(Json::as_str)
         .ok_or_else(|| {
-            anyhow!("missing required field \"bench\" (mm|conv2d|fir|fft2d|dwconv2d|trsv|stencil2d)")
+            anyhow!(
+                "missing required field \"bench\" \
+                 (mm|conv2d|fir|fft2d|dwconv2d|trsv|stencil2d|ca_mm|seidel2d)"
+            )
         })?
         .to_string();
     let dtype = match root.get("dtype").and_then(Json::as_str) {
@@ -184,6 +196,18 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
             })?)
         }
     };
+    let variant = match root.get("variant") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("field \"variant\" must be a string"))?;
+            Some(
+                Form::parse(s)
+                    .ok_or_else(|| anyhow!("unknown variant {s:?} (standard|ca)"))?,
+            )
+        }
+    };
     let max_power_w = match root.get("max_power_w") {
         None | Some(Json::Null) => None,
         Some(v) => {
@@ -207,6 +231,7 @@ pub fn parse_request(line: &str) -> Result<CompileRequest> {
         cold_dram,
         objective,
         max_power_w,
+        variant,
     })
 }
 
@@ -228,10 +253,44 @@ pub fn request_recurrence(req: &CompileRequest) -> Result<UniformRecurrence> {
             )
         }
     };
+    // `variant: "ca"` swaps an mm compile onto its communication-avoiding
+    // recurrence; the CA name/replicate feed the cache key, so standard
+    // and CA designs never collide in the design cache.
+    if req.variant == Some(Form::Ca) && req.bench != "mm" {
+        bail!(
+            "variant \"ca\" is only defined for bench \"mm\" (got {:?}); \
+             use bench \"ca_mm\" for an explicit CA compile",
+            req.bench
+        );
+    }
     Ok(match req.bench.as_str() {
+        "mm" if req.variant == Some(Form::Ca) => {
+            let d = dims(3, &[8192, 8192, 8192])?;
+            if d[2] % 4 != 0 {
+                bail!("variant \"ca\" splits k across 4 replicas; k = {} must divide", d[2]);
+            }
+            library::ca_mm_25d(d[0], d[1], d[2], 4, req.dtype)
+        }
         "mm" => {
             let d = dims(3, &[8192, 8192, 8192])?;
             library::mm(d[0], d[1], d[2], req.dtype)
+        }
+        "ca_mm" => {
+            let d = dims(4, &[1024, 1024, 1024, 4])?;
+            if d[3] < 2 {
+                bail!("ca_mm needs at least two replicas, got rep={}", d[3]);
+            }
+            if d[2] % d[3] != 0 {
+                bail!("ca_mm reduction extent k={} must divide across rep={} replicas", d[2], d[3]);
+            }
+            library::ca_mm_25d(d[0], d[1], d[2], d[3], req.dtype)
+        }
+        "seidel2d" => {
+            let d = dims(3, &[2, 64, 64])?;
+            if d[0] == 0 {
+                bail!("seidel2d needs at least one sweep, got stages=0");
+            }
+            library::seidel2d(d[0], d[1], d[2], req.dtype)
         }
         "conv2d" => {
             let d = dims(4, &[10240, 10240, 4, 4])?;
@@ -283,7 +342,9 @@ pub fn request_recurrence(req: &CompileRequest) -> Result<UniformRecurrence> {
             }
             library::stencil2d_chain(d[0], d[1], d[2], req.dtype)
         }
-        other => bail!("unknown bench {other:?} (mm|conv2d|fir|fft2d|dwconv2d|trsv|stencil2d)"),
+        other => bail!(
+            "unknown bench {other:?} (mm|conv2d|fir|fft2d|dwconv2d|trsv|stencil2d|ca_mm|seidel2d)"
+        ),
     })
 }
 
@@ -501,6 +562,7 @@ mod tests {
             cold_dram: None,
             objective: None,
             max_power_w: None,
+            variant: None,
         };
         assert!(request_recurrence(&zero).is_err());
     }
@@ -551,6 +613,71 @@ mod tests {
         assert!(parse_request(r#"{"bench":"mm","max_power_w":-5}"#).is_err());
         assert!(parse_request(r#"{"bench":"mm","max_power_w":0}"#).is_err());
         assert!(parse_request(r#"{"bench":"mm","max_power_w":"55w"}"#).is_err());
+    }
+
+    #[test]
+    fn variant_field_routes_mm_onto_the_ca_form() {
+        // absent and "standard" are byte-for-byte the same compile
+        let plain = parse_request(r#"{"bench":"mm","dims":[1024,1024,1024]}"#).unwrap();
+        assert_eq!(plain.variant, None);
+        let std_form = parse_request(
+            r#"{"bench":"mm","dims":[1024,1024,1024],"variant":"standard"}"#,
+        )
+        .unwrap();
+        assert_eq!(std_form.variant, Some(Form::Standard));
+        let a = request_recurrence(&plain).unwrap();
+        let b = request_recurrence(&std_form).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.canonical_u64(), b.canonical_u64());
+
+        // "ca" swaps onto the replicated-summand recurrence — and onto a
+        // different cache key
+        let ca = parse_request(
+            r#"{"bench":"mm","dims":[1024,1024,1024],"variant":"ca"}"#,
+        )
+        .unwrap();
+        assert_eq!(ca.variant, Some(Form::Ca));
+        let rec = request_recurrence(&ca).unwrap();
+        assert!(rec.name.starts_with("ca_mm_25d_1024x1024x1024_r4"));
+        assert_eq!(rec.replicate, 4);
+        assert_ne!(rec.canonical_u64(), a.canonical_u64());
+
+        // typed errors: bad variant string, non-mm bench, indivisible k
+        assert!(parse_request(r#"{"bench":"mm","variant":"avoiding"}"#).is_err());
+        assert!(parse_request(r#"{"bench":"mm","variant":3}"#).is_err());
+        let fir = parse_request(r#"{"bench":"fir","variant":"ca"}"#).unwrap();
+        assert!(request_recurrence(&fir).is_err());
+        let odd = parse_request(
+            r#"{"bench":"mm","dims":[64,64,66],"variant":"ca"}"#,
+        )
+        .unwrap();
+        assert!(request_recurrence(&odd).is_err());
+    }
+
+    #[test]
+    fn ca_benches_parse_with_dims_and_defaults() {
+        let req = parse_request(r#"{"bench": "ca_mm"}"#).unwrap();
+        let rec = request_recurrence(&req).unwrap();
+        assert_eq!(rec.name, "ca_mm_25d_1024x1024x1024_r4_Float");
+
+        let req = parse_request(r#"{"bench": "ca_mm", "dims": [512, 512, 512, 8]}"#).unwrap();
+        assert_eq!(
+            request_recurrence(&req).unwrap().name,
+            "ca_mm_25d_512x512x512_r8_Float"
+        );
+
+        let req = parse_request(r#"{"bench": "seidel2d"}"#).unwrap();
+        let rec = request_recurrence(&req).unwrap();
+        assert!(rec.name.starts_with("seidel2d_2x64x64"));
+        assert!(!rec.carried.is_empty());
+
+        // arity and geometry validation still bites
+        let bad = parse_request(r#"{"bench": "ca_mm", "dims": [512, 512, 512]}"#).unwrap();
+        assert!(request_recurrence(&bad).is_err());
+        let one_rep = parse_request(r#"{"bench": "ca_mm", "dims": [512, 512, 512, 1]}"#).unwrap();
+        assert!(request_recurrence(&one_rep).is_err());
+        let odd = parse_request(r#"{"bench": "ca_mm", "dims": [512, 512, 510, 4]}"#).unwrap();
+        assert!(request_recurrence(&odd).is_err());
     }
 
     #[test]

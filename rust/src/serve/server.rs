@@ -876,8 +876,12 @@ impl ServeHandle {
         let cfg = self.effective_config(&req);
         // mm requests carry a host-level blocking plan in the response;
         // shapes the planner cannot place are rejected *before* any
-        // compile work with the typed `unplannable` protocol line.
-        let blocking_plan = if req.bench == "mm" {
+        // compile work with the typed `unplannable` protocol line. CA
+        // variants replay the planner per k-slab instead, so their
+        // responses carry no whole-problem blocking object.
+        let blocking_plan = if req.bench == "mm"
+            && req.variant != Some(crate::mapping::dse::Form::Ca)
+        {
             let d: &[u64] = if req.dims.is_empty() {
                 &[8192, 8192, 8192]
             } else {

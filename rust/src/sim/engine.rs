@@ -280,6 +280,23 @@ mod tests {
     }
 
     #[test]
+    fn sim_agrees_with_analytic_on_ca_variants() {
+        // the CA broadcast-reduction designs go through the same shared
+        // fill/phase methods, so the ≤15 % agreement covers them too
+        for (_, ca) in library::ca_pairs() {
+            let name = ca.name.clone();
+            let (rep, est) = sim_for(ca, 400, false);
+            let rel = (rep.tops - est.perf.tops).abs() / est.perf.tops;
+            assert!(
+                rel < 0.15,
+                "{name}: sim {} vs analytic {} (rel {rel:.3})",
+                rep.tops,
+                est.perf.tops
+            );
+        }
+    }
+
+    #[test]
     fn sim_tracks_the_ranked_port_model_when_plio_bound() {
         // a PLIO-starved design: the exact merged counts (not the
         // analytic approximation) must be what the simulator's phase

@@ -9,22 +9,25 @@
 //!    exact and the legacy analytic ranking, record every candidate where
 //!    the two rankings disagree, and assert the exact-ranked winner
 //!    always satisfies the paper's 78-in/78-out PLIO budget after real
-//!    packet merging;
+//!    packet merging ([`laws::exact_winner_fits_after_merge`]);
 //! 3. serial and scoped-thread rankings stay bit-identical under the
 //!    exact port model ([`laws::serial_parallel_ranking`]), including on
 //!    starved boards where the models genuinely diverge;
 //! 4. the Pareto ranking obeys [`laws::pareto_frontier`] on all 14
 //!    recurrences: non-dominated frontier prefix, insertion-order
-//!    independent membership, serial ≡ scoped-thread bit-for-bit.
+//!    independent membership, serial ≡ scoped-thread bit-for-bit;
+//! 5. the DSE crowns a communication-avoiding variant **iff** the
+//!    standard form is PLIO-bound ([`laws::ca_selected_iff_port_bound`]),
+//!    over the library's CA pairs *and* testkit-random replication-axis
+//!    shapes, at every port cap.
 
 mod testkit;
 
 use testkit::laws;
 use widesa::arch::vck5000::BoardConfig;
-use widesa::graph::builder::build;
-use widesa::graph::packet::merge_ports_with_budget;
-use widesa::mapping::dse::{self, explore_all, DseConstraints};
+use widesa::mapping::dse::DseConstraints;
 use widesa::recurrence::library;
+use widesa::util::rng::XorShift64;
 
 fn cons(analytic: bool) -> DseConstraints {
     DseConstraints {
@@ -63,46 +66,12 @@ fn exact_winner_fits_budget_wherever_rankings_diverge() {
     for budget in [78u32, 32, 8] {
         let board = BoardConfig::vck5000().with_plio_budget(budget);
         for rec in library::table2_benchmarks() {
-            let exact = explore_all(&rec, &board, &cons(false));
-            let analytic = explore_all(&rec, &board, &cons(true));
-            // both rankings score the same candidate set, just ordered
-            // (and priced) differently
-            assert_eq!(exact.len(), analytic.len(), "{}", rec.name);
-            for (pos, (e, a)) in exact.iter().zip(&analytic).enumerate() {
-                if e.0.summary() != a.0.summary() {
-                    divergences.push(format!(
-                        "{} @ {budget} ch, rank {pos}: exact [{}] vs analytic [{}]",
-                        rec.name,
-                        e.0.summary(),
-                        a.0.summary()
-                    ));
-                }
-            }
-            // whatever the approximation would have crowned, the
-            // exact-ranked winner must fit the paper's PLIO budget once
-            // the graph is really merged
-            let Some((winner, _)) = exact.first() else {
-                panic!("{}: empty ranking", rec.name);
-            };
-            let model = dse::scoring_model(&board, &cons(false));
-            let (_, stats) = merge_ports_with_budget(
-                &build(winner, &model),
-                model.channel_bw(),
-                board.plio.in_channels as usize,
-                board.plio.out_channels as usize,
-            );
-            assert!(
-                stats.in_ports_after <= 78,
-                "{} @ {budget} ch: exact winner needs {} input ports",
-                rec.name,
-                stats.in_ports_after
-            );
-            assert!(
-                stats.out_ports_after <= 78,
-                "{} @ {budget} ch: exact winner needs {} output ports",
-                rec.name,
-                stats.out_ports_after
-            );
+            divergences.extend(laws::exact_winner_fits_after_merge(
+                &rec,
+                &board,
+                &cons(false),
+                &cons(true),
+            ));
         }
     }
     // the corpus is informative, not a failure: print what diverged so a
@@ -113,6 +82,34 @@ fn exact_winner_fits_budget_wherever_rankings_diverge() {
     );
     for d in &divergences {
         println!("  {d}");
+    }
+}
+
+#[test]
+fn ca_selected_iff_port_bound_across_the_corpus() {
+    // the library's curated CA pairs, plus testkit-random
+    // replication-axis shapes, at every port cap: the DSE must crown the
+    // communication-avoiding form exactly when the standard winner's
+    // really-merged ports exceed the budget — never as a performance
+    // preference, never missed when the standard form is unroutable
+    let mut pairs = library::ca_pairs();
+    let mut rng = XorShift64::new(0xCA_5E1EC7);
+    for _ in 0..testkit::cases(6) {
+        pairs.push(testkit::random_ca_pair(&mut rng));
+    }
+    for budget in [78u32, 16, 8] {
+        let board = BoardConfig::vck5000().with_plio_budget(budget);
+        for (std_rec, ca_rec) in &pairs {
+            let sel = laws::ca_selected_iff_port_bound(std_rec, ca_rec, &board, &cons(false));
+            // the full board never needs the CA arm for these shapes
+            if budget == 78 {
+                assert!(
+                    sel.standard_fits,
+                    "{} fits 78 channels after merging",
+                    std_rec.name
+                );
+            }
+        }
     }
 }
 

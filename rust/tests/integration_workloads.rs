@@ -8,8 +8,10 @@
 //!    through the artifact replay drivers;
 //! 3. exercise the space-time transforms the Table II corpus never
 //!    picked: the triangular solve selects a **1D** (non-2D-serpentine)
-//!    transform, and the stencil chain's choices exist only through the
-//!    neighbour-transfer legality clause (negative dependence offsets).
+//!    transform, the stencil chain's choices exist only through the
+//!    neighbour-transfer legality clause (negative dependence offsets),
+//!    and the Gauss–Seidel sweep chain is mappable **only** through the
+//!    wavefront skew fallback (every choice skewed).
 
 use widesa::arch::vck5000::BoardConfig;
 use widesa::coordinator::framework::{WideSa, WideSaConfig};
@@ -115,6 +117,49 @@ fn stencil_mapping_relies_on_neighbour_transfer_legality() {
         .deps
         .iter()
         .any(|d| d.vector.iter().any(|&c| c < 0)));
+}
+
+#[test]
+fn seidel_is_only_mappable_via_the_skew_fallback() {
+    // the Gauss–Seidel sweep chain carries a same-sweep (0, −1, 0)
+    // dependence: a pure backward hop with zero time advance, illegal
+    // under both the sequential-order and neighbour-transfer clauses for
+    // every space choice. Only the wavefront skew fallback legalises it —
+    // so every enumerated choice must be skewed, and the compiled winner
+    // must carry the skew through the full back half
+    let rec = library::seidel2d(2, 64, 64, DType::F32);
+    let board = BoardConfig::vck5000();
+    let cons = DseConstraints {
+        max_aies: Some(400),
+        ..Default::default()
+    };
+    assert!(
+        !is_legal_order(&rec.dependences()),
+        "the raw dependence set must be sequentially illegal"
+    );
+    let plan = dse::plan(&rec, &board, &cons);
+    assert!(!plan.choices.is_empty(), "seidel2d has no space-time choices");
+    for c in &plan.choices {
+        assert!(
+            c.is_skewed(),
+            "unskewed seidel2d choice {:?} — the sweep dependence should \
+             have forced the wavefront fallback",
+            c.space
+        );
+    }
+    let d = framework(400).compile(&rec).expect("seidel2d must compile");
+    assert!(d.compile.success, "place & route failed");
+    assert!(d.candidate.choice.is_skewed(), "{}", d.candidate.summary());
+    // the wavefront schedule's fill/drain accounting must keep the
+    // simulator and the analytic estimate within the usual 15%
+    let rel = (d.sim.tops - d.estimate.perf.tops).abs() / d.estimate.perf.tops;
+    assert!(
+        rel <= 0.15,
+        "sim {} vs analytic {} TOPS diverge by {:.1}%",
+        d.sim.tops,
+        d.estimate.perf.tops,
+        rel * 100.0
+    );
 }
 
 #[cfg(not(feature = "pjrt"))]

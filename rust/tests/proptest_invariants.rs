@@ -6,7 +6,8 @@
 //! scales with `PROPTEST_CASES` (the nightly CI lane runs 512).
 
 mod testkit;
-use testkit::{cases, random_nest};
+use testkit::laws;
+use testkit::{cases, random_ca_pair, random_nest};
 
 use widesa::arch::array::{AieArray, Coord};
 use widesa::arch::plio::{PlioDir, PlioSpec};
@@ -295,6 +296,27 @@ fn prop_placement_is_injective_and_in_bounds() {
         assert!(p.is_valid(&AieArray::default()));
         assert_eq!(p.len(), g.num_aies());
         assert!(g.node_ids_are_dense());
+    }
+}
+
+#[test]
+fn prop_ca_candidates_obey_port_and_ranking_laws() {
+    // every generated replication-axis candidate: the incremental port
+    // predictor (its BroadcastReduce arm) stays bit-identical to really
+    // merging the built CA graph, and the scoped-thread ranking stays
+    // bit-identical to the serial reference — the two determinism
+    // guarantees the form-selection gate leans on
+    let mut rng = XorShift64::new(10_000);
+    for _ in 0..cases(12) {
+        let (_, ca_rec) = random_ca_pair(&mut rng);
+        let budget = 8 + rng.gen_range(71);
+        let board = BoardConfig::vck5000().with_plio_budget(budget as u32);
+        let cons = DseConstraints {
+            max_aies: Some(400),
+            ..Default::default()
+        };
+        laws::predictor_matches_merge(&ca_rec, &board, &cons);
+        laws::serial_parallel_ranking(&ca_rec, &board, &cons, &[2, 8]);
     }
 }
 

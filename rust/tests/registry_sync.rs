@@ -114,6 +114,15 @@ fn expected_inputs(func: &str, ints: &[usize]) -> Vec<Vec<usize>> {
             let (n, m) = (ints[1], ints[2]);
             vec![vec![n, m], vec![5]]
         }
+        "_ca_reduce_args" => {
+            let (rep, n, m) = (ints[0], ints[1], ints[2]);
+            vec![vec![rep, n, m]]
+        }
+        "_seidel_args" => {
+            // ints = [stages, n, m]; stages is baked into the sweep count
+            let (n, m) = (ints[1], ints[2]);
+            vec![vec![n, m], vec![5]]
+        }
         other => panic!("unknown factory {other} — extend this test"),
     }
 }

@@ -87,6 +87,22 @@ pub fn random_recurrence(rng: &mut XorShift64) -> UniformRecurrence {
     }
 }
 
+/// A random standard/communication-avoiding pair over one MM problem:
+/// the CA side splits a random k across 2, 4 or 8 summand replicas — the
+/// replication axis, the first axis that is neither space, time, nor
+/// tile. Extents are constructor-legal by construction (k divides across
+/// the replicas) and small enough that both forms map on a full array.
+pub fn random_ca_pair(rng: &mut XorShift64) -> (UniformRecurrence, UniformRecurrence) {
+    let rep = 1u64 << (1 + rng.gen_range(3)); // 2, 4, or 8 replicas
+    let n = 64 + 64 * rng.gen_range(16);
+    let m = 64 + 64 * rng.gen_range(16);
+    let k = rep * (16 + 16 * rng.gen_range(32));
+    (
+        library::mm(n, m, k, DType::F32),
+        library::ca_mm_25d(n, m, k, rep, DType::F32),
+    )
+}
+
 /// A random DSE constraint set: an AIE budget somewhere between a
 /// handful of cores and the full VCK5000 array.
 pub fn random_constraints(rng: &mut XorShift64) -> DseConstraints {
